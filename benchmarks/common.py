@@ -1,0 +1,362 @@
+"""Shared benchmark pipeline: one world + one calibrated ZeroRouter reused
+across the paper-table benchmarks, plus the baseline routers.
+
+Baselines (paper §Baselines, re-implemented against the same world):
+  * Random Selection
+  * RouteLLM-like  — binary strong/weak preference router (logistic on
+    structural features; strong model when predicted hard)
+  * FORC-like      — per-model accuracy meta-model (ridge regression on
+    features), requires full training-set evals for every pool model
+  * GraphRouter-lite — (task, model) interaction table + query→task
+    assignment by feature-centroid (edge-prediction flavour)
+  * Model-SAT-like — capability vector per model from a small aptitude
+    sample per task
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    IRTConfig,
+    PredictorConfig,
+    ZeroRouter,
+    ZeroRouterConfig,
+    reward,
+)
+from repro.core.features import extract_features_batch, normalize_features
+from repro.core.router import POLICIES, normalize
+from repro.data import (
+    CORE_MODELS,
+    ID_TASKS,
+    OOD_TASKS,
+    TASKS,
+    World,
+    WorldConfig,
+    build_world,
+    calibration_pool,
+    calibration_responses,
+)
+from repro.data.tokenizer import HashTokenizer
+
+SMALL_POOL = ["xlstm-125m", "gemma3-1b", "hymba-1.5b", "paligemma-3b",
+              "phi3-mini-3.8b"]
+LARGE_POOL = ["deepseek-v2-lite-16b", "kimi-k2-1t-a32b", "musicgen-large",
+              "qwen2-72b", "llama3-405b"]
+
+_BENCH_SCALE = dict(queries_per_task=150, n_future_models=50,
+                    calibration_models=150, irt_epochs=2000,
+                    predictor_epochs=12)
+_SMOKE_SCALE = dict(queries_per_task=50, n_future_models=12,
+                    calibration_models=80, irt_epochs=800,
+                    predictor_epochs=5)
+
+
+@dataclasses.dataclass
+class Bench:
+    world: World
+    zr: ZeroRouter
+    qi_train: np.ndarray          # ID queries used for calibration/training
+    qi_id_test: np.ndarray
+    qi_ood: np.ndarray
+    anchor_global: np.ndarray
+    tokenizer: HashTokenizer
+    core_thetas: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+
+    def truth(self, pool_names: Sequence[str], qi: np.ndarray):
+        mi = [self.world.model_index(n) for n in pool_names]
+        p = self.world.true_prob(mi, qi)
+        lens = self.world.output_lengths(mi, qi)
+        return (p, self.world.true_cost(mi, qi, lens),
+                self.world.true_latency(mi, qi, lens))
+
+    def texts(self, qi: np.ndarray) -> List[str]:
+        return [self.world.queries[i].text for i in qi]
+
+
+_CACHE: Dict[str, Bench] = {}
+
+
+def build_bench(smoke: bool = False, seed: int = 0) -> Bench:
+    key = f"{'smoke' if smoke else 'full'}-{seed}"
+    if key in _CACHE:
+        return _CACHE[key]
+    sc = _SMOKE_SCALE if smoke else _BENCH_SCALE
+    world = build_world(WorldConfig(queries_per_task=sc["queries_per_task"],
+                                    n_future_models=sc["n_future_models"],
+                                    seed=seed))
+    qi_id = world.query_indices(ID_TASKS)
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(len(qi_id))
+    n_train = int(0.8 * len(qi_id))
+    qi_train, qi_id_test = qi_id[perm[:n_train]], qi_id[perm[n_train:]]
+    qi_ood = world.query_indices(OOD_TASKS)
+
+    # Calibration matrix = leaderboard pool + the CORE candidate models
+    # (paper: the core pool is ON the leaderboard, so its abilities are
+    # calibrated jointly by the SVI; anchor-only profiling is reserved for
+    # models released after the cutoff — Table 2 / Fig. 3a).
+    thetas = calibration_pool(world, sc["calibration_models"])
+    R_lb = calibration_responses(world, thetas, qi_train)
+    core_names = [n for n, _ in CORE_MODELS]
+    core_mi = [world.model_index(n) for n in core_names]
+    R_core = world.sample_responses(core_mi, qi_train, seed=97)
+    R = np.concatenate([R_lb, R_core], axis=0)
+    zr = ZeroRouter(ZeroRouterConfig(
+        irt=IRTConfig(dim=20, epochs=sc["irt_epochs"]),
+        predictor=PredictorConfig(d_model=192, num_layers=3, num_heads=4,
+                                  d_ff=512, max_len=64),
+        n_anchors=min(200, len(qi_train) // 2),
+        predictor_epochs=sc["predictor_epochs"],
+    ))
+    cal = zr.calibrate(R)
+    tok = HashTokenizer(32_000)
+    # zr.alpha rows are ordered by qi_train — pass the matching texts
+    zr.fit_predictor([world.queries[i].text for i in qi_train], tok)
+    n_lb = sc["calibration_models"]
+    core_thetas = {n: np.asarray(cal["theta_calibration"][n_lb + i])
+                   for i, n in enumerate(core_names)}
+    bench = Bench(world, zr, qi_train, qi_id_test, qi_ood,
+                  anchor_global=qi_train[cal["anchors"]], tokenizer=tok,
+                  core_thetas=core_thetas)
+    _CACHE[key] = bench
+    return bench
+
+
+def onboard_pool(bench: Bench, pool_names: Sequence[str], seed: int = 0,
+                 force_anchor_profiling: bool = False) -> None:
+    """(Re-)onboard a pool into the router.
+
+    Core models use their jointly-calibrated θ (they are on the
+    "leaderboard"); post-cutoff models — and everything when
+    ``force_anchor_profiling`` — are profiled from anchor responses only.
+    Verbosity/latency tables always calibrate on the anchors (Eq. 9, 11).
+    """
+    bench.zr.pool = []
+    world = bench.world
+    for name in pool_names:
+        m = world.model_index(name)
+        y = world.sample_responses([m], bench.anchor_global, seed=m + seed)[0]
+        lens = world.output_lengths([m], bench.anchor_global)[0]
+        lats = world.true_latency([m], bench.anchor_global, lens[None])[0]
+        mi = world.models[m]
+        cand = bench.zr.onboard_model(name, y, lens, lats, mi.price_in,
+                                      mi.price_out, mi.tokenizer)
+        if not force_anchor_profiling and name in bench.core_thetas:
+            cand.theta = bench.core_thetas[name]
+
+
+# ---------------------------------------------------------------------------
+# Baseline routers — each returns selection indices (Q,) into the pool
+# ---------------------------------------------------------------------------
+
+
+class BaselineRouter:
+    name = "base"
+
+    def fit(self, bench: Bench, pool_names: Sequence[str]) -> None:
+        raise NotImplementedError
+
+    def select(self, bench: Bench, qi: np.ndarray,
+               weights: Tuple[float, float, float]) -> np.ndarray:
+        raise NotImplementedError
+
+
+def _feature_matrix(bench: Bench, qi: np.ndarray, stats=None):
+    f = extract_features_batch(bench.texts(qi))
+    return normalize_features(f, stats)
+
+
+class RandomRouter(BaselineRouter):
+    name = "random"
+
+    def __init__(self, seed: int = 0):
+        self.rng = np.random.default_rng(seed)
+
+    def fit(self, bench, pool_names, budget_qi=None):
+        self.M = len(pool_names)
+
+    def select(self, bench, qi, weights):
+        return self.rng.integers(0, self.M, len(qi))
+
+
+class RouteLLMLike(BaselineRouter):
+    """Binary strong/weak router from preference data (logistic on features)."""
+    name = "routellm"
+
+    def fit(self, bench, pool_names, budget_qi=None):
+        world = bench.world
+        mi = [world.model_index(n) for n in pool_names]
+        sizes = [world.models[m].size_b for m in mi]
+        self.weak, self.strong = int(np.argmin(sizes)), int(np.argmax(sizes))
+        qi = bench.qi_train
+        if budget_qi is not None and pool_names[-1] in (
+                pool_names[self.weak], pool_names[self.strong]):
+            qi = budget_qi            # the new model only has budget evals
+        X, self.stats = _feature_matrix(bench, qi)
+        # preference label: strong wins where weak fails but strong succeeds
+        yw = world.sample_responses([mi[self.weak]], qi, seed=1)[0]
+        ys = world.sample_responses([mi[self.strong]], qi, seed=2)[0]
+        y = (ys > yw).astype(np.float32)
+        self.w = _logistic_fit(X, y)
+        self.pool_names = pool_names
+
+    def select(self, bench, qi, weights):
+        X, _ = _feature_matrix(bench, qi, self.stats)
+        p_hard = _sigmoid(X @ self.w[:-1] + self.w[-1])
+        # cost weight shifts the threshold towards the weak model
+        thr = 0.35 + 0.4 * weights[1] + 0.25 * weights[2]
+        return np.where(p_hard > thr, self.strong, self.weak)
+
+
+class FORCLike(BaselineRouter):
+    """Per-model accuracy meta-model (ridge on features) + util argmax.
+    Requires training-set evaluations for EVERY pool model (the exhaustive
+    profiling cost the paper criticizes)."""
+    name = "forc"
+
+    def fit(self, bench, pool_names, budget_qi=None):
+        world = bench.world
+        self.mi = [world.model_index(n) for n in pool_names]
+        qi = bench.qi_train
+        X, self.stats = _feature_matrix(bench, qi)
+        Xb = np.hstack([X, np.ones((len(X), 1))])
+        Y = world.sample_responses(self.mi, qi, seed=3)          # (M, Q)
+        lam = 1.0 * np.eye(Xb.shape[1])
+        self.W = np.linalg.solve(Xb.T @ Xb + lam, Xb.T @ Y.T)    # (F+1, M)
+        if budget_qi is not None:
+            # the new (last) model has evals only on the budget subset
+            Xs, _ = _feature_matrix(bench, budget_qi, self.stats)
+            Xsb = np.hstack([Xs, np.ones((len(Xs), 1))])
+            y_new = world.sample_responses([self.mi[-1]], budget_qi, seed=3)[0]
+            self.W[:, -1] = np.linalg.solve(
+                Xsb.T @ Xsb + lam, Xsb.T @ y_new)
+        lens = world.output_lengths(self.mi, qi)
+        self.mean_len = lens.mean(1)
+        self.pool_names = pool_names
+
+    def _estimates(self, bench, qi):
+        world = bench.world
+        X, _ = _feature_matrix(bench, qi, self.stats)
+        Xb = np.hstack([X, np.ones((len(X), 1))])
+        p = np.clip(Xb @ self.W, 0, 1).T                         # (M, Q)
+        lam_in = np.array([world.models[m].price_in for m in self.mi])
+        lam_out = np.array([world.models[m].price_out for m in self.mi])
+        cost = (lam_in[:, None] * 50 + lam_out[:, None] * self.mean_len[:, None]) / 1e6
+        cost = np.broadcast_to(cost, p.shape)
+        ttft = np.array([world.models[m].ttft for m in self.mi])[:, None]
+        tpot = np.array([world.models[m].tpot for m in self.mi])[:, None]
+        lat = np.broadcast_to(ttft + self.mean_len[:, None] * tpot, p.shape)
+        return p, cost, lat
+
+    def select(self, bench, qi, weights):
+        p, cost, lat = self._estimates(bench, qi)
+        util = (weights[0] * p - weights[1] * np.asarray(normalize(jnp.asarray(cost)))
+                - weights[2] * np.asarray(normalize(jnp.asarray(lat))))
+        return np.argmax(util, 0)
+
+
+class GraphRouterLite(BaselineRouter):
+    """(task, model) interaction table; query→task via feature centroids."""
+    name = "graphrouter"
+
+    def fit(self, bench, pool_names, budget_qi=None):
+        world = bench.world
+        self.mi = [world.model_index(n) for n in pool_names]
+        qi = bench.qi_train
+        X, self.stats = _feature_matrix(bench, qi)
+        tasks = np.array([world.queries[i].task for i in qi])
+        self.task_names = sorted(set(tasks))
+        self.centroids = np.stack([X[tasks == t].mean(0) for t in self.task_names])
+        Y = world.sample_responses(self.mi, qi, seed=4)
+        self.table = np.stack(
+            [Y[:, tasks == t].mean(1) for t in self.task_names], 1)  # (M, T)
+        if budget_qi is not None:
+            b_tasks = np.array([world.queries[i].task for i in budget_qi])
+            y_new = world.sample_responses([self.mi[-1]], budget_qi, seed=4)[0]
+            for t_i, t in enumerate(self.task_names):
+                m = b_tasks == t
+                if m.any():
+                    self.table[-1, t_i] = y_new[m].mean()
+        lens = world.output_lengths(self.mi, qi)
+        self.len_table = np.stack(
+            [lens[:, tasks == t].mean(1) for t in self.task_names], 1)
+        self.pool_names = pool_names
+
+    def select(self, bench, qi, weights):
+        world = bench.world
+        X, _ = _feature_matrix(bench, qi, self.stats)
+        d = ((X[:, None] - self.centroids[None]) ** 2).sum(-1)
+        t_hat = np.argmin(d, 1)                                   # (Q,)
+        p = self.table[:, t_hat]                                  # (M, Q)
+        lens = self.len_table[:, t_hat]
+        lam_in = np.array([world.models[m].price_in for m in self.mi])[:, None]
+        lam_out = np.array([world.models[m].price_out for m in self.mi])[:, None]
+        cost = (lam_in * 50 + lam_out * lens) / 1e6
+        ttft = np.array([world.models[m].ttft for m in self.mi])[:, None]
+        tpot = np.array([world.models[m].tpot for m in self.mi])[:, None]
+        lat = ttft + lens * tpot
+        util = (weights[0] * p - weights[1] * np.asarray(normalize(jnp.asarray(cost)))
+                - weights[2] * np.asarray(normalize(jnp.asarray(lat))))
+        return np.argmax(util, 0)
+
+
+class ModelSATLike(BaselineRouter):
+    """Capability-instruction flavour: coarse per-(model, task) aptitude from
+    a small sample; accuracy-greedy with a size tie-break."""
+    name = "model_sat"
+
+    def fit(self, bench, pool_names, per_task: int = 8, budget_qi=None):
+        world = bench.world
+        self.mi = [world.model_index(n) for n in pool_names]
+        qi = bench.qi_train
+        tasks = np.array([world.queries[i].task for i in qi])
+        self.task_names = sorted(set(tasks))
+        rng = np.random.default_rng(5)
+        cap = np.zeros((len(self.mi), len(self.task_names)))
+        for t_i, t in enumerate(self.task_names):
+            sel = rng.choice(np.where(tasks == t)[0], per_task, replace=False)
+            Y = world.sample_responses(self.mi, qi[sel], seed=6)
+            cap[:, t_i] = Y.mean(1)
+        self.cap = cap
+        X, self.stats = _feature_matrix(bench, qi)
+        self.centroids = np.stack([X[tasks == t].mean(0) for t in self.task_names])
+        self.sizes = np.array([world.models[m].size_b for m in self.mi])
+        self.pool_names = pool_names
+
+    def select(self, bench, qi, weights):
+        X, _ = _feature_matrix(bench, qi, self.stats)
+        d = ((X[:, None] - self.centroids[None]) ** 2).sum(-1)
+        t_hat = np.argmin(d, 1)
+        p = self.cap[:, t_hat]                                    # (M, Q)
+        size_pen = np.asarray(normalize(jnp.asarray(np.log(self.sizes))))[:, None]
+        util = weights[0] * p - (weights[1] + weights[2]) * size_pen
+        return np.argmax(util, 0)
+
+
+def _sigmoid(x):
+    return 1 / (1 + np.exp(-x))
+
+
+def _logistic_fit(X, y, steps=300, lr=0.5):
+    Xb = np.hstack([X, np.ones((len(X), 1))])
+    w = np.zeros(Xb.shape[1])
+    for _ in range(steps):
+        p = _sigmoid(Xb @ w)
+        w -= lr * (Xb.T @ (p - y) / len(y) + 1e-3 * w)
+    return w
+
+
+ALL_BASELINES = [RandomRouter, RouteLLMLike, FORCLike, GraphRouterLite,
+                 ModelSATLike]
+
+
+def evaluate_selection(bench: Bench, pool_names: Sequence[str],
+                       qi: np.ndarray, sel: np.ndarray,
+                       weights: Tuple[float, float, float]) -> float:
+    p, cost, lat = bench.truth(pool_names, qi)
+    return float(reward(jnp.asarray(sel), p, cost, lat, weights))

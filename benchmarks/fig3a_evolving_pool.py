@@ -1,0 +1,50 @@
+"""Fig 3(a): real-world simulation of an evolving model pool — a fixed-size
+pool (N=6) where newly released models sequentially replace the weakest
+member; the router was trained before any of them existed.
+
+CSV rows: fig3a/<policy>/round<k>, us_per_round, reward
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+from benchmarks.common import SMALL_POOL, build_bench, evaluate_selection, onboard_pool
+from benchmarks.table1_routing import EVAL_POLICIES
+
+
+def run(smoke: bool = False, rounds: int = 6) -> List[Tuple[str, float, float]]:
+    bench = build_bench(smoke)
+    world = bench.world
+    future = [m.name for m in world.models if m.released_after_cutoff]
+    # order "releases" by (noisy) quality so the pool trends upward
+    future = sorted(future, key=lambda n: world.models[
+        world.model_index(n)].theta_star.mean())[-rounds:]
+    pool = list(SMALL_POOL) + [future[0]]
+    rows: List[Tuple[str, float, float]] = []
+    qi = bench.qi_id_test
+    texts = bench.texts(qi)
+
+    for k in range(rounds):
+        t0 = time.perf_counter()
+        if k > 0:
+            # replace the weakest pool member with the next release
+            weakest = min(
+                pool, key=lambda n: world.models[
+                    world.model_index(n)].theta_star.mean())
+            pool.remove(weakest)
+            pool.append(future[k])
+        onboard_pool(bench, pool)
+        dt = (time.perf_counter() - t0) * 1e6
+        for pol, w in EVAL_POLICIES.items():
+            _, sel, _ = bench.zr.route(texts, policy=pol)
+            r = evaluate_selection(bench, pool, qi, sel, w)
+            rows.append((f"fig3a/{pol}/round{k}", dt, r))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, val in run(smoke=True):
+        print(f"{name},{us:.1f},{val:.4f}")

@@ -1,0 +1,79 @@
+"""Fig 3(b, c): interpretability of the latent space.
+
+(b) difficulty b is task-AGNOSTIC: per-dimension variance of the task-mean
+    b is small relative to the global dimension spread ("uniform horizontal
+    bands").
+(c) discrimination α is task-SPECIFIC: the same ratio is large; ability
+    clusters (co-varying dim groups) exist.
+
+CSV rows: fig3b/dim<k> variance ratios, fig3c/dim<k>, plus summary rows.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+from benchmarks.common import build_bench
+from repro.data import TASKS
+
+
+def run(smoke: bool = False) -> List[Tuple[str, float, float]]:
+    bench = build_bench(smoke)
+    world = bench.world
+    qi = bench.qi_train
+    A, B = bench.zr.alpha, bench.zr.b
+    tasks = np.array([world.queries[i].task for i in qi])
+    names = sorted(set(tasks))
+    # task-cluster means: (T, D)
+    a_means = np.stack([A[tasks == t].mean(0) for t in names])
+    b_means = np.stack([B[tasks == t].mean(0) for t in names])
+
+    rows: List[Tuple[str, float, float]] = []
+    # ICC-style ratio per dim: between-task variance / total variance.
+    # Task-AGNOSTIC b ⇒ small ratio (uniform horizontal bands, Fig 3b);
+    # task-SPECIFIC α ⇒ large ratio (Fig 3c).
+    def icc(values, means):
+        between = means.var(0)                      # (D,)
+        total = values.var(0) + 1e-12
+        return float((between / total).mean())
+
+    icc_b = icc(B, b_means)
+    icc_a = icc(A, a_means)
+    rows.append(("fig3b/b_between_task_variance_fraction", 0.0, icc_b))
+    rows.append(("fig3c/alpha_between_task_variance_fraction", 0.0, icc_a))
+    rows.append(("fig3bc/alpha_over_b_task_specificity", 0.0,
+                 icc_a / (icc_b + 1e-12)))
+    # ground-truth (generative) space for reference: the claim holds there
+    # by construction; SVI shrinkage attenuates it in the recovered space
+    # (direction preserved at paper scale, inverted at smoke scale —
+    # EXPERIMENTS §Repro).
+    A_t, B_t = world.alpha_star[qi], world.b_star[qi]
+    at_means = np.stack([A_t[tasks == t].mean(0) for t in names])
+    bt_means = np.stack([B_t[tasks == t].mean(0) for t in names])
+    rows.append(("fig3b/true_b_between_task_fraction", 0.0, icc(B_t, bt_means)))
+    rows.append(("fig3c/true_alpha_between_task_fraction", 0.0, icc(A_t, at_means)))
+    # per-dimension task-variances (the heatmap rows)
+    for d in range(A.shape[1]):
+        rows.append((f"fig3b/b_dim{d:02d}_task_std", 0.0,
+                     float(b_means[:, d].std())))
+        rows.append((f"fig3c/alpha_dim{d:02d}_task_std", 0.0,
+                     float(a_means[:, d].std())))
+    # ability clusters: max |corr| between distinct dims of α across tasks
+    C = np.corrcoef(a_means.T)
+    np.fill_diagonal(C, 0)
+    rows.append(("fig3c/max_offdiag_dim_correlation", 0.0,
+                 float(np.nanmax(np.abs(C)))))
+    # feature ↔ latent correlation (justifies the 11 structural features)
+    from repro.core.features import extract_features_batch
+    F = extract_features_batch(bench.texts(qi))
+    s = np.sum(A * B, -1)
+    best = max(abs(float(np.corrcoef(F[:, k], s)[0, 1]))
+               for k in range(F.shape[1]))
+    rows.append(("fig3bc/best_feature_vs_s_q_abs_corr", 0.0, best))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, val in run(smoke=True):
+        print(f"{name},{us:.1f},{val:.4f}")

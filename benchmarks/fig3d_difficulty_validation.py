@@ -1,0 +1,41 @@
+"""Fig 3(d): validation of the task-aware difficulty s_q = αᵀb — strong
+monotonic correlation with the average model output token length.
+
+CSV rows: fig3d/spearman_s_vs_len (calibrated and predicted s_q).
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+from benchmarks.common import build_bench
+
+
+def _spearman(x, y):
+    rank = lambda v: np.argsort(np.argsort(v))
+    return float(np.corrcoef(rank(x), rank(y))[0, 1])
+
+
+def run(smoke: bool = False) -> List[Tuple[str, float, float]]:
+    bench = build_bench(smoke)
+    world = bench.world
+    qi = bench.qi_train
+    mi = list(range(10))  # core models
+    lens = world.output_lengths(mi, qi).mean(0)
+
+    s_cal = np.sum(bench.zr.alpha * bench.zr.b, -1)
+    rows = [("fig3d/spearman_calibrated_s_vs_len", 0.0,
+             _spearman(s_cal, lens))]
+
+    a_hat, b_hat = bench.zr.predict_latents(bench.texts(bench.qi_id_test))
+    s_hat = np.sum(a_hat * b_hat, -1)
+    lens_test = world.output_lengths(mi, bench.qi_id_test).mean(0)
+    rows.append(("fig3d/spearman_predicted_s_vs_len", 0.0,
+                 _spearman(s_hat, lens_test)))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, val in run(smoke=True):
+        print(f"{name},{us:.1f},{val:.4f}")

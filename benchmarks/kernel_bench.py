@@ -1,0 +1,85 @@
+"""Kernel microbenchmarks.
+
+On this CPU container the Pallas kernels run in interpret mode (not
+hardware-representative), so the timed path is the jnp reference under jit
+(what XLA-CPU executes); `derived` reports the kernel's arithmetic
+intensity estimate (FLOPs / byte) used in the roofline discussion.
+
+CSV rows: kernel/<name>/<shape>, us_per_call, flops_per_byte
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+
+def _time(fn, *args, reps=5) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+        (out[0] if isinstance(out, tuple) else out).block_until_ready()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(smoke: bool = False) -> List[Tuple[str, float, float]]:
+    rows: List[Tuple[str, float, float]] = []
+    key = jax.random.key(0)
+    ks = jax.random.split(key, 4)
+
+    # flash attention
+    B, H, KV, L, dk = (1, 4, 2, 512, 64) if smoke else (2, 8, 2, 1024, 64)
+    q = jax.random.normal(ks[0], (B, H, L, dk), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (B, KV, L, dk), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (B, KV, L, dk), jnp.bfloat16)
+    f = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v))
+    us = _time(f, q, k, v)
+    flops = 4.0 * B * H * L * L * dk
+    bytes_ = 2.0 * (q.size + k.size + v.size + q.size)
+    rows.append((f"kernel/flash_attention/B{B}H{H}L{L}", us, flops / bytes_))
+
+    # decode attention
+    S = 4096 if smoke else 16384
+    qd = jax.random.normal(ks[0], (B, H, dk), jnp.bfloat16)
+    kc = jax.random.normal(ks[1], (B, KV, S, dk), jnp.bfloat16)
+    vc = jax.random.normal(ks[2], (B, KV, S, dk), jnp.bfloat16)
+    vl = jnp.full((B,), S, jnp.int32)
+    fd = jax.jit(lambda q, k, v, l: ref.decode_attention_ref(q, k, v, l))
+    us = _time(fd, qd, kc, vc, vl)
+    flops = 4.0 * B * H * S * dk
+    bytes_ = 2.0 * (kc.size + vc.size)
+    rows.append((f"kernel/decode_attention/B{B}H{H}S{S}", us, flops / bytes_))
+
+    # doptimal scoring
+    I, D = (2000, 20) if smoke else (20000, 20)
+    alpha = jax.random.normal(ks[0], (I, D))
+    a_inv = jnp.eye(D) * 2.0
+    fo = jax.jit(ref.doptimal_score_ref)
+    us = _time(fo, alpha, a_inv)
+    flops = 2.0 * I * D * D + 2.0 * I * D
+    bytes_ = 4.0 * (alpha.size * 2 + a_inv.size)
+    rows.append((f"kernel/doptimal/I{I}D{D}", us, flops / bytes_))
+
+    # irt 2pl fused
+    U, I2 = (100, 1000) if smoke else (200, 5000)
+    theta = jax.random.normal(ks[0], (U, 20))
+    al = jnp.abs(jax.random.normal(ks[1], (I2, 20)))
+    b = jax.random.normal(ks[2], (I2, 20))
+    y = (jax.random.uniform(ks[3], (U, I2)) < 0.5).astype(jnp.float32)
+    fi = jax.jit(lambda t, a, bb, yy: ref.irt_2pl_ref(t, a, bb, yy))
+    us = _time(fi, theta, al, b, y)
+    flops = 2.0 * U * I2 * 20 + 10.0 * U * I2
+    bytes_ = 4.0 * (U * 20 + I2 * 40 + U * I2 * 4)
+    rows.append((f"kernel/irt_2pl/U{U}I{I2}", us, flops / bytes_))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, val in run(smoke=True):
+        print(f"{name},{us:.1f},{val:.4f}")

@@ -1,0 +1,39 @@
+"""Roofline summary from the dry-run artifacts (deliverable g).
+
+Reads experiments/dryrun/*.json and emits one row per (arch × shape) with
+the dominant term and the useful-FLOPs ratio.
+
+CSV rows: roofline/<arch>/<shape>, max_term_us, useful_flops_ratio
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List, Tuple
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+
+def run(smoke: bool = False) -> List[Tuple[str, float, float]]:
+    rows: List[Tuple[str, float, float]] = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*_single.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok" or "roofline" not in rec:
+            continue
+        rf = rec["roofline"]
+        max_term = max(rf["terms"].values())
+        rows.append((
+            f"roofline/{rec['arch']}/{rec['shape']}/{rf['dominant']}",
+            max_term * 1e6,
+            rf["useful_flops_ratio"],
+        ))
+    if not rows:
+        rows.append(("roofline/no_dryrun_artifacts_found", 0.0, 0.0))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, val in run():
+        print(f"{name},{us:.1f},{val:.4f}")

@@ -1,0 +1,63 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  ``--full`` uses the paper-scale
+world (slower); default is a reduced but statistically meaningful scale.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale world (slower)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names")
+    args = ap.parse_args(argv)
+    smoke = not args.full
+
+    from benchmarks import (
+        constrained_routing,
+        fig3a_evolving_pool,
+        fig3bc_latent_analysis,
+        fig3d_difficulty_validation,
+        kernel_bench,
+        roofline,
+        table1_routing,
+        table2_onboarding,
+    )
+
+    modules = {
+        "table1": table1_routing,
+        "table2": table2_onboarding,
+        "fig3a": fig3a_evolving_pool,
+        "fig3bc": fig3bc_latent_analysis,
+        "fig3d": fig3d_difficulty_validation,
+        "kernels": kernel_bench,
+        "roofline": roofline,
+        "constrained": constrained_routing,
+    }
+    wanted = args.only.split(",") if args.only else list(modules)
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in wanted:
+        mod = modules[name]
+        t0 = time.time()
+        try:
+            for row_name, us, val in mod.run(smoke=smoke):
+                print(f"{row_name},{us:.1f},{val:.4f}")
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name}/FAILED,0.0,0.0")
+            print(f"# {name} failed: {e!r}", file=sys.stderr)
+        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Table 1: routing performance on ID and OOD data, small- and large-scale
+pools, three policies, vs all baselines + individual models.
+
+CSV rows: table1/<domain>/<pool>/<policy>/<router>, us_per_query, reward
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+from benchmarks.common import (
+    ALL_BASELINES,
+    LARGE_POOL,
+    SMALL_POOL,
+    Bench,
+    build_bench,
+    evaluate_selection,
+    onboard_pool,
+)
+from repro.core.router import POLICIES
+
+EVAL_POLICIES = {
+    "max_acc": (0.8, 0.1, 0.1),
+    "min_cost": (0.1, 0.8, 0.1),
+    "min_lat": (0.1, 0.1, 0.8),
+}
+
+
+def run(smoke: bool = False) -> List[Tuple[str, float, float]]:
+    bench = build_bench(smoke)
+    rows: List[Tuple[str, float, float]] = []
+    domains = {"id": bench.qi_id_test, "ood": bench.qi_ood}
+    for pool_tag, pool in (("small", SMALL_POOL), ("large", LARGE_POOL)):
+        onboard_pool(bench, pool)
+        baselines = []
+        for cls in ALL_BASELINES:
+            rt = cls()
+            rt.fit(bench, pool)
+            baselines.append(rt)
+        for dom, qi in domains.items():
+            texts = bench.texts(qi)
+            # individual models
+            p, cost, lat = bench.truth(pool, qi)
+            for m, name in enumerate(pool):
+                for pol, w in EVAL_POLICIES.items():
+                    r = evaluate_selection(bench, pool, qi,
+                                           np.full(len(qi), m), w)
+                    rows.append((f"table1/{dom}/{pool_tag}/{pol}/fixed:{name}",
+                                 0.0, r))
+            # baselines
+            for rt in baselines:
+                for pol, w in EVAL_POLICIES.items():
+                    t0 = time.perf_counter()
+                    sel = rt.select(bench, qi, w)
+                    dt = (time.perf_counter() - t0) / len(qi) * 1e6
+                    r = evaluate_selection(bench, pool, qi, sel, w)
+                    rows.append((f"table1/{dom}/{pool_tag}/{pol}/{rt.name}",
+                                 dt, r))
+            # ZeroRouter
+            for pol, w in EVAL_POLICIES.items():
+                t0 = time.perf_counter()
+                _, sel, _ = bench.zr.route(texts, policy=pol)
+                dt = (time.perf_counter() - t0) / len(qi) * 1e6
+                r = evaluate_selection(bench, pool, qi, sel, w)
+                rows.append((f"table1/{dom}/{pool_tag}/{pol}/zerorouter",
+                             dt, r))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, val in run(smoke=True):
+        print(f"{name},{us:.1f},{val:.4f}")

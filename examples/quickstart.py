@@ -1,0 +1,67 @@
+"""ZeroRouter quickstart: calibrate → predict → onboard → route in ~1 min.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import IRTConfig, PredictorConfig, ZeroRouter, ZeroRouterConfig
+from repro.data import (
+    ID_TASKS,
+    OOD_TASKS,
+    WorldConfig,
+    build_world,
+    calibration_pool,
+    calibration_responses,
+)
+from repro.data.tokenizer import HashTokenizer
+
+
+def main():
+    print("=== 1. build a synthetic evaluation world (offline stand-in) ===")
+    world = build_world(WorldConfig(queries_per_task=60, n_future_models=8))
+    qi_id = world.query_indices(ID_TASKS)
+    print(f"  {len(world.queries)} queries over {len(ID_TASKS)} ID + "
+          f"{len(OOD_TASKS)} OOD tasks; {len(world.models)} models")
+
+    print("=== 2. calibrate the universal latent space (IRT + SVI) ===")
+    thetas = calibration_pool(world, 100)
+    R = calibration_responses(world, thetas, qi_id)
+    zr = ZeroRouter(ZeroRouterConfig(
+        irt=IRTConfig(dim=20, epochs=1200),
+        predictor=PredictorConfig(d_model=128, num_layers=2, d_ff=256,
+                                  max_len=64),
+        n_anchors=120, predictor_epochs=6))
+    cal = zr.calibrate(R)
+    print(f"  -ELBO {cal['elbo_trace'][0]:.0f} -> {cal['elbo_trace'][-1]:.0f}; "
+          f"{len(cal['anchors'])} D-optimal anchors selected")
+
+    print("=== 3. train the context-aware predictor (text -> latent) ===")
+    zr.fit_predictor([world.queries[i].text for i in qi_id],
+                     HashTokenizer(32_000))
+
+    print("=== 4. onboard models from anchor responses only ===")
+    anchor_global = qi_id[cal["anchors"]]
+    for name in ("gemma3-1b", "phi3-mini-3.8b", "qwen2-72b", "llama3-405b"):
+        m = world.model_index(name)
+        y = world.sample_responses([m], anchor_global, seed=m)[0]
+        lens = world.output_lengths([m], anchor_global)[0]
+        lats = world.true_latency([m], anchor_global, lens[None])[0]
+        info = world.models[m]
+        cand = zr.onboard_model(name, y, lens, lats, info.price_in,
+                                info.price_out, info.tokenizer)
+        print(f"  onboarded {name:18s} ttft={cand.ttft:.2f}s "
+              f"tpot={cand.tpot*1e3:.1f}ms")
+
+    print("=== 5. route unseen (OOD) queries under three policies ===")
+    qi_ood = world.query_indices(OOD_TASKS)[:12]
+    texts = [world.queries[i].text for i in qi_ood]
+    for policy in ("max_acc", "min_cost", "min_lat"):
+        names, sel, diag = zr.route(texts, policy=policy)
+        from collections import Counter
+        print(f"  {policy:9s}: {dict(Counter(names))}")
+    print("\nfirst OOD query:", texts[0][:90], "...")
+    print("routes to:", names[0])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""Serve batched requests end-to-end: the router picks a backend per query,
+then each selected backend ACTUALLY RUNS generation (prefill + greedy
+decode) with its reduced-config model on CPU — the full loop the paper
+leaves to the API providers.
+
+    PYTHONPATH=src python examples/serve_routing.py --batch 8 --max-new 8
+"""
+import argparse
+import time
+from collections import Counter, defaultdict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core import IRTConfig, PredictorConfig, ZeroRouter, ZeroRouterConfig
+from repro.data import ID_TASKS, OOD_TASKS, WorldConfig, build_world, calibration_pool, calibration_responses
+from repro.data.tokenizer import HashTokenizer
+from repro.models import init_params
+from repro.runtime import greedy_generate
+
+BACKENDS = ["gemma3-1b", "phi3-mini-3.8b", "qwen2-72b", "llama3-405b"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    args = ap.parse_args()
+
+    print("=== bring up the router ===")
+    world = build_world(WorldConfig(queries_per_task=50, n_future_models=4))
+    qi_id = world.query_indices(ID_TASKS)
+    R = calibration_responses(world, calibration_pool(world, 80), qi_id)
+    zr = ZeroRouter(ZeroRouterConfig(
+        irt=IRTConfig(dim=20, epochs=800),
+        predictor=PredictorConfig(d_model=96, num_layers=2, d_ff=192, max_len=48),
+        n_anchors=80, predictor_epochs=4))
+    cal = zr.calibrate(R)
+    zr.fit_predictor([world.queries[i].text for i in qi_id], HashTokenizer(32_000))
+    anchors = qi_id[cal["anchors"]]
+    for name in BACKENDS:
+        m = world.model_index(name)
+        y = world.sample_responses([m], anchors, seed=m)[0]
+        lens = world.output_lengths([m], anchors)[0]
+        lats = world.true_latency([m], anchors, lens[None])[0]
+        info = world.models[m]
+        zr.onboard_model(name, y, lens, lats, info.price_in, info.price_out,
+                         info.tokenizer)
+
+    print("=== bring up the serving backends (reduced configs on CPU) ===")
+    backends = {}
+    key = jax.random.key(0)
+    for name in BACKENDS:
+        cfg = get_smoke_config(name)
+        backends[name] = (cfg, init_params(cfg, key))
+        print(f"  {name:18s} ready ({cfg.num_layers}L d={cfg.d_model})")
+
+    print("=== route + serve a batch of OOD requests ===")
+    qi = world.query_indices(OOD_TASKS)[: args.batch]
+    texts = [world.queries[i].text for i in qi]
+    names, sel, diag = zr.route(texts, policy="balanced")
+    print("  routing:", dict(Counter(names)))
+
+    # group requests per backend and serve each group batched
+    groups = defaultdict(list)
+    for i, n in enumerate(names):
+        groups[n].append(i)
+    tok = HashTokenizer(512)  # smoke vocabs are 512
+    t0 = time.time()
+    for name, idxs in groups.items():
+        cfg, params = backends[name]
+        ids, _ = tok.encode_batch([texts[i] for i in idxs], args.prompt_len,
+                                  add_cls=False)
+        prompt = jnp.asarray(ids) % cfg.vocab_size
+        out = greedy_generate(params, cfg, prompt, args.max_new,
+                              args.prompt_len + args.max_new)
+        print(f"  {name:18s} served {len(idxs)} reqs -> tokens {out.shape}; "
+              f"sample {out[0, :6].tolist()}")
+    dt = time.time() - t0
+    print(f"=== served {args.batch} requests in {dt:.1f}s "
+          f"({args.batch * args.max_new / dt:.1f} tok/s aggregate) ===")
+    est_cost = diag["cost"][sel, np.arange(len(sel))].sum()
+    mono_cost = diag["cost"][np.argmax([b.price_in for b in zr.pool])].sum()
+    print(f"estimated cost ${est_cost:.4f} vs always-biggest ${mono_cost:.4f} "
+          f"({100 * (1 - est_cost / mono_cost):.0f}% saved)")
+
+
+if __name__ == "__main__":
+    main()

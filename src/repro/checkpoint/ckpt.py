@@ -1,0 +1,69 @@
+"""Minimal pytree checkpointing: npz payload + json tree structure.
+
+Good enough for the CPU-scale artifacts in this repo (predictor weights,
+IRT posteriors, reduced-model training runs).  bfloat16 leaves are stored
+as uint16 bit patterns (npz has no native bf16).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+_BF16_TAG = "__bf16__"
+
+
+def _flatten_with_names(tree: PyTree):
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    names, leaves = [], []
+    for path, leaf in leaves_with_paths:
+        names.append(jax.tree_util.keystr(path))
+        leaves.append(leaf)
+    return names, leaves
+
+
+def _base(path: str) -> str:
+    return path[:-4] if path.endswith(".npz") else path
+
+
+def save_checkpoint(path: str, tree: PyTree, meta: dict | None = None) -> None:
+    base = _base(path)
+    os.makedirs(os.path.dirname(base) or ".", exist_ok=True)
+    names, leaves = _flatten_with_names(tree)
+    payload = {}
+    dtypes = {}
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(leaf)
+        if arr.dtype == jnp.bfloat16:
+            dtypes[str(i)] = _BF16_TAG
+            arr = arr.view(np.uint16)
+        payload[str(i)] = arr
+    treedef = jax.tree_util.tree_structure(tree)
+    np.savez(base + ".npz", **payload)
+    with open(base + ".meta.json", "w") as f:
+        json.dump(
+            {"names": names, "treedef": str(treedef), "dtypes": dtypes,
+             "meta": meta or {}},
+            f,
+        )
+
+
+def load_checkpoint(path: str, like: PyTree) -> PyTree:
+    """Restore into the structure of ``like`` (leaf order must match save)."""
+    base = _base(path)
+    data = np.load(base + ".npz")
+    with open(base + ".meta.json") as f:
+        meta = json.load(f)
+    leaves = []
+    for i in range(len(data.files)):
+        arr = data[str(i)]
+        if meta["dtypes"].get(str(i)) == _BF16_TAG:
+            arr = arr.view(jnp.bfloat16)
+        leaves.append(jnp.asarray(arr))
+    treedef = jax.tree_util.tree_structure(like)
+    return jax.tree_util.tree_unflatten(treedef, leaves)

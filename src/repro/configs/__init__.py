@@ -1,0 +1,92 @@
+"""Architecture config registry.
+
+``get_config(arch_id)`` / ``get_smoke_config(arch_id)`` resolve the assigned
+pool; ``ARCH_IDS`` is the canonical ordering used by benchmarks and the
+dry-run matrix.
+"""
+from repro.configs.base import (
+    INPUT_SHAPES,
+    FrontendConfig,
+    InputShape,
+    MLAConfig,
+    ModelConfig,
+    MoEConfig,
+    SSMConfig,
+    shape_applicable,
+)
+from repro.configs import (
+    deepseek_v2_lite,
+    gemma3_1b,
+    hymba_1p5b,
+    kimi_k2_1t,
+    llama3_405b,
+    musicgen_large,
+    paligemma_3b,
+    phi3_mini_3p8b,
+    qwen2_72b,
+    xlstm_125m,
+)
+
+_MODULES = {
+    "llama3-405b": llama3_405b,
+    "xlstm-125m": xlstm_125m,
+    "kimi-k2-1t-a32b": kimi_k2_1t,
+    "paligemma-3b": paligemma_3b,
+    "musicgen-large": musicgen_large,
+    "gemma3-1b": gemma3_1b,
+    "phi3-mini-3.8b": phi3_mini_3p8b,
+    "qwen2-72b": qwen2_72b,
+    "deepseek-v2-lite-16b": deepseek_v2_lite,
+    "hymba-1.5b": hymba_1p5b,
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def window_variant(cfg: ModelConfig, window: int = 4_096,
+                   global_every: int = 8) -> ModelConfig:
+    """Sliding-window serving variant of a full-attention dense arch
+    (beyond-paper: enables long_500k decode — local layers keep a
+    window-sized ring cache, every Nth layer stays global with a
+    sequence-sharded cache).  Inapplicable to SSM/MLA/hybrid archs."""
+    import dataclasses
+
+    if cfg.attention_kind != "full" or cfg.family not in ("dense", "moe",
+                                                          "vlm", "audio"):
+        raise ValueError(f"{cfg.arch_id}: window variant needs full attention")
+    return dataclasses.replace(
+        cfg, arch_id=cfg.arch_id + "-sw", attention_kind="sliding",
+        sliding_window=window, global_every=global_every)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id.endswith("-sw"):
+        return window_variant(get_config(arch_id[:-3]))
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch '{arch_id}'; available: {sorted(_MODULES)}")
+    return _MODULES[arch_id].make_config()
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    if arch_id.endswith("-sw"):
+        return window_variant(get_smoke_config(arch_id[:-3]), window=64,
+                              global_every=2)
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch '{arch_id}'; available: {sorted(_MODULES)}")
+    return _MODULES[arch_id].make_smoke_config()
+
+
+__all__ = [
+    "ARCH_IDS",
+    "INPUT_SHAPES",
+    "FrontendConfig",
+    "InputShape",
+    "MLAConfig",
+    "ModelConfig",
+    "MoEConfig",
+    "SSMConfig",
+    "get_config",
+    "get_smoke_config",
+    "window_variant",
+    "shape_applicable",
+]

@@ -1,0 +1,222 @@
+"""Base configuration dataclasses for the ZeroRouter-JAX model zoo.
+
+One ``ModelConfig`` describes any architecture in the assigned pool
+(dense / moe / ssm / vlm / audio / hybrid).  Family-specific behaviour is
+driven by fields, not subclasses, so the unified decoder in
+``repro.models.model`` stays a single scan-over-layers program.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts block configuration (sort-based dropless dispatch)."""
+
+    num_experts: int
+    num_experts_per_tok: int
+    expert_d_ff: int
+    num_shared_experts: int = 0
+    shared_d_ff: int = 0
+    # Layers [0, first_k_dense) use a dense FFN of width ``dense_d_ff``.
+    first_k_dense: int = 0
+    dense_d_ff: int = 0
+    # Capacity factor for the sort-based dispatch (tokens/expert budget).
+    capacity_factor: float = 1.25
+    router_aux_loss_coef: float = 0.001
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek-style Multi-head Latent Attention."""
+
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 0          # 0 => full-rank Q projection (V2-Lite)
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    """State-space / recurrent block configuration (xLSTM, Mamba branches)."""
+
+    state_size: int = 16          # per-channel SSM state (mamba) / mLSTM key dim factor
+    conv_kernel: int = 4
+    expand: int = 2               # inner expansion factor
+    # xLSTM: place an sLSTM block every ``slstm_every`` layers (0 = never).
+    slstm_every: int = 0
+    dt_rank: int = 0              # 0 => ceil(d_model/16)
+
+
+@dataclasses.dataclass(frozen=True)
+class FrontendConfig:
+    """Stubbed modality frontend: precomputed embeddings arrive as inputs.
+
+    ``input_specs()`` materializes ShapeDtypeStructs of shape
+    (batch, num_prefix_tokens, frontend_dim); the in-model projector maps
+    them to d_model and prepends them to the token stream.
+    """
+
+    kind: str                     # "vision" | "audio"
+    num_prefix_tokens: int
+    frontend_dim: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    arch_id: str
+    family: str                   # dense | moe | ssm | vlm | audio | hybrid
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0             # 0 => d_model // num_heads
+
+    # --- attention ---
+    attention_kind: str = "full"  # full | sliding | mla | none (pure ssm)
+    sliding_window: int = 0       # window size for local layers
+    # every Nth layer is global (full) attention; 0 => all layers same kind.
+    global_every: int = 0
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    rope_theta_global: float = 0.0  # gemma3: different theta on global layers
+
+    # --- family extras ---
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    frontend: Optional[FrontendConfig] = None
+    # hybrid: run attention and mamba branches in parallel and mean-fuse.
+    parallel_ssm_branch: bool = False
+
+    # --- misc ---
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    logit_softcap: float = 0.0
+    act_dtype: str = "bfloat16"
+    param_dtype: str = "bfloat16"
+
+    # citation for the config values
+    source: str = ""
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // self.num_heads)
+
+    @property
+    def act_jnp_dtype(self):
+        return jnp.dtype(self.act_dtype)
+
+    @property
+    def param_jnp_dtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def is_sub_quadratic(self) -> bool:
+        """True if the arch can serve 500k-context decode.
+
+        SSM / hybrid archs have O(1)-state decode; dense archs qualify only
+        with a sliding-window attention variant (gemma3's 5:1 local:global
+        qualifies because local layers bound the cache and the few global
+        layers use a sequence-sharded cache).
+        """
+        if self.family in ("ssm", "hybrid"):
+            return True
+        return self.attention_kind == "sliding"
+
+    def layer_kinds(self) -> Tuple[str, ...]:
+        """Per-layer attention kind: 'full' | 'sliding' | 'mla' | 'slstm' | 'mlstm'."""
+        kinds = []
+        for i in range(self.num_layers):
+            if self.family == "ssm" and self.ssm is not None:
+                if self.ssm.slstm_every and (i % self.ssm.slstm_every == self.ssm.slstm_every - 1):
+                    kinds.append("slstm")
+                else:
+                    kinds.append("mlstm")
+            elif self.attention_kind == "sliding" and self.global_every:
+                kinds.append("full" if (i % self.global_every == self.global_every - 1) else "sliding")
+            else:
+                kinds.append(self.attention_kind)
+        return tuple(kinds)
+
+    def num_params(self) -> int:
+        """Approximate parameter count (used for 6ND model-FLOPs roofline)."""
+        d, hd = self.d_model, self.resolved_head_dim
+        nq, nkv = self.num_heads, self.num_kv_heads
+        emb = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        per_layer = 0
+        kinds = self.layer_kinds()
+        for i, kind in enumerate(kinds):
+            if kind in ("full", "sliding"):
+                per = d * hd * (nq + 2 * nkv) + nq * hd * d  # qkv + o
+            elif kind == "mla":
+                m = self.mla
+                qdim = nq * (m.qk_nope_head_dim + m.qk_rope_head_dim)
+                per = d * qdim if not m.q_lora_rank else d * m.q_lora_rank + m.q_lora_rank * qdim
+                per += d * (m.kv_lora_rank + m.qk_rope_head_dim)
+                per += m.kv_lora_rank * nq * (m.qk_nope_head_dim + m.v_head_dim)
+                per += nq * m.v_head_dim * d
+            elif kind == "mlstm":
+                e = self.ssm.expand * d
+                per = 2 * d * e + 3 * e * (e // 4) + e * d  # up/gates/qkv-ish/down (approx)
+            elif kind == "slstm":
+                per = 4 * d * d + 2 * d * (d * 4 // 3)
+            else:
+                per = 0
+            if self.parallel_ssm_branch and self.ssm is not None:
+                e = self.ssm.expand * d
+                per += 2 * d * e + e * d + e * (self.ssm.state_size * 2)
+            # FFN / MoE
+            if self.moe is not None:
+                mo = self.moe
+                if i < mo.first_k_dense:
+                    per += 3 * d * mo.dense_d_ff
+                else:
+                    per += mo.num_experts * 3 * d * mo.expert_d_ff
+                    per += mo.num_shared_experts * 3 * d * (mo.shared_d_ff or mo.expert_d_ff)
+                    per += d * mo.num_experts  # router
+            elif self.d_ff:
+                per += 3 * d * self.d_ff
+            per_layer += per
+        return emb + per_layer
+
+    def num_active_params(self) -> int:
+        """Active (per-token) parameters — differs from num_params for MoE."""
+        if self.moe is None:
+            return self.num_params()
+        d = self.d_model
+        mo = self.moe
+        total = self.num_params()
+        moe_layers = self.num_layers - mo.first_k_dense
+        all_experts = moe_layers * mo.num_experts * 3 * d * mo.expert_d_ff
+        active = moe_layers * mo.num_experts_per_tok * 3 * d * mo.expert_d_ff
+        return total - all_experts + active
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str                     # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: InputShape) -> bool:
+    """Whether an (arch, input-shape) pair is exercised (long_500k rule)."""
+    if shape.name == "long_500k":
+        return cfg.is_sub_quadratic()
+    return True

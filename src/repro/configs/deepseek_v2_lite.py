@@ -1,0 +1,69 @@
+"""DeepSeek-V2-Lite 16B — MLA (kv_lora=512) + MoE 64 routed top-6, 2 shared
+[arXiv:2405.04434]."""
+from repro.configs.base import MLAConfig, ModelConfig, MoEConfig
+
+
+def make_config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="deepseek-v2-lite-16b",
+        family="moe",
+        num_layers=27,
+        d_model=2_048,
+        num_heads=16,
+        num_kv_heads=16,
+        head_dim=128,
+        d_ff=1_408,                 # routed-expert FFN width
+        vocab_size=102_400,
+        attention_kind="mla",
+        rope_theta=10_000.0,
+        mla=MLAConfig(
+            kv_lora_rank=512,
+            q_lora_rank=0,          # V2-Lite uses a full-rank Q projection
+            qk_nope_head_dim=128,
+            qk_rope_head_dim=64,
+            v_head_dim=128,
+        ),
+        moe=MoEConfig(
+            num_experts=64,
+            num_experts_per_tok=6,
+            expert_d_ff=1_408,
+            num_shared_experts=2,
+            shared_d_ff=1_408,
+            first_k_dense=1,
+            dense_d_ff=10_944,
+        ),
+        source="arXiv:2405.04434 (DeepSeek-V2-Lite)",
+    )
+
+
+def make_smoke_config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="deepseek-v2-lite-16b-smoke",
+        family="moe",
+        num_layers=2,
+        d_model=256,
+        num_heads=4,
+        num_kv_heads=4,
+        head_dim=64,
+        d_ff=128,
+        vocab_size=512,
+        attention_kind="mla",
+        mla=MLAConfig(
+            kv_lora_rank=64,
+            q_lora_rank=0,
+            qk_nope_head_dim=64,
+            qk_rope_head_dim=32,
+            v_head_dim=64,
+        ),
+        moe=MoEConfig(
+            num_experts=4,
+            num_experts_per_tok=2,
+            expert_d_ff=128,
+            num_shared_experts=1,
+            shared_d_ff=128,
+            first_k_dense=1,
+            dense_d_ff=512,
+            capacity_factor=8.0,  # generous: smoke tests assert exact prefill/decode parity
+        ),
+        source="reduced deepseek-v2-lite",
+    )

@@ -1,0 +1,45 @@
+"""Gemma-3 1B — dense decoder, 5:1 local:global sliding window, 262k vocab
+[hf:google/gemma-3-1b-pt]."""
+from repro.configs.base import ModelConfig
+
+
+def make_config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="gemma3-1b",
+        family="dense",
+        num_layers=26,
+        d_model=1_152,
+        num_heads=4,
+        num_kv_heads=1,
+        head_dim=256,
+        d_ff=6_912,
+        vocab_size=262_144,
+        attention_kind="sliding",
+        sliding_window=512,
+        global_every=6,              # 5 local : 1 global
+        rope_theta=10_000.0,
+        rope_theta_global=1_000_000.0,
+        tie_embeddings=True,
+        logit_softcap=30.0,
+        source="hf:google/gemma-3-1b-pt",
+    )
+
+
+def make_smoke_config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="gemma3-1b-smoke",
+        family="dense",
+        num_layers=2,
+        d_model=256,
+        num_heads=4,
+        num_kv_heads=1,
+        head_dim=64,
+        d_ff=512,
+        vocab_size=512,
+        attention_kind="sliding",
+        sliding_window=64,
+        global_every=2,
+        tie_embeddings=True,
+        logit_softcap=30.0,
+        source="reduced gemma3-1b",
+    )

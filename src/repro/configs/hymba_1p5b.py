@@ -1,0 +1,45 @@
+"""Hymba-1.5B — hybrid: parallel attention + Mamba heads per layer,
+sliding-window attention with periodic global layers, ssm_state=16
+[arXiv:2411.13676]."""
+from repro.configs.base import ModelConfig, SSMConfig
+
+
+def make_config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="hymba-1.5b",
+        family="hybrid",
+        num_layers=32,
+        d_model=1_600,
+        num_heads=25,
+        num_kv_heads=5,
+        head_dim=64,
+        d_ff=5_504,
+        vocab_size=32_001,
+        attention_kind="sliding",
+        sliding_window=1_024,
+        global_every=16,            # few global layers, rest sliding (paper: 3 global)
+        rope_theta=10_000.0,
+        ssm=SSMConfig(state_size=16, conv_kernel=4, expand=2),
+        parallel_ssm_branch=True,
+        source="arXiv:2411.13676 (Hymba-1.5B)",
+    )
+
+
+def make_smoke_config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="hymba-1.5b-smoke",
+        family="hybrid",
+        num_layers=2,
+        d_model=200,
+        num_heads=5,
+        num_kv_heads=5,
+        head_dim=40,
+        d_ff=512,
+        vocab_size=512,
+        attention_kind="sliding",
+        sliding_window=64,
+        global_every=2,
+        ssm=SSMConfig(state_size=8, conv_kernel=4, expand=2),
+        parallel_ssm_branch=True,
+        source="reduced hymba",
+    )

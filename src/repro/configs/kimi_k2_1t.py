@@ -1,0 +1,55 @@
+"""Kimi K2 — trillion-param MoE, 384 experts top-8, GQA kv=8 (paper-table spec)
+[arXiv:2501.kimi2]."""
+from repro.configs.base import ModelConfig, MoEConfig
+
+
+def make_config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="kimi-k2-1t-a32b",
+        family="moe",
+        num_layers=61,
+        d_model=7_168,
+        num_heads=64,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=2_048,                 # expert FFN width (paper-table spec)
+        vocab_size=163_840,
+        attention_kind="full",
+        rope_theta=50_000.0,
+        moe=MoEConfig(
+            num_experts=384,
+            num_experts_per_tok=8,
+            expert_d_ff=2_048,
+            num_shared_experts=1,
+            shared_d_ff=2_048,
+            first_k_dense=1,
+            dense_d_ff=18_432,
+        ),
+        source="arXiv:2501.kimi2 (Kimi K2 1T-A32B)",
+    )
+
+
+def make_smoke_config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="kimi-k2-1t-a32b-smoke",
+        family="moe",
+        num_layers=2,
+        d_model=256,
+        num_heads=8,
+        num_kv_heads=2,
+        head_dim=32,
+        d_ff=128,
+        vocab_size=512,
+        attention_kind="full",
+        moe=MoEConfig(
+            num_experts=4,
+            num_experts_per_tok=2,
+            expert_d_ff=128,
+            num_shared_experts=1,
+            shared_d_ff=128,
+            first_k_dense=1,
+            dense_d_ff=512,
+            capacity_factor=8.0,  # generous: smoke tests assert exact prefill/decode parity
+        ),
+        source="reduced kimi-k2",
+    )

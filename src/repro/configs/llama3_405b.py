@@ -1,0 +1,36 @@
+"""Llama-3.1 405B — dense GQA decoder [arXiv:2407.21783]."""
+from repro.configs.base import ModelConfig
+
+
+def make_config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="llama3-405b",
+        family="dense",
+        num_layers=126,
+        d_model=16_384,
+        num_heads=128,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=53_248,
+        vocab_size=128_256,
+        attention_kind="full",
+        rope_theta=500_000.0,
+        source="arXiv:2407.21783 (Llama 3.1 405B)",
+    )
+
+
+def make_smoke_config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="llama3-405b-smoke",
+        family="dense",
+        num_layers=2,
+        d_model=256,
+        num_heads=8,
+        num_kv_heads=2,
+        head_dim=32,
+        d_ff=512,
+        vocab_size=512,
+        attention_kind="full",
+        rope_theta=500_000.0,
+        source="reduced llama3-405b",
+    )

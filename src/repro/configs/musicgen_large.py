@@ -1,0 +1,42 @@
+"""MusicGen-Large — decoder-only transformer over EnCodec tokens; text/codec
+conditioning frontend stubbed per spec [arXiv:2306.05284]."""
+from repro.configs.base import FrontendConfig, ModelConfig
+
+
+def make_config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="musicgen-large",
+        family="audio",
+        num_layers=48,
+        d_model=2_048,
+        num_heads=32,
+        num_kv_heads=32,
+        head_dim=64,
+        d_ff=8_192,
+        vocab_size=2_048,           # EnCodec codebook size
+        attention_kind="full",
+        rope_theta=10_000.0,        # adaptation: RoPE instead of learned pos-emb
+        frontend=FrontendConfig(
+            kind="audio",
+            num_prefix_tokens=64,   # conditioning frames (T5 cross-attn stub)
+            frontend_dim=1_024,
+        ),
+        source="arXiv:2306.05284 (MusicGen-Large)",
+    )
+
+
+def make_smoke_config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="musicgen-large-smoke",
+        family="audio",
+        num_layers=2,
+        d_model=256,
+        num_heads=8,
+        num_kv_heads=8,
+        head_dim=32,
+        d_ff=512,
+        vocab_size=512,
+        attention_kind="full",
+        frontend=FrontendConfig(kind="audio", num_prefix_tokens=8, frontend_dim=64),
+        source="reduced musicgen",
+    )

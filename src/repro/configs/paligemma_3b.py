@@ -1,0 +1,44 @@
+"""PaliGemma-3B — gemma decoder backbone over SigLIP patch embeddings
+(vision tower stubbed per spec) [arXiv:2407.07726]."""
+from repro.configs.base import FrontendConfig, ModelConfig
+
+
+def make_config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="paligemma-3b",
+        family="vlm",
+        num_layers=18,
+        d_model=2_048,
+        num_heads=8,
+        num_kv_heads=1,
+        head_dim=256,
+        d_ff=16_384,
+        vocab_size=257_216,
+        attention_kind="full",
+        rope_theta=10_000.0,
+        tie_embeddings=True,
+        frontend=FrontendConfig(
+            kind="vision",
+            num_prefix_tokens=256,   # 224px / 14px SigLIP patches = 16x16
+            frontend_dim=1_152,      # SigLIP-So400m width
+        ),
+        source="arXiv:2407.07726 (PaliGemma-3B, gemma-2b decoder)",
+    )
+
+
+def make_smoke_config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="paligemma-3b-smoke",
+        family="vlm",
+        num_layers=2,
+        d_model=256,
+        num_heads=4,
+        num_kv_heads=1,
+        head_dim=64,
+        d_ff=512,
+        vocab_size=512,
+        attention_kind="full",
+        tie_embeddings=True,
+        frontend=FrontendConfig(kind="vision", num_prefix_tokens=16, frontend_dim=96),
+        source="reduced paligemma",
+    )

@@ -1,0 +1,35 @@
+"""Phi-3-mini 3.8B — dense decoder, RoPE + SwiGLU, MHA (kv=32) [arXiv:2404.14219]."""
+from repro.configs.base import ModelConfig
+
+
+def make_config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="phi3-mini-3.8b",
+        family="dense",
+        num_layers=32,
+        d_model=3_072,
+        num_heads=32,
+        num_kv_heads=32,
+        head_dim=96,
+        d_ff=8_192,
+        vocab_size=32_064,
+        attention_kind="full",
+        rope_theta=10_000.0,
+        source="arXiv:2404.14219 (Phi-3-mini)",
+    )
+
+
+def make_smoke_config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="phi3-mini-3.8b-smoke",
+        family="dense",
+        num_layers=2,
+        d_model=256,
+        num_heads=8,
+        num_kv_heads=8,
+        head_dim=32,
+        d_ff=512,
+        vocab_size=512,
+        attention_kind="full",
+        source="reduced phi3-mini",
+    )

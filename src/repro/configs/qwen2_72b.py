@@ -1,0 +1,38 @@
+"""Qwen2-72B — dense GQA decoder with QKV bias [arXiv:2407.10671]."""
+from repro.configs.base import ModelConfig
+
+
+def make_config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="qwen2-72b",
+        family="dense",
+        num_layers=80,
+        d_model=8_192,
+        num_heads=64,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=29_568,
+        vocab_size=152_064,
+        attention_kind="full",
+        qkv_bias=True,
+        rope_theta=1_000_000.0,
+        source="arXiv:2407.10671 (Qwen2-72B)",
+    )
+
+
+def make_smoke_config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="qwen2-72b-smoke",
+        family="dense",
+        num_layers=2,
+        d_model=256,
+        num_heads=8,
+        num_kv_heads=2,
+        head_dim=32,
+        d_ff=448,
+        vocab_size=512,
+        attention_kind="full",
+        qkv_bias=True,
+        rope_theta=1_000_000.0,
+        source="reduced qwen2-72b",
+    )

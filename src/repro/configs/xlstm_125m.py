@@ -1,0 +1,42 @@
+"""xLSTM-125M — sLSTM + mLSTM blocks, no separate FFN (d_ff=0)
+[arXiv:2405.04517]."""
+from repro.configs.base import ModelConfig, SSMConfig
+
+
+def make_config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="xlstm-125m",
+        family="ssm",
+        num_layers=12,
+        d_model=768,
+        num_heads=4,
+        num_kv_heads=4,
+        head_dim=192,
+        d_ff=0,                     # xLSTM blocks carry their own projections
+        vocab_size=50_304,
+        attention_kind="none",
+        ssm=SSMConfig(
+            state_size=16,
+            conv_kernel=4,
+            expand=2,
+            slstm_every=4,          # layers 3, 7, 11 are sLSTM (1:3 ratio)
+        ),
+        source="arXiv:2405.04517 (xLSTM[7:1]-125M family)",
+    )
+
+
+def make_smoke_config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="xlstm-125m-smoke",
+        family="ssm",
+        num_layers=2,
+        d_model=256,
+        num_heads=4,
+        num_kv_heads=4,
+        head_dim=64,
+        d_ff=0,
+        vocab_size=512,
+        attention_kind="none",
+        ssm=SSMConfig(state_size=8, conv_kernel=4, expand=2, slstm_every=2),
+        source="reduced xlstm",
+    )

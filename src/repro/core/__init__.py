@@ -1,0 +1,29 @@
+"""ZeroRouter core: the paper's contribution as a composable JAX library.
+
+Modules: irt (universal latent space, SVI), anchors (D-optimal selection),
+profiling (zero-shot model onboarding), features + predictor (context-aware
+latent coordinate prediction), cost / latency estimation, router (policy
+ILP), zerorouter (facade over the whole pipeline).
+"""
+from repro.core.irt import IRTConfig, fit_irt, irt_probability, posterior_means, task_aware_difficulty
+from repro.core.anchors import greedy_doptimal, logdet_information, select_anchors
+from repro.core.profiling import ProfilingConfig, predict_accuracy, profile_new_model
+from repro.core.features import K_FEATURES, extract_features, extract_features_batch
+from repro.core.predictor import Predictor, PredictorConfig, cluster_dimensions, train_predictor
+from repro.core.cost import OutputLengthTable, calibrate_length_table, estimate_cost
+from repro.core.latency import LatencyParams, RooflineLatencyModel, calibrate_latency
+from repro.core.router import POLICIES, RoutingConstraints, reward, route, utility_matrix
+from repro.core.zerorouter import CandidateModel, ZeroRouter, ZeroRouterConfig
+
+__all__ = [
+    "CandidateModel", "IRTConfig", "K_FEATURES", "LatencyParams",
+    "OutputLengthTable", "POLICIES", "Predictor", "PredictorConfig",
+    "ProfilingConfig", "RooflineLatencyModel", "RoutingConstraints",
+    "ZeroRouter", "ZeroRouterConfig", "calibrate_latency",
+    "calibrate_length_table", "cluster_dimensions", "estimate_cost",
+    "extract_features", "extract_features_batch", "fit_irt",
+    "greedy_doptimal", "irt_probability", "logdet_information",
+    "posterior_means", "predict_accuracy", "profile_new_model", "reward",
+    "route", "select_anchors", "task_aware_difficulty", "train_predictor",
+    "utility_matrix",
+]

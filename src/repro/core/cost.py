@@ -1,0 +1,98 @@
+"""Inference cost estimation (paper Eq. 6–10).
+
+  C_uq = λᵘ_in·ℓ_in + λᵘ_out·ℓ̂_out
+  ℓ_in  = |𝒯_u(q)|                        (deterministic, per-model tokenizer)
+  ℓ̂_out = lookup[(u, bin(ŝ_q))]           (calibrated on the anchor set)
+
+The (model × complexity-bin) output-length table is the paper's key trick:
+output-length estimation for any new query is an inference-free lookup via
+the predicted task-aware difficulty ŝ_q = α̂ᵀb̂.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.data.tokenizer import model_token_count
+from repro.data.world import ModelInfo
+
+
+@dataclasses.dataclass
+class OutputLengthTable:
+    bin_edges: np.ndarray                  # (K-1,) interior edges over s_q
+    table: np.ndarray                      # (M, K) mean output length
+    model_names: List[str]
+    global_mean: float
+
+    def bin_of(self, s_q: np.ndarray) -> np.ndarray:
+        return np.digitize(s_q, self.bin_edges)
+
+    def lookup(self, model_idx: np.ndarray, s_q: np.ndarray) -> np.ndarray:
+        """ℓ̂_out for (len(model_idx), len(s_q)) pairs (Eq. 10)."""
+        k = self.bin_of(np.asarray(s_q))
+        return self.table[np.asarray(model_idx)][:, k]
+
+    def add_model(self, name: str, anchor_s: np.ndarray,
+                  anchor_lengths: np.ndarray) -> int:
+        """Onboard a new model's verbosity profile from anchor responses."""
+        row = _bin_means(anchor_s, anchor_lengths, self.bin_edges,
+                         self.global_mean)
+        self.table = np.vstack([self.table, row[None]])
+        self.model_names.append(name)
+        return len(self.model_names) - 1
+
+
+def _bin_means(s: np.ndarray, lengths: np.ndarray, edges: np.ndarray,
+               fallback: float) -> np.ndarray:
+    k = np.digitize(s, edges)
+    K = len(edges) + 1
+    out = np.full(K, fallback)
+    for j in range(K):
+        m = k == j
+        if m.any():
+            out[j] = lengths[m].mean()
+    return out
+
+
+def calibrate_length_table(
+    anchor_s: np.ndarray,            # (N,) task-aware difficulty of anchors
+    anchor_lengths: np.ndarray,      # (M, N) ground-truth output lengths
+    model_names: Sequence[str],
+    n_bins: int = 8,
+) -> OutputLengthTable:
+    """One-time calibration (Eq. 9): K equal-mass bins over anchor s_q."""
+    qs = np.quantile(anchor_s, np.linspace(0, 1, n_bins + 1)[1:-1])
+    edges = np.unique(qs)
+    gm = float(anchor_lengths.mean()) if anchor_lengths.size else 128.0
+    if anchor_lengths.shape[0] == 0:
+        table = np.zeros((0, len(edges) + 1))
+    else:
+        table = np.stack([
+            _bin_means(anchor_s, anchor_lengths[m], edges, gm)
+            for m in range(anchor_lengths.shape[0])
+        ])
+    return OutputLengthTable(edges, table, list(model_names), gm)
+
+
+def input_lengths(models: Sequence[ModelInfo], texts: Sequence[str]) -> np.ndarray:
+    """ℓ_in (M, Q) via per-model tokenizers (Eq. 7)."""
+    return np.array(
+        [[model_token_count(m.tokenizer, t) for t in texts] for m in models]
+    )
+
+
+def estimate_cost(
+    models: Sequence[ModelInfo],
+    texts: Sequence[str],
+    s_q: np.ndarray,
+    table: OutputLengthTable,
+    model_idx_in_table: Sequence[int],
+) -> np.ndarray:
+    """Ĉ (M, Q) in dollars (Eq. 6)."""
+    l_in = input_lengths(models, texts)
+    l_out = table.lookup(np.asarray(model_idx_in_table), s_q)
+    lam_in = np.array([m.price_in for m in models])[:, None]
+    lam_out = np.array([m.price_out for m in models])[:, None]
+    return (lam_in * l_in + lam_out * l_out) / 1e6

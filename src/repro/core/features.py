@@ -1,0 +1,102 @@
+"""Structural feature extraction Φ(q) — k = 11 linguistic metrics
+(paper Eq. 13).  Pure Python/numpy; no external NLP dependencies.
+
+The metric set follows the paper's description (readability scores, parse
+tree depth, …) with offline-computable proxies; selection was guided by
+correlation with the target IRT parameters (see
+benchmarks/fig3bc_latent_analysis.py).
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Iterable, List
+
+import numpy as np
+
+K_FEATURES = 11
+
+_WORD_RE = re.compile(r"[A-Za-z']+")
+_NUM_RE = re.compile(r"\d+(?:\.\d+)?")
+_PUNCT_RE = re.compile(r"[^\w\s]")
+_OPERATOR_RE = re.compile(r"[+\-*/^=<>∑∫√%]|\\frac|\\sum|\\int")
+_QUESTION_WORDS = frozenset(
+    "what why how when where which who whom whose prove derive compute "
+    "calculate determine evaluate explain".split()
+)
+_SUBORDINATORS = frozenset(
+    "if because although while whereas unless since that which whose "
+    "suppose assuming given when then therefore hence".split()
+)
+
+
+def _syllables(word: str) -> int:
+    word = word.lower()
+    groups = re.findall(r"[aeiouy]+", word)
+    n = len(groups)
+    if word.endswith("e") and n > 1:
+        n -= 1
+    return max(n, 1)
+
+
+def _nesting_depth(text: str) -> int:
+    """Parse-tree-depth proxy: bracket nesting + subordinate clause chains."""
+    depth = best = 0
+    for ch in text:
+        if ch in "([{":
+            depth += 1
+            best = max(best, depth)
+        elif ch in ")]}":
+            depth = max(depth - 1, 0)
+    words = [w.lower() for w in _WORD_RE.findall(text)]
+    clause = sum(1 for w in words if w in _SUBORDINATORS)
+    return best + clause
+
+
+def extract_features(text: str) -> np.ndarray:
+    """Returns the 11-dim structural feature vector for one query."""
+    words = _WORD_RE.findall(text)
+    n_words = max(len(words), 1)
+    n_chars = max(len(text), 1)
+    sentences = max(len(re.findall(r"[.!?]+", text)), 1)
+    syl = sum(_syllables(w) for w in words)
+
+    avg_word_len = sum(len(w) for w in words) / n_words
+    type_token = len({w.lower() for w in words}) / n_words
+    punct_density = len(_PUNCT_RE.findall(text)) / n_chars
+    num_density = len(_NUM_RE.findall(text)) / n_words
+    depth = _nesting_depth(text)
+    qwords = sum(1 for w in words if w.lower() in _QUESTION_WORDS)
+    ops = len(_OPERATOR_RE.findall(text)) / n_chars
+    rare = sum(1 for w in words if len(w) >= 9) / n_words
+    # Flesch reading ease (lower = harder)
+    flesch = 206.835 - 1.015 * (n_words / sentences) - 84.6 * (syl / n_words)
+
+    return np.array(
+        [
+            math.log1p(n_chars),
+            math.log1p(n_words),
+            avg_word_len,
+            type_token,
+            punct_density * 10.0,
+            num_density,
+            math.log1p(depth),
+            math.log1p(qwords),
+            ops * 10.0,
+            rare,
+            -flesch / 100.0,       # higher = harder
+        ],
+        dtype=np.float32,
+    )
+
+
+def extract_features_batch(texts: Iterable[str]) -> np.ndarray:
+    return np.stack([extract_features(t) for t in texts])
+
+
+def normalize_features(feats: np.ndarray, stats=None):
+    """Z-score; returns (normalized, stats) so eval reuses train stats."""
+    if stats is None:
+        stats = (feats.mean(0), feats.std(0) + 1e-6)
+    mu, sd = stats
+    return (feats - mu) / sd, stats

@@ -1,0 +1,84 @@
+"""Inference latency estimation (paper Eq. 11):  τ̂ = TTFT + ℓ̂_out · TPOT.
+
+Two calibration backends:
+  * ``calibrate_latency``: the paper's — regress (TTFT, TPOT) from anchor
+    latency samples (least squares on τ = TTFT + ℓ·TPOT).
+  * ``RooflineLatencyModel`` (beyond-paper, DESIGN.md §2): derive TTFT/TPOT
+    analytically from this repo's compiled dry-run roofline terms — onboard
+    a *serving backend* into the latency model without running it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import glob
+import json
+import os
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class LatencyParams:
+    ttft: np.ndarray     # (M,)
+    tpot: np.ndarray     # (M,)
+
+    def predict(self, l_out_hat: np.ndarray) -> np.ndarray:
+        """(M, Q) from ℓ̂_out (M, Q)."""
+        return self.ttft[:, None] + l_out_hat * self.tpot[:, None]
+
+
+def calibrate_latency(anchor_lengths: np.ndarray,
+                      anchor_latency: np.ndarray) -> LatencyParams:
+    """Least-squares fit per model of τ = TTFT + ℓ·TPOT over anchors.
+
+    anchor_lengths/anchor_latency: (M, N).
+    """
+    M, N = anchor_lengths.shape
+    ttft = np.zeros(M)
+    tpot = np.zeros(M)
+    for m in range(M):
+        X = np.stack([np.ones(N), anchor_lengths[m]], axis=1)
+        coef, *_ = np.linalg.lstsq(X, anchor_latency[m], rcond=None)
+        ttft[m] = max(coef[0], 1e-3)
+        tpot[m] = max(coef[1], 1e-5)
+    return LatencyParams(ttft, tpot)
+
+
+class RooflineLatencyModel:
+    """TTFT/TPOT from the dry-run's roofline terms.
+
+    TTFT(prompt_len) ≈ max(compute, memory, collective) of the prefill
+    program, scaled linearly from the dry-run's 32k prefill to the prompt
+    length; TPOT ≈ the same max over the decode-step program.
+    """
+
+    def __init__(self, dryrun_dir: str = "experiments/dryrun"):
+        self.records: Dict[Tuple[str, str], dict] = {}
+        for path in glob.glob(os.path.join(dryrun_dir, "*_single.json")):
+            with open(path) as f:
+                rec = json.load(f)
+            if rec.get("status") == "ok" and "roofline" in rec:
+                self.records[(rec["arch"], rec["shape"])] = rec
+
+    def available(self, arch: str) -> bool:
+        return (arch, "prefill_32k") in self.records and (
+            (arch, "decode_32k") in self.records)
+
+    def params_for(self, arch: str, prompt_len: float = 512.0,
+                   batch: Optional[float] = None) -> Tuple[float, float]:
+        """Returns (ttft_seconds, tpot_seconds)."""
+        pre = self.records[(arch, "prefill_32k")]["roofline"]["terms"]
+        dec = self.records[(arch, "decode_32k")]["roofline"]["terms"]
+        # dry-run prefill covers global_batch=32 × 32768 tokens
+        ttft_32k = max(pre.values())
+        ttft = ttft_32k * (prompt_len / 32_768.0)
+        # decode step covers global_batch=128 single tokens
+        tpot = max(dec.values())
+        return max(ttft, 1e-4), max(tpot, 1e-5)
+
+    def latency_params(self, archs: Sequence[str],
+                       prompt_len: float = 512.0) -> LatencyParams:
+        vals = [self.params_for(a, prompt_len) for a in archs]
+        return LatencyParams(np.array([v[0] for v in vals]),
+                             np.array([v[1] for v in vals]))

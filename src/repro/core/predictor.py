@@ -1,0 +1,270 @@
+"""Context-aware latent-space coordinate predictor (paper Eq. 12–16).
+
+Maps raw query text → (α̂_q, b̂_q):
+
+  * a transformer text encoder pooled at [CLS] (the paper fine-tunes
+    DistilBERT-base, 66M; offline we train a same-shape JAX encoder from
+    scratch — see DESIGN.md §7),
+  * k = 11 structural features Φ(q) (repro.core.features),
+  * residual fusion  h = f_fuse([W_se·e_se + e_se ; W_st·e_st + b_st]),
+  * difficulty head  b̂ = b̄ + f_diff(h)           (residual prediction),
+  * discrimination head: D dims partitioned into C correlation clusters,
+    one expert MLP per cluster, outputs concatenated and re-ordered.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import normal_init, rms_norm
+from repro.optim import AdamConfig, adam_update, init_adam_state
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class PredictorConfig:
+    vocab_size: int = 32_000
+    max_len: int = 96
+    d_model: int = 256
+    num_layers: int = 4
+    num_heads: int = 4
+    d_ff: int = 1024
+    n_struct: int = 11
+    latent_dim: int = 20
+    n_clusters: int = 4
+    fuse_dim: int = 256
+    head_hidden: int = 128
+    dropout: float = 0.0          # kept for config compatibility (unused)
+
+    # DistilBERT-base-shaped variant (66M) for the full-scale runs:
+    @staticmethod
+    def distilbert_shape(vocab_size: int = 32_000) -> "PredictorConfig":
+        return PredictorConfig(
+            vocab_size=vocab_size, max_len=128, d_model=768, num_layers=6,
+            num_heads=12, d_ff=3072,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Encoder (bidirectional transformer, learned positions, CLS pooling)
+# ---------------------------------------------------------------------------
+
+
+def init_encoder_params(key, cfg: PredictorConfig) -> PyTree:
+    d, f = cfg.d_model, cfg.d_ff
+    keys = jax.random.split(key, 2 + cfg.num_layers)
+    params: Dict[str, Any] = {
+        "tok_emb": normal_init(keys[0], (cfg.vocab_size, d), 0.02, jnp.float32),
+        "pos_emb": normal_init(keys[1], (cfg.max_len, d), 0.02, jnp.float32),
+        "final_ln": jnp.zeros((d,), jnp.float32),
+    }
+    layers = []
+    for i in range(cfg.num_layers):
+        ks = jax.random.split(keys[2 + i], 6)
+        s = d ** -0.5
+        layers.append({
+            "ln1": jnp.zeros((d,), jnp.float32),
+            "wq": normal_init(ks[0], (d, d), s, jnp.float32),
+            "wk": normal_init(ks[1], (d, d), s, jnp.float32),
+            "wv": normal_init(ks[2], (d, d), s, jnp.float32),
+            "wo": normal_init(ks[3], (d, d), s, jnp.float32),
+            "ln2": jnp.zeros((d,), jnp.float32),
+            "w1": normal_init(ks[4], (d, f), s, jnp.float32),
+            "w2": normal_init(ks[5], (f, d), f ** -0.5, jnp.float32),
+        })
+    params["layers"] = jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+    return params
+
+
+def encode(params: PyTree, ids: jax.Array, mask: jax.Array,
+           cfg: PredictorConfig) -> jax.Array:
+    """ids: (B, L) int32; mask: (B, L) 1/0. Returns CLS embedding (B, d)."""
+    B, L = ids.shape
+    nh = cfg.num_heads
+    hd = cfg.d_model // nh
+    x = params["tok_emb"][ids] + params["pos_emb"][:L][None]
+    bias = jnp.where(mask[:, None, None, :] > 0, 0.0, -1e30)
+
+    def layer(x, p):
+        h = rms_norm(x, p["ln1"])
+        q = (h @ p["wq"]).reshape(B, L, nh, hd)
+        k = (h @ p["wk"]).reshape(B, L, nh, hd)
+        v = (h @ p["wv"]).reshape(B, L, nh, hd)
+        s = jnp.einsum("blhd,bmhd->bhlm", q, k) * hd ** -0.5 + bias
+        a = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhlm,bmhd->blhd", a, v).reshape(B, L, cfg.d_model)
+        x = x + o @ p["wo"]
+        h = rms_norm(x, p["ln2"])
+        x = x + jax.nn.gelu(h @ p["w1"]) @ p["w2"]
+        return x, None
+
+    x, _ = jax.lax.scan(layer, x, params["layers"])
+    x = rms_norm(x, params["final_ln"])
+    return x[:, 0]   # [CLS]
+
+
+# ---------------------------------------------------------------------------
+# Heads
+# ---------------------------------------------------------------------------
+
+
+def cluster_dimensions(alpha_train: np.ndarray, n_clusters: int) -> List[np.ndarray]:
+    """Partition the D latent dims into C clusters by inter-dimensional
+    correlation (greedy agglomeration on |corr|, paper §Discrimination Head)."""
+    D = alpha_train.shape[1]
+    corr = np.abs(np.corrcoef(alpha_train.T))
+    np.fill_diagonal(corr, 0.0)
+    unassigned = set(range(D))
+    clusters: List[List[int]] = []
+    size = int(np.ceil(D / n_clusters))
+    while unassigned:
+        seed = max(unassigned, key=lambda d: corr[d, list(unassigned)].sum())
+        members = [seed]
+        unassigned.remove(seed)
+        while len(members) < size and unassigned:
+            best = max(unassigned, key=lambda d: corr[d, members].mean())
+            members.append(best)
+            unassigned.remove(best)
+        clusters.append(members)
+    return [np.array(sorted(c)) for c in clusters]
+
+
+def init_head_params(key, cfg: PredictorConfig,
+                     clusters: List[np.ndarray], b_mean: np.ndarray) -> PyTree:
+    d, k = cfg.d_model, cfg.n_struct
+    fd, hh, D = cfg.fuse_dim, cfg.head_hidden, cfg.latent_dim
+    ks = jax.random.split(key, 6 + len(clusters))
+    p: Dict[str, Any] = {
+        "w_se": normal_init(ks[0], (d, d), d ** -0.5, jnp.float32),
+        "w_st": normal_init(ks[1], (k, d), k ** -0.5, jnp.float32),
+        "b_st": jnp.zeros((d,), jnp.float32),
+        "fuse1": normal_init(ks[2], (2 * d, fd), (2 * d) ** -0.5, jnp.float32),
+        "fuse2": normal_init(ks[3], (fd, fd), fd ** -0.5, jnp.float32),
+        "diff1": normal_init(ks[4], (fd, hh), fd ** -0.5, jnp.float32),
+        "diff2": normal_init(ks[5], (hh, D), hh ** -0.5 * 0.1, jnp.float32),
+        "b_mean": jnp.asarray(b_mean, jnp.float32),
+    }
+    for c, dims in enumerate(clusters):
+        k1, k2 = jax.random.split(ks[6 + c])
+        p[f"disc{c}_1"] = normal_init(k1, (fd, hh), fd ** -0.5, jnp.float32)
+        p[f"disc{c}_2"] = normal_init(k2, (hh, len(dims)), hh ** -0.5 * 0.1, jnp.float32)
+    return p
+
+
+def apply_heads(p: PyTree, e_se: jax.Array, e_st: jax.Array,
+                clusters: List[np.ndarray], D: int) -> Tuple[jax.Array, jax.Array]:
+    """Returns (alpha_hat (B, D), b_hat (B, D))."""
+    se = e_se @ p["w_se"] + e_se                       # residual projections
+    st = e_st @ p["w_st"] + p["b_st"]
+    h = jnp.concatenate([se, st], axis=-1)
+    h = jax.nn.gelu(h @ p["fuse1"])
+    h = jax.nn.gelu(h @ p["fuse2"])                    # h_shared
+
+    db = jax.nn.gelu(h @ p["diff1"]) @ p["diff2"]
+    b_hat = p["b_mean"][None, :] + db                  # Eq. 15
+
+    B = h.shape[0]
+    alpha_hat = jnp.zeros((B, D))
+    for c, dims in enumerate(clusters):
+        out = jax.nn.gelu(h @ p[f"disc{c}_1"]) @ p[f"disc{c}_2"]
+        alpha_hat = alpha_hat.at[:, jnp.asarray(dims)].set(out)   # Eq. 16 ⊕
+    # discrimination is non-negative in the 2PL parameterization we calibrate
+    alpha_hat = jax.nn.softplus(alpha_hat)
+    return alpha_hat, b_hat
+
+
+# ---------------------------------------------------------------------------
+# Full predictor: train / apply
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Predictor:
+    cfg: PredictorConfig
+    params: PyTree
+    clusters: List[np.ndarray]
+    feat_stats: Tuple[np.ndarray, np.ndarray]
+
+    def __call__(self, ids, mask, feats):
+        e_se = encode(self.params["enc"], ids, mask, self.cfg)
+        mu, sd = self.feat_stats
+        f = (feats - mu) / sd
+        return apply_heads(self.params["heads"], e_se, jnp.asarray(f),
+                           self.clusters, self.cfg.latent_dim)
+
+
+def init_predictor(key, cfg: PredictorConfig, clusters, b_mean) -> PyTree:
+    k1, k2 = jax.random.split(key)
+    return {
+        "enc": init_encoder_params(k1, cfg),
+        "heads": init_head_params(k2, cfg, clusters, b_mean),
+    }
+
+
+def predictor_loss(params, batch, cfg: PredictorConfig, clusters,
+                   alpha_weight: float = 1.0):
+    e_se = encode(params["enc"], batch["ids"], batch["mask"], cfg)
+    a_hat, b_hat = apply_heads(params["heads"], e_se, batch["feats"],
+                               clusters, cfg.latent_dim)
+    l_a = jnp.mean((a_hat - batch["alpha"]) ** 2)
+    l_b = jnp.mean((b_hat - batch["b"]) ** 2)
+    return alpha_weight * l_a + l_b, {"l_alpha": l_a, "l_b": l_b}
+
+
+def train_predictor(
+    key,
+    cfg: PredictorConfig,
+    ids: np.ndarray, mask: np.ndarray, feats_norm: np.ndarray,
+    alpha: np.ndarray, b: np.ndarray,
+    clusters: List[np.ndarray],
+    epochs: int = 40,
+    batch_size: int = 32,
+    lr: float = 3e-4,
+    log_every: int = 5,
+    verbose: bool = False,
+) -> Tuple[PyTree, List[float]]:
+    """Multi-task MSE training (paper: 40 epochs, bs 32, constant LR).
+
+    The paper fine-tunes a pretrained encoder with lr 3e-5; training from
+    scratch needs the slightly larger default above.
+    """
+    N = ids.shape[0]
+    b_mean = b.mean(0)
+    params = init_predictor(key, cfg, clusters, b_mean)
+    adam = AdamConfig(lr=lr, grad_clip_norm=1.0)
+    opt = init_adam_state(params, adam)
+
+    @jax.jit
+    def step(params, opt, batch):
+        (l, aux), g = jax.value_and_grad(predictor_loss, has_aux=True)(
+            params, batch, cfg, clusters)
+        params, opt, _ = adam_update(g, opt, params, adam)
+        return params, opt, l
+
+    rng = np.random.default_rng(0)
+    losses: List[float] = []
+    for ep in range(epochs):
+        perm = rng.permutation(N)
+        ep_loss = 0.0
+        nb = 0
+        for s in range(0, N - batch_size + 1, batch_size):
+            sel = perm[s: s + batch_size]
+            batch = {
+                "ids": jnp.asarray(ids[sel]),
+                "mask": jnp.asarray(mask[sel]),
+                "feats": jnp.asarray(feats_norm[sel]),
+                "alpha": jnp.asarray(alpha[sel]),
+                "b": jnp.asarray(b[sel]),
+            }
+            params, opt, l = step(params, opt, batch)
+            ep_loss += float(l)
+            nb += 1
+        losses.append(ep_loss / max(nb, 1))
+        if verbose and (ep % log_every == 0 or ep == epochs - 1):
+            print(f"  predictor epoch {ep:3d} loss={losses[-1]:.4f}")
+    return params, losses

@@ -1,0 +1,22 @@
+from repro.data.tokenizer import HashTokenizer, model_token_count, model_tokenizer
+from repro.data.world import (
+    CORE_MODELS,
+    D_LATENT,
+    ID_TASKS,
+    OOD_TASKS,
+    TASKS,
+    ModelInfo,
+    Query,
+    World,
+    WorldConfig,
+    build_world,
+    calibration_pool,
+    calibration_responses,
+)
+
+__all__ = [
+    "CORE_MODELS", "D_LATENT", "ID_TASKS", "OOD_TASKS", "TASKS",
+    "HashTokenizer", "ModelInfo", "Query", "World", "WorldConfig",
+    "build_world", "calibration_pool", "calibration_responses",
+    "model_token_count", "model_tokenizer",
+]

@@ -1,0 +1,74 @@
+"""Deterministic hash tokenizer (offline container — no pretrained vocabs).
+
+Stateless: a word maps to a stable id via blake2-style hashing into the
+vocab; per-model tokenizers differ by salt and a length factor, emulating
+the paper's model-specific tokenizers 𝒯_u (Eq. 7) whose token counts differ
+across vendors.
+"""
+from __future__ import annotations
+
+import hashlib
+import re
+from typing import List
+
+import numpy as np
+
+PAD_ID = 0
+CLS_ID = 1
+_RESERVED = 2
+_TOKEN_RE = re.compile(r"[A-Za-z']+|\d|[^\w\s]")
+
+
+class HashTokenizer:
+    def __init__(self, vocab_size: int = 32_000, salt: str = "base",
+                 subword_len: int = 12):
+        self.vocab_size = vocab_size
+        self.salt = salt
+        self.subword_len = subword_len
+
+    def _hash(self, piece: str) -> int:
+        h = hashlib.blake2s(f"{self.salt}:{piece}".encode(), digest_size=4)
+        return _RESERVED + int.from_bytes(h.digest(), "little") % (
+            self.vocab_size - _RESERVED
+        )
+
+    def encode(self, text: str, max_len: int | None = None,
+               add_cls: bool = False) -> List[int]:
+        pieces: List[str] = []
+        for tok in _TOKEN_RE.findall(text.lower()):
+            while len(tok) > self.subword_len:     # crude subword split
+                pieces.append(tok[: self.subword_len])
+                tok = tok[self.subword_len:]
+            pieces.append(tok)
+        ids = [self._hash(p) for p in pieces]
+        if add_cls:
+            ids = [CLS_ID] + ids
+        if max_len is not None:
+            ids = ids[:max_len]
+        return ids
+
+    def encode_batch(self, texts, max_len: int, add_cls: bool = True):
+        """Returns (ids (B, max_len) int32 padded, mask (B, max_len) f32)."""
+        out = np.full((len(texts), max_len), PAD_ID, np.int32)
+        mask = np.zeros((len(texts), max_len), np.float32)
+        for i, t in enumerate(texts):
+            ids = self.encode(t, max_len, add_cls=add_cls)
+            out[i, : len(ids)] = ids
+            mask[i, : len(ids)] = 1.0
+        return out, mask
+
+    def count(self, text: str) -> int:
+        return len(self.encode(text))
+
+
+def model_tokenizer(model_name: str, vocab_size: int = 32_000,
+                    length_factor: float = 1.0) -> HashTokenizer:
+    """Per-model tokenizer: same text ⇒ slightly different token counts."""
+    tok = HashTokenizer(vocab_size, salt=model_name)
+    tok.length_factor = length_factor  # type: ignore[attr-defined]
+    return tok
+
+
+def model_token_count(tok: HashTokenizer, text: str) -> int:
+    base = tok.count(text)
+    return max(int(round(base * getattr(tok, "length_factor", 1.0))), 1)

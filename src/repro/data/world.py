@@ -1,0 +1,318 @@
+"""Synthetic evaluation universe (offline stand-in for the Open LLM
+Leaderboard + API model pool used by the paper; DESIGN.md §6).
+
+Nine task datasets (6 ID / 3 OOD analogues) of *templated text queries*
+whose generative complexity knobs produce ground-truth IRT parameters
+(α*, b*) — so the text↔latent correlation the paper's predictor exploits
+exists by construction, and recovery can be tested exactly.
+
+A pool of 60 models (10 "core" = the assigned architectures, 50 released
+"after the training cutoff") gets ground-truth abilities θ*; responses are
+Bernoulli(σ(α*ᵀ(θ*−b*))), output lengths follow a verbosity ×
+difficulty-sigmoid law (paper Fig. 3d), prices and latency scale with model
+size.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.data.tokenizer import HashTokenizer, model_token_count, model_tokenizer
+
+D_LATENT = 20
+
+# task → (ood?, affinity dims).  Dim 19 ≈ "complex reasoning" (paper Fig. 3b).
+TASKS: Dict[str, Tuple[bool, Tuple[int, ...]]] = {
+    "ifeval": (False, (9, 10)),
+    "bbh": (False, (2, 3, 4, 19)),
+    "math": (False, (0, 1, 2, 19)),
+    "gpqa": (False, (4, 5, 6, 19)),
+    "musr": (False, (6, 7, 8, 19)),
+    "mmlu_pro": (False, (3, 5, 11, 12)),
+    # OOD tasks recombine skills that ID tasks exercise (new *mixtures*, not
+    # unobservable dimensions — latent dims absent from all ID data are
+    # unidentifiable for any router, ours or the paper's).
+    "arc_c": (True, (4, 5, 11)),
+    "truthfulqa": (True, (3, 10, 12)),
+    "humaneval": (True, (1, 2, 8, 19)),
+}
+ID_TASKS = tuple(t for t, (ood, _) in TASKS.items() if not ood)
+OOD_TASKS = tuple(t for t, (ood, _) in TASKS.items() if ood)
+
+# Global task-agnostic per-dimension difficulty offsets (paper Fig. 3b:
+# "uniform horizontal bands"; dim 19 is the hardest).
+_B_DIM = np.array(
+    [0.0, 0.2, 0.4, -0.2, 0.1, 0.3, -0.1, 0.0, 0.2, -0.4,
+     -0.3, 0.1, 0.0, -0.2, 0.3, 0.5, 0.2, 0.4, 0.1, 1.2]
+)
+
+_NOUNS = ("integers matrix polynomial molecule electron theorem premise "
+          "function sequence circuit reaction protein planet algorithm "
+          "inequality graph topology isotope").split()
+_RARE = ("epistemological heterogeneous thermodynamic combinatorial "
+         "stoichiometric isomorphism eigendecomposition diagonalizable "
+         "electronegativity paleontological").split()
+_VERBS = "compute derive prove evaluate determine simplify estimate".split()
+
+
+@dataclasses.dataclass
+class Query:
+    qid: int
+    task: str
+    ood: bool
+    complexity: float
+    text: str
+    alpha_star: np.ndarray
+    b_star: np.ndarray
+
+    @property
+    def s_star(self) -> float:
+        return float(self.alpha_star @ self.b_star)
+
+
+@dataclasses.dataclass
+class ModelInfo:
+    name: str
+    size_b: float                 # billions of parameters
+    theta_star: np.ndarray
+    price_in: float               # $ / 1M input tokens
+    price_out: float              # $ / 1M output tokens
+    ttft: float                   # seconds
+    tpot: float                   # seconds / output token
+    verbosity: float
+    tokenizer: HashTokenizer
+    released_after_cutoff: bool = False
+
+
+# The 10 core models are the assigned architectures served by this repo.
+CORE_MODELS: Tuple[Tuple[str, float], ...] = (
+    ("gemma3-1b", 1.0),
+    ("xlstm-125m", 0.125),
+    ("hymba-1.5b", 1.5),
+    ("paligemma-3b", 2.9),
+    ("musicgen-large", 3.3),
+    ("phi3-mini-3.8b", 3.8),
+    ("deepseek-v2-lite-16b", 15.7),
+    ("qwen2-72b", 72.7),
+    ("kimi-k2-1t-a32b", 32.0),     # active params drive serving economics
+    ("llama3-405b", 405.0),
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class WorldConfig:
+    queries_per_task: int = 200
+    n_future_models: int = 50
+    seed: int = 0
+    noise: float = 0.15
+
+
+def _gen_text(task: str, c: float, rng: np.random.Generator) -> str:
+    """Template text whose surface statistics track complexity ``c``."""
+    pick = lambda xs, n=1: [xs[i] for i in rng.integers(0, len(xs), n)]
+    clauses = 1 + int(round(4 * c))
+    nums = rng.integers(2, 10 + int(90 * c), size=2 + int(4 * c))
+    noun = pick(_NOUNS, 2 + int(3 * c))
+    rare = pick(_RARE, int(round(4 * c)))
+    verb = pick(_VERBS)[0]
+
+    if task == "math":
+        expr = str(nums[0])
+        for n in nums[1:]:
+            op = pick(["+", "-", "*", "/"])[0]
+            expr = f"({expr} {op} {n})" if rng.random() < 0.3 + 0.6 * c else f"{expr} {op} {n}"
+        body = f"{verb} the value of {expr}"
+        if c > 0.6:
+            body += f", then prove the result is bounded by the {rare[0] if rare else 'given'} inequality"
+    elif task == "humaneval":
+        body = (f"write a function that takes a list of {noun[0]} and returns "
+                f"the {pick(['sorted', 'filtered', 'deduplicated'])[0]} result")
+        for i in range(clauses - 1):
+            body += f", handling the case where the {noun[min(i+1, len(noun)-1)]} is empty"
+    elif task == "ifeval":
+        body = (f"respond in exactly {nums[0] % 9 + 1} sentences about {noun[0]}")
+        for i in range(clauses - 1):
+            body += f", and ensure each sentence mentions a {noun[min(i+1, len(noun)-1)]}"
+    elif task == "truthfulqa":
+        body = f"is it true that the {noun[0]} always causes the {noun[1 % len(noun)]}"
+        if c > 0.5:
+            body += f", considering the {rare[0] if rare else 'common'} misconception"
+    else:  # bbh / gpqa / musr / mmlu_pro / arc_c — multi-step QA
+        body = f"{verb} which {noun[0]} satisfies the condition {nums[0]} > {nums[1]}"
+        for i in range(clauses - 1):
+            sub = pick(["if", "because", "assuming", "given that", "whereas"])[0]
+            extra = rare[i % len(rare)] if rare else noun[i % len(noun)]
+            body += f" {sub} the {extra} {pick(_NOUNS)[0]} equals {rng.integers(1, 100)}"
+    q = body[0].upper() + body[1:]
+    return q + ("?" if task in ("truthfulqa", "gpqa", "arc_c") else ".")
+
+
+def _gen_query(qid: int, task: str, rng: np.random.Generator,
+               noise: float) -> Query:
+    """Benchmark-redundancy property (matches real leaderboard data and is
+    what D-optimal anchor selection exploits): most prompts are low
+    complexity and exercise only the task's primary skill dimension; tail
+    dimensions appear in progressively rarer, higher-complexity prompts."""
+    ood, dims = TASKS[task]
+    c = float(rng.beta(1.6, 2.8))          # skewed towards easy prompts
+    alpha = np.abs(rng.normal(0.0, 0.04, D_LATENT))
+    include_p = (1.0, 0.45, 0.25, 0.15)    # geometric dim-coverage decay
+    for rank, d in enumerate(dims):
+        p_inc = include_p[min(rank, len(include_p) - 1)]
+        if rank == 0 or rng.random() < p_inc * (0.5 + c):
+            alpha[d] = abs(rng.normal(1.0, 0.3)) * (0.4 + 1.0 * c)
+    b = _B_DIM + rng.normal(0, noise, D_LATENT)
+    for d in dims:
+        b[d] += 1.8 * (c - 0.35)
+    return Query(qid, task, ood, c, _gen_text(task, c, rng),
+                 alpha.astype(np.float32), b.astype(np.float32))
+
+
+def _gen_model(name: str, size_b: float, rng: np.random.Generator,
+               future: bool) -> ModelInfo:
+    # Size helps but does not determine the per-skill profile: real pools
+    # show frequent per-query ranking flips (a 9B math-tuned model beats a
+    # 70B generalist on MATH), which is precisely the heterogeneity
+    # query-level routing exploits.
+    g = 0.22 * np.log(size_b + 0.3) + rng.normal(0, 0.25)
+    theta = g + rng.normal(0, 0.4, D_LATENT)
+    # per-model specialties: several dims strongly boosted/suppressed
+    for d in rng.choice(D_LATENT, 6, replace=False):
+        theta[d] += rng.normal(0, 0.9)
+    price_in = 0.04 * size_b ** 0.8 * float(np.exp(rng.normal(0, 0.2)))
+    ttft = 0.12 + 0.02 * size_b ** 0.55 * float(np.exp(rng.normal(0, 0.15)))
+    tpot = 0.004 + 0.0005 * size_b ** 0.85 * float(np.exp(rng.normal(0, 0.15)))
+    return ModelInfo(
+        name=name,
+        size_b=size_b,
+        theta_star=theta.astype(np.float32),
+        price_in=price_in,
+        price_out=3.0 * price_in,
+        ttft=ttft,
+        tpot=tpot,
+        verbosity=float(np.exp(rng.normal(0, 0.3))),
+        tokenizer=model_tokenizer(name, length_factor=float(np.exp(rng.normal(0, 0.08)))),
+        released_after_cutoff=future,
+    )
+
+
+@dataclasses.dataclass
+class World:
+    cfg: WorldConfig
+    queries: List[Query]
+    models: List[ModelInfo]
+
+    # ---- derived arrays ----
+    @property
+    def alpha_star(self) -> np.ndarray:
+        return np.stack([q.alpha_star for q in self.queries])
+
+    @property
+    def b_star(self) -> np.ndarray:
+        return np.stack([q.b_star for q in self.queries])
+
+    @property
+    def theta_star(self) -> np.ndarray:
+        return np.stack([m.theta_star for m in self.models])
+
+    def texts(self) -> List[str]:
+        return [q.text for q in self.queries]
+
+    def task_ids(self) -> np.ndarray:
+        names = list(TASKS)
+        return np.array([names.index(q.task) for q in self.queries])
+
+    def query_indices(self, tasks: Sequence[str]) -> np.ndarray:
+        want = set(tasks)
+        return np.array([i for i, q in enumerate(self.queries) if q.task in want])
+
+    def model_index(self, name: str) -> int:
+        return [m.name for m in self.models].index(name)
+
+    # ---- ground-truth interaction sampling ----
+    def true_prob(self, mi: np.ndarray, qi: np.ndarray) -> np.ndarray:
+        """(len(mi), len(qi)) success probabilities."""
+        th = self.theta_star[mi]                      # (U, D)
+        al = self.alpha_star[qi]                      # (Q, D)
+        bb = self.b_star[qi]
+        logits = th @ al.T - np.sum(al * bb, -1)[None, :]
+        return 1.0 / (1.0 + np.exp(-logits))
+
+    def sample_responses(self, mi, qi, seed: int = 0) -> np.ndarray:
+        rng = np.random.default_rng(self.cfg.seed * 7919 + seed)
+        return (rng.random((len(mi), len(qi))) < self.true_prob(mi, qi)).astype(
+            np.float32
+        )
+
+    def output_lengths(self, mi, qi, seed: int = 0) -> np.ndarray:
+        """Ground-truth output token lengths (U, Q) — verbosity × s_q law."""
+        rng = np.random.default_rng(self.cfg.seed * 104729 + seed + 1)
+        s = np.array([self.queries[i].s_star for i in qi])
+        base = 20.0 + 180.0 / (1.0 + np.exp(-0.8 * (s - np.median(s))))
+        v = np.array([self.models[m].verbosity for m in mi])
+        noise = np.exp(rng.normal(0, 0.15, (len(mi), len(qi))))
+        return np.clip(v[:, None] * base[None, :] * noise, 4, 2048)
+
+    def true_cost(self, mi, qi, lengths: Optional[np.ndarray] = None) -> np.ndarray:
+        """(U, Q) dollar costs via Eq. 6 with per-model tokenizers."""
+        if lengths is None:
+            lengths = self.output_lengths(mi, qi)
+        cost = np.zeros((len(mi), len(qi)))
+        for a, m in enumerate(mi):
+            mod = self.models[m]
+            for b, q in enumerate(qi):
+                l_in = model_token_count(mod.tokenizer, self.queries[q].text)
+                cost[a, b] = (mod.price_in * l_in + mod.price_out * lengths[a, b]) / 1e6
+        return cost
+
+    def true_latency(self, mi, qi, lengths: Optional[np.ndarray] = None) -> np.ndarray:
+        if lengths is None:
+            lengths = self.output_lengths(mi, qi)
+        ttft = np.array([self.models[m].ttft for m in mi])[:, None]
+        tpot = np.array([self.models[m].tpot for m in mi])[:, None]
+        return ttft + lengths * tpot
+
+
+def calibration_pool(world: World, n_models: int = 200, seed: int = 123
+                     ) -> np.ndarray:
+    """Ability matrix (n, D) of a leaderboard-style calibration pool
+    (paper: 200 models from the Open LLM Leaderboard).  These are *not*
+    routing candidates — they only provide the response matrix that
+    calibrates the universal latent space."""
+    rng = np.random.default_rng(seed)
+    sizes = np.exp(rng.uniform(np.log(0.3), np.log(300.0), n_models))
+    thetas = []
+    for s in sizes:
+        g = 0.25 * np.log(s + 0.3) + rng.normal(0, 0.25)
+        th = g + rng.normal(0, 0.35, D_LATENT)
+        for d in rng.choice(D_LATENT, 4, replace=False):
+            th[d] += rng.normal(0, 0.5)
+        thetas.append(th)
+    return np.stack(thetas).astype(np.float32)
+
+
+def calibration_responses(world: World, thetas: np.ndarray, qi: np.ndarray,
+                          seed: int = 0) -> np.ndarray:
+    """(n_models, len(qi)) Bernoulli responses of the calibration pool."""
+    al, bb = world.alpha_star[qi], world.b_star[qi]
+    logits = thetas @ al.T - np.sum(al * bb, -1)[None, :]
+    p = 1.0 / (1.0 + np.exp(-logits))
+    rng = np.random.default_rng(seed + 31337)
+    return (rng.random(p.shape) < p).astype(np.float32)
+
+
+def build_world(cfg: WorldConfig = WorldConfig()) -> World:
+    rng = np.random.default_rng(cfg.seed)
+    queries: List[Query] = []
+    qid = 0
+    for task in TASKS:
+        for _ in range(cfg.queries_per_task):
+            queries.append(_gen_query(qid, task, rng, cfg.noise))
+            qid += 1
+    models = [_gen_model(n, s, rng, future=False) for n, s in CORE_MODELS]
+    for i in range(cfg.n_future_models):
+        size = float(np.exp(rng.uniform(np.log(0.5), np.log(250.0))))
+        models.append(_gen_model(f"future-model-{i:02d}", size, rng, future=True))
+    return World(cfg, queries, models)

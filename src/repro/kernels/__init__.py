@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the compute hot spots (+ jnp references).
+
+flash_attention  — prefill/train attention (online softmax, GQA index maps)
+decode_attention — flash-decode over KV caches
+doptimal         — D-optimality greedy candidate scoring (paper Eq. 4)
+irt2pl           — fused 2PL probability + BCE + Fisher weight (Eq. 1–2)
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,103 @@
+"""Pallas TPU flash-decode kernel: one query token per sequence against a
+(possibly partially-filled) KV cache.
+
+Grid: (batch, q_head, kv_block); per-(b, h) the kv_block axis accumulates
+online-softmax partials in VMEM scratch.  Validity is positional:
+slots >= valid_len[b] are masked (supports ring buffers by passing the
+filled length).  The q "row" dimension is padded to 8 sublanes — a single
+decode token underutilizes the MXU; batching happens across the grid.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+_ROWS = 8  # sublane padding for the single query row
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                   *, scale: float, bk: int, nbk: int):
+    b = pl.program_id(0)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    valid = len_ref[b]
+    run = (ki * bk) < valid
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)              # (_ROWS, dk)
+        k = k_ref[0, 0].astype(jnp.float32)              # (bk, dk)
+        v = v_ref[0, 0].astype(jnp.float32)              # (bk, dv)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (_ROWS, bk)
+        kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos < valid, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == nbk - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def decode_attention_tpu(
+    q: jax.Array,          # (B, H, dk)
+    k_cache: jax.Array,    # (B, KV, S, dk)
+    v_cache: jax.Array,    # (B, KV, S, dv)
+    valid_len: jax.Array,  # (B,) int32
+    *,
+    scale=None,
+    block_kv: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, dk = q.shape
+    KV, S = k_cache.shape[1], k_cache.shape[2]
+    dv = v_cache.shape[-1]
+    G = H // KV
+    scale = dk ** -0.5 if scale is None else scale
+    bk = min(block_kv, S)
+    assert S % bk == 0
+    nbk = S // bk
+
+    q_pad = jnp.broadcast_to(q[:, :, None, :], (B, H, _ROWS, dk))
+    grid = (B, H, nbk)
+    kernel = functools.partial(_decode_kernel, scale=scale, bk=bk, nbk=nbk)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # valid_len, full array
+            pl.BlockSpec((1, 1, _ROWS, dk), lambda b, h, ki: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, dk), lambda b, h, ki: (b, h // G, ki, 0)),
+            pl.BlockSpec((1, 1, bk, dv), lambda b, h, ki: (b, h // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, _ROWS, dv), lambda b, h, ki: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, _ROWS, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((_ROWS, 1), jnp.float32),
+            pltpu.VMEM((_ROWS, 1), jnp.float32),
+            pltpu.VMEM((_ROWS, dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(valid_len, q_pad, k_cache, v_cache)
+    return out[:, :, 0, :]

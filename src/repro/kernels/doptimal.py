@@ -1,0 +1,52 @@
+"""Pallas TPU kernel for the D-optimality greedy scoring step (paper Eq. 4).
+
+Per greedy iteration, every remaining candidate prompt needs the quadratic
+form  g_i = α_iᵀ A⁻¹ α_i.  A⁻¹ (D×D, D = latent dim padded to 128) stays
+VMEM-resident across the whole grid; candidates stream through in
+(block_i × D) tiles:  G = rowsum((X A⁻¹) ⊙ X) — two MXU ops per tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_LANE = 128
+
+
+def _doptimal_kernel(x_ref, ainv_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)          # (bi, Dp)
+    a = ainv_ref[...].astype(jnp.float32)       # (Dp, Dp)
+    xa = jax.lax.dot_general(
+        x, a, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    o_ref[...] = jnp.sum(xa * x, axis=-1, keepdims=True)
+
+
+def doptimal_score_tpu(
+    alpha: jax.Array,     # (I, D)
+    a_inv: jax.Array,     # (D, D)
+    *,
+    block_i: int = 1024,
+    interpret: bool = False,
+) -> jax.Array:
+    I, D = alpha.shape
+    Dp = ((D + _LANE - 1) // _LANE) * _LANE
+    bi = min(block_i, I)
+    Ip = ((I + bi - 1) // bi) * bi
+    x = jnp.zeros((Ip, Dp), alpha.dtype).at[:I, :D].set(alpha)
+    a = jnp.zeros((Dp, Dp), a_inv.dtype).at[:D, :D].set(a_inv)
+
+    out = pl.pallas_call(
+        _doptimal_kernel,
+        grid=(Ip // bi,),
+        in_specs=[
+            pl.BlockSpec((bi, Dp), lambda i: (i, 0)),
+            pl.BlockSpec((Dp, Dp), lambda i: (0, 0)),   # resident
+        ],
+        out_specs=pl.BlockSpec((bi, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Ip, 1), jnp.float32),
+        interpret=interpret,
+    )(x, a)
+    return out[:I, 0]

@@ -1,0 +1,109 @@
+"""Pallas TPU flash-attention (forward) kernel.
+
+Grid: (batch, q_head, q_block, kv_block) — the kv_block axis is innermost so
+the output block is revisited; running max / sum / accumulator live in VMEM
+scratch across kv iterations (the standard TPU online-softmax pattern).
+GQA is handled in the BlockSpec index maps (kv head = q head // group), so
+K/V are never materialized per-q-head.
+
+Block shapes default to (128, 128) q×kv tiles with the full head dim —
+MXU-aligned (multiples of 128) and within VMEM for head dims ≤ 256.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, bq: int, bk: int, nbk: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # skip kv blocks that lie entirely above the causal diagonal
+    if causal:
+        run = (ki * bk) <= (qi * bq + bq - 1)
+    else:
+        run = jnp.bool_(True)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)          # (bq, dk)
+        k = k_ref[0, 0].astype(jnp.float32)          # (bk, dk)
+        v = v_ref[0, 0].astype(jnp.float32)          # (bk, dv)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == nbk - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_tpu(
+    q: jax.Array,       # (B, H, L, dk)
+    k: jax.Array,       # (B, KV, S, dk)
+    v: jax.Array,       # (B, KV, S, dv)
+    *,
+    causal: bool = True,
+    scale=None,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, L, dk = q.shape
+    KV, S = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    G = H // KV
+    scale = dk ** -0.5 if scale is None else scale
+    bq = min(block_q, L)
+    bk = min(block_kv, S)
+    assert L % bq == 0 and S % bk == 0, (L, bq, S, bk)
+    nbq, nbk = L // bq, S // bk
+
+    grid = (B, H, nbq, nbk)
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, bq=bq, bk=bk, nbk=nbk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, dk), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, bk, dk), lambda b, h, qi, ki: (b, h // G, ki, 0)),
+            pl.BlockSpec((1, 1, bk, dv), lambda b, h, qi, ki: (b, h // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, dv), lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, L, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

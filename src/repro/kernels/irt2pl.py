@@ -1,0 +1,76 @@
+"""Pallas TPU kernel fusing the 2PL IRT forward (paper Eq. 1–2):
+probability, BCE, and the Fisher weight p(1−p) in one pass over
+(models × prompts) tiles.
+
+This is the SVI hot loop: U×I interactions per epoch × 6000 epochs.  The
+fusion avoids materializing the logits three times (p / BCE / Fisher all
+reread them in the naive composition) — one HBM round-trip instead of
+three.  The αᵀb reduction is computed per prompt-tile in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_LANE = 128
+
+
+def _irt_kernel(theta_ref, alpha_ref, b_ref, y_ref, p_ref, bce_ref, w_ref):
+    th = theta_ref[...].astype(jnp.float32)       # (bu, Dp)
+    al = alpha_ref[...].astype(jnp.float32)       # (bi, Dp)
+    bb = b_ref[...].astype(jnp.float32)           # (bi, Dp)
+    y = y_ref[...].astype(jnp.float32)            # (bu, bi)
+    s = jnp.sum(al * bb, axis=-1)                 # (bi,)
+    logits = jax.lax.dot_general(
+        th, al, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) - s[None, :]
+    p = jax.nn.sigmoid(logits)
+    log_p = jax.nn.log_sigmoid(logits)
+    log_1mp = jax.nn.log_sigmoid(-logits)
+    p_ref[...] = p
+    bce_ref[...] = -(y * log_p + (1.0 - y) * log_1mp)
+    w_ref[...] = p * (1.0 - p)
+
+
+def irt_2pl_tpu(
+    theta: jax.Array,    # (U, D)
+    alpha: jax.Array,    # (I, D)
+    b: jax.Array,        # (I, D)
+    y: jax.Array,        # (U, I)
+    *,
+    block_u: int = 256,
+    block_i: int = 512,
+    interpret: bool = False,
+):
+    """Returns (p, bce, fisher), each (U, I) f32."""
+    U, D = theta.shape
+    I = alpha.shape[0]
+    Dp = ((D + _LANE - 1) // _LANE) * _LANE
+    bu = min(block_u, U)
+    bi = min(block_i, I)
+    Up = ((U + bu - 1) // bu) * bu
+    Ip = ((I + bi - 1) // bi) * bi
+
+    th = jnp.zeros((Up, Dp), theta.dtype).at[:U, :D].set(theta)
+    al = jnp.zeros((Ip, Dp), alpha.dtype).at[:I, :D].set(alpha)
+    bb = jnp.zeros((Ip, Dp), b.dtype).at[:I, :D].set(b)
+    yy = jnp.zeros((Up, Ip), y.dtype).at[:U, :I].set(y)
+
+    shapes = [jax.ShapeDtypeStruct((Up, Ip), jnp.float32)] * 3
+    p, bce, w = pl.pallas_call(
+        _irt_kernel,
+        grid=(Up // bu, Ip // bi),
+        in_specs=[
+            pl.BlockSpec((bu, Dp), lambda u, i: (u, 0)),
+            pl.BlockSpec((bi, Dp), lambda u, i: (i, 0)),
+            pl.BlockSpec((bi, Dp), lambda u, i: (i, 0)),
+            pl.BlockSpec((bu, bi), lambda u, i: (u, i)),
+        ],
+        out_specs=[pl.BlockSpec((bu, bi), lambda u, i: (u, i))] * 3,
+        out_shape=shapes,
+        interpret=interpret,
+    )(th, al, bb, yy)
+    return p[:U, :I], bce[:U, :I], w[:U, :I]

@@ -1,0 +1,58 @@
+"""Jitted public wrappers for the Pallas kernels with backend dispatch.
+
+On TPU the Mosaic kernels run natively; elsewhere (this CPU container) they
+execute in ``interpret=True`` mode, which runs the kernel body in Python —
+used by the per-kernel allclose tests.  ``use_pallas=False`` falls back to
+the pure-jnp reference implementation (the default inside the model code,
+which relies on XLA fusion on non-TPU backends).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention_tpu
+from repro.kernels.doptimal import doptimal_score_tpu
+from repro.kernels.flash_attention import flash_attention_tpu
+from repro.kernels.irt2pl import irt_2pl_tpu
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "use_pallas"))
+def flash_attention(q, k, v, *, causal: bool = True, use_pallas: bool = True):
+    """q: (B, H, L, dk); k/v: (B, KV, S, d*). GQA-aware."""
+    if not use_pallas:
+        return ref.flash_attention_ref(q, k, v, causal=causal)
+    return flash_attention_tpu(q, k, v, causal=causal,
+                               interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def decode_attention(q, k_cache, v_cache, valid_len, *, use_pallas: bool = True):
+    """q: (B, H, dk); caches: (B, KV, S, d*); valid_len: (B,) int32."""
+    if not use_pallas:
+        return ref.decode_attention_ref(q, k_cache, v_cache, valid_len)
+    return decode_attention_tpu(q, k_cache, v_cache, valid_len,
+                                interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def doptimal_score(alpha, a_inv, *, use_pallas: bool = True):
+    """Greedy D-optimality candidate scores α_i A⁻¹ α_i → (I,) f32."""
+    if not use_pallas:
+        return ref.doptimal_score_ref(alpha, a_inv)
+    return doptimal_score_tpu(alpha, a_inv, interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def irt_2pl(theta, alpha, b, y, *, use_pallas: bool = True):
+    """Fused 2PL forward → (p, bce, fisher) each (U, I) f32."""
+    if not use_pallas:
+        return ref.irt_2pl_ref(theta, alpha, b, y)
+    return irt_2pl_tpu(theta, alpha, b, y, interpret=not _on_tpu())

@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, scale=None):
+    """q: (B, H, L, dk); k/v: (B, KV, S, d*); GQA via H = KV * G.
+
+    Plain masked softmax attention in f32.
+    """
+    B, H, L, dk = q.shape
+    KV, S = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = dk ** -0.5 if scale is None else scale
+    qg = q.reshape(B, KV, G, L, dk).astype(jnp.float32)
+    s = jnp.einsum("bkgld,bksd->bkgls", qg, k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.arange(L)[:, None] >= jnp.arange(S)[None, :]
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgls,bksd->bkgld", p, v.astype(jnp.float32))
+    return o.reshape(B, H, L, -1).astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, valid_len, *, scale=None):
+    """q: (B, H, dk); caches: (B, KV, S, d*); valid_len: (B,) — slots
+    [0, valid_len) are attended."""
+    B, H, dk = q.shape
+    KV, S = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    scale = dk ** -0.5 if scale is None else scale
+    qg = q.reshape(B, KV, G, dk).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bksd->bkgs", qg, k_cache.astype(jnp.float32)) * scale
+    ok = jnp.arange(S)[None] < valid_len[:, None]
+    s = jnp.where(ok[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bksd->bkgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, H, -1).astype(q.dtype)
+
+
+def doptimal_score_ref(alpha, a_inv):
+    """Quadratic forms α_i A⁻¹ α_i. alpha: (I, D); a_inv: (D, D) → (I,)."""
+    af = alpha.astype(jnp.float32)
+    return jnp.einsum("id,de,ie->i", af, a_inv.astype(jnp.float32), af)
+
+
+def irt_2pl_ref(theta, alpha, b, y):
+    """Fused 2PL forward: returns (p, bce, fisher), each (U, I), f32.
+
+    p      = σ(α_iᵀ(θ_u − b_i))
+    bce    = −[y ln p + (1−y) ln (1−p)]
+    fisher = p (1 − p)   (the Eq. 2 information weight)
+    """
+    th = theta.astype(jnp.float32)
+    al = alpha.astype(jnp.float32)
+    bb = b.astype(jnp.float32)
+    logits = th @ al.T - jnp.sum(al * bb, -1)[None, :]
+    p = jax.nn.sigmoid(logits)
+    yf = y.astype(jnp.float32)
+    bce = -(yf * jax.nn.log_sigmoid(logits)
+            + (1 - yf) * jax.nn.log_sigmoid(-logits))
+    return p, bce, p * (1 - p)

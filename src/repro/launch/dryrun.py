@@ -1,0 +1,566 @@
+"""Multi-pod dry-run: AOT-lower + compile every (arch × input-shape × mesh)
+combination and extract roofline terms.
+
+MUST set XLA_FLAGS before any other import (jax locks the device count on
+first init) — hence the first two lines.
+
+Two analysis passes per combination:
+  1. FULL compile of the real step function (scan-over-layers form):
+     proves the sharding lowers, and provides ``memory_analysis()`` (peak
+     per-device bytes).  XLA's cost model counts while-loop bodies once, so
+     its FLOPs are NOT used for the roofline.
+  2. COMPOSITIONAL analysis: each run-signature's single layer (and the
+     embed/LM-head stems) is compiled separately; costs are multiplied by
+     layer counts.  This gives trip-count-correct FLOPs / bytes /
+     collective-bytes.  Optimizer update costs are added analytically
+     (~12 FLOPs and ~7 bytes-accessed per parameter).
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+from typing import Any, Dict, Optional  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import (  # noqa: E402
+    ARCH_IDS,
+    INPUT_SHAPES,
+    get_config,
+    shape_applicable,
+)
+from repro.launch.mesh import (  # noqa: E402
+    V5E_HBM_BW,
+    V5E_ICI_BW,
+    V5E_PEAK_FLOPS,
+    make_production_mesh,
+)
+from repro.models import abstract_cache, abstract_params  # noqa: E402
+from repro.models.model import apply_layer, run_structure  # noqa: E402
+from repro.optim import AdamConfig, init_adam_state, warmup_cosine  # noqa: E402
+from repro.runtime import input_specs  # noqa: E402
+from repro.runtime.steps import decode_step, prefill_step, train_step  # noqa: E402
+from repro.sharding.axes import cache_axes, param_axes, tree_shardings  # noqa: E402
+from repro.sharding.planner import ShardingCtx, rules_with  # noqa: E402
+
+# ---------------------------------------------------------------------------
+# Collective-bytes parser (post-SPMD HLO text; per-partition shapes)
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = {
+    "all-gather": 1.0,          # wire bytes ≈ result size
+    "all-reduce": 2.0,          # ring: 2× size
+    "reduce-scatter": 1.0,      # ≈ operand size ≈ result × (n-1); we use result×n≈operand — see note
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+# XLA-CPU float-normalization upcasts every bf16 op (collectives included)
+# to f32 before SPMD partitioning; on the TPU target these collectives stay
+# bf16.  With the correction enabled (default), f32 collective payloads are
+# counted at bf16 width.  Genuinely-f32 wire traffic in this codebase is
+# negligible (optimizer moments are bf16; f32 lives only in elementwise
+# norm/gate islands that never cross shards).  Documented in EXPERIMENTS.md.
+ASSUME_TPU_BF16_COLLECTIVES = True
+
+
+def _shape_bytes(type_str: str, bf16_correction: bool = False) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        width = _DTYPE_BYTES[dt]
+        if bf16_correction and dt == "f32":
+            width = 2
+        total += n * width
+    return total
+
+
+def collective_wire_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device wire-byte estimate per collective kind.
+
+    Uses the lhs (result) type of each collective instruction in the
+    post-partitioning module (per-partition shapes).  reduce-scatter wire
+    bytes are operand-sized; since only result shapes are parsed we
+    approximate operand ≈ result × shards via the all-gather duality — in
+    practice we count result bytes (lower bound) and note it.
+    """
+    out: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?\S+\s*=\s*(\([^)]*\)|\S+)\s+(\S+)\(", line)
+        if not m:
+            continue
+        op = m.group(2).rstrip(".0123456789")
+        # match e.g. "all-reduce", "all-gather-start", "all-reduce-scatter"?
+        for kind in _COLLECTIVES:
+            if op == kind or op.startswith(kind + "-start"):
+                out[kind] += (_shape_bytes(m.group(1), ASSUME_TPU_BF16_COLLECTIVES)
+                              * _COLLECTIVES[kind])
+                break
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Sharding rules per input shape
+# ---------------------------------------------------------------------------
+
+
+def ctx_for(mesh, shape_name: str, cfg=None,
+            serving_layout: bool = True) -> ShardingCtx:
+    """Shape- (and arch-) specific sharding rules.
+
+    ``serving_layout`` enables the §Perf iteration-A decode layout:
+      * decode weights are never FSDP-sharded over ``data`` (no per-token
+        re-gather).  Small archs keep batch-over-data + TP-only weights;
+        archs whose TP-16 weight shard exceeds HBM replicate the batch and
+        use 2D tensor parallelism (weights sharded over data×model, psums
+        of tiny single-token activations instead of weight movement);
+      * the KV cache is sequence-sharded over ``model`` (and ``data`` for
+        the big-arch path) instead of riding only the batch axis.
+    ``serving_layout=False`` reproduces the paper-faithful baseline rules.
+    """
+    overrides: Dict[str, Any] = {}
+    if shape_name == "long_500k":
+        # batch=1: shard the KV cache / sequence over every mesh axis instead
+        overrides["cache_seq"] = [("data", "model"), ("model",), ("data",), ()]
+    if serving_layout and shape_name == "train_4k" and cfg is not None \
+            and cfg.moe is None and cfg.num_params() > 1e11:
+        # §Perf iteration B (ZeRO-3 layout for huge dense train): batch over
+        # all chips, weights fully sharded, NO tensor parallelism — trades
+        # per-layer weight all-gathers for the 6 large activation
+        # all-reduces that TP contractions cost at d_model=16k.
+        overrides.update({
+            "batch": [("pod", "data", "model"), ("data", "model")],
+            "tp": [()], "heads": [()], "kv_heads": [()], "mlp": [()],
+            "vocab": [()],
+            "embed_fsdp": [("data", "model")],
+        })
+    if serving_layout and shape_name == "decode_32k" and cfg is not None:
+        params_gb = cfg.num_params() * 2 / 1e9
+        tp16_shard_gb = params_gb / mesh.shape.get("model", 16)
+        if tp16_shard_gb > 12.0:       # does not fit one v5e with TP-16
+            overrides["batch"] = [()]                       # replicate batch
+            overrides["embed_fsdp"] = [("data",)]           # 2D TP
+            overrides["cache_seq"] = [("data", "model"), ("model",), ()]
+        else:
+            overrides["embed_fsdp"] = [()]                  # TP-only weights
+            overrides["cache_seq"] = [("model",), ()]
+    return ShardingCtx(mesh=mesh, rules=rules_with(overrides))
+
+
+# ---------------------------------------------------------------------------
+# Step builders (full-model compile)
+# ---------------------------------------------------------------------------
+
+
+def _adam_cfg() -> AdamConfig:
+    # bf16 moments: halves optimizer HBM for the 405B/1T configs (DESIGN §5)
+    return AdamConfig(lr=warmup_cosine(3e-4, 100, 10_000), moment_dtype="bfloat16",
+                      grad_clip_norm=1.0)
+
+
+def build_full_step(cfg, shape, ctx):
+    """Returns (fn, example_args, in_shardings) for jit.lower()."""
+    params = abstract_params(cfg)
+    p_shard = tree_shardings(ctx, params, param_axes(params))
+    specs = input_specs(cfg, shape)
+
+    if shape.mode == "train":
+        adam = _adam_cfg()
+        opt = jax.eval_shape(lambda p: init_adam_state(p, adam), params)
+        o_shard = {
+            "mu": tree_shardings(ctx, opt["mu"], param_axes(params)),
+            "nu": tree_shardings(ctx, opt["nu"], param_axes(params)),
+            "count": None,
+        }
+        batch = specs["batch"]
+        b_shard = {
+            "tokens": ctx.sharding(["batch", None], batch["tokens"].shape)}
+        if "prefix_emb" in batch:
+            b_shard["prefix_emb"] = ctx.sharding(
+                ["batch", None, None], batch["prefix_emb"].shape)
+
+        def fn(p, o, b):
+            return train_step(p, o, b, cfg, adam, ctx=ctx, remat=True)
+
+        return fn, (params, opt, batch), (p_shard, o_shard, b_shard)
+
+    if shape.mode == "prefill":
+        batch = specs["batch"]
+        b_shard = {
+            "tokens": ctx.sharding(["batch", None], batch["tokens"].shape)}
+        if "prefix_emb" in batch:
+            b_shard["prefix_emb"] = ctx.sharding(
+                ["batch", None, None], batch["prefix_emb"].shape)
+
+        def fn(p, b):
+            return prefill_step(p, b, cfg, cache_capacity=shape.seq_len, ctx=ctx)
+
+        return fn, (params, batch), (p_shard, b_shard)
+
+    # decode
+    cache = specs["cache"]
+    c_shard = tree_shardings(ctx, cache, cache_axes(cache))
+    t_shard = ctx.sharding(["batch", None], specs["tokens"].shape)
+    pos_shard = ctx.sharding(["batch"], specs["cur_pos"].shape)
+
+    def fn(p, c, t, pos):
+        return decode_step(p, c, t, pos, cfg, ctx=ctx)
+
+    return fn, (params, cache, specs["tokens"], specs["cur_pos"]), (
+        p_shard, c_shard, t_shard, pos_shard)
+
+
+# ---------------------------------------------------------------------------
+# Compositional per-layer analysis
+# ---------------------------------------------------------------------------
+
+
+def _slice_run(tree):
+    return jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape[1:], l.dtype), tree)
+
+
+def _compile_cost(fn, args, shardings, mesh):
+    with mesh:
+        jitted = jax.jit(fn, in_shardings=shardings)
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+    ca = compiled.cost_analysis() or {}
+    text = compiled.as_text()
+    coll = collective_wire_bytes(text)
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "collective": coll,
+    }
+
+
+def _scale(cost, k):
+    return {
+        "flops": cost["flops"] * k,
+        "bytes": cost["bytes"] * k,
+        "collective": {n: v * k for n, v in cost["collective"].items()},
+    }
+
+
+def _add(a, b):
+    return {
+        "flops": a["flops"] + b["flops"],
+        "bytes": a["bytes"] + b["bytes"],
+        "collective": {k: a["collective"].get(k, 0) + b["collective"].get(k, 0)
+                       for k in set(a["collective"]) | set(b["collective"])},
+    }
+
+
+_ZERO = {"flops": 0.0, "bytes": 0.0, "collective": {k: 0.0 for k in _COLLECTIVES}}
+
+
+def compositional_analysis(cfg, shape, ctx, mesh) -> Dict[str, Any]:
+    B = shape.global_batch
+    P = cfg.frontend.num_prefix_tokens if cfg.frontend is not None else 0
+    L_total = (shape.seq_len + P) if shape.mode != "decode" else 1
+    d = cfg.d_model
+    act = cfg.act_jnp_dtype
+    mode = {"train": "train", "prefill": "prefill", "decode": "decode"}[shape.mode]
+
+    params = abstract_params(cfg)
+    total = dict(_ZERO, collective=dict(_ZERO["collective"]))
+    breakdown = {}
+
+    x_spec = jax.ShapeDtypeStruct((B, L_total, d), act)
+    x_shard = ctx.sharding(["batch", None, None], x_spec.shape)
+
+    for r, (sig, count) in enumerate(run_structure(cfg)):
+        layer_p = _slice_run(params[f"run_{r}"])
+        lp_shard = tree_shardings(ctx, layer_p, param_axes(layer_p))
+
+        if mode == "train":
+            def fn(p, x, sig=sig):
+                positions = jnp.broadcast_to(
+                    jnp.arange(x.shape[1], dtype=jnp.int32), x.shape[:2])
+
+                def fwd(p, x):
+                    y, _, _ = apply_layer(p, x, cfg, ctx, sig, "train",
+                                          positions=positions)
+                    return y
+
+                y, vjp = jax.vjp(fwd, p, x)
+                dp, dx = vjp(jnp.ones_like(y))
+                return dp, dx
+
+            cost = _compile_cost(fn, (layer_p, x_spec), (lp_shard, x_shard), mesh)
+        elif mode == "prefill":
+            def fn(p, x, sig=sig):
+                positions = jnp.broadcast_to(
+                    jnp.arange(x.shape[1], dtype=jnp.int32), x.shape[:2])
+                y, entry, _ = apply_layer(p, x, cfg, ctx, sig, "prefill",
+                                          positions=positions,
+                                          cache_capacity=shape.seq_len)
+                return y, entry
+
+            cost = _compile_cost(fn, (layer_p, x_spec), (lp_shard, x_shard), mesh)
+        else:
+            cache = abstract_cache(cfg, B, shape.seq_len)
+            entry = _slice_run(cache[f"run_{r}"])
+            e_shard = tree_shardings(ctx, entry, _slice_run_axes(entry))
+            pos_spec = jax.ShapeDtypeStruct((B,), jnp.int32)
+
+            def fn(p, x, e, pos, sig=sig):
+                y, new_e, _ = apply_layer(p, x, cfg, ctx, sig, "decode",
+                                          cur_pos=pos, cache_entry=e)
+                return y, new_e
+
+            cost = _compile_cost(
+                fn, (layer_p, x_spec, entry, pos_spec),
+                (lp_shard, x_shard, e_shard,
+                 ctx.sharding(["batch"], (B,))), mesh)
+
+        total = _add(total, _scale(cost, count))
+        breakdown[f"run_{r}:{sig[0]}+{sig[1]}x{count}"] = _scale(cost, count)
+
+    # ---- stems: embedding and LM head (+ CE loss / backward for train) ----
+    V = cfg.vocab_size
+    tok_spec = jax.ShapeDtypeStruct((B, L_total if mode != "decode" else 1),
+                                    jnp.int32)
+    emb = {"embed": jax.ShapeDtypeStruct((V, d), cfg.param_jnp_dtype)}
+    emb_shard = tree_shardings(ctx, emb, param_axes(emb))
+
+    if mode == "train":
+        def emb_fn(e, t):
+            def fwd(e):
+                return e["embed"][t].astype(act)
+            y, vjp = jax.vjp(fwd, e)
+            return vjp(jnp.ones_like(y))
+
+        head_p = ({"lm_head": params["lm_head"]} if not cfg.tie_embeddings
+                  else {"embed": params["embed"]})
+        hp_shard = tree_shardings(ctx, head_p, param_axes(head_p))
+        lab_spec = jax.ShapeDtypeStruct((B, L_total), jnp.int32)
+
+        def head_fn(hp, x, labels):
+            def fwd(hp, x):
+                w = hp.get("lm_head")
+                logits = (jnp.einsum("bld,dv->blv", x, w) if w is not None
+                          else jnp.einsum("bld,vd->blv", x, hp["embed"]))
+                logits = logits.astype(jnp.float32)
+                lse = jax.nn.logsumexp(logits, axis=-1)
+                gold = jnp.take_along_axis(
+                    logits, labels[..., None], axis=-1)[..., 0]
+                return jnp.mean(lse - gold)
+
+            loss, vjp = jax.vjp(fwd, hp, x)
+            return loss, vjp(jnp.ones_like(loss))
+
+        c1 = _compile_cost(emb_fn, (emb, tok_spec), (emb_shard, None), mesh)
+        c2 = _compile_cost(head_fn, (head_p, x_spec, lab_spec),
+                           (hp_shard, x_shard, None), mesh)
+        total = _add(total, _add(c1, c2))
+        breakdown["stem"] = _add(c1, c2)
+        # optimizer update, analytically (12 flops, ~7 bytes-accessed / param)
+        n_params = cfg.num_params()
+        opt_cost = {"flops": 12.0 * n_params, "bytes": 7.0 * n_params * 2,
+                    "collective": dict(_ZERO["collective"])}
+        total = _add(total, opt_cost)
+        breakdown["optimizer(analytic)"] = opt_cost
+    else:
+        def emb_fn(e, t):
+            return e["embed"][t].astype(act)
+
+        head_p = ({"lm_head": params["lm_head"]} if not cfg.tie_embeddings
+                  else {"embed": params["embed"]})
+        hp_shard = tree_shardings(ctx, head_p, param_axes(head_p))
+        xl_spec = jax.ShapeDtypeStruct((B, d), act)
+
+        def head_fn(hp, x):
+            w = hp.get("lm_head")
+            return (jnp.einsum("bd,dv->bv", x, w) if w is not None
+                    else jnp.einsum("bd,vd->bv", x, hp["embed"]))
+
+        c1 = _compile_cost(emb_fn, (emb, tok_spec), (emb_shard, None), mesh)
+        c2 = _compile_cost(head_fn, (head_p, xl_spec), (hp_shard, None), mesh)
+        total = _add(total, _add(c1, c2))
+        breakdown["stem"] = _add(c1, c2)
+
+    return {"total": total, "breakdown": breakdown}
+
+
+def _slice_run_axes(entry):
+    axes = cache_axes(jax.tree.map(lambda l: jax.ShapeDtypeStruct(
+        (1,) + l.shape, l.dtype), entry))
+    return jax.tree.map(lambda a: a[1:], axes,
+                        is_leaf=lambda x: isinstance(x, tuple) and
+                        all(isinstance(i, (str, type(None))) for i in x))
+
+
+# ---------------------------------------------------------------------------
+# Roofline
+# ---------------------------------------------------------------------------
+
+
+def roofline(cfg, shape, comp: Dict[str, Any], chips: int) -> Dict[str, Any]:
+    t = comp["total"]
+    coll_per_dev = sum(t["collective"].values())
+    # cost_analysis is per-partition already? No: it is for the whole module
+    # as compiled for one device (per-partition program) — flops/bytes are
+    # per-device; multiply by chips for the global numerator, then the
+    # roofline denominators divide it back out.
+    compute_s = t["flops"] / V5E_PEAK_FLOPS
+    memory_s = t["bytes"] / V5E_HBM_BW
+    collective_s = coll_per_dev / V5E_ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+
+    n = cfg.num_active_params() if cfg.moe is not None else cfg.num_params()
+    if shape.mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 6.0 * n * tokens
+    elif shape.mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2.0 * n * tokens
+    else:
+        tokens = shape.global_batch
+        model_flops = 2.0 * n * tokens
+    hlo_flops_global = t["flops"] * chips
+    ratio = model_flops / hlo_flops_global if hlo_flops_global else 0.0
+    return {
+        "terms": terms,
+        "dominant": dominant,
+        "model_flops": model_flops,
+        "hlo_flops_global": hlo_flops_global,
+        "useful_flops_ratio": ratio,
+        "collective_bytes_global": coll_per_dev * chips,
+        "hlo_bytes_global": t["bytes"] * chips,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            skip_compositional: bool = False,
+            out_dir: Optional[str] = None,
+            serving_layout: bool = True,
+            tag: str = "") -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    if not shape_applicable(cfg, shape):
+        rec = {"arch": arch, "shape": shape_name,
+               "mesh": "2x16x16" if multi_pod else "16x16",
+               "status": "skipped (long_500k needs sub-quadratic attention)"}
+        print(json.dumps(rec))
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    ctx = ctx_for(mesh, shape_name, cfg, serving_layout=serving_layout)
+    t0 = time.time()
+    fn, args, shardings = build_full_step(cfg, shape, ctx)
+    with mesh:
+        lowered = jax.jit(fn, in_shardings=shardings).lower(*args)
+        compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    full_ca = compiled.cost_analysis() or {}
+    compile_s = time.time() - t0
+
+    rec: Dict[str, Any] = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "status": "ok",
+        "compile_s": round(compile_s, 1),
+        "memory": {
+            "argument_size_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_size_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_size_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes_per_device": (
+                (getattr(mem, "argument_size_in_bytes", 0) or 0)
+                + (getattr(mem, "temp_size_in_bytes", 0) or 0)
+            ),
+        },
+        "full_compile_flops_one_layer_counted": float(full_ca.get("flops", 0.0)),
+    }
+
+    if not skip_compositional:
+        comp = compositional_analysis(cfg, shape, ctx, mesh)
+        rec["compositional"] = {
+            "total": comp["total"],
+            "breakdown": {k: {"flops": v["flops"], "bytes": v["bytes"],
+                              "collective_sum": sum(v["collective"].values())}
+                          for k, v in comp["breakdown"].items()},
+        }
+        rec["roofline"] = roofline(cfg, shape, comp, chips)
+
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        fname = (f"{arch}_{shape_name}_{'multi' if multi_pod else 'single'}"
+                 f"{tag}.json")
+        with open(os.path.join(out_dir, fname), "w") as f:
+            json.dump(rec, f, indent=1)
+    print(json.dumps({k: rec[k] for k in
+                      ("arch", "shape", "mesh", "status", "compile_s")}))
+    if "roofline" in rec:
+        print("  memory:", rec["memory"])
+        print("  roofline:", json.dumps(rec["roofline"]))
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="one arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="one input shape (default: all)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--skip-compositional", action="store_true")
+    ap.add_argument("--baseline-layout", action="store_true",
+                    help="paper-faithful rules (no serving-layout overrides)")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args(argv)
+
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    run_one(arch, shape, mp,
+                            skip_compositional=args.skip_compositional,
+                            out_dir=args.out,
+                            serving_layout=not args.baseline_layout,
+                            tag=args.tag)
+                except Exception as e:  # noqa: BLE001
+                    failures.append((arch, shape, mp, repr(e)))
+                    print(f"FAIL {arch} {shape} multi_pod={mp}: {e!r}",
+                          file=sys.stderr)
+    if failures:
+        print(f"{len(failures)} failures", file=sys.stderr)
+        sys.exit(1)
+    print("dry-run: all combinations lowered and compiled")
+
+
+if __name__ == "__main__":
+    main()

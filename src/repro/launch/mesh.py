@@ -1,0 +1,28 @@
+"""Production mesh construction (TPU v5e pods; host-device placeholders on CPU).
+
+A function, not a module-level constant: importing this module must never
+touch jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many devices exist (tests / examples)."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = min(model, max(n // data, 1))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+# TPU v5e hardware constants (per chip) used by the roofline analysis.
+V5E_PEAK_FLOPS = 197e12      # bf16 FLOP/s
+V5E_HBM_BW = 819e9           # bytes/s
+V5E_ICI_BW = 50e9            # bytes/s per link

@@ -1,0 +1,137 @@
+"""Per-layer HLO collective profiler (hillclimb tooling).
+
+Compiles a single layer of an (arch, shape) combination exactly as the
+compositional dry-run does and prints every collective instruction grouped
+by (kind, shape), sorted by total wire bytes — the "profile" used by the
+§Perf iterations.
+
+    PYTHONPATH=src python -m repro.launch.profile_layer --arch llama3-405b \
+        --shape train_4k [--run 0] [--top 20]
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse  # noqa: E402
+import collections  # noqa: E402
+import re  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import INPUT_SHAPES, get_config  # noqa: E402
+from repro.launch.dryrun import (  # noqa: E402
+    _DTYPE_BYTES,
+    _SHAPE_RE,
+    _COLLECTIVES,
+    _shape_bytes,
+    ctx_for,
+)
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import abstract_params  # noqa: E402
+from repro.models.model import apply_layer, run_structure  # noqa: E402
+from repro.models.model import abstract_cache  # noqa: E402
+from repro.sharding.axes import cache_axes, param_axes, tree_shardings  # noqa: E402
+
+
+def profile(arch: str, shape_name: str, run_idx: int = 0, top: int = 20,
+            multi_pod: bool = False, serving_layout: bool = True):
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ctx = ctx_for(mesh, shape_name, cfg, serving_layout=serving_layout)
+    params = abstract_params(cfg)
+    runs = run_structure(cfg)
+    sig, count = runs[run_idx]
+    layer_p = jax.tree.map(lambda l: jax.ShapeDtypeStruct(l.shape[1:], l.dtype),
+                           params[f"run_{run_idx}"])
+    lp_shard = tree_shardings(ctx, layer_p, param_axes(layer_p))
+    B = shape.global_batch
+    P = cfg.frontend.num_prefix_tokens if cfg.frontend is not None else 0
+    L = 1 if shape.mode == "decode" else shape.seq_len + P
+    x_spec = jax.ShapeDtypeStruct((B, L, cfg.d_model), cfg.act_jnp_dtype)
+    x_shard = ctx.sharding(["batch", None, None], x_spec.shape)
+
+    if shape.mode == "train":
+        def fn(p, x):
+            positions = jnp.broadcast_to(
+                jnp.arange(x.shape[1], dtype=jnp.int32), x.shape[:2])
+
+            def fwd(p, x):
+                y, _, _ = apply_layer(p, x, cfg, ctx, sig, "train",
+                                      positions=positions)
+                return y
+
+            y, vjp = jax.vjp(fwd, p, x)
+            return vjp(jnp.ones_like(y))
+
+        args, shards = (layer_p, x_spec), (lp_shard, x_shard)
+    elif shape.mode == "prefill":
+        def fn(p, x):
+            positions = jnp.broadcast_to(
+                jnp.arange(x.shape[1], dtype=jnp.int32), x.shape[:2])
+            return apply_layer(p, x, cfg, ctx, sig, "prefill",
+                               positions=positions,
+                               cache_capacity=shape.seq_len)[:2]
+
+        args, shards = (layer_p, x_spec), (lp_shard, x_shard)
+    else:
+        cache = abstract_cache(cfg, B, shape.seq_len)
+        entry = jax.tree.map(lambda l: jax.ShapeDtypeStruct(l.shape[1:], l.dtype),
+                             cache[f"run_{run_idx}"])
+        from repro.launch.dryrun import _slice_run_axes
+        e_shard = tree_shardings(ctx, entry, _slice_run_axes(entry))
+        pos_spec = jax.ShapeDtypeStruct((B,), jnp.int32)
+
+        def fn(p, x, e, pos):
+            return apply_layer(p, x, cfg, ctx, sig, "decode", cur_pos=pos,
+                               cache_entry=e)[:2]
+
+        args = (layer_p, x_spec, entry, pos_spec)
+        shards = (lp_shard, x_shard, e_shard, ctx.sharding(["batch"], (B,)))
+
+    with mesh:
+        compiled = jax.jit(fn, in_shardings=shards).lower(*args).compile()
+    text = compiled.as_text()
+    buckets = collections.Counter()
+    for line in text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?\S+\s*=\s*(\([^)]*\)|\S+)\s+(\S+)\(", line)
+        if not m:
+            continue
+        op = m.group(2).rstrip(".0123456789")
+        for kind in _COLLECTIVES:
+            if op == kind or op.startswith(kind + "-start"):
+                buckets[(kind, m.group(1))] += 1
+                break
+    rows = sorted(
+        ((k, s, n, _shape_bytes(s) * n * _COLLECTIVES[k])
+         for (k, s), n in buckets.items()),
+        key=lambda r: -r[3])
+    ca = compiled.cost_analysis() or {}
+    total = sum(r[3] for r in rows)
+    print(f"{arch} {shape_name} run_{run_idx} {sig} x{count} "
+          f"mesh={'2x16x16' if multi_pod else '16x16'}")
+    print(f"per-layer per-device: flops={ca.get('flops', 0):.3e} "
+          f"bytes={ca.get('bytes accessed', 0):.3e} "
+          f"collective_wire={total:.3e} (x{count} layers)")
+    for kind, shp, n, b in rows[:top]:
+        print(f"  {b/1e9:9.2f} GB  {n:4d}x {kind:20s} {shp[:90]}")
+    return rows, ca
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--run", type=int, default=0)
+    ap.add_argument("--top", type=int, default=20)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--baseline-layout", action="store_true")
+    args = ap.parse_args(argv)
+    profile(args.arch, args.shape, args.run, args.top, args.multi_pod,
+            serving_layout=not args.baseline_layout)
+
+
+if __name__ == "__main__":
+    main()

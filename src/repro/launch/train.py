@@ -1,0 +1,85 @@
+"""Training launcher.
+
+Runs real steps on the host devices (reduced/smoke configs on CPU) or, with
+``--dry-run``, AOT-compiles the production-mesh program instead (see
+``repro.launch.dryrun`` for the full matrix).
+
+Example (CPU):
+    PYTHONPATH=src python -m repro.launch.train --arch gemma3-1b --smoke \
+        --steps 50 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import save_checkpoint
+from repro.configs import get_config, get_smoke_config
+from repro.launch.mesh import make_host_mesh
+from repro.models import init_params
+from repro.optim import AdamConfig, init_adam_state, warmup_cosine
+from repro.runtime import train_step
+from repro.sharding.axes import param_axes, tree_shardings
+from repro.sharding.planner import ShardingCtx
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", help="reduced config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--data-axis", type=int, default=1)
+    ap.add_argument("--model-axis", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    mesh = make_host_mesh(args.data_axis, args.model_axis)
+    ctx = ShardingCtx(mesh=mesh if mesh.size > 1 else None)
+
+    key = jax.random.key(args.seed)
+    params = init_params(cfg, key)
+    adam = AdamConfig(lr=warmup_cosine(args.lr, 20, args.steps),
+                      grad_clip_norm=1.0)
+    opt = init_adam_state(params, adam)
+
+    p_shard = tree_shardings(ctx, params, param_axes(params))
+
+    def step(p, o, batch):
+        return train_step(p, o, batch, cfg, adam, ctx=ctx, remat=False)
+
+    jitted = jax.jit(step) if ctx.mesh is None else jax.jit(
+        step, in_shardings=(p_shard, None, None))
+
+    data_key = jax.random.key(args.seed + 1)
+    t0 = time.time()
+    for i in range(args.steps):
+        data_key, k1, k2 = jax.random.split(data_key, 3)
+        batch = {"tokens": jax.random.randint(
+            k1, (args.batch, args.seq + 1), 0, cfg.vocab_size)}
+        if cfg.frontend is not None:
+            fe = cfg.frontend
+            batch["prefix_emb"] = 0.1 * jax.random.normal(
+                k2, (args.batch, fe.num_prefix_tokens, fe.frontend_dim))
+        params, opt, metrics = jitted(params, opt, batch)
+        if i % args.log_every == 0 or i == args.steps - 1:
+            print(f"step {i:5d} loss={float(metrics['loss']):.4f} "
+                  f"ce={float(metrics['ce']):.4f} "
+                  f"gnorm={float(metrics['grad_norm']):.3f} "
+                  f"lr={float(metrics['lr']):.2e} "
+                  f"({time.time()-t0:.1f}s)")
+    if args.ckpt:
+        save_checkpoint(args.ckpt, params, {"arch": cfg.arch_id})
+        print(f"saved checkpoint to {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

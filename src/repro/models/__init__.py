@@ -1,0 +1,17 @@
+from repro.models.model import (
+    abstract_cache,
+    abstract_params,
+    apply_model,
+    init_cache,
+    init_params,
+    run_structure,
+)
+
+__all__ = [
+    "abstract_cache",
+    "abstract_params",
+    "apply_model",
+    "init_cache",
+    "init_params",
+    "run_structure",
+]

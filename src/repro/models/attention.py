@@ -1,0 +1,329 @@
+"""Attention substrate: blocked flash attention (pure-jnp, custom VJP),
+sliding-window attention with bounded KV slices, MLA (latent) attention,
+and single-token decode attention over a KV cache.
+
+These jnp implementations are the *reference semantics* for the Pallas
+kernels in ``repro.kernels`` and the default execution path on non-TPU
+backends.  They are written blockwise so that the compiled memory footprint
+matches what a fused TPU kernel would claim (no L×S score materialization).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _pick_block(n: int, pref: int) -> int:
+    """Largest power-of-two divisor of n that is <= pref (fallback n)."""
+    if n <= pref:
+        return n
+    b = 1
+    while b * 2 <= pref and n % (b * 2) == 0:
+        b *= 2
+    return b if n % b == 0 else n
+
+
+def _mask_bias(q_pos, kv_pos, window: int):
+    """Additive f32 bias (B, 1, 1, bq, bk): causal + optional window + validity.
+
+    kv_pos < 0 marks invalid (unwritten cache) slots.
+    """
+    qp = q_pos[:, None, None, :, None]
+    kp = kv_pos[:, None, None, None, :]
+    ok = (kp >= 0) & (qp >= kp)
+    if window:
+        ok &= qp - kp < window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Blocked flash attention (seq mode) with custom VJP
+# ---------------------------------------------------------------------------
+
+
+def _flash_fwd_blocks(q, k, v, q_pos, kv_pos, window, scale, bq, bk):
+    """Returns out (B, nkv, G, L, dv) f32 and lse (B, nkv, G, L) f32.
+
+    q: (B, nkv, G, L, dk); k: (B, nkv, S, dk); v: (B, nkv, S, dv).
+    """
+    B, nkv, G, L, dk = q.shape
+    S = k.shape[2]
+    dv = v.shape[-1]
+    nbq, nbk = L // bq, S // bk
+
+    q_blk = jnp.moveaxis(q.reshape(B, nkv, G, nbq, bq, dk), 3, 0)
+    qp_blk = jnp.moveaxis(q_pos.reshape(B, nbq, bq), 1, 0)
+    k_blk = jnp.moveaxis(k.reshape(B, nkv, nbk, bk, dk), 2, 0)
+    v_blk = jnp.moveaxis(v.reshape(B, nkv, nbk, bk, dv), 2, 0)
+    kp_blk = jnp.moveaxis(kv_pos.reshape(B, nbk, bk), 1, 0)
+
+    def per_q_block(qb, qpb):
+        def kv_step(carry, xs):
+            m, l, acc = carry
+            kb, vb, kpb = xs
+            s = jnp.einsum(
+                "bkgqd,bksd->bkgqs", qb, kb,
+                preferred_element_type=jnp.float32,
+            ) * scale
+            s = s + _mask_bias(qpb, kpb, window)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            # P·V with bf16 P and f32 accumulation (flash-attention standard)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bksd->bkgqd", p.astype(vb.dtype), vb,
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, nkv, G, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, nkv, G, bq), jnp.float32)
+        a0 = jnp.zeros((B, nkv, G, bq, dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (k_blk, v_blk, kp_blk))
+        l_safe = jnp.maximum(l, 1e-30)
+        out = acc / l_safe[..., None]
+        lse = m + jnp.log(l_safe)
+        return out, lse
+
+    out_blocks, lse_blocks = jax.lax.map(
+        lambda xs: per_q_block(*xs), (q_blk, qp_blk)
+    )
+    out = jnp.moveaxis(out_blocks, 0, 3).reshape(B, nkv, G, L, dv)
+    lse = jnp.moveaxis(lse_blocks, 0, 3).reshape(B, nkv, G, L)
+    return out, lse
+
+
+def _flash_bwd_blocks(q, k, v, q_pos, kv_pos, window, scale, bq, bk, out, lse, dout):
+    """Flash-attention backward: recomputes scores blockwise."""
+    B, nkv, G, L, dk = q.shape
+    S = k.shape[2]
+    dv = v.shape[-1]
+    nbq, nbk = L // bq, S // bk
+
+    delta = jnp.sum(dout * out, axis=-1)  # (B, nkv, G, L) f32
+
+    q_blk = jnp.moveaxis(q.reshape(B, nkv, G, nbq, bq, dk), 3, 0)
+    qp_blk = jnp.moveaxis(q_pos.reshape(B, nbq, bq), 1, 0)
+    do_blk = jnp.moveaxis(dout.reshape(B, nkv, G, nbq, bq, dv), 3, 0)
+    lse_blk = jnp.moveaxis(lse.reshape(B, nkv, G, nbq, bq), 3, 0)
+    dl_blk = jnp.moveaxis(delta.reshape(B, nkv, G, nbq, bq), 3, 0)
+    k_blk = jnp.moveaxis(k.reshape(B, nkv, nbk, bk, dk), 2, 0)
+    v_blk = jnp.moveaxis(v.reshape(B, nkv, nbk, bk, dv), 2, 0)
+    kp_blk = jnp.moveaxis(kv_pos.reshape(B, nbk, bk), 1, 0)
+
+    def q_step(carry, xs):
+        dk_acc, dv_acc = carry
+        qb, qpb, dob, lseb, dlb = xs
+
+        def kv_step(j, dq_inner_and_acc):
+            dq_b, (dk_a, dv_a) = dq_inner_and_acc
+            kb = k_blk[j]
+            vb = v_blk[j]
+            kpb = kp_blk[j]
+            s = jnp.einsum(
+                "bkgqd,bksd->bkgqs", qb, kb,
+                preferred_element_type=jnp.float32,
+            ) * scale
+            s = s + _mask_bias(qpb, kpb, window)
+            p = jnp.exp(s - lseb[..., None])  # (B,nkv,G,bq,bk)
+            pb = p.astype(qb.dtype)
+            dob_b = dob.astype(qb.dtype)
+            dvb = jnp.einsum("bkgqs,bkgqd->bksd", pb, dob_b,
+                             preferred_element_type=jnp.float32)
+            dp = jnp.einsum("bkgqd,bksd->bkgqs", dob_b, vb,
+                            preferred_element_type=jnp.float32)
+            ds = p * (dp - dlb[..., None]) * scale
+            dsb = ds.astype(qb.dtype)
+            dq_b = dq_b + jnp.einsum("bkgqs,bksd->bkgqd", dsb, kb,
+                                     preferred_element_type=jnp.float32)
+            dkb = jnp.einsum("bkgqs,bkgqd->bksd", dsb, qb,
+                             preferred_element_type=jnp.float32)
+            dk_a = jax.lax.dynamic_update_index_in_dim(
+                dk_a, jax.lax.dynamic_index_in_dim(dk_a, j, 0, keepdims=False) + dkb, j, 0
+            )
+            dv_a = jax.lax.dynamic_update_index_in_dim(
+                dv_a, jax.lax.dynamic_index_in_dim(dv_a, j, 0, keepdims=False) + dvb, j, 0
+            )
+            return dq_b, (dk_a, dv_a)
+
+        dq0 = jnp.zeros((B, nkv, G, bq, dk), jnp.float32)
+        dq_b, (dk_acc, dv_acc) = jax.lax.fori_loop(
+            0, nbk, kv_step, (dq0, (dk_acc, dv_acc))
+        )
+        return (dk_acc, dv_acc), dq_b
+
+    dk0 = jnp.zeros((nbk, B, nkv, bk, dk), jnp.float32)
+    dv0 = jnp.zeros((nbk, B, nkv, bk, dv), jnp.float32)
+    (dk_acc, dv_acc), dq_blocks = jax.lax.scan(
+        q_step, (dk0, dv0), (q_blk, qp_blk, do_blk, lse_blk, dl_blk)
+    )
+    dq = jnp.moveaxis(dq_blocks, 0, 3).reshape(B, nkv, G, L, dk)
+    dk_full = jnp.moveaxis(dk_acc, 0, 2).reshape(B, nkv, S, dk)
+    dv_full = jnp.moveaxis(dv_acc, 0, 2).reshape(B, nkv, S, dv)
+    return dq, dk_full, dv_full
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8))
+def _flash_core(q, k, v, q_pos, kv_pos, window, scale, bq, bk):
+    out, _ = _flash_fwd_blocks(q, k, v, q_pos, kv_pos, window, scale, bq, bk)
+    return out
+
+
+def _flash_core_fwd(q, k, v, q_pos, kv_pos, window, scale, bq, bk):
+    out, lse = _flash_fwd_blocks(q, k, v, q_pos, kv_pos, window, scale, bq, bk)
+    return out, (q, k, v, q_pos, kv_pos, out, lse)
+
+
+def _flash_core_bwd(window, scale, bq, bk, res, dout):
+    q, k, v, q_pos, kv_pos, out, lse = res
+    dq, dk, dv = _flash_bwd_blocks(
+        q, k, v, q_pos, kv_pos, window, scale, bq, bk, out, lse, dout.astype(jnp.float32)
+    )
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype), None, None)
+
+
+_flash_core.defvjp(_flash_core_fwd, _flash_core_bwd)
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    q_pos: jax.Array,
+    kv_pos: jax.Array,
+    *,
+    window: int = 0,
+    scale: Optional[float] = None,
+    block_q: int = 512,
+    block_kv: int = 1024,
+) -> jax.Array:
+    """Causal (optionally windowed) GQA attention.
+
+    q: (B, L, nq, dk); k: (B, S, nkv, dk); v: (B, S, nkv, dv);
+    q_pos: (B, L); kv_pos: (B, S) with -1 for invalid slots.
+    Returns (B, L, nq, dv) in q.dtype.
+    """
+    B, L, nq, dk = q.shape
+    S = k.shape[1]
+    nkv = k.shape[2]
+    G = nq // nkv
+    scale = scale if scale is not None else dk ** -0.5
+    bq = _pick_block(L, block_q)
+    bk = _pick_block(S, block_kv)
+
+    qg = jnp.moveaxis(q.reshape(B, L, nkv, G, dk), 1, 3)  # (B, nkv, G, L, dk)
+    kg = jnp.moveaxis(k, 1, 2)  # (B, nkv, S, dk)
+    vg = jnp.moveaxis(v, 1, 2)
+    out = _flash_core(qg, kg, vg, q_pos, kv_pos, window, scale, bq, bk)
+    out = jnp.moveaxis(out, 3, 1).reshape(B, L, nq, -1)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Sliding-window attention via bounded KV slices (seq mode)
+# ---------------------------------------------------------------------------
+
+
+def sliding_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    q_pos: jax.Array,
+    kv_pos: jax.Array,
+    *,
+    window: int,
+    scale: Optional[float] = None,
+    block_q: int = 512,
+) -> jax.Array:
+    """Windowed causal attention where each q block attends to a bounded,
+    dynamically-sliced KV span of length window+block_q (padded).  FLOPs are
+    O(L * window) instead of O(L * S).
+
+    Assumes q and kv cover the same contiguous positions (seq mode: S == L
+    and kv_pos == q_pos rowwise).
+    """
+    B, L, nq, dk = q.shape
+    S = k.shape[1]
+    nkv = k.shape[2]
+    G = nq // nkv
+    scale = scale if scale is not None else dk ** -0.5
+    bq = _pick_block(L, block_q)
+    span = window + bq
+    if span >= S:
+        return flash_attention(
+            q, k, v, q_pos, kv_pos, window=window, scale=scale, block_q=bq
+        )
+    nbq = L // bq
+
+    qg = jnp.moveaxis(q.reshape(B, L, nkv, G, dk), 1, 3)  # (B,nkv,G,L,dk)
+    kg = jnp.moveaxis(k, 1, 2)  # (B,nkv,S,dk)
+    vg = jnp.moveaxis(v, 1, 2)
+    q_blk = jnp.moveaxis(qg.reshape(B, nkv, G, nbq, bq, dk), 3, 0)
+    qp_blk = jnp.moveaxis(q_pos.reshape(B, nbq, bq), 1, 0)
+
+    def per_block(i, qb, qpb):
+        start = jnp.maximum(i * bq + bq - span, 0)
+        ks = jax.lax.dynamic_slice_in_dim(kg, start, span, axis=2)
+        vs = jax.lax.dynamic_slice_in_dim(vg, start, span, axis=2)
+        kps = jax.vmap(lambda row: jax.lax.dynamic_slice_in_dim(row, start, span))(kv_pos)
+        s = jnp.einsum(
+            "bkgqd,bksd->bkgqs", qb, ks, preferred_element_type=jnp.float32,
+        ) * scale
+        s = s + _mask_bias(qpb, kps, window)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bkgqs,bksd->bkgqd", p.astype(vs.dtype), vs,
+                          preferred_element_type=jnp.float32)
+
+    out_blocks = jax.lax.map(
+        lambda xs: per_block(*xs),
+        (jnp.arange(nbq), q_blk, qp_blk),
+    )
+    out = jnp.moveaxis(out_blocks, 0, 3).reshape(B, nkv, G, L, -1)
+    out = jnp.moveaxis(out, 3, 1).reshape(B, L, nq, -1)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention (single token vs KV cache)
+# ---------------------------------------------------------------------------
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    kv_pos: jax.Array,
+    cur_pos: jax.Array,
+    *,
+    window: int = 0,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """One-token GQA attention over a cache.
+
+    q: (B, 1, nq, dk); k_cache: (B, S, nkv, dk); v_cache: (B, S, nkv, dv);
+    kv_pos: (B, S) absolute positions held in each slot (-1 = empty);
+    cur_pos: (B,) position of the query token.
+    """
+    B, _, nq, dk = q.shape
+    nkv = k_cache.shape[2]
+    G = nq // nkv
+    scale = scale if scale is not None else dk ** -0.5
+
+    qg = q.reshape(B, nkv, G, dk)
+    s = jnp.einsum(
+        "bkgd,bskd->bkgs", qg, k_cache, preferred_element_type=jnp.float32,
+    ) * scale
+    ok = (kv_pos >= 0) & (kv_pos[:, :] <= cur_pos[:, None])
+    if window:
+        ok &= cur_pos[:, None] - kv_pos < window
+    s = s + jnp.where(ok, 0.0, NEG_INF)[:, None, None, :].astype(jnp.float32)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, nq, -1).astype(q.dtype)

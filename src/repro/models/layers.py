@@ -1,0 +1,68 @@
+"""Common neural-net building blocks (pure functions over param pytrees)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def normal_init(key, shape, scale, dtype):
+    return (scale * jax.random.normal(key, shape, dtype=jnp.float32)).astype(dtype)
+
+
+def rms_norm(x, gamma, eps: float = 1e-6):
+    """RMSNorm in float32, cast back to input dtype."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + gamma.astype(jnp.float32))).astype(x.dtype)
+
+
+def make_rope(positions, head_dim: int, theta: float):
+    """Rotary embedding tables: returns (cos, sin) of shape (*pos.shape, head_dim//2).
+
+    positions: int32 array (any shape, typically (B, L) or (L,)).
+    """
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x, cos, sin):
+    """x: (..., n_heads, head_dim); cos/sin: broadcastable (..., 1, head_dim//2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out1 = xf1 * cos - xf2 * sin
+    out2 = xf2 * cos + xf1 * sin
+    return jnp.concatenate([out1, out2], axis=-1).astype(x.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    """SwiGLU MLP: silu(x @ w_gate) * (x @ w_up) @ w_down."""
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, w_down)
+
+
+def softcap(logits, cap: float):
+    if not cap:
+        return logits
+    lf = logits.astype(jnp.float32)
+    return (jnp.tanh(lf / cap) * cap).astype(logits.dtype)
+
+
+def init_mlp_params(key, d_model: int, d_ff: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    scale_in = d_model ** -0.5
+    scale_out = d_ff ** -0.5
+    return {
+        "w_gate": normal_init(k1, (d_model, d_ff), scale_in, dtype),
+        "w_up": normal_init(k2, (d_model, d_ff), scale_in, dtype),
+        "w_down": normal_init(k3, (d_ff, d_model), scale_out, dtype),
+    }
+
+
+def mlp_apply(params, x):
+    return swiglu(x, params["w_gate"], params["w_up"], params["w_down"])

@@ -1,0 +1,568 @@
+"""Unified decoder covering the whole assigned pool (dense / moe / ssm /
+vlm / audio / hybrid).
+
+Layers are grouped into maximal runs of identical *signature*
+(mixer-kind, ffn-kind); each run's parameters are stacked on a leading axis
+and executed with ``lax.scan`` so the HLO stays compact for the 512-device
+dry-run (126-layer llama lowers as one scan body, not 126 inlined layers).
+
+Modes:
+  * ``train`` / ``prefill``: full-sequence processing (prefill also fills a
+    KV cache and returns last-token logits);
+  * ``decode``: one new token against a KV cache / SSM state.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import ssm as ssm_mod
+from repro.models.attention import (
+    decode_attention,
+    flash_attention,
+    sliding_attention,
+)
+from repro.models.layers import (
+    apply_rope,
+    init_mlp_params,
+    make_rope,
+    mlp_apply,
+    normal_init,
+    rms_norm,
+    softcap,
+)
+from repro.models.moe import init_moe_params, moe_ffn
+from repro.sharding.planner import NULL_CTX, ShardingCtx
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Layer signatures and run grouping
+# ---------------------------------------------------------------------------
+
+
+def layer_signatures(cfg: ModelConfig) -> List[Tuple[str, str]]:
+    sigs = []
+    for i, mixer in enumerate(cfg.layer_kinds()):
+        if mixer in ("mlstm", "slstm"):
+            ffn = "none"
+        elif cfg.moe is not None:
+            ffn = "dense" if i < cfg.moe.first_k_dense else "moe"
+        elif cfg.d_ff:
+            ffn = "dense"
+        else:
+            ffn = "none"
+        sigs.append((mixer, ffn))
+    return sigs
+
+
+def run_structure(cfg: ModelConfig) -> List[Tuple[Tuple[str, str], int]]:
+    """Maximal homogeneous runs: [(signature, n_layers), ...]."""
+    return [(sig, len(list(g))) for sig, g in itertools.groupby(layer_signatures(cfg))]
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization
+# ---------------------------------------------------------------------------
+
+
+def _init_attn_params(key, cfg: ModelConfig, kind: str, dtype):
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    nq, nkv = cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 8)
+    s = d ** -0.5
+    if kind == "mla":
+        m = cfg.mla
+        qdim = nq * (m.qk_nope_head_dim + m.qk_rope_head_dim)
+        p = {
+            "w_q": normal_init(ks[0], (d, qdim), s, dtype),
+            "w_dkv": normal_init(ks[1], (d, m.kv_lora_rank + m.qk_rope_head_dim), s, dtype),
+            "kv_ln": jnp.zeros((m.kv_lora_rank,), dtype),
+            "w_uk": normal_init(ks[2], (m.kv_lora_rank, nq * m.qk_nope_head_dim),
+                                m.kv_lora_rank ** -0.5, dtype),
+            "w_uv": normal_init(ks[3], (m.kv_lora_rank, nq * m.v_head_dim),
+                                m.kv_lora_rank ** -0.5, dtype),
+            "w_o": normal_init(ks[4], (nq * m.v_head_dim, d),
+                               (nq * m.v_head_dim) ** -0.5, dtype),
+        }
+    else:
+        p = {
+            "w_q": normal_init(ks[0], (d, nq * hd), s, dtype),
+            "w_k": normal_init(ks[1], (d, nkv * hd), s, dtype),
+            "w_v": normal_init(ks[2], (d, nkv * hd), s, dtype),
+            "w_o": normal_init(ks[3], (nq * hd, d), (nq * hd) ** -0.5, dtype),
+        }
+        if cfg.qkv_bias:
+            p["b_q"] = jnp.zeros((nq * hd,), dtype)
+            p["b_k"] = jnp.zeros((nkv * hd,), dtype)
+            p["b_v"] = jnp.zeros((nkv * hd,), dtype)
+    return p
+
+
+def _init_layer_params(key, cfg: ModelConfig, sig: Tuple[str, str], dtype):
+    mixer, ffn = sig
+    ks = jax.random.split(key, 4)
+    if mixer == "mlstm":
+        return ssm_mod.init_mlstm_params(ks[0], cfg, dtype)
+    if mixer == "slstm":
+        return ssm_mod.init_slstm_params(ks[0], cfg, dtype)
+    p = {"ln1": jnp.zeros((cfg.d_model,), dtype), "attn": _init_attn_params(ks[0], cfg, mixer, dtype)}
+    if cfg.parallel_ssm_branch:
+        p["mamba"] = ssm_mod.init_mamba_params(ks[1], cfg, dtype)
+    if ffn != "none":
+        p["ln2"] = jnp.zeros((cfg.d_model,), dtype)
+        if ffn == "moe":
+            p["moe"] = init_moe_params(ks[2], cfg, dtype)
+        else:
+            d_ff = cfg.moe.dense_d_ff if cfg.moe is not None else cfg.d_ff
+            p["mlp"] = init_mlp_params(ks[2], cfg.d_model, d_ff, dtype)
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> PyTree:
+    dtype = cfg.param_jnp_dtype
+    d = cfg.d_model
+    keys = jax.random.split(key, len(run_structure(cfg)) + 3)
+    params: Dict[str, Any] = {
+        "embed": normal_init(keys[0], (cfg.vocab_size, d), 1.0, dtype),
+        "final_norm": jnp.zeros((d,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = normal_init(keys[1], (d, cfg.vocab_size), d ** -0.5, dtype)
+    if cfg.frontend is not None:
+        params["frontend_proj"] = normal_init(
+            keys[2], (cfg.frontend.frontend_dim, d), cfg.frontend.frontend_dim ** -0.5, dtype
+        )
+    for r, (sig, count) in enumerate(run_structure(cfg)):
+        layer_keys = jax.random.split(keys[r + 3], count)
+        stacked = jax.vmap(lambda k: _init_layer_params(k, cfg, sig, dtype))(layer_keys)
+        params[f"run_{r}"] = stacked
+    return params
+
+
+def abstract_params(cfg: ModelConfig, seed: int = 0) -> PyTree:
+    """ShapeDtypeStruct param tree (no allocation) for AOT lowering."""
+    key = jax.random.key(seed)
+    return jax.eval_shape(lambda k: init_params(cfg, k), key)
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+
+def _attn_cache_capacity(cfg: ModelConfig, kind: str, capacity: int) -> int:
+    """Sliding-window layers keep a ring buffer of window size."""
+    if kind == "sliding" and cfg.sliding_window:
+        return min(cfg.sliding_window, capacity)
+    return capacity
+
+
+def init_cache(cfg: ModelConfig, batch: int, capacity: int) -> PyTree:
+    """Zero-initialized serving cache for all runs. ``capacity`` covers the
+    full context (incl. any frontend prefix)."""
+    dtype = cfg.act_jnp_dtype
+    hd = cfg.resolved_head_dim
+    nkv = cfg.num_kv_heads
+    cache: Dict[str, Any] = {}
+    for r, (sig, count) in enumerate(run_structure(cfg)):
+        mixer, _ = sig
+        entry: Dict[str, Any] = {}
+        if mixer in ("full", "sliding"):
+            cap = _attn_cache_capacity(cfg, mixer, capacity)
+            entry["k"] = jnp.zeros((count, batch, cap, nkv, hd), dtype)
+            entry["v"] = jnp.zeros((count, batch, cap, nkv, hd), dtype)
+            entry["pos"] = jnp.full((count, batch, cap), -1, jnp.int32)
+        elif mixer == "mla":
+            m = cfg.mla
+            entry["ckv"] = jnp.zeros((count, batch, capacity, m.kv_lora_rank), dtype)
+            entry["kr"] = jnp.zeros((count, batch, capacity, m.qk_rope_head_dim), dtype)
+            entry["pos"] = jnp.full((count, batch, capacity), -1, jnp.int32)
+        elif mixer == "mlstm":
+            shapes = ssm_mod.mlstm_state_shape(cfg, batch)
+            entry.update({k: jnp.zeros((count,) + s, jnp.float32) for k, s in shapes.items()})
+            entry["m"] = jnp.full((count, batch, cfg.num_heads), -1e30, jnp.float32)
+        elif mixer == "slstm":
+            shapes = ssm_mod.slstm_state_shape(cfg, batch)
+            entry.update({k: jnp.zeros((count,) + s, jnp.float32) for k, s in shapes.items()})
+            entry["m"] = jnp.full((count, batch, cfg.num_heads, cfg.d_model // cfg.num_heads), -1e30, jnp.float32)
+            entry["n"] = jnp.ones((count, batch, cfg.num_heads, cfg.d_model // cfg.num_heads), jnp.float32)
+        if cfg.parallel_ssm_branch:
+            shapes = ssm_mod.mamba_state_shape(cfg, batch)
+            entry["mamba_ssm"] = jnp.zeros((count,) + shapes["ssm"], jnp.float32)
+            entry["mamba_conv"] = jnp.zeros((count,) + shapes["conv"], dtype)
+        cache[f"run_{r}"] = entry
+    return cache
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, capacity: int) -> PyTree:
+    return jax.eval_shape(lambda: init_cache(cfg, batch, capacity))
+
+
+# ---------------------------------------------------------------------------
+# Layer application
+# ---------------------------------------------------------------------------
+
+
+def _rope_theta_for(cfg: ModelConfig, kind: str) -> float:
+    if kind == "full" and cfg.rope_theta_global:
+        return cfg.rope_theta_global
+    return cfg.rope_theta
+
+
+def _qkv(p, x, cfg):
+    B, L, _ = x.shape
+    hd = cfg.resolved_head_dim
+    nq, nkv = cfg.num_heads, cfg.num_kv_heads
+    q = jnp.einsum("bld,dh->blh", x, p["w_q"])
+    k = jnp.einsum("bld,dh->blh", x, p["w_k"])
+    v = jnp.einsum("bld,dh->blh", x, p["w_v"])
+    if "b_q" in p:
+        q, k, v = q + p["b_q"], k + p["b_k"], v + p["b_v"]
+    return (
+        q.reshape(B, L, nq, hd),
+        k.reshape(B, L, nkv, hd),
+        v.reshape(B, L, nkv, hd),
+    )
+
+
+def _fill_attn_cache(tensors, positions, cap: int, ring: bool):
+    """Place per-position tensors into a capacity-``cap`` cache.
+
+    Full layers: identity slots, zero-padded tail (pos = -1).
+    Sliding layers (ring): position p lives at slot p % cap so that decode
+    writes evict exactly the oldest entry.
+    """
+    L = positions.shape[1]
+    entry = {}
+    if L >= cap:
+        shift = (L - cap) % cap if ring else 0
+        for name, t in tensors.items():
+            tail = t[:, L - cap:]
+            entry[name] = jnp.roll(tail, shift, axis=1) if shift else tail
+        pos_tail = positions[:, L - cap:]
+        entry["pos"] = jnp.roll(pos_tail, shift, axis=1) if shift else pos_tail
+    else:
+        for name, t in tensors.items():
+            pad = [(0, 0)] * t.ndim
+            pad[1] = (0, cap - L)
+            entry[name] = jnp.pad(t, pad)
+        entry["pos"] = jnp.pad(positions, ((0, 0), (0, cap - L)), constant_values=-1)
+    return entry
+
+
+def _attn_seq(p, x, cfg, ctx, kind, positions, fill_cache, cache_capacity=None):
+    """Full-sequence attention. Returns (out, cache_entry_or_None)."""
+    B, L, _ = x.shape
+    theta = _rope_theta_for(cfg, kind)
+    hd = cfg.resolved_head_dim
+    q, k, v = _qkv(p, x, cfg)
+    cos, sin = make_rope(positions, hd, theta)
+    q = apply_rope(q, cos[:, :, None, :], sin[:, :, None, :])
+    k = apply_rope(k, cos[:, :, None, :], sin[:, :, None, :])
+    q = ctx.constrain(q, "batch", None, "heads", None)
+    k = ctx.constrain(k, "batch", None, "kv_heads", None)
+    v = ctx.constrain(v, "batch", None, "kv_heads", None)
+    window = cfg.sliding_window if kind == "sliding" else 0
+    if window and window < L:
+        out = sliding_attention(q, k, v, positions, positions, window=window)
+    else:
+        out = flash_attention(q, k, v, positions, positions, window=window)
+    out = jnp.einsum("blh,hd->bld", out.reshape(B, L, -1), p["w_o"])
+
+    new_entry = None
+    if fill_cache:
+        cap = _attn_cache_capacity(cfg, kind, cache_capacity or L)
+        new_entry = _fill_attn_cache(
+            {"k": k, "v": v}, positions, cap, ring=(kind == "sliding")
+        )
+    return out, new_entry
+
+
+def _attn_decode(p, x, cfg, ctx, kind, cur_pos, entry):
+    """Single-token attention against cache entry (no leading run dim)."""
+    B = x.shape[0]
+    hd = cfg.resolved_head_dim
+    theta = _rope_theta_for(cfg, kind)
+    q, k, v = _qkv(p, x, cfg)
+    cos, sin = make_rope(cur_pos[:, None], hd, theta)
+    q = apply_rope(q, cos[:, :, None, :], sin[:, :, None, :])
+    k = apply_rope(k, cos[:, :, None, :], sin[:, :, None, :])
+
+    cap = entry["k"].shape[1]
+    # Full layers: slot == position (cur_pos < cap).  Sliding layers keep a
+    # ring buffer of window size, so the modulo rolls oldest entries out.
+    slot = cur_pos % cap
+    bidx = jnp.arange(B)
+    k_cache = entry["k"].at[bidx, slot].set(k[:, 0])
+    v_cache = entry["v"].at[bidx, slot].set(v[:, 0])
+    pos_cache = entry["pos"].at[bidx, slot].set(cur_pos)
+
+    window = cfg.sliding_window if kind == "sliding" else 0
+    out = decode_attention(q, k_cache, v_cache, pos_cache, cur_pos, window=window)
+    out = jnp.einsum("blh,hd->bld", out.reshape(B, 1, -1), p["w_o"])
+    return out, {"k": k_cache, "v": v_cache, "pos": pos_cache}
+
+
+def _mla_project(p, x, cfg):
+    """Common MLA projections (absorbed-weight form)."""
+    m = cfg.mla
+    nq = cfg.num_heads
+    B, L, _ = x.shape
+    q = jnp.einsum("bld,dh->blh", x, p["w_q"]).reshape(
+        B, L, nq, m.qk_nope_head_dim + m.qk_rope_head_dim
+    )
+    q_nope, q_rope = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    dkv = jnp.einsum("bld,dr->blr", x, p["w_dkv"])
+    ckv, k_rope = dkv[..., : m.kv_lora_rank], dkv[..., m.kv_lora_rank:]
+    ckv = rms_norm(ckv, p["kv_ln"], cfg.norm_eps)
+    # absorb W_uk into q: q_lat (B, L, nq, r)
+    w_uk = p["w_uk"].reshape(m.kv_lora_rank, nq, m.qk_nope_head_dim)
+    q_lat = jnp.einsum("blhd,rhd->blhr", q_nope, w_uk)
+    return q_lat, q_rope, ckv, k_rope
+
+
+def _mla_out(p, attn_lat, cfg, B, L):
+    """attn_lat: (B, L, nq, r) → output projection via absorbed W_uv."""
+    m = cfg.mla
+    nq = cfg.num_heads
+    w_uv = p["w_uv"].reshape(m.kv_lora_rank, nq, m.v_head_dim)
+    o = jnp.einsum("blhr,rhv->blhv", attn_lat, w_uv)
+    return jnp.einsum("blh,hd->bld", o.reshape(B, L, -1), p["w_o"])
+
+
+def _mla_seq(p, x, cfg, ctx, positions, fill_cache, cache_capacity=None):
+    m = cfg.mla
+    B, L, _ = x.shape
+    q_lat, q_rope, ckv, k_rope = _mla_project(p, x, cfg)
+    cos, sin = make_rope(positions, m.qk_rope_head_dim, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos[:, :, None, :], sin[:, :, None, :])
+    k_rope = apply_rope(k_rope[:, :, None, :], cos[:, :, None, :], sin[:, :, None, :])[:, :, 0]
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    # latent attention == GQA with 1 shared kv head:
+    #   k = [ckv; k_rope] (dk = r + rd), v = ckv (dv = r)
+    q_cat = jnp.concatenate([q_lat, q_rope], axis=-1)
+    k_cat = jnp.concatenate([ckv, k_rope], axis=-1)[:, :, None, :]
+    attn_lat = flash_attention(
+        q_cat, k_cat, ckv[:, :, None, :], positions, positions, scale=scale
+    )
+    out = _mla_out(p, attn_lat, cfg, B, L)
+    entry = None
+    if fill_cache:
+        entry = _fill_attn_cache(
+            {"ckv": ckv, "kr": k_rope}, positions, cache_capacity or L, ring=False
+        )
+    return out, entry
+
+
+def _mla_decode(p, x, cfg, ctx, cur_pos, entry):
+    m = cfg.mla
+    B = x.shape[0]
+    q_lat, q_rope, ckv, k_rope = _mla_project(p, x, cfg)
+    cos, sin = make_rope(cur_pos[:, None], m.qk_rope_head_dim, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos[:, :, None, :], sin[:, :, None, :])
+    k_rope = apply_rope(k_rope[:, :, None, :], cos[:, :, None, :], sin[:, :, None, :])[:, :, 0]
+
+    cap = entry["ckv"].shape[1]
+    slot = cur_pos % cap
+    bidx = jnp.arange(B)
+    ckv_cache = entry["ckv"].at[bidx, slot].set(ckv[:, 0])
+    kr_cache = entry["kr"].at[bidx, slot].set(k_rope[:, 0])
+    pos_cache = entry["pos"].at[bidx, slot].set(cur_pos)
+
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    q_cat = jnp.concatenate([q_lat, q_rope], axis=-1)
+    k_cat = jnp.concatenate([ckv_cache, kr_cache], axis=-1)[:, :, None, :]
+    attn_lat = decode_attention(
+        q_cat, k_cat, ckv_cache[:, :, None, :], pos_cache, cur_pos, scale=scale
+    )
+    out = _mla_out(p, attn_lat, cfg, B, 1)
+    return out, {"ckv": ckv_cache, "kr": kr_cache, "pos": pos_cache}
+
+
+def _apply_ffn(p, x, cfg, ctx, ffn_kind, mode="train"):
+    if ffn_kind == "none":
+        return x, jnp.float32(0.0)
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if ffn_kind == "moe":
+        # decode uses dropless dispatch (serving-quality fix, DESIGN §10)
+        out, aux = moe_ffn(p["moe"], h, cfg, ctx, dropless=(mode == "decode"))
+    else:
+        out = mlp_apply(p["mlp"], h)
+        out = ctx.constrain(out, "batch", None, None)
+        aux = jnp.float32(0.0)
+    return x + out, aux
+
+
+def apply_layer(p, x, cfg, ctx, sig, mode, positions=None, cur_pos=None,
+                cache_entry=None, cache_capacity=None):
+    """One decoder layer. Returns (x, new_cache_entry, aux_loss)."""
+    mixer, ffn = sig
+    fill = mode == "prefill"
+    new_entry: Dict[str, Any] = dict(cache_entry) if cache_entry is not None else {}
+
+    if mixer in ("mlstm", "slstm"):
+        fn_seq = ssm_mod.mlstm_seq if mixer == "mlstm" else ssm_mod.slstm_seq
+        fn_step = ssm_mod.mlstm_step if mixer == "mlstm" else ssm_mod.slstm_step
+        if mode == "decode":
+            out, st = fn_step(p, x, cfg, cache_entry)
+            new_entry = st
+        else:
+            out, st = fn_seq(p, x, cfg)
+            if fill:
+                new_entry = st
+        return x + out, (new_entry if (fill or mode == "decode") else None), jnp.float32(0.0)
+
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    aux = jnp.float32(0.0)
+
+    if mode == "decode":
+        if mixer == "mla":
+            attn_out, attn_entry = _mla_decode(p["attn"], h, cfg, ctx, cur_pos, cache_entry)
+        else:
+            attn_entry_in = {k: cache_entry[k] for k in ("k", "v", "pos")}
+            attn_out, attn_entry = _attn_decode(p["attn"], h, cfg, ctx, mixer, cur_pos, attn_entry_in)
+        new_entry.update(attn_entry)
+    else:
+        if mixer == "mla":
+            attn_out, attn_entry = _mla_seq(p["attn"], h, cfg, ctx, positions, fill, cache_capacity)
+        else:
+            attn_out, attn_entry = _attn_seq(p["attn"], h, cfg, ctx, mixer, positions, fill, cache_capacity)
+        if fill:
+            new_entry.update(attn_entry)
+
+    if cfg.parallel_ssm_branch:
+        if mode == "decode":
+            m_out, m_st = ssm_mod.mamba_step(
+                p["mamba"], h, cfg,
+                {"ssm": cache_entry["mamba_ssm"], "conv": cache_entry["mamba_conv"]},
+            )
+            new_entry["mamba_ssm"], new_entry["mamba_conv"] = m_st["ssm"], m_st["conv"]
+        else:
+            m_out, m_st = ssm_mod.mamba_seq(p["mamba"], h, cfg)
+            if fill:
+                new_entry["mamba_ssm"], new_entry["mamba_conv"] = m_st["ssm"], m_st["conv"]
+        mixed = 0.5 * (attn_out + m_out)
+    else:
+        mixed = attn_out
+
+    x = x + mixed
+    x, aux = _apply_ffn(p, x, cfg, ctx, ffn, mode)
+    ret_entry = new_entry if (fill or mode == "decode") else None
+    return x, ret_entry, aux
+
+
+# ---------------------------------------------------------------------------
+# Full model forward
+# ---------------------------------------------------------------------------
+
+
+def _embed_tokens(params, cfg, tokens):
+    x = params["embed"][tokens]
+    if cfg.tie_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return x.astype(cfg.act_jnp_dtype)
+
+
+def _lm_logits(params, cfg, x):
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("...d,vd->...v", x, params["embed"])
+    else:
+        logits = jnp.einsum("...d,dv->...v", x, params["lm_head"])
+    return softcap(logits, cfg.logit_softcap)
+
+
+def apply_model(
+    params: PyTree,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    *,
+    ctx: ShardingCtx = NULL_CTX,
+    mode: str = "train",
+    prefix_emb: Optional[jax.Array] = None,
+    cache: Optional[PyTree] = None,
+    cur_pos: Optional[jax.Array] = None,
+    cache_capacity: Optional[int] = None,
+    remat: bool = False,
+):
+    """Run the decoder.
+
+    train:    tokens (B, L)            → (logits (B, Lt, V), aux_loss)
+    prefill:  tokens (B, L)            → (last_logits (B, V), cache, aux)
+    decode:   tokens (B, 1), cache,
+              cur_pos (B,)             → (logits (B, V), cache, aux)
+
+    ``Lt`` = prefix_len + L when a frontend prefix is present.
+    """
+    B = tokens.shape[0]
+    if mode == "decode":
+        x = _embed_tokens(params, cfg, tokens)
+        positions = None
+    else:
+        x = _embed_tokens(params, cfg, tokens)
+        if cfg.frontend is not None:
+            assert prefix_emb is not None, "frontend archs need prefix embeddings"
+            pre = jnp.einsum(
+                "bpf,fd->bpd", prefix_emb.astype(cfg.act_jnp_dtype), params["frontend_proj"]
+            )
+            x = jnp.concatenate([pre, x], axis=1)
+        L = x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (B, L))
+    x = ctx.constrain(x, "batch", None, None)
+
+    aux_total = jnp.float32(0.0)
+    new_cache: Dict[str, Any] = {}
+    for r, (sig, count) in enumerate(run_structure(cfg)):
+        run_params = params[f"run_{r}"]
+        run_cache = cache[f"run_{r}"] if cache is not None else None
+
+        def body(x_carry, layer_inputs, sig=sig):
+            p, entry = layer_inputs
+            x_out, new_entry, aux = apply_layer(
+                p, x_carry, cfg, ctx, sig, mode,
+                positions=positions, cur_pos=cur_pos, cache_entry=entry,
+                cache_capacity=cache_capacity,
+            )
+            return x_out, (new_entry, aux)
+
+        if remat and mode == "train":
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable
+            )
+
+        xs = (run_params, run_cache) if run_cache is not None else (run_params, None)
+        if run_cache is not None:
+            x, (entries, auxes) = jax.lax.scan(body, x, xs)
+        else:
+            # scan with params only (cache side is None-broadcast)
+            def body_no_cache(x_carry, p, sig=sig):
+                x_out, new_entry, aux = apply_layer(
+                    p, x_carry, cfg, ctx, sig, mode, positions=positions,
+                    cur_pos=cur_pos, cache_entry=None,
+                    cache_capacity=cache_capacity,
+                )
+                return x_out, (new_entry, aux)
+
+            if remat and mode == "train":
+                body_no_cache = jax.checkpoint(
+                    body_no_cache, policy=jax.checkpoint_policies.nothing_saveable
+                )
+            x, (entries, auxes) = jax.lax.scan(body_no_cache, x, run_params)
+        if entries is not None and (mode in ("prefill", "decode")):
+            new_cache[f"run_{r}"] = entries
+        aux_total = aux_total + jnp.sum(auxes)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+    if mode == "train":
+        logits = _lm_logits(params, cfg, x)
+        return logits, aux_total
+    last = x[:, -1] if mode == "prefill" else x[:, 0]
+    logits = _lm_logits(params, cfg, last)
+    return logits, new_cache, aux_total

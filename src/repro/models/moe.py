@@ -1,0 +1,233 @@
+"""Mixture-of-Experts FFN with sort-based token dispatch.
+
+Expert parallelism (TPU adaptation, DESIGN.md §3): tokens are data-sharded
+and *replicated* across the "model" axis, experts are sharded over "model".
+Each model shard dispatches the full local-token set to its own expert
+slice, computes, and the shards' partial outputs are combined with a psum —
+one all-reduce of the token activations, the same collective a dense TP FFN
+would pay, and no all-to-all.  Implemented with ``shard_map`` so the sort /
+capacity logic stays local to each shard.
+
+Capacity-dropped tokens fall back to the shared-expert (or zero) path, as in
+standard capacity-factor MoE training.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import init_mlp_params, mlp_apply, normal_init
+
+
+def init_moe_params(key, cfg, dtype):
+    mo = cfg.moe
+    d = cfg.d_model
+    E, f = mo.num_experts, mo.expert_d_ff
+    ks = jax.random.split(key, 6)
+    s_d, s_f = d ** -0.5, f ** -0.5
+    p = {
+        "router": normal_init(ks[0], (d, E), s_d, jnp.float32),
+        "w_gate": normal_init(ks[1], (E, d, f), s_d, dtype),
+        "w_up": normal_init(ks[2], (E, d, f), s_d, dtype),
+        "w_down": normal_init(ks[3], (E, f, d), s_f, dtype),
+    }
+    if mo.num_shared_experts:
+        p["shared"] = init_mlp_params(
+            ks[4], d, mo.num_shared_experts * (mo.shared_d_ff or f), dtype
+        )
+    return p
+
+
+def _local_expert_ffn(x2d, w_gate, w_up, w_down, router_w, top_k: int,
+                      capacity: int, e_offset, num_total_experts: int):
+    """Dispatch x2d (T, d) to the local expert slice and combine.
+
+    w_*: (E_loc, ...) local expert weights; e_offset: scalar index of the
+    first local expert.  Returns (out (T, d), router_probs (T, E)).
+    """
+    T, d = x2d.shape
+    E_loc = w_gate.shape[0]
+    logits = jnp.einsum("td,de->te", x2d.astype(jnp.float32), router_w)
+    probs = jax.nn.softmax(logits, axis=-1)  # (T, E)
+    top_p, top_i = jax.lax.top_k(probs, top_k)  # (T, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = top_i.reshape(-1) - e_offset  # (T*k,) local expert ids
+    flat_w = top_p.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(T), top_k)
+    local = (flat_e >= 0) & (flat_e < E_loc)
+    flat_e = jnp.where(local, flat_e, E_loc)  # dustbin expert E_loc
+
+    order = jnp.argsort(flat_e)
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+    # position within expert group
+    counts = jnp.bincount(se, length=E_loc + 1)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)[:-1]])
+    pos = jnp.arange(se.shape[0]) - starts[se]
+    keep = (pos < capacity) & (se < E_loc)
+    se_c = jnp.where(keep, se, E_loc)
+    pos_c = jnp.where(keep, pos, capacity)
+
+    # gather tokens into (E_loc+1, capacity+1, d) expert buffers
+    buf = jnp.zeros((E_loc + 1, capacity + 1, d), x2d.dtype)
+    buf = buf.at[se_c, pos_c].set(x2d[st], mode="drop")
+    xb = buf[:E_loc, :capacity]
+
+    g = jnp.einsum("ecd,edf->ecf", xb, w_gate)
+    u = jnp.einsum("ecd,edf->ecf", xb, w_up)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(xb.dtype) * u
+    yb = jnp.einsum("ecf,efd->ecd", h, w_down)  # (E_loc, capacity, d)
+
+    # combine back, weighted by router prob
+    y_tok = yb[se_c.clip(0, E_loc - 1), pos_c.clip(0, capacity - 1)]
+    y_tok = jnp.where(keep[:, None], y_tok * sw[:, None].astype(y_tok.dtype), 0)
+    out = jnp.zeros((T, d), x2d.dtype).at[st].add(y_tok)
+    return out, probs
+
+
+def _local_expert_ffn_2d(x_loc, wg, wu, wd, rw, top_k: int, capacity: int,
+                         e_offset, num_total_experts: int, data_axis: str):
+    """2D expert-parallel dispatch (serving layout, §Perf iteration C).
+
+    Tokens are replicated over ``data`` but flow d-SHARDED: x_loc (T, d/Nd);
+    expert weights are (E_loc, d/Nd, f) / (E_loc, f, d/Nd).  The up/gate
+    matmuls produce partial sums that are psum'd over ``data`` *before* the
+    nonlinearity; the down-proj output stays d-sharded.  Wire per step is
+    O(E_loc·C·f) — activations, never weights.
+    """
+    T, d_loc = x_loc.shape
+    E_loc = wg.shape[0]
+    logits = jax.lax.psum(
+        jnp.einsum("td,de->te", x_loc.astype(jnp.float32), rw), data_axis)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, top_k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = top_i.reshape(-1) - e_offset
+    flat_w = top_p.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(T), top_k)
+    local = (flat_e >= 0) & (flat_e < E_loc)
+    flat_e = jnp.where(local, flat_e, E_loc)
+    order = jnp.argsort(flat_e)
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+    counts = jnp.bincount(se, length=E_loc + 1)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)[:-1]])
+    pos = jnp.arange(se.shape[0]) - starts[se]
+    keep = (pos < capacity) & (se < E_loc)
+    se_c = jnp.where(keep, se, E_loc)
+    pos_c = jnp.where(keep, pos, capacity)
+
+    buf = jnp.zeros((E_loc + 1, capacity + 1, d_loc), x_loc.dtype)
+    buf = buf.at[se_c, pos_c].set(x_loc[st], mode="drop")
+    xb = buf[:E_loc, :capacity]
+
+    g = jax.lax.psum(jnp.einsum("ecd,edf->ecf", xb, wg,
+                                preferred_element_type=jnp.float32), data_axis)
+    u = jax.lax.psum(jnp.einsum("ecd,edf->ecf", xb, wu,
+                                preferred_element_type=jnp.float32), data_axis)
+    h = (jax.nn.silu(g) * u).astype(xb.dtype)
+    yb = jnp.einsum("ecf,efd->ecd", h, wd)         # (E_loc, C, d_loc)
+
+    y_tok = yb[se_c.clip(0, E_loc - 1), pos_c.clip(0, capacity - 1)]
+    y_tok = jnp.where(keep[:, None], y_tok * sw[:, None].astype(y_tok.dtype), 0)
+    out = jnp.zeros((T, d_loc), x_loc.dtype).at[st].add(y_tok)
+    return out, probs
+
+
+def moe_ffn(params, x, cfg, ctx, dropless: bool = False
+            ) -> Tuple[jax.Array, jax.Array]:
+    """MoE FFN. x: (B, L, d). Returns (out, aux_loss).
+
+    ``ctx`` is a ShardingCtx; when it has a mesh with a "model" axis that
+    divides num_experts, experts are shard_map-parallel over it.  When the
+    planner replicates the batch and FSDP-shards weights over ``data``
+    (big-arch decode layout), the 2D EP path keeps expert weights fully
+    sharded and moves only activations.
+    """
+    mo = cfg.moe
+    B, L, d = x.shape
+    T = B * L
+    x2d = x.reshape(T, d)
+    E, k = mo.num_experts, mo.num_experts_per_tok
+    # dropless (serving): every expert can absorb every token — exact
+    # routing at small decode batches where capacity dropping would
+    # silently degrade quality.  Buffers are (E_loc, T, d): affordable
+    # precisely when T is small, which is when dropping hurts most.
+    capacity = T if dropless else max(
+        int(math.ceil(T * k / E * mo.capacity_factor)), 1)
+
+    ep_axis = ctx.ep_axis if (ctx.ep_size() > 1 and E % ctx.ep_size() == 0) else None
+    mesh = ctx.mesh
+    # 2D path: batch replicated + weights d-sharded over "data"
+    use_2d = (
+        ep_axis is not None
+        and "data" in mesh.shape
+        and mesh.shape["data"] > 1
+        and d % mesh.shape["data"] == 0
+        and ctx.pspec(["batch"], (T,)) == P(None)
+        and ctx.pspec(["embed_fsdp"], (d,)) == P("data")
+    )
+
+    if ep_axis is None:
+        out, probs = _local_expert_ffn(
+            x2d, params["w_gate"], params["w_up"], params["w_down"],
+            params["router"], k, capacity, 0, E,
+        )
+    elif use_2d:
+        E_loc = E // mesh.shape[ep_axis]
+
+        def _inner2d(x_loc, wg, wu, wd, rw):
+            idx = jax.lax.axis_index(ep_axis)
+            out_loc, probs_loc = _local_expert_ffn_2d(
+                x_loc, wg, wu, wd, rw, k, capacity, idx * E_loc, E, "data")
+            out_loc = jax.lax.psum(out_loc, ep_axis)
+            return out_loc, probs_loc
+
+        out, probs = jax.shard_map(
+            _inner2d,
+            mesh=mesh,
+            in_specs=(P(None, "data"), P(ep_axis, "data", None),
+                      P(ep_axis, "data", None), P(ep_axis, None, "data"),
+                      P("data", None)),
+            out_specs=(P(None, "data"), P()),
+            check_vma=False,
+        )(x2d, params["w_gate"], params["w_up"], params["w_down"],
+          params["router"])
+    else:
+        n_shards = mesh.shape[ep_axis]
+        E_loc = E // n_shards
+        tok_spec = ctx.pspec(["batch", None], (T, d))
+
+        def _inner(x_loc, wg, wu, wd, rw):
+            idx = jax.lax.axis_index(ep_axis)
+            cap_loc = x_loc.shape[0] if dropless else max(
+                int(math.ceil(x_loc.shape[0] * k / E * mo.capacity_factor)), 1)
+            out_loc, probs_loc = _local_expert_ffn(
+                x_loc, wg, wu, wd, rw, k, cap_loc, idx * E_loc, E,
+            )
+            out_loc = jax.lax.psum(out_loc, ep_axis)
+            return out_loc, probs_loc
+
+        probs_spec = ctx.pspec(["batch", None], (T, E))
+        out, probs = jax.shard_map(
+            _inner,
+            mesh=mesh,
+            in_specs=(tok_spec, P(ep_axis), P(ep_axis), P(ep_axis), P()),
+            out_specs=(tok_spec, probs_spec),
+            check_vma=False,
+        )(x2d, params["w_gate"], params["w_up"], params["w_down"], params["router"])
+
+    # load-balance aux loss (Switch-style): E * sum_e f_e * P_e
+    me = jnp.mean(probs, axis=0)                       # mean router prob per expert
+    top1 = jnp.argmax(probs, axis=-1)
+    ce = jnp.mean(jax.nn.one_hot(top1, E, dtype=jnp.float32), axis=0)
+    aux = E * jnp.sum(me * ce) * mo.router_aux_loss_coef
+
+    out = out.reshape(B, L, d)
+    if mo.num_shared_experts:
+        out = out + mlp_apply(params["shared"], x)
+    return out, aux

@@ -1,0 +1,439 @@
+"""Recurrent / state-space blocks: xLSTM (mLSTM + sLSTM) and a Mamba branch.
+
+TPU adaptation (see DESIGN.md §3): instead of CUDA selective-scan kernels we
+use (a) a *chunkwise* mLSTM — intra-chunk quadratic on MXU-friendly tiles,
+inter-chunk recurrence via ``lax.scan`` — and (b) ``lax.associative_scan``
+(log-depth) for the Mamba SSM, rematerialized per chunk to bound memory.
+
+All gate math is float32; projections run in the activation dtype.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import normal_init, rms_norm
+
+
+def causal_conv1d(x, w, b):
+    """Depthwise causal conv. x: (B, L, E); w: (K, E); b: (E,)."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    L = x.shape[1]
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for j in range(K):
+        out = out + pad[:, j : j + L].astype(jnp.float32) * w[j].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def conv1d_step(conv_buf, x_t, w, b):
+    """Single-token causal conv. conv_buf: (B, K-1, E) past inputs; x_t: (B, E).
+
+    Returns (y_t, new_buf).
+    """
+    K = w.shape[0]
+    hist = jnp.concatenate([conv_buf, x_t[:, None, :]], axis=1)  # (B, K, E)
+    y = jnp.einsum("bke,ke->be", hist.astype(jnp.float32), w.astype(jnp.float32))
+    y = (y + b.astype(jnp.float32)).astype(x_t.dtype)
+    return y, hist[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix-memory block)
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm_params(key, cfg, dtype):
+    d = cfg.d_model
+    e = cfg.ssm.expand * d
+    nh = cfg.num_heads
+    ck = cfg.ssm.conv_kernel
+    ks = jax.random.split(key, 10)
+    s_d, s_e = d ** -0.5, e ** -0.5
+    return {
+        "ln": jnp.zeros((d,), dtype),
+        "w_up": normal_init(ks[0], (d, e), s_d, dtype),
+        "w_z": normal_init(ks[1], (d, e), s_d, dtype),
+        "conv_w": normal_init(ks[2], (ck, e), ck ** -0.5, dtype),
+        "conv_b": jnp.zeros((e,), dtype),
+        "w_q": normal_init(ks[3], (e, e), s_e, dtype),
+        "w_k": normal_init(ks[4], (e, e), s_e, dtype),
+        "w_v": normal_init(ks[5], (e, e), s_e, dtype),
+        "w_i": normal_init(ks[6], (e, nh), s_e, dtype),
+        "b_i": jnp.zeros((nh,), dtype),
+        "w_f": normal_init(ks[7], (e, nh), s_e, dtype),
+        # bias >0 biases the forget gate towards remembering early in training
+        "b_f": jnp.full((nh,), 3.0, dtype),
+        "head_norm": jnp.zeros((nh, e // nh), dtype),
+        "w_down": normal_init(ks[8], (e, d), s_e, dtype),
+    }
+
+
+def mlstm_state_shape(cfg, batch):
+    e = cfg.ssm.expand * cfg.d_model
+    nh = cfg.num_heads
+    dh = e // nh
+    ck = cfg.ssm.conv_kernel
+    return {
+        "C": (batch, nh, dh, dh),
+        "n": (batch, nh, dh),
+        "m": (batch, nh),
+        "conv": (batch, ck - 1, e),
+    }
+
+
+def init_mlstm_state(cfg, batch, dtype=jnp.float32):
+    return {
+        k: jnp.zeros(shape, jnp.float32) if k != "m" else jnp.full(shape, -1e30, jnp.float32)
+        for k, shape in mlstm_state_shape(cfg, batch).items()
+    }
+
+
+def _mlstm_qkv_gates(p, x, cfg):
+    e = cfg.ssm.expand * cfg.d_model
+    nh = cfg.num_heads
+    dh = e // nh
+    x_in = rms_norm(x, p["ln"], cfg.norm_eps)
+    x_up = jnp.einsum("bld,de->ble", x_in, p["w_up"])
+    z = jnp.einsum("bld,de->ble", x_in, p["w_z"])
+    x_conv = jax.nn.silu(causal_conv1d(x_up, p["conv_w"], p["conv_b"]).astype(jnp.float32)).astype(x.dtype)
+    q = jnp.einsum("ble,ef->blf", x_conv, p["w_q"])
+    k = jnp.einsum("ble,ef->blf", x_conv, p["w_k"]) * (dh ** -0.5)
+    v = jnp.einsum("ble,ef->blf", x_up, p["w_v"])
+    B, L = x.shape[:2]
+    q = q.reshape(B, L, nh, dh)
+    k = k.reshape(B, L, nh, dh)
+    v = v.reshape(B, L, nh, dh)
+    i_g = (jnp.einsum("ble,eh->blh", x_conv, p["w_i"]) + p["b_i"]).astype(jnp.float32)
+    f_g = (jnp.einsum("ble,eh->blh", x_conv, p["w_f"]) + p["b_f"]).astype(jnp.float32)
+    return x_up, z, q, k, v, i_g, f_g
+
+
+def _mlstm_finish(p, h, z, cfg, B, L):
+    nh = cfg.num_heads
+    h = rms_norm(h, p["head_norm"], cfg.norm_eps)  # per-head norm
+    e = cfg.ssm.expand * cfg.d_model
+    h = h.reshape(B, L, e)
+    h = h * jax.nn.silu(z.astype(jnp.float32)).astype(h.dtype)
+    return jnp.einsum("ble,ed->bld", h, p["w_down"])
+
+
+def mlstm_seq(p, x, cfg, state=None, chunk: int = 256):
+    """Chunkwise-parallel mLSTM. x: (B, L, d). Returns (out, final_state)."""
+    B, L, _ = x.shape
+    nh = cfg.num_heads
+    x_up, z, q, k, v, i_g, f_g = _mlstm_qkv_gates(p, x, cfg)
+    dh = q.shape[-1]
+    cs = min(chunk, L)
+    while L % cs:
+        cs //= 2
+    nc = L // cs
+
+    # (nc, B, cs, ...) chunked views
+    def chunked(a):
+        return jnp.moveaxis(a.reshape(B, nc, cs, *a.shape[2:]), 1, 0)
+
+    qc, kc, vc = chunked(q), chunked(k), chunked(v)
+    ic, fc = chunked(i_g), chunked(f_g)
+    if state is None:
+        state = init_mlstm_state(cfg, B)
+
+    causal = jnp.tril(jnp.ones((cs, cs), jnp.bool_))
+
+    def chunk_step(carry, xs):
+        C, n, m = carry  # (B,nh,dh,dh), (B,nh,dh), (B,nh)
+        qb, kb, vb, ib, fb = xs
+        flog = jax.nn.log_sigmoid(fb)              # (B, cs, nh)
+        F = jnp.cumsum(flog, axis=1)               # inclusive cumsum
+        a = ib - F                                 # (B, cs, nh)
+        A_run = jax.lax.cummax(a, axis=1)
+        M = jnp.maximum(m[:, None, :], A_run)      # (B, cs, nh)
+        m_t = F + M
+
+        qf = qb.astype(jnp.float32)
+        kf = kb.astype(jnp.float32)
+        vf = vb.astype(jnp.float32)
+
+        # inter-chunk: queries read the carried state
+        h_inter = jnp.einsum("blhd,bhdv->blhv", qf, C) * jnp.exp(m[:, None, :] - M)[..., None]
+        n_inter = jnp.einsum("blhd,bhd->blh", qf, n) * jnp.exp(m[:, None, :] - M)
+
+        # intra-chunk: stabilized decay matrix D[t, j] = exp(F_t - F_j + i_j - m_t)
+        logD = a[:, None, :, :] - M[:, :, None, :]          # (B, t, j, nh) = a_j - M_t
+        logD = jnp.where(causal[None, :, :, None], logD, -1e30)
+        D = jnp.exp(logD)                                    # (B, cs, cs, nh)
+        scores = jnp.einsum("blhd,bjhd->bljh", qf, kf) * D
+        h_intra = jnp.einsum("bljh,bjhv->blhv", scores, vf)
+        n_intra = jnp.sum(scores, axis=2)                    # (B, cs, nh)
+
+        denom = jnp.maximum(jnp.abs(n_inter + n_intra), jnp.exp(-m_t))
+        h = (h_inter + h_intra) / denom[..., None]
+
+        # state update to end of chunk
+        total = F[:, -1]                                     # (B, nh)
+        M_end = M[:, -1]                                     # (B, nh)
+        w_state = jnp.exp(a - M_end[:, None, :])             # (B, cs, nh)
+        C_new = C * jnp.exp(m - M_end)[..., None, None] + jnp.einsum(
+            "blh,blhd,blhv->bhdv", w_state, kf, vf
+        )
+        n_new = n * jnp.exp(m - M_end)[..., None] + jnp.einsum("blh,blhd->bhd", w_state, kf)
+        m_new = total + M_end
+        return (C_new, n_new, m_new), h
+
+    (C, n, m), h_chunks = jax.lax.scan(
+        chunk_step, (state["C"], state["n"], state["m"]), (qc, kc, vc, ic, fc)
+    )
+    h = jnp.moveaxis(h_chunks, 0, 1).reshape(B, L, nh, dh).astype(x.dtype)
+    out = _mlstm_finish(p, h, z, cfg, B, L)
+    # carry the causal-conv history for decode continuation
+    K = cfg.ssm.conv_kernel
+    x_up_hist = x_up.astype(jnp.float32)
+    if L >= K - 1:
+        conv = x_up_hist[:, L - (K - 1):]
+    else:
+        conv = jnp.concatenate([state["conv"][:, L:], x_up_hist], axis=1)
+    return out, {"C": C, "n": n, "m": m, "conv": conv}
+
+
+def mlstm_step(p, x_t, cfg, state):
+    """Single-token mLSTM recurrence. x_t: (B, 1, d)."""
+    B = x_t.shape[0]
+    nh = cfg.num_heads
+    e = cfg.ssm.expand * cfg.d_model
+    dh = e // nh
+    x_in = rms_norm(x_t[:, 0], p["ln"], cfg.norm_eps)       # (B, d)
+    x_up = jnp.einsum("bd,de->be", x_in, p["w_up"])
+    z = jnp.einsum("bd,de->be", x_in, p["w_z"])
+    y_c, conv_new = conv1d_step(state["conv"], x_up, p["conv_w"], p["conv_b"])
+    x_conv = jax.nn.silu(y_c.astype(jnp.float32)).astype(x_t.dtype)
+    q = jnp.einsum("be,ef->bf", x_conv, p["w_q"]).reshape(B, nh, dh).astype(jnp.float32)
+    k = (jnp.einsum("be,ef->bf", x_conv, p["w_k"]) * (dh ** -0.5)).reshape(B, nh, dh).astype(jnp.float32)
+    v = jnp.einsum("be,ef->bf", x_up, p["w_v"]).reshape(B, nh, dh).astype(jnp.float32)
+    i_g = (jnp.einsum("be,eh->bh", x_conv, p["w_i"]) + p["b_i"]).astype(jnp.float32)
+    f_g = (jnp.einsum("be,eh->bh", x_conv, p["w_f"]) + p["b_f"]).astype(jnp.float32)
+
+    C, n, m = state["C"], state["n"], state["m"]
+    flog = jax.nn.log_sigmoid(f_g)
+    m_new = jnp.maximum(flog + m, i_g)
+    f_e = jnp.exp(flog + m - m_new)
+    i_e = jnp.exp(i_g - m_new)
+    C_new = f_e[..., None, None] * C + i_e[..., None, None] * (k[..., :, None] * v[..., None, :])
+    n_new = f_e[..., None] * n + i_e[..., None] * k
+    num = jnp.einsum("bhd,bhdv->bhv", q, C_new)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n_new)), jnp.exp(-m_new))
+    h = (num / den[..., None]).astype(x_t.dtype)[:, None]   # (B, 1, nh, dh)
+    out = _mlstm_finish(p, h, z[:, None], cfg, B, 1)
+    return out, {"C": C_new, "n": n_new, "m": m_new, "conv": conv_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (xLSTM scalar-memory block with block-diagonal recurrence)
+# ---------------------------------------------------------------------------
+
+
+def init_slstm_params(key, cfg, dtype):
+    d = cfg.d_model
+    nh = cfg.num_heads
+    dh = d // nh
+    ff = int(d * 4 / 3 / 64) * 64 or 64
+    ks = jax.random.split(key, 5)
+    return {
+        "ln": jnp.zeros((d,), dtype),
+        "w": normal_init(ks[0], (d, nh, 4, dh), d ** -0.5, dtype),
+        "r": normal_init(ks[1], (nh, dh, 4, dh), dh ** -0.5, dtype),
+        "b": jnp.zeros((nh, 4, dh), dtype),
+        "group_norm": jnp.zeros((nh, dh), dtype),
+        "ffn_up": normal_init(ks[2], (d, 2 * ff), d ** -0.5, dtype),
+        "ffn_down": normal_init(ks[3], (ff, d), ff ** -0.5, dtype),
+        "ffn_ln": jnp.zeros((d,), dtype),
+    }
+
+
+def slstm_state_shape(cfg, batch):
+    d = cfg.d_model
+    nh = cfg.num_heads
+    dh = d // nh
+    return {k: (batch, nh, dh) for k in ("h", "c", "n", "m")}
+
+
+def init_slstm_state(cfg, batch):
+    shapes = slstm_state_shape(cfg, batch)
+    st = {k: jnp.zeros(s, jnp.float32) for k, s in shapes.items()}
+    st["m"] = jnp.full(shapes["m"], -1e30, jnp.float32)
+    st["n"] = jnp.ones(shapes["n"], jnp.float32)
+    return st
+
+
+def _slstm_cell(state, wx_t, r):
+    """wx_t: (B, nh, 4, dh) input contribution at step t."""
+    h, c, n, m = state["h"], state["c"], state["n"], state["m"]
+    raw = wx_t.astype(jnp.float32) + jnp.einsum(
+        "bhd,hdge->bhge", h, r.astype(jnp.float32)
+    )
+    i_t, f_t, z_t, o_t = raw[:, :, 0], raw[:, :, 1], raw[:, :, 2], raw[:, :, 3]
+    flog = jax.nn.log_sigmoid(f_t)
+    m_new = jnp.maximum(flog + m, i_t)
+    i_e = jnp.exp(i_t - m_new)
+    f_e = jnp.exp(flog + m - m_new)
+    c_new = f_e * c + i_e * jnp.tanh(z_t)
+    n_new = f_e * n + i_e
+    h_new = jax.nn.sigmoid(o_t) * c_new / jnp.maximum(n_new, 1e-6)
+    return {"h": h_new, "c": c_new, "n": n_new, "m": m_new}
+
+
+def slstm_seq(p, x, cfg, state=None):
+    """Sequential sLSTM. x: (B, L, d). Returns (out, final_state)."""
+    B, L, d = x.shape
+    nh = cfg.num_heads
+    if state is None:
+        state = init_slstm_state(cfg, B)
+    x_in = rms_norm(x, p["ln"], cfg.norm_eps)
+    wx = jnp.einsum("bld,dhge->blhge", x_in, p["w"])  # (B, L, nh, 4, dh)
+
+    def step(st, wx_t):
+        st = _slstm_cell(st, wx_t, p["r"])
+        return st, st["h"]
+
+    state, hs = jax.lax.scan(step, state, jnp.moveaxis(wx, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1)  # (B, L, nh, dh)
+    h = rms_norm(h, p["group_norm"], cfg.norm_eps).reshape(B, L, d).astype(x.dtype)
+    # GLU feed-forward (xLSTM post-up-projection, factor 4/3)
+    y = rms_norm(h, p["ffn_ln"], cfg.norm_eps)
+    up = jnp.einsum("bld,df->blf", y, p["ffn_up"])
+    a, b = jnp.split(up, 2, axis=-1)
+    y = jax.nn.gelu(a.astype(jnp.float32)).astype(x.dtype) * b
+    return h + jnp.einsum("blf,fd->bld", y, p["ffn_down"]), state
+
+
+def slstm_step(p, x_t, cfg, state):
+    return slstm_seq(p, x_t, cfg, state=state)
+
+
+# ---------------------------------------------------------------------------
+# Mamba branch (for Hymba parallel heads)
+# ---------------------------------------------------------------------------
+
+
+def init_mamba_params(key, cfg, dtype):
+    d = cfg.d_model
+    e = cfg.ssm.expand * d
+    N = cfg.ssm.state_size
+    ck = cfg.ssm.conv_kernel
+    dt_rank = cfg.ssm.dt_rank or max(d // 16, 1)
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": normal_init(ks[0], (d, 2 * e), d ** -0.5, dtype),
+        "conv_w": normal_init(ks[1], (ck, e), ck ** -0.5, dtype),
+        "conv_b": jnp.zeros((e,), dtype),
+        "x_proj": normal_init(ks[2], (e, dt_rank + 2 * N), e ** -0.5, dtype),
+        "dt_w": normal_init(ks[3], (dt_rank, e), dt_rank ** -0.5, dtype),
+        "dt_b": jnp.full((e,), -4.6, dtype),  # softplus^-1(0.01)
+        "A_log": jnp.log(
+            jnp.broadcast_to(jnp.arange(1, N + 1, dtype=jnp.float32), (e, N))
+        ).astype(jnp.float32),
+        "D": jnp.ones((e,), jnp.float32),
+        "out_norm": jnp.zeros((e,), dtype),
+        "out_proj": normal_init(ks[4], (e, d), e ** -0.5, dtype),
+    }
+
+
+def mamba_state_shape(cfg, batch):
+    e = cfg.ssm.expand * cfg.d_model
+    N = cfg.ssm.state_size
+    ck = cfg.ssm.conv_kernel
+    return {"ssm": (batch, e, N), "conv": (batch, ck - 1, e)}
+
+
+def init_mamba_state(cfg, batch, dtype):
+    shapes = mamba_state_shape(cfg, batch)
+    return {
+        "ssm": jnp.zeros(shapes["ssm"], jnp.float32),
+        "conv": jnp.zeros(shapes["conv"], dtype),
+    }
+
+
+def _mamba_ssm_inputs(p, x, cfg):
+    N = cfg.ssm.state_size
+    dt_rank = cfg.ssm.dt_rank or max(cfg.d_model // 16, 1)
+    xz = jnp.einsum("bld,de->ble", x, p["in_proj"])
+    xs, res = jnp.split(xz, 2, axis=-1)
+    return xs, res, N, dt_rank
+
+
+def _mamba_body(p, xc, N, dt_rank):
+    """From conv'd activations to (dA, dBx, C_, D-term inputs) — shared
+    between seq and step paths.  xc: (B, L, E)."""
+    proj = jnp.einsum("ble,ef->blf", xc, p["x_proj"]).astype(jnp.float32)
+    dt_r, B_, C_ = jnp.split(proj, [dt_rank, dt_rank + N], axis=-1)
+    delta = jax.nn.softplus(
+        jnp.einsum("blr,re->ble", dt_r, p["dt_w"].astype(jnp.float32))
+        + p["dt_b"].astype(jnp.float32)
+    )  # (B, L, E)
+    A = -jnp.exp(p["A_log"])  # (E, N)
+    dA = jnp.exp(delta[..., None] * A)  # (B, L, E, N)
+    dBx = delta[..., None] * B_[:, :, None, :] * xc.astype(jnp.float32)[..., None]
+    return dA, dBx, C_
+
+
+def mamba_seq(p, x, cfg, state=None, chunk: int = 512):
+    """Selective SSM over a sequence; chunked associative scan with remat.
+
+    x: (B, L, d). Returns (out, final_state).
+    """
+    B, L, d = x.shape
+    xs, res, N, dt_rank = _mamba_ssm_inputs(p, x, cfg)
+    xc = jax.nn.silu(causal_conv1d(xs, p["conv_w"], p["conv_b"]).astype(jnp.float32)).astype(x.dtype)
+    if state is None:
+        state = init_mamba_state(cfg, B, x.dtype)
+    cs = min(chunk, L)
+    while L % cs:
+        cs //= 2
+    nc = L // cs
+    e = xs.shape[-1]
+
+    xc_chunks = jnp.moveaxis(xc.reshape(B, nc, cs, e), 1, 0)
+
+    @jax.checkpoint
+    def chunk_fn(h0, xc_b):
+        dA, dBx, C_ = _mamba_body(p, xc_b, N, dt_rank)
+
+        def combine(a, b):
+            return (a[0] * b[0], b[0] * a[1] + b[1])
+
+        # prepend carried state as step 0 contribution
+        dBx0 = dBx.at[:, 0].add(dA[:, 0] * h0)
+        hs = jax.lax.associative_scan(combine, (dA, dBx0), axis=1)[1]  # (B,cs,E,N)
+        y = jnp.einsum("blen,bln->ble", hs, C_)
+        return hs[:, -1], y
+
+    def scan_body(h, xc_b):
+        h_new, y = chunk_fn(h, xc_b)
+        return h_new, y
+
+    h_final, ys = jax.lax.scan(scan_body, state["ssm"], xc_chunks)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, L, e)
+    y = y + p["D"].astype(jnp.float32) * xc.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(res.astype(jnp.float32)).astype(x.dtype)
+    y = rms_norm(y, p["out_norm"], cfg.norm_eps)
+    out = jnp.einsum("ble,ed->bld", y, p["out_proj"])
+    # conv state = last K-1 pre-conv inputs
+    K = cfg.ssm.conv_kernel
+    new_state = {"ssm": h_final, "conv": xs[:, -(K - 1):, :] if L >= K - 1 else
+                 jnp.concatenate([state["conv"][:, L:], xs], axis=1)}
+    return out, new_state
+
+
+def mamba_step(p, x_t, cfg, state):
+    """Single-token mamba. x_t: (B, 1, d)."""
+    B, _, d = x_t.shape
+    xs, res, N, dt_rank = _mamba_ssm_inputs(p, x_t, cfg)
+    y_c, conv_new = conv1d_step(state["conv"], xs[:, 0], p["conv_w"], p["conv_b"])
+    xc = jax.nn.silu(y_c.astype(jnp.float32)).astype(x_t.dtype)[:, None, :]  # (B,1,E)
+    dA, dBx, C_ = _mamba_body(p, xc, N, dt_rank)
+    h_new = dA[:, 0] * state["ssm"] + dBx[:, 0]
+    y = jnp.einsum("ben,bn->be", h_new, C_[:, 0])[:, None, :]
+    y = y + p["D"].astype(jnp.float32) * xc.astype(jnp.float32)
+    y = y.astype(x_t.dtype) * jax.nn.silu(res.astype(jnp.float32)).astype(x_t.dtype)
+    y = rms_norm(y, p["out_norm"], cfg.norm_eps)
+    out = jnp.einsum("ble,ed->bld", y, p["out_proj"])
+    return out, {"ssm": h_new, "conv": conv_new}

@@ -1,0 +1,15 @@
+from repro.optim.adam import (
+    AdamConfig,
+    adam_update,
+    exponential_decay,
+    init_adam_state,
+    warmup_cosine,
+)
+
+__all__ = [
+    "AdamConfig",
+    "adam_update",
+    "exponential_decay",
+    "init_adam_state",
+    "warmup_cosine",
+]

@@ -1,0 +1,92 @@
+"""Adam / AdamW optimizers and LR schedules (no optax in this container).
+
+State layout mirrors the param pytree: {"mu": tree, "nu": tree, "count": i32}.
+Moments are kept in the dtype given by ``moment_dtype`` — bf16 moments halve
+optimizer HBM for the 405B/1T dry-run configs (see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamConfig:
+    lr: Callable[[jax.Array], jax.Array] | float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip_norm: float = 0.0
+    moment_dtype: str = "float32"
+
+
+def exponential_decay(init_lr: float, decay: float, every: int):
+    """Paper's IRT schedule: lr * decay**(step // every)."""
+
+    def lr(step):
+        return init_lr * decay ** (step // every)
+
+    return lr
+
+
+def warmup_cosine(init_lr: float, warmup: int, total: int, floor: float = 0.1):
+    def lr(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = s / max(warmup, 1)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return init_lr * jnp.where(s < warmup, warm, cos)
+
+    return lr
+
+
+def init_adam_state(params: PyTree, cfg: AdamConfig) -> PyTree:
+    dt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def _global_norm(tree: PyTree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def adam_update(grads: PyTree, state: PyTree, params: PyTree, cfg: AdamConfig):
+    """Returns (new_params, new_state, stats)."""
+    count = state["count"] + 1
+    lr = cfg.lr(count) if callable(cfg.lr) else cfg.lr
+    gnorm = _global_norm(grads)
+    if cfg.grad_clip_norm:
+        scale = jnp.minimum(1.0, cfg.grad_clip_norm / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+    dt = jnp.dtype(cfg.moment_dtype)
+    bc1 = 1 - cfg.b1 ** count.astype(jnp.float32)
+    bc2 = 1 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g32 = g.astype(jnp.float32)
+        mu32 = cfg.b1 * mu.astype(jnp.float32) + (1 - cfg.b1) * g32
+        nu32 = cfg.b2 * nu.astype(jnp.float32) + (1 - cfg.b2) * jnp.square(g32)
+        step = lr * (mu32 / bc1) / (jnp.sqrt(nu32 / bc2) + cfg.eps)
+        if cfg.weight_decay:
+            step = step + lr * cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - step).astype(p.dtype), mu32.astype(dt), nu32.astype(dt)
+
+    flat = jax.tree.map(upd, params, grads, state["mu"], state["nu"])
+    # unzip the 3-tuples
+    new_params = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda t: isinstance(t, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda t: isinstance(t, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], flat, is_leaf=lambda t: isinstance(t, tuple))
+    new_state = {"mu": new_mu, "nu": new_nu, "count": count}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": jnp.asarray(lr)}

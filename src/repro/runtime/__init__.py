@@ -1,0 +1,17 @@
+from repro.runtime.steps import (
+    decode_step,
+    greedy_generate,
+    input_specs,
+    loss_fn,
+    prefill_step,
+    train_step,
+)
+
+__all__ = [
+    "decode_step",
+    "greedy_generate",
+    "input_specs",
+    "loss_fn",
+    "prefill_step",
+    "train_step",
+]

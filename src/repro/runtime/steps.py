@@ -1,0 +1,147 @@
+"""Training and serving step functions (the units that get jit/pjit'd).
+
+``input_specs`` builds ShapeDtypeStruct stand-ins for every model input —
+the dry-run lowers these without allocating anything.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import abstract_cache, apply_model
+from repro.optim import AdamConfig, adam_update
+from repro.sharding.planner import NULL_CTX, ShardingCtx
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Loss / train step
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(params: PyTree, batch: Dict[str, jax.Array], cfg: ModelConfig,
+            ctx: ShardingCtx = NULL_CTX, remat: bool = True):
+    """Next-token cross-entropy (f32 logsumexp) + MoE aux loss.
+
+    batch["tokens"]: (B, L+1) int32; optional batch["prefix_emb"].
+    For frontend archs the prefix positions produce no loss.
+    """
+    tokens = batch["tokens"]
+    inputs, labels = tokens[:, :-1], tokens[:, 1:]
+    logits, aux = apply_model(
+        params, cfg, inputs, ctx=ctx, mode="train",
+        prefix_emb=batch.get("prefix_emb"), remat=remat,
+    )
+    P = cfg.frontend.num_prefix_tokens if cfg.frontend is not None else 0
+    logits = logits[:, P:]  # text-position logits only
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    ce = jnp.mean(lse - gold)
+    return ce + aux.astype(jnp.float32), {"ce": ce, "aux": aux}
+
+
+def train_step(params: PyTree, opt_state: PyTree, batch: Dict[str, jax.Array],
+               cfg: ModelConfig, adam: AdamConfig,
+               ctx: ShardingCtx = NULL_CTX, remat: bool = True):
+    (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        params, batch, cfg, ctx, remat
+    )
+    new_params, new_opt, stats = adam_update(grads, opt_state, params, adam)
+    metrics = dict(metrics, loss=loss, **stats)
+    return new_params, new_opt, metrics
+
+
+# ---------------------------------------------------------------------------
+# Serving steps
+# ---------------------------------------------------------------------------
+
+
+def prefill_step(params: PyTree, batch: Dict[str, jax.Array], cfg: ModelConfig,
+                 cache_capacity: int, ctx: ShardingCtx = NULL_CTX):
+    """Process a prompt; returns (last_logits, cache)."""
+    logits, cache, _ = apply_model(
+        params, cfg, batch["tokens"], ctx=ctx, mode="prefill",
+        prefix_emb=batch.get("prefix_emb"), cache_capacity=cache_capacity,
+    )
+    return logits, cache
+
+
+def decode_step(params: PyTree, cache: PyTree, tokens: jax.Array,
+                cur_pos: jax.Array, cfg: ModelConfig,
+                ctx: ShardingCtx = NULL_CTX):
+    """One decode step: tokens (B, 1), cur_pos (B,). Returns (logits, cache)."""
+    logits, new_cache, _ = apply_model(
+        params, cfg, tokens, ctx=ctx, mode="decode", cache=cache, cur_pos=cur_pos,
+    )
+    return logits, new_cache
+
+
+def greedy_generate(params: PyTree, cfg: ModelConfig, prompt: jax.Array,
+                    max_new: int, cache_capacity: int,
+                    prefix_emb: Optional[jax.Array] = None,
+                    ctx: ShardingCtx = NULL_CTX):
+    """Greedy decoding loop (used by serving examples). prompt: (B, Lp)."""
+    B, Lp = prompt.shape
+    P = cfg.frontend.num_prefix_tokens if cfg.frontend is not None else 0
+    batch = {"tokens": prompt}
+    if prefix_emb is not None:
+        batch["prefix_emb"] = prefix_emb
+    logits, cache = prefill_step(params, batch, cfg, cache_capacity, ctx)
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def step(carry, i):
+        cache, tok = carry
+        cur = jnp.full((B,), P + Lp, jnp.int32) + i
+        logits, cache = decode_step(params, cache, tok[:, None], cur, cfg, ctx)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return (cache, nxt), nxt
+
+    (_, _), toks = jax.lax.scan(step, (cache, tok), jnp.arange(max_new - 1))
+    return jnp.concatenate([tok[:, None], toks.T], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Abstract input specs (dry-run)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every input of the step that ``shape``
+    exercises.  No device allocation happens here.
+
+    train:   {"batch": {"tokens", ["prefix_emb"]}}
+    prefill: {"batch": {"tokens", ["prefix_emb"]}}
+    decode:  {"cache", "tokens", "cur_pos"}
+    """
+    B, L = shape.global_batch, shape.seq_len
+    f32 = jnp.float32
+    i32 = jnp.int32
+    if shape.mode == "train":
+        batch = {"tokens": jax.ShapeDtypeStruct((B, L + 1), i32)}
+        if cfg.frontend is not None:
+            fe = cfg.frontend
+            batch["prefix_emb"] = jax.ShapeDtypeStruct(
+                (B, fe.num_prefix_tokens, fe.frontend_dim), f32
+            )
+        return {"batch": batch}
+    if shape.mode == "prefill":
+        batch = {"tokens": jax.ShapeDtypeStruct((B, L), i32)}
+        if cfg.frontend is not None:
+            fe = cfg.frontend
+            batch["prefix_emb"] = jax.ShapeDtypeStruct(
+                (B, fe.num_prefix_tokens, fe.frontend_dim), f32
+            )
+        return {"batch": batch}
+    # decode: one token against a capacity-L cache
+    cache = abstract_cache(cfg, B, L)
+    return {
+        "cache": cache,
+        "tokens": jax.ShapeDtypeStruct((B, 1), i32),
+        "cur_pos": jax.ShapeDtypeStruct((B,), i32),
+    }

@@ -1,0 +1,3 @@
+from repro.sharding.planner import DEFAULT_RULES, NULL_CTX, ShardingCtx, rules_with
+
+__all__ = ["DEFAULT_RULES", "NULL_CTX", "ShardingCtx", "rules_with"]

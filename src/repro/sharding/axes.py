@@ -1,0 +1,152 @@
+"""Path-based assignment of logical sharding axes to param / cache pytrees.
+
+Centralizing the name→axes table here keeps the model definition free of
+sharding concerns; the planner (``repro.sharding.planner``) then resolves
+logical axes to mesh axes with divisibility fallbacks.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+
+PyTree = Any
+
+# name → logical axes, *without* the stacked run-layer leading dim.
+# "tp" = tensor-parallel output dim; "embed_fsdp" = ZeRO-3-style storage dim.
+_IN_PROJ = ("embed_fsdp", "tp")      # (d_in, d_out): shard d_out on model
+_OUT_PROJ = ("tp", "embed_fsdp")     # (d_in, d_out): shard d_in on model
+
+_PARAM_TABLE = {
+    # vocab-only sharding: d-over-data on the embedding forces GSPMD into
+    # "involuntary full rematerialization" on the token gather (replicate +
+    # repartition of the whole table per step, observed on the multi-pod
+    # mesh).  Vocab shards are ≤ 263MB/device for every assigned arch.
+    "embed": ("vocab", None),
+    "lm_head": (None, "vocab"),
+    "frontend_proj": (None, "embed_fsdp"),
+    # attention in/out
+    "w_q": _IN_PROJ,
+    "w_k": _IN_PROJ,
+    "w_v": _IN_PROJ,
+    "w_o": _OUT_PROJ,
+    # MLA
+    "w_dkv": ("embed_fsdp", None),
+    "w_uk": (None, "tp"),
+    "w_uv": (None, "tp"),
+    # MLP / mLSTM / mamba projections
+    "w_gate": _IN_PROJ,
+    "w_up": _IN_PROJ,
+    "w_z": _IN_PROJ,
+    "w_down": _OUT_PROJ,
+    "ffn_up": _IN_PROJ,
+    "ffn_down": _OUT_PROJ,
+    "in_proj": _IN_PROJ,
+    "out_proj": _OUT_PROJ,
+    "x_proj": ("tp", None),
+    "dt_w": (None, "tp"),
+    "w_i": ("embed_fsdp", None),
+    "w_f": ("embed_fsdp", None),
+    "router": ("embed_fsdp", None),
+    # sLSTM
+    "w": ("embed_fsdp", None, None, None),
+    "r": (None, None, None, None),
+}
+
+# MoE expert tensors are 3D — distinguished from same-named 2D leaves by ndim.
+_MOE_TABLE = {
+    "w_gate": ("experts", "embed_fsdp", None),
+    "w_up": ("experts", "embed_fsdp", None),
+    "w_down": ("experts", None, "embed_fsdp"),
+}
+
+_CACHE_TABLE = {
+    "k": ("batch", "cache_seq", "kv_heads", None),
+    "v": ("batch", "cache_seq", "kv_heads", None),
+    "pos": ("batch", "cache_seq"),
+    "ckv": ("batch", "cache_seq", None),
+    "kr": ("batch", "cache_seq", None),
+    "C": ("batch", "heads", None, None),
+    "n": ("batch", "heads", None),
+    "m": ("batch", "heads"),
+    "h": ("batch", None, None),
+    "c": ("batch", None, None),
+    "conv": ("batch", None, None),
+    "mamba_ssm": ("batch", None, None),
+    "mamba_conv": ("batch", None, None),
+}
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if hasattr(entry, "key"):
+            return str(entry.key)
+        if hasattr(entry, "name"):
+            return str(entry.name)
+    return ""
+
+
+def _pad_to(axes: Sequence[Optional[str]], ndim: int, stacked: bool):
+    axes = tuple(axes)
+    if stacked:
+        axes = (None,) + axes
+    if len(axes) < ndim:
+        axes = axes + (None,) * (ndim - len(axes))
+    return axes[:ndim]
+
+
+def param_axes(params: PyTree) -> PyTree:
+    """Logical-axes tree matching ``params``. Handles the stacked run-layer
+    leading dimension (leaves under a ``run_*`` key get a leading None)."""
+
+    def assign(path, leaf):
+        name = _leaf_name(path)
+        stacked = any(
+            hasattr(e, "key") and str(e.key).startswith("run_") for e in path
+        )
+        base_ndim = leaf.ndim - (1 if stacked else 0)
+        if name in _MOE_TABLE and base_ndim == 3:
+            axes = _MOE_TABLE[name]
+        elif name in _PARAM_TABLE and len(_PARAM_TABLE[name]) == base_ndim:
+            axes = _PARAM_TABLE[name]
+        elif name in _PARAM_TABLE and base_ndim == 2:
+            axes = _PARAM_TABLE[name][:2]
+        else:
+            axes = (None,) * base_ndim
+        return _pad_to(axes, leaf.ndim, stacked)
+
+    return jax.tree_util.tree_map_with_path(assign, params)
+
+
+def cache_axes(cache: PyTree) -> PyTree:
+    """Logical-axes tree for a serving cache (all leaves run-stacked)."""
+
+    def assign(path, leaf):
+        name = _leaf_name(path)
+        axes = _CACHE_TABLE.get(name, ("batch",) + (None,) * (leaf.ndim - 2))
+        return _pad_to(axes, leaf.ndim, stacked=True)
+
+    return jax.tree_util.tree_map_with_path(assign, cache)
+
+
+def tree_pspecs(ctx, tree: PyTree, axes_tree: PyTree):
+    """PartitionSpec tree from logical axes via the planner context.
+
+    ``flatten_up_to`` keeps the axes tuples intact at the data tree's leaf
+    positions (a plain tree_map would recurse into them).
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    axes_leaves = treedef.flatten_up_to(axes_tree)
+    specs = [ctx.pspec(a, l.shape) for l, a in zip(leaves, axes_leaves)]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def tree_shardings(ctx, tree: PyTree, axes_tree: PyTree):
+    """NamedSharding tree (or None when no mesh)."""
+    if ctx.mesh is None:
+        return None
+    import jax.sharding as jsh
+
+    specs = tree_pspecs(ctx, tree, axes_tree)
+    return jax.tree.map(lambda s: jsh.NamedSharding(ctx.mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, jsh.PartitionSpec))

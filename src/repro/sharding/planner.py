@@ -1,0 +1,123 @@
+"""Divisibility-aware sharding planner.
+
+Model code annotates activations/params with *logical* axis names; the
+planner maps them to mesh axes, dropping or downgrading assignments whose
+product does not divide the dimension (e.g. kv_heads=8 on a 16-way model
+axis, batch=1 long-context decode).  This keeps one model definition valid
+across every (arch × input-shape × mesh) combination.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Each logical axis maps to a priority list of mesh-axis tuples; the first
+# tuple whose total size divides the dimension wins.  () = replicate.
+LogicalRules = Dict[str, Sequence[Tuple[str, ...]]]
+
+# Default rules for the production meshes ("pod" is ignored on single-pod
+# meshes because the planner drops axes missing from the mesh).
+DEFAULT_RULES: LogicalRules = {
+    # data-parallel axes
+    "batch": [("pod", "data"), ("data",), ()],
+    # tensor-parallel axes
+    "tp": [("model",), ()],          # generic TP dim of a weight matrix
+    "heads": [("model",), ()],
+    "kv_heads": [("model",), ()],
+    "mlp": [("model",), ()],
+    "vocab": [("model",), ()],
+    "experts": [("model",), ()],
+    # FSDP: parameter storage sharded over the data axis
+    "embed_fsdp": [("data",), ()],
+    # sequence axis: replicated by default; long-context decode overrides
+    "seq": [()],
+    "cache_seq": [()],
+    "embed": [()],
+    "head_dim": [()],
+    "kv_lora": [()],
+    "state": [()],
+}
+
+
+def rules_with(overrides: Dict[str, Sequence[Tuple[str, ...]]]) -> LogicalRules:
+    rules = dict(DEFAULT_RULES)
+    rules.update(overrides)
+    return rules
+
+
+@dataclasses.dataclass
+class ShardingCtx:
+    """Carries the mesh + logical rules through model code.
+
+    ``mesh is None`` disables all constraints (single-device smoke tests).
+    """
+
+    mesh: Optional[Mesh] = None
+    rules: LogicalRules = dataclasses.field(default_factory=lambda: dict(DEFAULT_RULES))
+
+    def _resolve_axis(self, logical: Optional[str], dim: int) -> Optional[Tuple[str, ...]]:
+        if logical is None or self.mesh is None:
+            return None
+        options = self.rules.get(logical, [()])
+        for opt in options:
+            axes = tuple(a for a in opt if a in self.mesh.shape)
+            if not axes:
+                if opt == () or not any(a in self.mesh.shape for a in opt):
+                    if opt == ():
+                        return None
+                    continue
+            size = 1
+            for a in axes:
+                size *= self.mesh.shape[a]
+            if size > 0 and dim % size == 0 and size > 1:
+                return axes
+            if axes == ():
+                return None
+        return None
+
+    def pspec(self, logical_axes: Sequence[Optional[str]], shape: Sequence[int]) -> P:
+        assert len(logical_axes) == len(shape), (logical_axes, shape)
+        used: set = set()
+        parts = []
+        for name, dim in zip(logical_axes, shape):
+            axes = self._resolve_axis(name, dim)
+            if axes:
+                axes = tuple(a for a in axes if a not in used)
+                if axes:
+                    size = 1
+                    for a in axes:
+                        size *= self.mesh.shape[a]
+                    if dim % size == 0:
+                        used.update(axes)
+                        parts.append(axes if len(axes) > 1 else axes[0])
+                        continue
+            parts.append(None)
+        return P(*parts)
+
+    def sharding(self, logical_axes: Sequence[Optional[str]], shape: Sequence[int]):
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.pspec(logical_axes, shape))
+
+    def constrain(self, x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+        if self.mesh is None:
+            return x
+        s = self.sharding(logical_axes, x.shape)
+        return jax.lax.with_sharding_constraint(x, s)
+
+    # --- expert parallelism ---
+    @property
+    def ep_axis(self) -> Optional[str]:
+        """Mesh axis used for expert parallelism (None = no EP)."""
+        if self.mesh is None or "model" not in self.mesh.shape:
+            return None
+        return "model"
+
+    def ep_size(self) -> int:
+        return self.mesh.shape[self.ep_axis] if self.ep_axis else 1
+
+
+NULL_CTX = ShardingCtx(mesh=None)

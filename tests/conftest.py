@@ -1,0 +1,31 @@
+"""Shared fixtures. Session-scoped world/calibration amortize the cost of
+the heavier integration tests."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.irt import IRTConfig, fit_irt, posterior_means
+from repro.data import WorldConfig, build_world, calibration_pool, calibration_responses, ID_TASKS
+
+
+@pytest.fixture(scope="session")
+def small_world():
+    return build_world(WorldConfig(queries_per_task=40, n_future_models=6, seed=0))
+
+
+@pytest.fixture(scope="session")
+def calibrated(small_world):
+    world = small_world
+    qi = world.query_indices(ID_TASKS)
+    thetas = calibration_pool(world, 80)
+    R = calibration_responses(world, thetas, qi)
+    post, trace = fit_irt(jnp.asarray(R), IRTConfig(dim=20, epochs=800, seed=0))
+    pm = posterior_means(post)
+    return {
+        "world": world,
+        "qi": qi,
+        "thetas_cal": thetas,
+        "responses": R,
+        "post": pm,
+        "trace": np.asarray(trace),
+    }

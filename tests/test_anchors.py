@@ -1,0 +1,77 @@
+"""D-optimality anchor selection (paper Eq. 3–4): greedy properties."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.anchors import (
+    greedy_doptimal,
+    logdet_information,
+    random_anchors,
+    select_anchors,
+)
+
+
+@pytest.fixture(scope="module")
+def alpha():
+    rng = np.random.default_rng(0)
+    return jnp.asarray(np.abs(rng.normal(0, 1, (300, 12))) *
+                       (rng.random((300, 12)) < 0.3), dtype=jnp.float32)
+
+
+def test_no_duplicates(alpha):
+    idx = np.asarray(greedy_doptimal(alpha, 50))
+    assert len(np.unique(idx)) == 50
+
+
+def test_greedy_beats_random(alpha):
+    idx = greedy_doptimal(alpha, 40)
+    ld_g = float(logdet_information(alpha, idx))
+    for seed in range(5):
+        ld_r = float(logdet_information(
+            alpha, jnp.asarray(random_anchors(alpha.shape[0], 40, seed))))
+        assert ld_g >= ld_r - 1e-6, f"greedy {ld_g} < random {ld_r}"
+
+
+def test_monotone_gain(alpha):
+    """log det of the greedy prefix is non-decreasing (info only grows)."""
+    idx = greedy_doptimal(alpha, 30)
+    lds = [float(logdet_information(alpha, idx[:k])) for k in range(5, 31, 5)]
+    assert all(b >= a - 1e-6 for a, b in zip(lds, lds[1:]))
+
+
+def test_diminishing_returns(alpha):
+    """Greedy marginal gains are (weakly) decreasing — the submodularity
+    property that justifies the greedy approximation."""
+    idx = np.asarray(greedy_doptimal(alpha, 40))
+    A = 1e-3 * np.eye(alpha.shape[1])
+    gains = []
+    for i in idx:
+        v = np.asarray(alpha[i])
+        gains.append(np.log1p(v @ np.linalg.solve(A, v)))
+        A = A + np.outer(v, v)
+    gains = np.array(gains)
+    # allow tiny numerical wiggle
+    assert np.all(gains[1:] <= gains[:-1] + 1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 8), st.integers(10, 40), st.integers(0, 10_000))
+def test_gain_positive_and_selection_valid(d, n, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.normal(0, 1, (n, d)).astype(np.float32))
+    k = min(n, d + 2)
+    idx = np.asarray(greedy_doptimal(a, k))
+    assert idx.min() >= 0 and idx.max() < n
+    assert len(np.unique(idx)) == k
+    ld = float(logdet_information(a, jnp.asarray(idx)))
+    assert np.isfinite(ld)
+
+
+def test_all_strategies_return_n(alpha):
+    b = jnp.asarray(np.random.default_rng(1).normal(0, 1, alpha.shape),
+                    dtype=jnp.float32)
+    for strat in ("d_optimal", "random", "diff", "disc", "task_aware"):
+        idx = select_anchors(strat, alpha, b, 25, seed=0)
+        assert len(idx) == 25, strat
+        assert len(np.unique(idx)) == 25, strat

@@ -1,0 +1,207 @@
+"""Model-substrate numerics: blocked flash attention (fwd + custom VJP),
+sliding window, mLSTM chunked-vs-recurrent, mamba seq-vs-step, MoE."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import decode_attention, flash_attention, sliding_attention
+from repro.sharding.planner import NULL_CTX
+
+
+def _naive(q, k, v, q_pos, kv_pos, window=0, scale=None):
+    B, L, nq, dk = q.shape
+    S, nkv = k.shape[1], k.shape[2]
+    G = nq // nkv
+    scale = dk ** -0.5 if scale is None else scale
+    qg = jnp.moveaxis(q.reshape(B, L, nkv, G, dk), 1, 3).astype(jnp.float32)
+    kg = jnp.moveaxis(k, 1, 2).astype(jnp.float32)
+    vg = jnp.moveaxis(v, 1, 2).astype(jnp.float32)
+    s = jnp.einsum("bkgld,bksd->bkgls", qg, kg) * scale
+    ok = (kv_pos[:, None, None, None, :] >= 0) & (
+        q_pos[:, None, None, :, None] >= kv_pos[:, None, None, None, :])
+    if window:
+        ok &= q_pos[:, None, None, :, None] - kv_pos[:, None, None, None, :] < window
+    s = jnp.where(ok, s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    o = jnp.einsum("bkgls,bksd->bkgld", p, vg)
+    return jnp.moveaxis(o, 3, 1).reshape(B, L, nq, -1).astype(q.dtype)
+
+
+@pytest.mark.parametrize("B,L,nq,nkv,dk", [(2, 64, 4, 2, 32), (1, 128, 8, 1, 16)])
+def test_flash_matches_naive(B, L, nq, nkv, dk):
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (B, L, nq, dk))
+    k = jax.random.normal(ks[1], (B, L, nkv, dk))
+    v = jax.random.normal(ks[2], (B, L, nkv, dk))
+    pos = jnp.broadcast_to(jnp.arange(L), (B, L))
+    out = flash_attention(q, k, v, pos, pos, block_q=16, block_kv=32)
+    want = _naive(q, k, v, pos, pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-5)
+
+
+def test_flash_custom_vjp_matches_autodiff():
+    """The hand-written flash backward == autodiff through naive attention."""
+    ks = jax.random.split(jax.random.key(1), 3)
+    B, L, nq, nkv, dk = 1, 32, 4, 2, 16
+    q = jax.random.normal(ks[0], (B, L, nq, dk))
+    k = jax.random.normal(ks[1], (B, L, nkv, dk))
+    v = jax.random.normal(ks[2], (B, L, nkv, dk))
+    pos = jnp.broadcast_to(jnp.arange(L), (B, L))
+
+    def f_flash(q, k, v):
+        return jnp.sum(jnp.sin(flash_attention(q, k, v, pos, pos,
+                                               block_q=8, block_kv=8)))
+
+    def f_naive(q, k, v):
+        return jnp.sum(jnp.sin(_naive(q, k, v, pos, pos)))
+
+    g1 = jax.grad(f_flash, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_naive, argnums=(0, 1, 2))(q, k, v)
+    for a, b, n in zip(g1, g2, "qkv"):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-4,
+                                   err_msg=f"d{n}")
+
+
+def test_sliding_matches_naive_windowed():
+    ks = jax.random.split(jax.random.key(2), 3)
+    B, L, nq, nkv, dk, W = 2, 128, 4, 2, 16, 32
+    q = jax.random.normal(ks[0], (B, L, nq, dk))
+    k = jax.random.normal(ks[1], (B, L, nkv, dk))
+    v = jax.random.normal(ks[2], (B, L, nkv, dk))
+    pos = jnp.broadcast_to(jnp.arange(L), (B, L))
+    out = sliding_attention(q, k, v, pos, pos, window=W, block_q=16)
+    want = _naive(q, k, v, pos, pos, window=W)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-5)
+
+
+def test_decode_matches_naive_last_row():
+    ks = jax.random.split(jax.random.key(3), 3)
+    B, S, nq, nkv, dk = 2, 64, 4, 2, 16
+    q = jax.random.normal(ks[0], (B, 1, nq, dk))
+    kc = jax.random.normal(ks[1], (B, S, nkv, dk))
+    vc = jax.random.normal(ks[2], (B, S, nkv, dk))
+    kv_pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    cur = jnp.array([S - 1, S // 2])
+    out = decode_attention(q, kc, vc, kv_pos, cur)
+    want = _naive(q, kc, vc, cur[:, None], kv_pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# SSM blocks
+# ---------------------------------------------------------------------------
+
+
+def _xlstm_cfg():
+    from repro.configs import get_smoke_config
+    return get_smoke_config("xlstm-125m")
+
+
+def test_mlstm_chunked_equals_stepwise():
+    from repro.models.ssm import init_mlstm_params, init_mlstm_state, mlstm_seq, mlstm_step
+    cfg = _xlstm_cfg()
+    p = init_mlstm_params(jax.random.key(0), cfg, jnp.float32)
+    x = 0.5 * jax.random.normal(jax.random.key(1), (2, 12, cfg.d_model))
+    out_seq, st_seq = mlstm_seq(p, x, cfg, chunk=4)
+    st = init_mlstm_state(cfg, 2)
+    outs = []
+    for t in range(12):
+        o, st = mlstm_step(p, x[:, t:t + 1], cfg, st)
+        outs.append(o)
+    out_step = jnp.concatenate(outs, 1)
+    np.testing.assert_allclose(np.asarray(out_seq), np.asarray(out_step),
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st_seq["C"]), np.asarray(st["C"]),
+                               atol=2e-4)
+
+
+def test_mamba_seq_equals_stepwise():
+    from repro.configs import get_smoke_config
+    from repro.models.ssm import init_mamba_params, init_mamba_state, mamba_seq, mamba_step
+    cfg = get_smoke_config("hymba-1.5b")
+    p = init_mamba_params(jax.random.key(0), cfg, jnp.float32)
+    x = 0.5 * jax.random.normal(jax.random.key(1), (2, 10, cfg.d_model))
+    out_seq, st_seq = mamba_seq(p, x, cfg, chunk=5)
+    st = init_mamba_state(cfg, 2, jnp.float32)
+    outs = []
+    for t in range(10):
+        o, st = mamba_step(p, x[:, t:t + 1], cfg, st)
+        outs.append(o)
+    out_step = jnp.concatenate(outs, 1)
+    np.testing.assert_allclose(np.asarray(out_seq), np.asarray(out_step),
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st_seq["ssm"]), np.asarray(st["ssm"]),
+                               atol=2e-4)
+
+
+def test_slstm_scan_shapes_and_state():
+    from repro.models.ssm import init_slstm_params, slstm_seq
+    cfg = _xlstm_cfg()
+    p = init_slstm_params(jax.random.key(0), cfg, jnp.float32)
+    x = 0.5 * jax.random.normal(jax.random.key(1), (2, 8, cfg.d_model))
+    out, st = slstm_seq(p, x, cfg)
+    assert out.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(out)))
+    assert bool(jnp.all(st["n"] >= 0))
+
+
+# ---------------------------------------------------------------------------
+# MoE dispatch
+# ---------------------------------------------------------------------------
+
+
+def test_moe_single_expert_equals_dense():
+    """E=1, k=1: the MoE must reduce to its single expert's SwiGLU."""
+    import dataclasses
+    from repro.configs import get_smoke_config
+    from repro.models.moe import init_moe_params, moe_ffn
+
+    base = get_smoke_config("kimi-k2-1t-a32b")
+    mo = dataclasses.replace(base.moe, num_experts=1, num_experts_per_tok=1,
+                             num_shared_experts=0, capacity_factor=4.0)
+    cfg = dataclasses.replace(base, moe=mo)
+    p = init_moe_params(jax.random.key(0), cfg, jnp.float32)
+    x = 0.1 * jax.random.normal(jax.random.key(1), (2, 8, cfg.d_model))
+    out, aux = moe_ffn(p, x, cfg, NULL_CTX)
+    from repro.models.layers import swiglu
+    want = swiglu(x, p["w_gate"][0], p["w_up"][0], p["w_down"][0])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-5)
+
+
+def test_moe_grads_flow_to_router():
+    from repro.configs import get_smoke_config
+    from repro.models.moe import init_moe_params, moe_ffn
+    cfg = get_smoke_config("kimi-k2-1t-a32b")
+    p = init_moe_params(jax.random.key(0), cfg, jnp.float32)
+    x = 0.1 * jax.random.normal(jax.random.key(1), (2, 8, cfg.d_model))
+
+    def loss(p):
+        out, aux = moe_ffn(p, x, cfg, NULL_CTX)
+        return jnp.sum(out ** 2) + aux
+
+    g = jax.grad(loss)(p)
+    assert float(jnp.abs(g["router"]).sum()) > 0, "router must receive grads"
+    assert float(jnp.abs(g["w_gate"]).sum()) > 0
+
+
+def test_moe_dropless_decode_never_drops():
+    """Serving fix (DESIGN §10): decode dispatch is dropless — with a
+    capacity factor that WOULD drop tokens in train mode, every token's
+    expert output must be present (nonzero) in dropless mode."""
+    import dataclasses
+    from repro.configs import get_smoke_config
+    from repro.models.moe import init_moe_params, moe_ffn
+    base = get_smoke_config("kimi-k2-1t-a32b")
+    # pathological capacity: train-mode capacity = ceil(T*k/E*0.25) drops most
+    mo = dataclasses.replace(base.moe, capacity_factor=0.25,
+                             num_shared_experts=0)
+    cfg = dataclasses.replace(base, moe=mo)
+    p = init_moe_params(jax.random.key(0), cfg, jnp.float32)
+    x = 0.5 * jax.random.normal(jax.random.key(1), (4, 4, cfg.d_model))
+    out_train, _ = moe_ffn(p, x, cfg, NULL_CTX, dropless=False)
+    out_serve, _ = moe_ffn(p, x, cfg, NULL_CTX, dropless=True)
+    dropped_train = jnp.mean(jnp.all(out_train == 0, axis=-1))
+    dropped_serve = jnp.mean(jnp.all(out_serve == 0, axis=-1))
+    assert float(dropped_train) > 0.2, "capacity 0.25 should drop tokens"
+    assert float(dropped_serve) == 0.0, "dropless decode must not drop"

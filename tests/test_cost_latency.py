@@ -1,0 +1,56 @@
+"""Cost (Eq. 6–10) and latency (Eq. 11) estimation."""
+import numpy as np
+
+from repro.core.cost import calibrate_length_table
+from repro.core.latency import calibrate_latency
+from repro.data.tokenizer import HashTokenizer, model_token_count, model_tokenizer
+
+
+def test_length_table_lookup_bins():
+    rng = np.random.default_rng(0)
+    N, M = 400, 3
+    s = rng.normal(0, 1, N)
+    # model m's length = (m+1) * (100 + 50*s): monotone in s
+    lengths = np.stack([(m + 1) * (100 + 50 * s) for m in range(M)])
+    tbl = calibrate_length_table(s, lengths, [f"m{m}" for m in range(M)], n_bins=6)
+    # lookup at extreme difficulties respects ordering
+    lo = tbl.lookup(np.arange(M), np.array([-2.0]))[:, 0]
+    hi = tbl.lookup(np.arange(M), np.array([2.0]))[:, 0]
+    assert np.all(hi > lo)
+    # verbosity ordering across models preserved
+    assert lo[2] > lo[1] > lo[0]
+
+
+def test_length_table_add_model():
+    rng = np.random.default_rng(1)
+    s = rng.normal(0, 1, 200)
+    lengths = np.abs(rng.normal(100, 10, (2, 200)))
+    tbl = calibrate_length_table(s, lengths, ["a", "b"], n_bins=4)
+    row = tbl.add_model("c", s, np.abs(rng.normal(300, 10, 200)))
+    assert row == 2 and tbl.table.shape[0] == 3
+    assert tbl.lookup(np.array([2]), np.array([0.0]))[0, 0] > 200
+
+
+def test_latency_least_squares_recovery():
+    rng = np.random.default_rng(2)
+    lengths = rng.uniform(10, 500, (2, 300))
+    true_ttft = np.array([0.2, 1.5])
+    true_tpot = np.array([0.01, 0.05])
+    lat = true_ttft[:, None] + lengths * true_tpot[:, None]
+    lat += rng.normal(0, 0.01, lat.shape)
+    params = calibrate_latency(lengths, lat)
+    assert np.allclose(params.ttft, true_ttft, atol=0.05)
+    assert np.allclose(params.tpot, true_tpot, atol=0.002)
+    pred = params.predict(lengths)
+    assert np.abs(pred - lat).mean() < 0.05
+
+
+def test_tokenizer_deterministic_and_model_specific():
+    t1 = model_tokenizer("model-a", length_factor=1.0)
+    t2 = model_tokenizer("model-b", length_factor=1.3)
+    text = "Compute the value of (3 + 4) * 7, then prove the bound."
+    assert t1.encode(text) == t1.encode(text)
+    assert model_token_count(t2, text) > model_token_count(t1, text)
+    ids, mask = HashTokenizer(1000).encode_batch([text, "hi"], 16)
+    assert ids.shape == (2, 16) and mask.sum(1)[1] < mask.sum(1)[0]
+    assert ids.max() < 1000

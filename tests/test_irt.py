@@ -1,0 +1,46 @@
+"""Universal latent space calibration (paper Eq. 1, SVI)."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.irt import irt_probability, task_aware_difficulty
+
+
+def test_elbo_decreases(calibrated):
+    tr = calibrated["trace"]
+    assert tr[-1] < tr[0] * 0.9, "SVI should reduce -ELBO by >10%"
+    # later third should be better than the first third on average
+    n = len(tr) // 3
+    assert tr[-n:].mean() < tr[:n].mean()
+
+
+def test_probability_recovery(calibrated):
+    """Fitted P(correct) correlates strongly with the generative truth."""
+    world, qi = calibrated["world"], calibrated["qi"]
+    pm = calibrated["post"]
+    p_hat = np.asarray(irt_probability(pm["theta"], pm["alpha"], pm["b"]))
+    al, bb = world.alpha_star[qi], world.b_star[qi]
+    logits = calibrated["thetas_cal"] @ al.T - np.sum(al * bb, -1)[None]
+    p_true = 1 / (1 + np.exp(-logits))
+    corr = np.corrcoef(p_hat.ravel(), p_true.ravel())[0, 1]
+    assert corr > 0.7, f"probability recovery too weak: {corr:.3f}"
+
+
+def test_task_aware_difficulty_recovery(calibrated):
+    """Recovered s_q = αᵀb preserves the true difficulty ordering."""
+    world, qi = calibrated["world"], calibrated["qi"]
+    pm = calibrated["post"]
+    s_hat = np.asarray(task_aware_difficulty(pm["alpha"], pm["b"]))
+    s_true = np.array([world.queries[i].s_star for i in qi])
+    rank = lambda x: np.argsort(np.argsort(x))
+    corr = np.corrcoef(rank(s_hat), rank(s_true))[0, 1]
+    assert corr > 0.7, f"s_q rank correlation too weak: {corr:.3f}"
+
+
+def test_probability_bounds_and_monotonicity():
+    theta = jnp.array([[0.0, 0.0], [2.0, 2.0]])
+    alpha = jnp.array([[1.0, 1.0]])
+    b = jnp.array([[0.5, 0.5]])
+    p = irt_probability(theta, alpha, b)
+    assert p.shape == (2, 1)
+    assert float(p[1, 0]) > float(p[0, 0]), "higher ability ⇒ higher P"
+    assert 0.0 < float(p[0, 0]) < 1.0

@@ -1,0 +1,69 @@
+"""Optimizer + checkpoint substrate."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.optim import AdamConfig, adam_update, exponential_decay, init_adam_state, warmup_cosine
+
+
+def test_adam_minimizes_quadratic():
+    target = jnp.array([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3)}
+    adam = AdamConfig(lr=0.1)
+    opt = init_adam_state(params, adam)
+    for _ in range(200):
+        g = {"w": 2 * (params["w"] - target)}
+        params, opt, stats = adam_update(g, opt, params, adam)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=1e-2)
+    assert int(opt["count"]) == 200
+
+
+def test_grad_clip_limits_update():
+    params = {"w": jnp.zeros(4)}
+    adam = AdamConfig(lr=1.0, grad_clip_norm=1e-8)
+    opt = init_adam_state(params, adam)
+    g = {"w": jnp.full(4, 1e6)}
+    p2, _, stats = adam_update(g, opt, params, adam)
+    assert float(stats["grad_norm"]) > 1e5
+    assert float(jnp.abs(p2["w"]).max()) < 1.0
+
+
+def test_schedules():
+    lr = exponential_decay(0.1, 0.99, 100)
+    assert abs(float(lr(jnp.array(0))) - 0.1) < 1e-6
+    assert abs(float(lr(jnp.array(250))) - 0.1 * 0.99 ** 2) < 1e-6
+    wc = warmup_cosine(1e-3, 10, 100)
+    assert float(wc(jnp.array(5))) < 1e-3
+    assert float(wc(jnp.array(99))) < float(wc(jnp.array(20)))
+
+
+def test_bf16_moments_dtype():
+    params = {"w": jnp.zeros((8, 8), jnp.bfloat16)}
+    adam = AdamConfig(lr=0.1, moment_dtype="bfloat16")
+    opt = init_adam_state(params, adam)
+    assert opt["mu"]["w"].dtype == jnp.bfloat16
+    g = {"w": jnp.ones((8, 8), jnp.bfloat16)}
+    p2, o2, _ = adam_update(g, opt, params, adam)
+    assert o2["nu"]["w"].dtype == jnp.bfloat16
+    assert p2["w"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {
+        "a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+        "nested": {"b": jnp.ones((4,), jnp.bfloat16),
+                   "c": jnp.array(3, jnp.int32)},
+    }
+    path = os.path.join(tmp_path, "ckpt.npz")
+    save_checkpoint(path, tree, {"note": "test"})
+    back = load_checkpoint(path, tree)
+    assert back["nested"]["b"].dtype == jnp.bfloat16
+    for (p1, l1), (p2, l2) in zip(
+            jax.tree_util.tree_flatten_with_path(tree)[0],
+            jax.tree_util.tree_flatten_with_path(back)[0]):
+        np.testing.assert_array_equal(np.asarray(l1, np.float32),
+                                      np.asarray(l2, np.float32))

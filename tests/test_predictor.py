@@ -1,0 +1,101 @@
+"""Context-aware latent predictor (paper Eq. 12–16)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.features import K_FEATURES, extract_features, extract_features_batch
+from repro.core.predictor import (
+    PredictorConfig,
+    apply_heads,
+    cluster_dimensions,
+    encode,
+    init_encoder_params,
+    init_head_params,
+    init_predictor,
+    predictor_loss,
+)
+
+
+def test_feature_shapes_and_signal():
+    f_short = extract_features("What is 2 + 2?")
+    f_long = extract_features(
+        "Prove that the eigendecomposition of the combinatorial Laplacian "
+        "((nested (brackets))) converges, assuming the thermodynamic limit "
+        "holds, because the heterogeneous spectrum is diagonalizable, "
+        "whereas the isomorphism preserves 17 distinct invariants.")
+    assert f_short.shape == (K_FEATURES,)
+    assert f_long[0] > f_short[0]        # longer
+    assert f_long[6] > f_short[6]        # deeper nesting
+    assert f_long[9] > f_short[9]        # more rare words
+    batch = extract_features_batch(["a?", "b!"])
+    assert batch.shape == (2, K_FEATURES)
+    assert np.isfinite(batch).all()
+
+
+def test_cluster_partition_exact_cover():
+    rng = np.random.default_rng(0)
+    # two correlated groups of dims
+    z1, z2 = rng.normal(0, 1, (2, 500))
+    alpha = np.stack([z1, z1 + 0.1 * rng.normal(size=500),
+                      z2, z2 + 0.1 * rng.normal(size=500),
+                      rng.normal(0, 1, 500), rng.normal(0, 1, 500)], 1)
+    clusters = cluster_dimensions(alpha, 3)
+    all_dims = np.sort(np.concatenate(clusters))
+    assert np.array_equal(all_dims, np.arange(6)), "must partition exactly"
+    # the two strongly correlated pairs should be co-clustered
+    def cluster_of(d):
+        return next(i for i, c in enumerate(clusters) if d in c)
+    assert cluster_of(0) == cluster_of(1)
+    assert cluster_of(2) == cluster_of(3)
+
+
+def test_encoder_mask_invariance():
+    cfg = PredictorConfig(vocab_size=100, max_len=8, d_model=32, num_layers=1,
+                          num_heads=2, d_ff=64)
+    params = init_encoder_params(jax.random.key(0), cfg)
+    ids = jnp.array([[1, 5, 7, 0, 0, 0, 0, 0]])
+    mask = jnp.array([[1, 1, 1, 0, 0, 0, 0, 0]], jnp.float32)
+    e1 = encode(params, ids, mask, cfg)
+    ids2 = ids.at[0, 5].set(42)          # padding content must not matter
+    e2 = encode(params, ids2, mask, cfg)
+    assert jnp.allclose(e1, e2, atol=1e-5)
+
+
+def test_heads_shapes_and_residual_difficulty():
+    cfg = PredictorConfig(vocab_size=100, max_len=8, d_model=32, num_layers=1,
+                          num_heads=2, d_ff=64, latent_dim=10, n_clusters=3)
+    clusters = [np.array([0, 1, 2, 3]), np.array([4, 5, 6]), np.array([7, 8, 9])]
+    b_mean = np.linspace(-1, 1, 10)
+    p = init_head_params(jax.random.key(1), cfg, clusters, b_mean)
+    e_se = jnp.zeros((4, 32))
+    e_st = jnp.zeros((4, cfg.n_struct))
+    a_hat, b_hat = apply_heads(p, e_se, e_st, clusters, 10)
+    assert a_hat.shape == (4, 10) and b_hat.shape == (4, 10)
+    assert bool(jnp.all(a_hat >= 0)), "discrimination must be non-negative"
+    # with zero inputs the heads output ≈ b̄ (residual parameterization)
+    assert jnp.allclose(b_hat[0], jnp.asarray(b_mean), atol=0.5)
+
+
+def test_predictor_loss_decreases_one_batch():
+    cfg = PredictorConfig(vocab_size=200, max_len=12, d_model=32, num_layers=1,
+                          num_heads=2, d_ff=64, latent_dim=6, n_clusters=2)
+    clusters = [np.array([0, 1, 2]), np.array([3, 4, 5])]
+    rng = np.random.default_rng(0)
+    params = init_predictor(jax.random.key(0), cfg, clusters, np.zeros(6))
+    batch = {
+        "ids": jnp.asarray(rng.integers(1, 200, (16, 12))),
+        "mask": jnp.ones((16, 12), jnp.float32),
+        "feats": jnp.asarray(rng.normal(0, 1, (16, 11)).astype(np.float32)),
+        "alpha": jnp.asarray(np.abs(rng.normal(1, 0.3, (16, 6))).astype(np.float32)),
+        "b": jnp.asarray(rng.normal(0, 1, (16, 6)).astype(np.float32)),
+    }
+    from repro.optim import AdamConfig, adam_update, init_adam_state
+    adam = AdamConfig(lr=1e-3)
+    opt = init_adam_state(params, adam)
+    losses = []
+    for _ in range(30):
+        (l, _), g = jax.value_and_grad(predictor_loss, has_aux=True)(
+            params, batch, cfg, clusters)
+        params, opt, _ = adam_update(g, opt, params, adam)
+        losses.append(float(l))
+    assert losses[-1] < losses[0] * 0.8

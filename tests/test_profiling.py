@@ -1,0 +1,47 @@
+"""Zero-shot model onboarding (paper Eq. 5)."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.anchors import greedy_doptimal
+from repro.core.profiling import ProfilingConfig, predict_accuracy, profile_new_model
+
+
+def test_theta_recovery_noiseless():
+    """With expected (soft) responses, BCE fitting recovers θ accurately."""
+    rng = np.random.default_rng(0)
+    D, N = 8, 200
+    alpha = jnp.asarray(np.abs(rng.normal(1, 0.4, (N, D))), jnp.float32)
+    b = jnp.asarray(rng.normal(0, 1, (N, D)), jnp.float32)
+    theta_true = jnp.asarray(rng.normal(0, 1, D), jnp.float32)
+    p_true = predict_accuracy(theta_true, alpha, b)
+    theta_hat, diag = profile_new_model(alpha, b, p_true,
+                                        ProfilingConfig(l2=0.0, steps=800))
+    p_hat = predict_accuracy(theta_hat, alpha, b)
+    assert float(jnp.mean(jnp.abs(p_hat - p_true))) < 0.02
+
+
+def test_bce_decreases():
+    rng = np.random.default_rng(1)
+    D, N = 6, 80
+    alpha = jnp.asarray(np.abs(rng.normal(1, 0.4, (N, D))), jnp.float32)
+    b = jnp.asarray(rng.normal(0, 1, (N, D)), jnp.float32)
+    y = jnp.asarray((rng.random(N) < 0.6).astype(np.float32))
+    _, diag = profile_new_model(alpha, b, y)
+    tr = np.asarray(diag["bce_trace"])
+    assert tr[-1] <= tr[0] + 1e-6
+
+
+def test_onboarding_from_anchors(calibrated):
+    """Profiling a held-out model from D-optimal anchors predicts its
+    success probabilities on ALL prompts."""
+    world, qi = calibrated["world"], calibrated["qi"]
+    pm = calibrated["post"]
+    A, B = pm["alpha"], pm["b"]
+    idx = np.asarray(greedy_doptimal(A, 100))
+    m = world.model_index("future-model-00")
+    y = world.sample_responses([m], qi, seed=0)[0]
+    theta_hat, _ = profile_new_model(A[idx], B[idx], jnp.asarray(y[idx]))
+    p_hat = np.asarray(predict_accuracy(theta_hat, A, B))
+    p_true = world.true_prob([m], qi)[0]
+    corr = np.corrcoef(p_hat, p_true)[0, 1]
+    assert corr > 0.45, f"onboarded-model accuracy prediction weak: {corr:.3f}"

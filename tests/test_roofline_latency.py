@@ -1,0 +1,55 @@
+"""Roofline-grounded latency estimation (beyond-paper, DESIGN.md §2):
+TTFT/TPOT for the router derived from compiled dry-run artifacts."""
+import os
+
+import pytest
+
+from repro.core.latency import RooflineLatencyModel
+
+DRYRUN_DIR = os.path.join(os.path.dirname(os.path.dirname(__file__)),
+                          "experiments", "dryrun")
+
+
+@pytest.fixture(scope="module")
+def model():
+    m = RooflineLatencyModel(DRYRUN_DIR)
+    if not m.records:
+        pytest.skip("no dry-run artifacts (run repro.launch.dryrun first)")
+    return m
+
+
+def test_params_positive_and_finite(model):
+    for arch in ("gemma3-1b", "llama3-405b", "qwen2-72b"):
+        if not model.available(arch):
+            pytest.skip(f"{arch} artifacts missing")
+        ttft, tpot = model.params_for(arch, prompt_len=512)
+        assert 0 < ttft < 60, (arch, ttft)
+        assert 0 < tpot < 60, (arch, tpot)
+
+
+def test_bigger_models_are_slower(model):
+    """The estimator must preserve the serving-cost ordering the router
+    relies on: a 405B dense model decodes slower than a 1B one."""
+    if not (model.available("gemma3-1b") and model.available("llama3-405b")):
+        pytest.skip("artifacts missing")
+    _, tpot_small = model.params_for("gemma3-1b")
+    _, tpot_big = model.params_for("llama3-405b")
+    assert tpot_big > tpot_small
+
+
+def test_ttft_scales_with_prompt(model):
+    if not model.available("gemma3-1b"):
+        pytest.skip("artifacts missing")
+    t_short, _ = model.params_for("gemma3-1b", prompt_len=128)
+    t_long, _ = model.params_for("gemma3-1b", prompt_len=8192)
+    assert t_long > t_short
+
+
+def test_latency_params_batch(model):
+    archs = [a for a in ("gemma3-1b", "qwen2-72b") if model.available(a)]
+    if not archs:
+        pytest.skip("artifacts missing")
+    lp = model.latency_params(archs)
+    pred = lp.predict(__import__("numpy").full((len(archs), 3), 100.0))
+    assert pred.shape == (len(archs), 3)
+    assert (pred > 0).all()

@@ -1,0 +1,75 @@
+"""Policy-driven routing ILP (paper Eq. 17–18) — solver invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.router import (
+    POLICIES,
+    RoutingConstraints,
+    reward,
+    route,
+    route_unconstrained,
+    utility_matrix,
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 6), st.integers(1, 30), st.integers(0, 10_000))
+def test_unconstrained_is_exact(M, Q, seed):
+    """Per-query argmax solves the separable ILP exactly: no assignment has
+    higher total utility."""
+    rng = np.random.default_rng(seed)
+    util = jnp.asarray(rng.normal(0, 1, (M, Q)).astype(np.float32))
+    sel = np.asarray(route_unconstrained(util))
+    total = float(util[sel, np.arange(Q)].sum())
+    for _ in range(20):
+        other = rng.integers(0, M, Q)
+        assert float(util[other, np.arange(Q)].sum()) <= total + 1e-5
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000))
+def test_weights_change_behavior(seed):
+    """Accuracy-first picks (weakly) more accurate, cost-first cheaper."""
+    rng = np.random.default_rng(seed)
+    M, Q = 5, 40
+    p = rng.random((M, Q)).astype(np.float32)
+    cost = rng.random((M, Q)).astype(np.float32)
+    lat = rng.random((M, Q)).astype(np.float32)
+    sel_acc, _ = route(p, cost, lat, policy="max_acc")
+    sel_cost, _ = route(p, cost, lat, policy="min_cost")
+    qi = np.arange(Q)
+    assert p[np.asarray(sel_acc), qi].mean() >= p[np.asarray(sel_cost), qi].mean() - 1e-6
+    assert cost[np.asarray(sel_cost), qi].mean() <= cost[np.asarray(sel_acc), qi].mean() + 1e-6
+
+
+def test_constrained_respects_budget():
+    rng = np.random.default_rng(0)
+    M, Q = 4, 60
+    p = rng.random((M, Q)).astype(np.float32)
+    # model 0 accurate & expensive, model 3 cheap & weak
+    p[0] += 0.5
+    cost = np.stack([np.full(Q, c) for c in (10.0, 4.0, 1.0, 0.2)]).astype(np.float32)
+    lat = rng.random((M, Q)).astype(np.float32)
+    unlimited, _ = route(p, cost, lat, policy="max_acc")
+    cost_unlimited = float(cost[np.asarray(unlimited), np.arange(Q)].sum())
+    budget = cost_unlimited * 0.3
+    sel, diag = route(p, cost, lat, policy="max_acc",
+                      constraints=RoutingConstraints(max_total_cost=budget))
+    used = float(cost[np.asarray(sel), np.arange(Q)].sum())
+    assert used <= budget * 1.1, f"budget {budget} exceeded: {used}"
+
+
+def test_reward_matches_manual():
+    p = np.array([[0.9, 0.1], [0.5, 0.8]], np.float32)
+    cost = np.array([[1.0, 1.0], [0.0, 0.0]], np.float32)
+    lat = np.array([[0.0, 0.0], [1.0, 1.0]], np.float32)
+    sel = jnp.array([0, 1])
+    w = (1.0, 0.0, 0.0)
+    r = float(reward(sel, p, cost, lat, w))
+    assert abs(r - (0.9 + 0.8) / 2) < 1e-6
+
+
+def test_policies_registry():
+    for name, w in POLICIES.items():
+        assert abs(sum(w) - 1.0) < 1e-9, name

@@ -1,0 +1,136 @@
+"""Sharding planner: divisibility fallbacks + logical-axes assignment."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs import get_config, get_smoke_config
+from repro.models import abstract_params
+from repro.models.model import abstract_cache
+from repro.sharding.axes import cache_axes, param_axes, tree_pspecs
+from repro.sharding.planner import ShardingCtx, rules_with
+
+
+def _mesh(shape=(16, 16), axes=("data", "model")):
+    return AbstractMesh(shape, axes)
+
+
+def test_divisible_dims_shard():
+    ctx = ShardingCtx(mesh=_mesh())
+    spec = ctx.pspec(["batch", "heads"], (256, 128))
+    assert spec == P("data", "model")
+
+
+def test_indivisible_dims_fall_back():
+    ctx = ShardingCtx(mesh=_mesh())
+    # 8 kv heads cannot shard over 16-way model axis → replicated
+    spec = ctx.pspec(["batch", "kv_heads"], (256, 8))
+    assert spec == P("data", None)
+    # batch=1 (long-context decode) cannot shard anywhere
+    spec = ctx.pspec(["batch", None], (1, 524_288))
+    assert spec == P(None, None)
+
+
+def test_multi_pod_batch_axes():
+    ctx = ShardingCtx(mesh=_mesh((2, 16, 16), ("pod", "data", "model")))
+    spec = ctx.pspec(["batch", None], (256, 4096))
+    assert spec == P(("pod", "data"), None)
+
+
+def test_no_axis_reuse_within_spec():
+    ctx = ShardingCtx(mesh=_mesh())
+    # both dims want "model"; only one may take it
+    spec = ctx.pspec(["heads", "vocab"], (128, 128_256))
+    used = [s for s in spec if s is not None]
+    assert len(used) == len(set(used))
+
+
+def test_long_context_cache_rule_override():
+    rules = rules_with(
+        {"cache_seq": [("data", "model"), ("model",), ("data",), ()]})
+    ctx = ShardingCtx(mesh=_mesh(), rules=rules)
+    spec = ctx.pspec(["batch", "cache_seq"], (1, 524_288))
+    assert spec == P(None, ("data", "model"))
+
+
+def test_param_axes_cover_all_leaves():
+    for arch in ("llama3-405b", "kimi-k2-1t-a32b", "hymba-1.5b", "xlstm-125m"):
+        cfg = get_smoke_config(arch)
+        params = abstract_params(cfg)
+        axes = param_axes(params)
+        leaves, treedef = jax.tree_util.tree_flatten(params)
+        axes_leaves = treedef.flatten_up_to(axes)
+        assert len(leaves) == len(axes_leaves)
+        for leaf, ax in zip(leaves, axes_leaves):
+            assert len(ax) == leaf.ndim, (leaf.shape, ax)
+
+
+def test_param_pspecs_shard_big_dims_405b():
+    """The full llama3-405b param tree must actually shard its big matrices
+    over BOTH axes (FSDP × TP) — otherwise nothing fits."""
+    cfg = get_config("llama3-405b")
+    params = abstract_params(cfg)
+    ctx = ShardingCtx(mesh=_mesh())
+    specs = tree_pspecs(ctx, params, param_axes(params))
+    flat = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: isinstance(x, P))[0]
+    by_name = {jax.tree_util.keystr(p): s for p, s in flat}
+    # embedding: vocab-only sharding (d-over-data breaks the GSPMD gather —
+    # see axes.py note)
+    emb = [s for n, s in by_name.items() if "embed" in n and "run" not in n][0]
+    assert emb == P("model", None)
+    wq = [s for n, s in by_name.items() if "w_q" in n][0]
+    assert set(a for a in wq if a) == {"data", "model"} or wq[1:] == ("data", "model")
+
+
+def test_cache_axes_and_specs():
+    cfg = get_smoke_config("gemma3-1b")
+    cache = abstract_cache(cfg, batch=32, capacity=256)
+    axes = cache_axes(cache)
+    ctx = ShardingCtx(mesh=_mesh((4, 2), ("data", "model")))
+    specs = tree_pspecs(ctx, cache, axes)
+    flat = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: isinstance(x, P))[0]
+    for path, spec in flat:
+        name = jax.tree_util.keystr(path)
+        if name.endswith("['k']") or name.endswith("['v']"):
+            assert spec[1] == "data", f"{name}: batch dim must shard on data"
+
+
+# ---------------------------------------------------------------------------
+# Property tests (hypothesis): the planner must emit valid specs for ANY
+# shape on ANY mesh — every assigned mesh axis divides its dim, no axis
+# is used twice, and unknown logical names fall back to replication.
+# ---------------------------------------------------------------------------
+from hypothesis import given, settings, strategies as st
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    st.lists(st.integers(1, 2048), min_size=1, max_size=4),
+    st.lists(st.sampled_from(
+        ["batch", "heads", "kv_heads", "mlp", "vocab", "experts",
+         "embed_fsdp", "tp", "cache_seq", "seq", None, "no_such_axis"]),
+        min_size=1, max_size=4),
+    st.sampled_from([(16, 16), (2, 16, 16), (4, 2), (1, 8)]),
+)
+def test_planner_specs_always_valid(shape, logical, mesh_shape):
+    n = min(len(shape), len(logical))
+    shape, logical = tuple(shape[:n]), tuple(logical[:n])
+    axes_names = ("pod", "data", "model")[-len(mesh_shape):] \
+        if len(mesh_shape) == 3 else ("data", "model")[:len(mesh_shape)]
+    mesh = AbstractMesh(mesh_shape, axes_names)
+    ctx = ShardingCtx(mesh=mesh)
+    spec = ctx.pspec(logical, shape)
+    used = []
+    for dim, part in zip(shape, spec):
+        if part is None:
+            continue
+        parts = part if isinstance(part, tuple) else (part,)
+        size = 1
+        for a in parts:
+            assert a in mesh.shape, f"unknown mesh axis {a}"
+            used.append(a)
+            size *= mesh.shape[a]
+        assert dim % size == 0, f"dim {dim} not divisible by {size} ({part})"
+    assert len(used) == len(set(used)), f"axis reused: {spec}"
