@@ -26,6 +26,7 @@ def main(argv=None) -> None:
         fig3d_difficulty_validation,
         kernel_bench,
         roofline,
+        serving_throughput,
         table1_routing,
         table2_onboarding,
     )
@@ -39,6 +40,7 @@ def main(argv=None) -> None:
         "kernels": kernel_bench,
         "roofline": roofline,
         "constrained": constrained_routing,
+        "serving": serving_throughput,
     }
     wanted = args.only.split(",") if args.only else list(modules)
 

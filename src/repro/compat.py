@@ -1,0 +1,43 @@
+"""Version compatibility shims for the pinned jax (0.4.37).
+
+``jax.shard_map`` only exists as a top-level symbol (with the ``check_vma``
+keyword) from jax 0.6; the pinned 0.4.x series ships it as
+``jax.experimental.shard_map.shard_map`` with the older ``check_rep``
+spelling.  ``shard_map`` below resolves whichever is available and
+translates the keyword, so call sites can use the modern API unchanged.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+try:  # jax >= 0.6: top-level, takes check_vma
+    _shard_map = jax.shard_map
+    _NATIVE = True
+except AttributeError:  # jax 0.4.x: experimental, takes check_rep
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _NATIVE = False
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True,
+              **kwargs: Any):
+    """``jax.shard_map`` facade working on both old and new jax."""
+    if _NATIVE:
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=check_vma, **kwargs)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma, **kwargs)
+
+
+def abstract_mesh(axis_sizes, axis_names):
+    """``jax.sharding.AbstractMesh`` facade.
+
+    jax 0.4.x constructs from a tuple of ``(name, size)`` pairs; jax >= 0.5
+    takes ``(axis_sizes, axis_names)`` positionally.
+    """
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(tuple(axis_sizes), tuple(axis_names))
+    except TypeError:
+        return AbstractMesh(tuple(zip(axis_names, axis_sizes)))

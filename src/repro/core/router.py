@@ -151,11 +151,19 @@ def route(
     normalize_costs: bool = True,
 ):
     """Main entry point. Returns (selection (Q,), diagnostics)."""
+    from repro.kernels import ops  # deferred: kernels import is heavier
+
     w = weights if weights is not None else POLICIES[policy]
+    if constraints is None:
+        # fused single-pass utility+argmax (Pallas on TPU, fused-jnp ref
+        # elsewhere — the ref reproduces utility_matrix → argmax exactly)
+        sel, util = ops.routing_argmax(
+            jnp.asarray(p), jnp.asarray(cost), jnp.asarray(lat),
+            jnp.asarray(w, jnp.float32), normalize_costs=normalize_costs,
+            use_pallas=ops._on_tpu())
+        return sel, {"util": util}
     util = utility_matrix(jnp.asarray(p), jnp.asarray(cost), jnp.asarray(lat),
                           w, normalize_costs)
-    if constraints is None:
-        return route_unconstrained(util), {"util": util}
     sel, diag = route_constrained(util, jnp.asarray(p), jnp.asarray(cost),
                                   jnp.asarray(lat), constraints)
     diag["util"] = util

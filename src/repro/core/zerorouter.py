@@ -73,6 +73,9 @@ class ZeroRouter:
         self.length_table: Optional[OutputLengthTable] = None
         self.predictor: Optional[Predictor] = None
         self.pool: List[CandidateModel] = []
+        # bumped on every pool mutation; serving layers key their
+        # pool-tensor snapshots on it (repro.serving.engine)
+        self.pool_version = 0
 
     # ------------------------------------------------------------------
     # 1. latent-space calibration + anchor selection
@@ -167,10 +170,12 @@ class ZeroRouter:
             price_out=price_out, tokenizer=tokenizer, table_row=row,
             ttft=float(lat.ttft[0]), tpot=float(lat.tpot[0]))
         self.pool.append(cand)
+        self.pool_version += 1
         return cand
 
     def remove_model(self, name: str) -> None:
         self.pool = [m for m in self.pool if m.name != name]
+        self.pool_version += 1
 
     # ------------------------------------------------------------------
     # 4. routing

@@ -61,6 +61,20 @@ class HashTokenizer:
         return len(self.encode(text))
 
 
+def piece_count(text: str, subword_len: int = 12) -> int:
+    """Untruncated token count of ``text`` for ANY salt.
+
+    Piece splitting depends only on the text and ``subword_len`` — never on
+    the hash salt — so a pool of per-model tokenizers shares one count per
+    (text, subword_len).  Equals ``HashTokenizer.count`` without hashing;
+    the serving layer uses it to build ℓ_in in one pass per query.
+    """
+    n = 0
+    for tok in _TOKEN_RE.findall(text.lower()):
+        n += (len(tok) - 1) // subword_len + 1
+    return n
+
+
 def model_tokenizer(model_name: str, vocab_size: int = 32_000,
                     length_factor: float = 1.0) -> HashTokenizer:
     """Per-model tokenizer: same text ⇒ slightly different token counts."""

@@ -4,6 +4,7 @@ flash_attention  — prefill/train attention (online softmax, GQA index maps)
 decode_attention — flash-decode over KV caches
 doptimal         — D-optimality greedy candidate scoring (paper Eq. 4)
 irt2pl           — fused 2PL probability + BCE + Fisher weight (Eq. 1–2)
+routing          — fused routing utility + per-query argmax (Eq. 17)
 """
 from repro.kernels import ops, ref
 

@@ -18,6 +18,7 @@ from repro.kernels.decode_attention import decode_attention_tpu
 from repro.kernels.doptimal import doptimal_score_tpu
 from repro.kernels.flash_attention import flash_attention_tpu
 from repro.kernels.irt2pl import irt_2pl_tpu
+from repro.kernels.routing import routing_argmax_tpu
 
 
 def _on_tpu() -> bool:
@@ -48,6 +49,23 @@ def doptimal_score(alpha, a_inv, *, use_pallas: bool = True):
     if not use_pallas:
         return ref.doptimal_score_ref(alpha, a_inv)
     return doptimal_score_tpu(alpha, a_inv, interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("normalize_costs", "use_pallas"))
+def routing_argmax(p, cost, lat, weights, valid=None,
+                   normalize_costs: bool = True, *, use_pallas: bool = True):
+    """Fused routing utility + per-query argmax → (sel (Q,), util (M, Q)).
+
+    ``weights`` is the (3,) [w_p, w_c, w_t] policy vector; ``valid`` masks
+    padded queries out of the min-max normalization (see routing.py).
+    """
+    if not use_pallas:
+        return ref.routing_argmax_ref(p, cost, lat, weights, valid=valid,
+                                      normalize_costs=normalize_costs)
+    return routing_argmax_tpu(p, cost, lat, weights, valid=valid,
+                              normalize_costs=normalize_costs,
+                              interpret=not _on_tpu())
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas",))

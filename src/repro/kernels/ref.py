@@ -46,6 +46,37 @@ def doptimal_score_ref(alpha, a_inv):
     return jnp.einsum("id,de,ie->i", af, a_inv.astype(jnp.float32), af)
 
 
+def routing_argmax_ref(p, cost, lat, weights, valid=None,
+                       normalize_costs: bool = True):
+    """Fused routing utility + per-query argmax (paper Eq. 17).
+
+    p/cost/lat: (M, Q) f32; weights: (3,) [w_p, w_c, w_t]; valid: optional
+    (Q,) bool — padded queries are excluded from the cost/latency min-max
+    normalization so padding never shifts real utilities.  Returns
+    (sel (Q,) int32, util (M, Q) f32).
+
+    The unmasked path reproduces ``core.router``'s
+    ``utility_matrix`` → ``argmax`` two-pass elementwise-exactly.
+    """
+    p = p.astype(jnp.float32)
+    cost = cost.astype(jnp.float32)
+    lat = lat.astype(jnp.float32)
+    w = jnp.asarray(weights, jnp.float32)
+
+    def _norm(x):
+        if not normalize_costs:
+            return x
+        if valid is None:
+            lo, hi = jnp.min(x), jnp.max(x)
+        else:
+            lo = jnp.min(jnp.where(valid[None, :], x, jnp.inf))
+            hi = jnp.max(jnp.where(valid[None, :], x, -jnp.inf))
+        return (x - lo) / jnp.maximum(hi - lo, 1e-9)
+
+    util = w[0] * p - w[1] * _norm(cost) - w[2] * _norm(lat)
+    return jnp.argmax(util, axis=0).astype(jnp.int32), util
+
+
 def irt_2pl_ref(theta, alpha, b, y):
     """Fused 2PL forward: returns (p, bce, fisher), each (U, I), f32.
 

@@ -1,0 +1,114 @@
+"""Pallas TPU kernel for the routing hot path: fused utility + argmax.
+
+The seed router materializes the (M, Q) utility matrix (Eq. 17) in one pass
+and argmaxes it in a second.  At serving batch sizes the matrix is tiny per
+query but the two-pass structure costs an extra HBM round trip per routing
+decision.  This kernel fuses both: each grid step streams a (Mp, block_q)
+tile of the three score matrices through VMEM, forms the utility in
+registers, and emits the per-query winning model index — the utility tile
+is written out once, purely for diagnostics.
+
+Cost/latency min-max normalization is folded into 6 scalars computed by the
+caller (SMEM-resident), so the kernel body is a fused multiply-add plus a
+masked row-max/row-argmin — no reductions over the full matrix inside the
+kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # pltpu is importable on CPU for interpret mode, but guard anyway
+    from jax.experimental.pallas import tpu as pltpu
+    _SMEM = pltpu.SMEM
+except ImportError:  # pragma: no cover
+    _SMEM = None
+
+_LANE = 128
+_SUBLANE = 8
+
+
+def _routing_kernel(scal_ref, p_ref, c_ref, t_ref, util_ref, sel_ref, *,
+                    n_models: int):
+    """One (Mp, bq) tile: util = wp·p − ac·(c − lo_c) − at·(t − lo_t)."""
+    wp = scal_ref[0]
+    ac, lo_c = scal_ref[1], scal_ref[2]
+    at, lo_t = scal_ref[3], scal_ref[4]
+    p = p_ref[...].astype(jnp.float32)
+    c = c_ref[...].astype(jnp.float32)
+    t = t_ref[...].astype(jnp.float32)
+    util = wp * p - ac * (c - lo_c) - at * (t - lo_t)
+    rowid = jax.lax.broadcasted_iota(jnp.int32, util.shape, 0)
+    util = jnp.where(rowid < n_models, util, -3e38)
+    util_ref[...] = util
+    best = jnp.max(util, axis=0, keepdims=True)            # (1, bq)
+    # first row achieving the max — matches jnp.argmax tie-breaking
+    hit = util == best
+    sel_ref[...] = jnp.min(jnp.where(hit, rowid, n_models), axis=0,
+                           keepdims=True).astype(jnp.int32)
+
+
+def routing_argmax_tpu(
+    p: jax.Array,          # (M, Q)
+    cost: jax.Array,       # (M, Q)
+    lat: jax.Array,        # (M, Q)
+    weights,               # (3,) [w_p, w_c, w_t]
+    valid=None,            # optional (Q,) bool — mask for normalization
+    normalize_costs: bool = True,
+    *,
+    block_q: int = 512,
+    interpret: bool = False,
+):
+    """Returns (sel (Q,) int32, util (M, Q) f32)."""
+    M, Q = p.shape
+    w = jnp.asarray(weights, jnp.float32)
+
+    def _scales(x):
+        """(gain, offset) folding min-max normalization into the FMA."""
+        if not normalize_costs:
+            return jnp.float32(1.0), jnp.float32(0.0)
+        xf = x.astype(jnp.float32)
+        if valid is None:
+            lo, hi = jnp.min(xf), jnp.max(xf)
+        else:
+            lo = jnp.min(jnp.where(valid[None, :], xf, jnp.inf))
+            hi = jnp.max(jnp.where(valid[None, :], xf, -jnp.inf))
+        return 1.0 / jnp.maximum(hi - lo, 1e-9), lo
+
+    inv_rc, lo_c = _scales(cost)
+    inv_rt, lo_t = _scales(lat)
+    scal = jnp.stack([w[0], w[1] * inv_rc, lo_c, w[2] * inv_rt, lo_t,
+                      jnp.float32(0.0), jnp.float32(0.0), jnp.float32(0.0)])
+
+    Mp = max(((M + _SUBLANE - 1) // _SUBLANE) * _SUBLANE, _SUBLANE)
+    bq = min(block_q, max(((Q + _LANE - 1) // _LANE) * _LANE, _LANE))
+    Qp = ((Q + bq - 1) // bq) * bq
+
+    def _pad(x):
+        return jnp.zeros((Mp, Qp), jnp.float32).at[:M, :Q].set(
+            x.astype(jnp.float32))
+
+    scal_spec = (pl.BlockSpec(memory_space=_SMEM) if _SMEM is not None
+                 else pl.BlockSpec((8,), lambda i: (0,)))
+    util_p, sel_p = pl.pallas_call(
+        lambda s, a, b, c, u, o: _routing_kernel(s, a, b, c, u, o,
+                                                 n_models=M),
+        grid=(Qp // bq,),
+        in_specs=[
+            scal_spec,
+            pl.BlockSpec((Mp, bq), lambda i: (0, i)),
+            pl.BlockSpec((Mp, bq), lambda i: (0, i)),
+            pl.BlockSpec((Mp, bq), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((Mp, bq), lambda i: (0, i)),
+            pl.BlockSpec((1, bq), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Mp, Qp), jnp.float32),
+            jax.ShapeDtypeStruct((1, Qp), jnp.int32),
+        ],
+        interpret=interpret,
+    )(scal, _pad(p), _pad(cost), _pad(lat))
+    return sel_p[0, :Q], util_p[:M, :Q]

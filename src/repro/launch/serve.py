@@ -1,33 +1,37 @@
-"""Serving launcher: batched prefill + greedy decode on host devices.
+"""Serving launcher: model generation and streaming query routing.
 
-Example (CPU):
+Two modes:
+
+``--mode generate`` (default) — batched prefill + greedy decode on host
+devices, unchanged from the seed::
+
     PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --smoke \
         --batch 4 --prompt-len 32 --max-new 16
+
+``--mode route`` — bring up a smoke ZeroRouter, wrap it in the batched
+:class:`~repro.serving.RouterEngine`, and stream queries through the
+:class:`~repro.serving.MicroBatcher` (enqueue → coalesce → route →
+respond).  Queries come from stdin (one per line) with ``--stdin``, else a
+synthetic stream sampled from the world's OOD tasks::
+
+    PYTHONPATH=src python -m repro.launch.serve --mode route -n 512
 """
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 import jax
-import jax.numpy as jnp
-
-from repro.configs import get_config, get_smoke_config
-from repro.launch.mesh import make_host_mesh
-from repro.models import init_params
-from repro.runtime import greedy_generate
-from repro.sharding.planner import ShardingCtx
+import numpy as np
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
+def _generate_main(args) -> None:
+    from repro.configs import get_config, get_smoke_config
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import init_params
+    from repro.runtime import greedy_generate
+    from repro.sharding.planner import ShardingCtx
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     mesh = make_host_mesh()
@@ -53,6 +57,105 @@ def main(argv=None):
     print(f"arch={cfg.arch_id} generated {out.shape} in {dt:.2f}s "
           f"({args.batch * args.max_new / dt:.1f} tok/s)")
     print("sample:", out[0, :12].tolist())
+
+
+def build_demo_engine(seed: int = 0, cache_size: int = 4096):
+    """Small-world router + engine used by route mode and the example."""
+    from repro.core import (IRTConfig, PredictorConfig, ZeroRouter,
+                            ZeroRouterConfig)
+    from repro.data import (ID_TASKS, WorldConfig, build_world,
+                            calibration_pool, calibration_responses)
+    from repro.data.tokenizer import HashTokenizer
+    from repro.serving import RouterEngine, RouterEngineConfig
+
+    world = build_world(WorldConfig(queries_per_task=40, n_future_models=4,
+                                    seed=seed))
+    qi_id = world.query_indices(ID_TASKS)
+    R = calibration_responses(world, calibration_pool(world, 80), qi_id)
+    zr = ZeroRouter(ZeroRouterConfig(
+        irt=IRTConfig(dim=20, epochs=400),
+        predictor=PredictorConfig(d_model=96, num_layers=2, d_ff=192,
+                                  max_len=48),
+        n_anchors=80, predictor_epochs=3))
+    cal = zr.calibrate(R)
+    zr.fit_predictor([world.queries[i].text for i in qi_id],
+                     HashTokenizer(32_000))
+    anchors = qi_id[cal["anchors"]]
+    for name in ("gemma3-1b", "phi3-mini-3.8b", "qwen2-72b", "llama3-405b"):
+        m = world.model_index(name)
+        y = world.sample_responses([m], anchors, seed=m)[0]
+        lens = world.output_lengths([m], anchors)[0]
+        lats = world.true_latency([m], anchors, lens[None])[0]
+        mi = world.models[m]
+        zr.onboard_model(name, y, lens, lats, mi.price_in, mi.price_out,
+                         mi.tokenizer)
+    engine = RouterEngine(zr, RouterEngineConfig(cache_size=cache_size))
+    return world, zr, engine
+
+
+def _route_main(args) -> None:
+    from repro.data import OOD_TASKS
+    from repro.serving import MicroBatcher
+
+    print("=== bringing up router + engine (smoke world) ===")
+    world, zr, engine = build_demo_engine(seed=args.seed)
+
+    if args.stdin:
+        source = (line.strip() for line in sys.stdin if line.strip())
+    else:
+        qi = world.query_indices(OOD_TASKS)
+        rng = np.random.default_rng(args.seed)
+        source = (world.queries[qi[rng.integers(len(qi))]].text
+                  for _ in range(args.n_queries))
+
+    print("=== streaming queries through the micro-batcher ===")
+    t0 = time.time()
+    with MicroBatcher(engine, max_batch=args.max_batch,
+                      max_wait_s=args.max_wait_ms / 1e3) as mb:
+        pending = [mb.submit(text, policy=args.policy) for text in source]
+        results = [f.result(timeout=60) for f in pending]
+    dt = time.time() - t0
+
+    from collections import Counter
+    mix = Counter(r.model for r in results)
+    print(f"routed {len(results)} queries in {dt:.2f}s "
+          f"({len(results) / dt:.0f} q/s) over {mb.batches_routed} batches")
+    print("decision mix:", dict(mix))
+    if engine.cache_stats is not None:
+        st = engine.cache_stats
+        print(f"latent cache: {st.hits} hits / {st.misses} misses "
+              f"(hit rate {st.hit_rate:.0%})")
+    if args.stdin:
+        for r in results:
+            print(f"  {r.model:18s} <- {r.text[:60]}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=("generate", "route"),
+                    default="generate")
+    ap.add_argument("--arch")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    # route mode
+    ap.add_argument("--stdin", action="store_true",
+                    help="route: read queries from stdin instead of the "
+                         "synthetic OOD stream")
+    ap.add_argument("-n", "--n-queries", type=int, default=256)
+    ap.add_argument("--policy", default="balanced")
+    ap.add_argument("--max-batch", type=int, default=64)
+    ap.add_argument("--max-wait-ms", type=float, default=2.0)
+    args = ap.parse_args(argv)
+
+    if args.mode == "route":
+        _route_main(args)
+    else:
+        if not args.arch:
+            ap.error("--arch is required for --mode generate")
+        _generate_main(args)
 
 
 if __name__ == "__main__":

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.models.layers import init_mlp_params, mlp_apply, normal_init
 
 
@@ -187,7 +188,7 @@ def moe_ffn(params, x, cfg, ctx, dropless: bool = False
             out_loc = jax.lax.psum(out_loc, ep_axis)
             return out_loc, probs_loc
 
-        out, probs = jax.shard_map(
+        out, probs = shard_map(
             _inner2d,
             mesh=mesh,
             in_specs=(P(None, "data"), P(ep_axis, "data", None),
@@ -213,7 +214,7 @@ def moe_ffn(params, x, cfg, ctx, dropless: bool = False
             return out_loc, probs_loc
 
         probs_spec = ctx.pspec(["batch", None], (T, E))
-        out, probs = jax.shard_map(
+        out, probs = shard_map(
             _inner,
             mesh=mesh,
             in_specs=(tok_spec, P(ep_axis), P(ep_axis), P(ep_axis), P()),

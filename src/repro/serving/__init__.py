@@ -1,0 +1,14 @@
+"""Serving layer: batched, jit-compiled, cached routing over ZeroRouter.
+
+engine   — RouterEngine: padded-bucket jitted scoring + LRU latent cache
+batcher  — MicroBatcher: enqueue → coalesce → route → fan back
+cache    — LatentCache: per-query latents/features/token counts (LRU)
+"""
+from repro.serving.batcher import MicroBatcher, RouteResult
+from repro.serving.cache import CacheEntry, CacheStats, LatentCache
+from repro.serving.engine import RouterEngine, RouterEngineConfig
+
+__all__ = [
+    "CacheEntry", "CacheStats", "LatentCache", "MicroBatcher",
+    "RouteResult", "RouterEngine", "RouterEngineConfig",
+]

@@ -1,0 +1,190 @@
+"""Micro-batching scheduler: enqueue → coalesce → route → fan back.
+
+Singleton routing requests are latency-wasteful: every call pays python
+dispatch plus a (M, 1) jit execution.  The :class:`MicroBatcher` coalesces
+concurrent requests into one padded-bucket batch — up to ``max_batch``
+requests, waiting at most ``max_wait_s`` after the first enqueue — routes
+the batch once through :meth:`RouterEngine.route_batch`, and resolves each
+request's future with its own decision, preserving per-query order.
+
+Requests carry a (policy, weights) key; one drained batch may mix keys, in
+which case the batch is routed once per distinct key (scores are computed
+once — the engine's latent cache makes the second pass table-only).
+
+Two operating modes:
+  * threaded: ``start()`` spawns a daemon worker; producers call
+    ``submit`` from any thread and block on the returned future.
+  * synchronous: without ``start()``, callers ``submit`` then ``flush()``
+    deterministically (used by tests and the benchmark).
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from typing import Iterable, List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass
+class RouteResult:
+    """Per-query routing decision fanned back to the submitter."""
+    text: str
+    model: str
+    model_index: int
+
+
+@dataclasses.dataclass
+class _Request:
+    text: str
+    policy: str
+    weights: Optional[Tuple[float, float, float]]
+    future: "Future[RouteResult]"
+
+    @property
+    def key(self):
+        return (self.policy, self.weights)
+
+
+class MicroBatcher:
+    def __init__(self, engine, max_batch: int = 64,
+                 max_wait_s: float = 0.002):
+        self.engine = engine
+        self.max_batch = max_batch
+        self.max_wait_s = max_wait_s
+        self._queue: "queue.Queue[Optional[_Request]]" = queue.Queue()
+        self._worker: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+        self._closed = False
+        self.batches_routed = 0
+        self.requests_routed = 0
+
+    # ------------------------------------------------------------------
+    # producer side
+    # ------------------------------------------------------------------
+    def submit(self, text: str, policy: str = "balanced",
+               weights: Optional[Tuple[float, float, float]] = None
+               ) -> "Future[RouteResult]":
+        if self._closed:
+            raise RuntimeError("MicroBatcher is closed")
+        fut: "Future[RouteResult]" = Future()
+        if weights is not None:
+            weights = tuple(weights)   # hashable batch key for any input
+        self._queue.put(_Request(text, policy, weights, fut))
+        return fut
+
+    def submit_many(self, texts: Iterable[str], policy: str = "balanced"
+                    ) -> List["Future[RouteResult]"]:
+        return [self.submit(t, policy) for t in texts]
+
+    # ------------------------------------------------------------------
+    # consumer side
+    # ------------------------------------------------------------------
+    def _drain(self, first: _Request) -> List[_Request]:
+        """Coalesce up to max_batch requests, waiting ≤ max_wait_s."""
+        batch = [first]
+        deadline = time.monotonic() + self.max_wait_s
+        while len(batch) < self.max_batch:
+            timeout = deadline - time.monotonic()
+            try:
+                req = (self._queue.get_nowait() if timeout <= 0
+                       else self._queue.get(timeout=timeout))
+            except queue.Empty:
+                break
+            if req is None:      # shutdown sentinel
+                self._queue.put(None)
+                break
+            batch.append(req)
+        return batch
+
+    @staticmethod
+    def _resolve(fut: "Future", result=None, exc=None) -> None:
+        """Set a future's outcome, tolerating caller-side cancellation —
+        a cancelled future must never kill the worker loop."""
+        try:
+            if exc is not None:
+                fut.set_exception(exc)
+            else:
+                fut.set_result(result)
+        except Exception:  # InvalidStateError: cancelled/already resolved
+            pass
+
+    def _route_batch(self, batch: Sequence[_Request]) -> None:
+        by_key = {}
+        for i, req in enumerate(batch):
+            by_key.setdefault(req.key, []).append(i)
+        for (policy, weights), idxs in by_key.items():
+            texts = [batch[i].text for i in idxs]
+            try:
+                names, sel = self.engine.route_batch(
+                    texts, policy=policy, weights=weights)
+            except Exception as exc:  # noqa: BLE001 — fan the error back
+                for i in idxs:
+                    self._resolve(batch[i].future, exc=exc)
+                continue
+            for j, i in enumerate(idxs):
+                self._resolve(batch[i].future, RouteResult(
+                    text=batch[i].text, model=names[j],
+                    model_index=int(sel[j])))
+        self.batches_routed += 1
+        self.requests_routed += len(batch)
+
+    def flush(self) -> int:
+        """Synchronously drain + route everything queued. Returns the
+        number of requests routed."""
+        n = 0
+        while True:
+            try:
+                req = self._queue.get_nowait()
+            except queue.Empty:
+                return n
+            if req is None:
+                continue
+            batch = self._drain(req)
+            self._route_batch(batch)
+            n += len(batch)
+
+    # ------------------------------------------------------------------
+    # threaded mode
+    # ------------------------------------------------------------------
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                req = self._queue.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            if req is None:
+                break
+            batch = self._drain(req)
+            try:
+                self._route_batch(batch)
+            except Exception as exc:  # noqa: BLE001 — keep the worker alive
+                for r in batch:
+                    self._resolve(r.future, exc=exc)
+
+    def start(self) -> "MicroBatcher":
+        assert self._worker is None, "already started"
+        self._worker = threading.Thread(target=self._loop, daemon=True,
+                                        name="router-microbatcher")
+        self._worker.start()
+        return self
+
+    def close(self) -> None:
+        """Reject new submissions, stop the worker (blocking until its
+        in-flight batch finishes — the engine is single-threaded), then
+        drain anything still queued so no accepted future is left
+        unresolved."""
+        self._closed = True
+        if self._worker is not None:
+            self._stop.set()
+            self._queue.put(None)
+            self._worker.join()
+            self._worker = None
+        self.flush()
+
+    def __enter__(self) -> "MicroBatcher":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.close()

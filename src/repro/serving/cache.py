@@ -1,0 +1,79 @@
+"""LRU cache for per-query routing state (serving hot path).
+
+A :class:`LatentCache` memoizes everything the :class:`RouterEngine`
+derives from raw query *text* — predicted latent coordinates (α̂, b̂),
+structural features, and base token counts — so repeated traffic skips
+tokenization, feature extraction, and the predictor forward entirely.
+
+Invalidation rule: cached entries depend only on the *predictor* (and the
+tokenizer it was trained with), never on the candidate pool, so
+``onboard_model`` / ``remove_model`` do NOT invalidate the cache — only the
+engine's pool-tensor snapshot is rebuilt.  Re-fitting the predictor
+(``ZeroRouter.fit_predictor``) must be followed by ``clear()``; the engine
+does this automatically via its predictor identity check.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Dict, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class CacheEntry:
+    """Everything derivable from one query text, pool-independent."""
+    a_hat: np.ndarray                 # (D,) predicted discrimination
+    b_hat: np.ndarray                 # (D,) predicted difficulty
+    feats: np.ndarray                 # (k,) structural features (raw)
+    token_counts: Dict[int, int]      # subword_len → untruncated piece count
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0
+
+
+class LatentCache:
+    """Bounded LRU keyed on query text.  Not thread-safe by itself; the
+    engine serializes access (the micro-batcher routes on one thread)."""
+
+    def __init__(self, maxsize: int = 4096):
+        assert maxsize > 0
+        self.maxsize = maxsize
+        self._data: "OrderedDict[str, CacheEntry]" = OrderedDict()
+        self.stats = CacheStats()
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def __contains__(self, text: str) -> bool:
+        return text in self._data
+
+    def get(self, text: str) -> Optional[CacheEntry]:
+        entry = self._data.get(text)
+        if entry is None:
+            self.stats.misses += 1
+            return None
+        self._data.move_to_end(text)
+        self.stats.hits += 1
+        return entry
+
+    def put(self, text: str, entry: CacheEntry) -> None:
+        if text in self._data:
+            self._data.move_to_end(text)
+        self._data[text] = entry
+        while len(self._data) > self.maxsize:
+            self._data.popitem(last=False)
+            self.stats.evictions += 1
+
+    def clear(self) -> None:
+        self._data.clear()

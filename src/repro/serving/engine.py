@@ -1,0 +1,379 @@
+"""RouterEngine — the batched, jit-compiled serving layer over ZeroRouter.
+
+Lifecycle of a request batch (enqueue → coalesce → score → route →
+respond):
+
+  1. **enqueue**: callers submit raw query texts (directly via
+     :meth:`RouterEngine.route_batch`, or through the
+     :class:`~repro.serving.batcher.MicroBatcher` which coalesces
+     singleton requests up to ``max_batch``/``max_wait``);
+  2. **score**: texts are split into latent-cache hits and misses; misses
+     are tokenized + feature-extracted ONCE PER QUERY (the seed's
+     ``score_queries`` re-tokenized once per model × query) and pushed,
+     padded to fixed (Q, L) buckets, through one jitted program fusing
+     the encoder and prediction heads; a second jitted program fuses
+     ``predict_accuracy`` with the task-aware difficulty reduction over
+     the whole batch — so XLA recompilation is bounded by the number of
+     buckets, not the number of distinct batch sizes;
+  3. **route**: the (M, Q) accuracy/cost/latency tensors feed the fused
+     utility+argmax kernel (``repro.kernels.routing``; Pallas on TPU,
+     fused-jnp elsewhere) with padded queries masked out of the cost
+     normalization;
+  4. **respond**: per-query decisions are fanned back in submission order.
+
+Cache invalidation rule: latent-cache entries depend only on the
+predictor, NOT on the candidate pool, so ``onboard_model`` /
+``remove_model`` merely bump ``ZeroRouter.pool_version`` — the engine
+rebuilds its pool-tensor snapshot (θ stack, price/latency vectors, output
+length table rows) on the next batch and keeps the cache.  Re-fitting the
+predictor swaps ``ZeroRouter.predictor``, which the engine detects by
+identity and responds to by clearing the cache and re-building its jitted
+closures.
+
+Numerical contract: the engine's (p, cost, lat) match
+``ZeroRouter.score_queries`` to float32 resolution (the table / cost /
+latency stages are bit-for-bit; the jitted predictor forward differs
+from the seed's eager one by ~1 ulp), scoring is bit-for-bit invariant
+to batch-size padding and batch composition (sequence buckets are pinned
+per query), and routing selections are identical (tested in
+tests/test_serving.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.features import extract_features_batch
+from repro.core.predictor import apply_heads, encode
+from repro.core.profiling import predict_accuracy
+from repro.core.router import POLICIES, RoutingConstraints
+from repro.core.router import route as core_route
+from repro.core.zerorouter import ZeroRouter
+from repro.data.tokenizer import piece_count
+from repro.kernels import ops
+from repro.serving.cache import CacheEntry, LatentCache
+
+
+@dataclasses.dataclass(frozen=True)
+class RouterEngineConfig:
+    max_batch: int = 256          # largest padded bucket / coalesce limit
+    min_bucket: int = 8           # smallest padded bucket
+    cache_size: int = 4096        # 0 disables the latent cache
+    seq_multiple: int = 8         # sequence-length bucket granularity
+    forward_chunk: int = 64       # queries per predictor-forward chunk
+    use_pallas: Optional[bool] = None   # None → Pallas on TPU only
+
+
+@dataclasses.dataclass
+class _PoolTensors:
+    """Immutable snapshot of the candidate pool, vectorized for scoring."""
+    version: int
+    names: Tuple[str, ...]
+    thetas: jnp.ndarray           # (M, D) f32, device-resident
+    lam_in: np.ndarray            # (M, 1) f64 $/Mtok input
+    lam_out: np.ndarray           # (M, 1) f64 $/Mtok output
+    ttft: np.ndarray              # (M, 1) f64 seconds
+    tpot: np.ndarray              # (M, 1) f64 seconds/token
+    table: np.ndarray             # (M, K) f64 ℓ̂_out rows (pre-gathered)
+    edges: np.ndarray             # (K-1,) f64 difficulty bin edges
+    length_factors: np.ndarray    # (M,) f64 tokenizer length factors
+    subword_lens: Tuple[int, ...]   # per-model tokenizer subword length
+
+    @property
+    def n_models(self) -> int:
+        return len(self.names)
+
+
+class RouterEngine:
+    def __init__(self, zr: ZeroRouter,
+                 cfg: RouterEngineConfig = RouterEngineConfig()):
+        assert zr.predictor is not None, "fit_predictor() before serving"
+        self.zr = zr
+        self.cfg = cfg
+        self.cache: Optional[LatentCache] = (
+            LatentCache(cfg.cache_size) if cfg.cache_size > 0 else None)
+        self._pool_snapshot: Optional[_PoolTensors] = None
+        self._predictor_ref = None
+        self._build_jits()
+
+    # ------------------------------------------------------------------
+    # jitted closures (rebuilt when the predictor object is swapped)
+    # ------------------------------------------------------------------
+    def _build_jits(self) -> None:
+        pred = self.zr.predictor
+        self._predictor_ref = pred
+        pc = pred.cfg
+        params = pred.params
+        clusters = pred.clusters
+        mu, sd = (jnp.asarray(s, jnp.float32) for s in pred.feat_stats)
+
+        def _latents(ids, mask, feats):
+            e_se = encode(params["enc"], ids, mask, pc)
+            f = (feats - mu) / sd
+            return apply_heads(params["heads"], e_se, f, clusters,
+                               pc.latent_dim)
+
+        def _from_latents(a_hat, b_hat, thetas):
+            p = predict_accuracy(thetas, a_hat, b_hat)
+            s_hat = jnp.sum(a_hat * b_hat, -1)
+            return p, s_hat
+
+        self._latents_jit = jax.jit(_latents)
+        self._from_latents_jit = jax.jit(_from_latents)
+
+    # ------------------------------------------------------------------
+    # pool snapshot
+    # ------------------------------------------------------------------
+    def _pool(self) -> _PoolTensors:
+        zr = self.zr
+        assert zr.pool, "onboard at least one model"
+        snap = self._pool_snapshot
+        if snap is not None and snap.version == zr.pool_version:
+            return snap
+        rows = np.array([m.table_row for m in zr.pool])
+        snap = _PoolTensors(
+            version=zr.pool_version,
+            names=tuple(m.name for m in zr.pool),
+            thetas=jnp.asarray(np.stack([m.theta for m in zr.pool]),
+                               jnp.float32),
+            lam_in=np.array([m.price_in for m in zr.pool])[:, None],
+            lam_out=np.array([m.price_out for m in zr.pool])[:, None],
+            ttft=np.array([m.ttft for m in zr.pool])[:, None],
+            tpot=np.array([m.tpot for m in zr.pool])[:, None],
+            table=zr.length_table.table[rows],
+            edges=zr.length_table.bin_edges,
+            length_factors=np.array([
+                float(getattr(m.tokenizer, "length_factor", 1.0))
+                for m in zr.pool]),
+            subword_lens=tuple(m.tokenizer.subword_len for m in zr.pool),
+        )
+        self._pool_snapshot = snap
+        return snap
+
+    def _check_predictor(self) -> None:
+        if self.zr.predictor is not self._predictor_ref:
+            # re-fit predictor → stale latents; rebuild closures + cache
+            self._build_jits()
+            if self.cache is not None:
+                self.cache.clear()
+
+    # ------------------------------------------------------------------
+    # scoring
+    # ------------------------------------------------------------------
+    def _bucket(self, n: int) -> int:
+        """Padded batch size: a ×1.5/×1.33 ladder (8, 12, 16, 24, 32, …)
+        bounds both jit-compilation count and padding waste (< 50%)."""
+        b = self.cfg.min_bucket
+        while b < n:
+            if b + b // 2 >= n:
+                return min(b + b // 2, max(self.cfg.max_batch,
+                                           self.cfg.min_bucket))
+            b *= 2
+        return min(b, max(self.cfg.max_batch, self.cfg.min_bucket))
+
+    def _pad2(self, x: np.ndarray, rows: int) -> np.ndarray:
+        out = np.zeros((rows,) + x.shape[1:], x.dtype)
+        out[: x.shape[0]] = x
+        return out
+
+    def _seq_buckets(self, lens: np.ndarray) -> np.ndarray:
+        """Per-query padded sequence length (multiple of ``seq_multiple``).
+
+        The bucket is a function of the query's OWN length only — never of
+        its batch-mates.  XLA's reduction tree over the key dimension
+        varies with the padded K, so the same query under two different
+        paddings can differ by ~1 ulp; pinning the bucket per query makes
+        every score reproducible across batch compositions (tested in
+        tests/test_serving.py)."""
+        pc = self.zr.predictor.cfg
+        m = self.cfg.seq_multiple
+        b = np.minimum((lens + m - 1) // m * m, pc.max_len)
+        return np.maximum(b, min(m, pc.max_len)).astype(int)
+
+    def _compute_entries(self, texts: Sequence[str],
+                         subword_lens: Sequence[int]) -> List[CacheEntry]:
+        """Tokenize + featurize + predict latents for cache-miss texts.
+
+        Tokenization and feature extraction run once per query (the seed's
+        ``score_queries`` re-tokenized once per model × query).  Queries
+        are grouped into sequence-length buckets — most traffic is much
+        shorter than ``max_len``, and the encoder is O(L²) — and each
+        group runs through the jitted encoder+heads program over a padded
+        (Q_bucket, L_bucket) shape, so compilation count is bounded by
+        #Q-buckets × #L-buckets."""
+        pc = self.zr.predictor.cfg
+        n = len(texts)
+        ids, mask = self.zr._tokenizer.encode_batch(list(texts), pc.max_len)
+        feats = extract_features_batch(list(texts))
+        lens = mask.sum(1).astype(int)
+        seq_b = self._seq_buckets(lens)
+        a_np = np.empty((n, pc.latent_dim), np.float32)
+        b_np = np.empty((n, pc.latent_dim), np.float32)
+        # group strictly by the query's OWN length bucket: a query's
+        # padded L never depends on its batch-mates, which keeps scoring
+        # bitwise-invariant under batch composition (XLA's reduction tree
+        # over keys varies with the padded K dimension)
+        fc = min(self.cfg.forward_chunk, self.cfg.max_batch)
+        for lb in np.unique(seq_b):
+            grp = np.nonzero(seq_b == lb)[0]
+            for s in range(0, len(grp), fc):
+                idx = grp[s: s + fc]
+                bucket = self._bucket(len(idx))
+                a_g, b_g = self._latents_jit(
+                    jnp.asarray(self._pad2(ids[idx, :lb], bucket)),
+                    jnp.asarray(self._pad2(mask[idx, :lb], bucket)),
+                    jnp.asarray(self._pad2(feats[idx].astype(np.float32),
+                                           bucket)))
+                a_np[idx] = np.asarray(a_g)[: len(idx)]
+                b_np[idx] = np.asarray(b_g)[: len(idx)]
+        uniq_sw = sorted(set(subword_lens))
+        return [
+            CacheEntry(
+                a_hat=a_np[i], b_hat=b_np[i], feats=feats[i],
+                token_counts={sw: piece_count(t, sw) for sw in uniq_sw})
+            for i, t in enumerate(texts)
+        ]
+
+    def _latent_batch(self, texts: Sequence[str], pool: _PoolTensors
+                      ) -> Tuple[np.ndarray, np.ndarray, List[CacheEntry]]:
+        """Returns (a_hat (Q, D), b_hat (Q, D), per-query cache entries)."""
+        entries: List[Optional[CacheEntry]] = [
+            self.cache.get(t) if self.cache is not None else None
+            for t in texts]
+        # dedup within the batch: each unique miss text is computed once
+        miss_pos: Dict[str, List[int]] = {}
+        for i, e in enumerate(entries):
+            if e is None:
+                miss_pos.setdefault(texts[i], []).append(i)
+        if miss_pos:
+            uniq_texts = list(miss_pos)
+            fresh = self._compute_entries(uniq_texts, pool.subword_lens)
+            for t, e in zip(uniq_texts, fresh):
+                for i in miss_pos[t]:
+                    entries[i] = e
+                if self.cache is not None:
+                    self.cache.put(t, e)
+        a_hat = np.stack([e.a_hat for e in entries])
+        b_hat = np.stack([e.b_hat for e in entries])
+        return a_hat, b_hat, entries
+
+    def _input_lengths(self, texts: Sequence[str],
+                       entries: List[CacheEntry],
+                       pool: _PoolTensors) -> np.ndarray:
+        """ℓ_in (M, Q): one tokenization pass per query, scaled per model.
+
+        Hash tokenizers produce salt-independent piece counts, so the
+        per-model count is the shared base count × the model's length
+        factor — exactly ``model_token_count`` without the M × Q loop."""
+        base = np.empty((len(set(pool.subword_lens)), len(texts)))
+        sw_index = {sw: j for j, sw in enumerate(sorted(set(pool.subword_lens)))}
+        for q, (t, e) in enumerate(zip(texts, entries)):
+            for sw, j in sw_index.items():
+                c = e.token_counts.get(sw)
+                if c is None:          # pool gained a new tokenizer shape
+                    c = piece_count(t, sw)
+                    e.token_counts[sw] = c
+                base[j, q] = c
+        rows = np.array([sw_index[sw] for sw in pool.subword_lens])
+        l_in = np.rint(base[rows] * pool.length_factors[:, None])
+        return np.maximum(l_in.astype(np.int64), 1)
+
+    def score_queries(self, texts: Sequence[str]
+                      ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Batched equivalent of ``ZeroRouter.score_queries``: (p, cost,
+        latency), each (M, Q).  Chunks internally at ``max_batch``."""
+        self._check_predictor()
+        pool = self._pool()
+        mb = self.cfg.max_batch
+        if len(texts) > mb:
+            parts = [self.score_queries(texts[i: i + mb])
+                     for i in range(0, len(texts), mb)]
+            return tuple(np.concatenate([p[k] for p in parts], axis=1)
+                         for k in range(3))
+
+        Q = len(texts)
+        a_hat, b_hat, entries = self._latent_batch(texts, pool)
+        bucket = self._bucket(Q)
+        p_pad, s_pad = self._from_latents_jit(
+            jnp.asarray(self._pad2(a_hat, bucket)),
+            jnp.asarray(self._pad2(b_hat, bucket)), pool.thetas)
+        p = np.asarray(p_pad)[:, :Q]
+        s_hat = np.asarray(s_pad)[:Q]
+
+        # tables in f64 numpy — bit-for-bit with the seed's loop path
+        l_out = pool.table[:, np.digitize(s_hat, pool.edges)]
+        l_in = self._input_lengths(texts, entries, pool)
+        cost = (pool.lam_in * l_in + pool.lam_out * l_out) / 1e6
+        lat = pool.ttft + l_out * pool.tpot
+        return p, cost, lat
+
+    # ------------------------------------------------------------------
+    # routing
+    # ------------------------------------------------------------------
+    def _use_pallas(self) -> bool:
+        if self.cfg.use_pallas is not None:
+            return self.cfg.use_pallas
+        return ops._on_tpu()
+
+    def route(self, texts: Sequence[str], policy: str = "balanced",
+              weights: Optional[Tuple[float, float, float]] = None,
+              constraints: Optional[RoutingConstraints] = None):
+        """Drop-in for ``ZeroRouter.route`` (names, sel, diagnostics)."""
+        p, cost, lat = self.score_queries(texts)
+        sel, diag = core_route(p, cost, lat, policy=policy, weights=weights,
+                               constraints=constraints)
+        sel = np.asarray(sel)
+        names = [self._pool().names[i] for i in sel]
+        diag.update({"p": p, "cost": cost, "latency": lat})
+        return names, sel, diag
+
+    def route_batch(self, texts: Sequence[str], policy: str = "balanced",
+                    weights: Optional[Tuple[float, float, float]] = None
+                    ) -> Tuple[List[str], np.ndarray]:
+        """Serving hot path: unconstrained routing through the fused
+        utility+argmax kernel over a padded bucket (fixed jit shapes).
+
+        Selections are identical to ``route()`` on the same inputs for any
+        Q: scoring chunks internally (per-query, chunk-invariant) while
+        the cost/latency min-max normalization always spans the FULL
+        batch — beyond ``max_batch`` the kernel runs unpadded (one compile
+        per bulk shape) rather than splitting the normalization.
+
+        Returns (model names (Q,), selection indices (Q,))."""
+        self._check_predictor()
+        pool = self._pool()
+        Q = len(texts)
+        p, cost, lat = self.score_queries(texts)
+        w = np.asarray(weights if weights is not None else POLICIES[policy],
+                       np.float32)
+        if Q > self.cfg.max_batch:
+            bucket, valid = Q, None
+        else:
+            bucket = self._bucket(Q)
+            valid = np.zeros(bucket, bool)
+            valid[:Q] = True
+        sel_pad, _ = ops.routing_argmax(
+            jnp.asarray(self._pad_cols(p, bucket)),
+            jnp.asarray(self._pad_cols(cost, bucket)),
+            jnp.asarray(self._pad_cols(lat, bucket)),
+            jnp.asarray(w),
+            valid=None if valid is None else jnp.asarray(valid),
+            use_pallas=self._use_pallas())
+        sel = np.asarray(sel_pad)[:Q]
+        return [pool.names[i] for i in sel], sel
+
+    def _pad_cols(self, x: np.ndarray, cols: int) -> np.ndarray:
+        out = np.zeros((x.shape[0], cols), np.float32)
+        out[:, : x.shape[1]] = x
+        return out
+
+    # ------------------------------------------------------------------
+    # diagnostics
+    # ------------------------------------------------------------------
+    @property
+    def cache_stats(self):
+        return self.cache.stats if self.cache is not None else None

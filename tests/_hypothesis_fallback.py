@@ -1,0 +1,113 @@
+"""Minimal offline stand-in for the ``hypothesis`` API surface these tests
+use (``given`` / ``settings`` / ``strategies``).
+
+The container has no network access, so ``hypothesis`` may be absent; the
+property tests then degrade to a deterministic sweep: each ``@given`` test
+runs ``_N_EXAMPLES`` examples drawn from the declared strategies with a
+fixed seed, plus the strategy minima (the most shrink-like corner).  That
+keeps every property exercised — just without adaptive shrinking.
+
+Usage in a test module::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ModuleNotFoundError:                       # offline container
+        from _hypothesis_fallback import given, settings, st
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+from typing import Any, Callable, List, Sequence
+
+import numpy as np
+
+_N_EXAMPLES = 10
+
+
+class _Strategy:
+    """A value generator: ``minimum()`` plus seeded ``example(rng)``."""
+
+    def __init__(self, minimum: Callable[[], Any],
+                 example: Callable[[np.random.Generator], Any]):
+        self.minimum = minimum
+        self.example = example
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(
+            minimum=lambda: min_value,
+            example=lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float, **_: Any) -> _Strategy:
+        return _Strategy(
+            minimum=lambda: min_value,
+            example=lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def sampled_from(elements: Sequence[Any]) -> _Strategy:
+        elements = list(elements)
+        return _Strategy(
+            minimum=lambda: elements[0],
+            example=lambda rng: elements[int(rng.integers(len(elements)))])
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(minimum=lambda: False,
+                         example=lambda rng: bool(rng.integers(2)))
+
+    @staticmethod
+    def lists(elem: _Strategy, min_size: int = 0,
+              max_size: int = 10) -> _Strategy:
+        def example(rng: np.random.Generator) -> List[Any]:
+            n = int(rng.integers(min_size, max_size + 1))
+            return [elem.example(rng) for _ in range(n)]
+        return _Strategy(
+            minimum=lambda: [elem.minimum() for _ in range(min_size)],
+            example=example)
+
+
+st = _Strategies()
+
+
+def settings(**_: Any):
+    """Accepted and ignored (no shrinking/deadline machinery here)."""
+    def deco(fn):
+        return fn
+    return deco
+
+
+def given(*strategies: _Strategy):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            fn(*args, *[s.minimum() for s in strategies], **kwargs)
+            for i in range(_N_EXAMPLES):
+                rng = np.random.default_rng(i)
+                fn(*args, *[s.example(rng) for s in strategies], **kwargs)
+        # hide the strategy-bound (trailing) parameters from pytest so it
+        # does not try to resolve them as fixtures
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        wrapper.__signature__ = sig.replace(  # type: ignore[attr-defined]
+            parameters=params[: len(params) - len(strategies)])
+        del wrapper.__wrapped__
+        return wrapper
+    return deco
+
+
+def _selftest() -> None:
+    seen = set()
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        seen.add(st.integers(0, 3).example(rng))
+    assert seen == {0, 1, 2, 3}
+    assert st.lists(st.integers(1, 2), min_size=2, max_size=2).minimum() == [1, 1]
+
+
+if __name__ == "__main__":
+    _selftest()
+    print("ok")

@@ -82,6 +82,38 @@ def test_irt_2pl_sweep(U, I, D):
                                    rtol=1e-5, atol=1e-5, err_msg=name)
 
 
+@pytest.mark.parametrize("M,Q", [(2, 1), (8, 256), (5, 130), (16, 1000)])
+@pytest.mark.parametrize("masked", [False, True])
+def test_routing_argmax_sweep(M, Q, masked):
+    ks = jax.random.split(jax.random.key(4), 3)
+    p = jax.random.uniform(ks[0], (M, Q))
+    cost = jax.random.uniform(ks[1], (M, Q)) * 10
+    lat = jax.random.uniform(ks[2], (M, Q)) * 3
+    w = jnp.asarray((0.5, 0.3, 0.2), jnp.float32)
+    valid = (jnp.arange(Q) < max(Q - 3, 1)) if masked else None
+    sel, util = ops.routing_argmax(p, cost, lat, w, valid=valid)
+    sel_ref, util_ref = ref.routing_argmax_ref(p, cost, lat, w, valid=valid)
+    np.testing.assert_array_equal(np.asarray(sel), np.asarray(sel_ref))
+    np.testing.assert_allclose(np.asarray(util), np.asarray(util_ref),
+                               atol=2e-6)
+
+
+def test_routing_argmax_ref_matches_two_pass():
+    """The fused ref reproduces the seed's utility_matrix → argmax
+    two-pass exactly (it replaced it inside core.router.route)."""
+    from repro.core.router import route_unconstrained, utility_matrix
+    ks = jax.random.split(jax.random.key(5), 3)
+    p = jax.random.uniform(ks[0], (6, 300))
+    cost = jax.random.uniform(ks[1], (6, 300))
+    lat = jax.random.uniform(ks[2], (6, 300))
+    w = (0.5, 0.3, 0.2)
+    util_want = utility_matrix(p, cost, lat, w)
+    sel_want = route_unconstrained(util_want)
+    sel, util = ref.routing_argmax_ref(p, cost, lat, w)
+    np.testing.assert_array_equal(np.asarray(sel), np.asarray(sel_want))
+    np.testing.assert_array_equal(np.asarray(util), np.asarray(util_want))
+
+
 def test_doptimal_kernel_plugs_into_greedy():
     """The Pallas scorer and the jnp scorer select identical anchors."""
     from repro.core.anchors import greedy_doptimal

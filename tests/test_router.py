@@ -1,7 +1,10 @@
 """Policy-driven routing ILP (paper Eq. 17–18) — solver invariants."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:                       # offline container
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core.router import (
     POLICIES,

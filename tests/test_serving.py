@@ -1,0 +1,240 @@
+"""RouterEngine serving layer: cache semantics, padded-bucket bitwise
+equivalence, seed-path agreement, scheduler ordering (ISSUE 1)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.router import POLICIES
+from repro.data import ID_TASKS
+from repro.data.tokenizer import HashTokenizer, piece_count
+from repro.launch.serve import build_demo_engine
+from repro.serving import (LatentCache, MicroBatcher, RouterEngine,
+                           RouterEngineConfig)
+
+
+@pytest.fixture(scope="module")
+def served():
+    world, zr, engine = build_demo_engine(seed=0)
+    from repro.data import OOD_TASKS
+    qi = world.query_indices(OOD_TASKS)
+    texts = [world.queries[i].text for i in qi[:48]]
+    return world, zr, engine, texts
+
+
+# ---------------------------------------------------------------------------
+# scoring equivalence
+# ---------------------------------------------------------------------------
+
+
+def test_engine_matches_seed_score_queries(served):
+    """Vectorized batched scoring vs the seed per-model×query loops: the
+    table/cost/latency stages are bit-for-bit (same f64 numpy ops); the
+    jitted predictor forward matches the eager one to f32 resolution."""
+    _, zr, _, texts = served
+    engine = RouterEngine(zr, RouterEngineConfig(cache_size=0))
+    p_e, c_e, l_e = engine.score_queries(texts)
+    p_s, c_s, l_s = zr.score_queries(texts)
+    np.testing.assert_allclose(p_e, p_s, atol=2e-6)
+    np.testing.assert_array_equal(c_e, c_s)
+    np.testing.assert_array_equal(l_e, l_s)
+
+
+def test_padded_bucket_scoring_is_bitwise_invariant(served):
+    """Padding to a bucket must be invisible: scoring a 13-query batch
+    (padded to 16) equals the same queries scored inside a 48-query batch
+    bit-for-bit on the unpadded entries."""
+    _, zr, _, texts = served
+    engine = RouterEngine(zr, RouterEngineConfig(cache_size=0))
+    p_full, c_full, l_full = engine.score_queries(texts)
+    p_sub, c_sub, l_sub = engine.score_queries(texts[:13])
+    np.testing.assert_array_equal(p_sub, p_full[:, :13])
+    np.testing.assert_array_equal(c_sub, c_full[:, :13])
+    np.testing.assert_array_equal(l_sub, l_full[:, :13])
+
+
+def test_cache_hits_are_bitwise_identical(served):
+    """Cold scoring vs fully-cached scoring of the same batch."""
+    _, zr, _, texts = served
+    engine = RouterEngine(zr, RouterEngineConfig(cache_size=256))
+    cold = engine.score_queries(texts)
+    assert engine.cache_stats.misses > 0 and engine.cache_stats.hits == 0
+    warm = engine.score_queries(texts)
+    assert engine.cache_stats.hits == len(texts)
+    for a, b in zip(cold, warm):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_selections_identical_to_zerorouter(served):
+    _, zr, _, texts = served
+    engine = RouterEngine(zr, RouterEngineConfig(cache_size=256))
+    for pol in POLICIES:
+        _, sel_seed, _ = zr.route(texts, policy=pol)
+        _, sel_eng, _ = engine.route(texts, policy=pol)
+        _, sel_fast = engine.route_batch(texts, policy=pol)
+        np.testing.assert_array_equal(np.asarray(sel_seed), sel_eng)
+        np.testing.assert_array_equal(np.asarray(sel_seed), sel_fast)
+
+
+def test_chunking_over_max_batch(served):
+    """Q > max_batch is chunked internally and reassembled in order."""
+    _, zr, _, texts = served
+    small = RouterEngine(zr, RouterEngineConfig(cache_size=0, max_batch=16))
+    big = RouterEngine(zr, RouterEngineConfig(cache_size=0))
+    for a, b in zip(small.score_queries(texts), big.score_queries(texts)):
+        np.testing.assert_array_equal(a, b)
+    # routing over max_batch keeps GLOBAL cost normalization: selections
+    # must match the un-chunked route() on the full batch
+    _, sel_ref, _ = small.route(texts)
+    _, sel_fast = small.route_batch(texts)
+    np.testing.assert_array_equal(np.asarray(sel_ref), sel_fast)
+
+
+# ---------------------------------------------------------------------------
+# cache semantics
+# ---------------------------------------------------------------------------
+
+
+def test_lru_eviction_order():
+    cache = LatentCache(maxsize=2)
+    from repro.serving.cache import CacheEntry
+    e = lambda: CacheEntry(np.zeros(2), np.zeros(2), np.zeros(2), {})
+    cache.put("a", e())
+    cache.put("b", e())
+    assert cache.get("a") is not None      # a is now most-recent
+    cache.put("c", e())                    # evicts b
+    assert "b" not in cache and "a" in cache and "c" in cache
+    assert cache.stats.evictions == 1
+    assert cache.get("b") is None
+    assert cache.stats.misses == 1
+
+
+def test_pool_mutation_keeps_cache_and_rebuilds_snapshot(served):
+    """onboard/remove only bump pool_version: the latent cache survives
+    (latents are pool-independent) while scoring reflects the new pool."""
+    world, zr, _, texts = served
+    engine = RouterEngine(zr, RouterEngineConfig(cache_size=256))
+    engine.score_queries(texts)
+    n_cached = len(engine.cache)
+    m = world.model_index("future-model-00")
+    anchors = world.query_indices(ID_TASKS)[zr.anchor_idx]
+    y = world.sample_responses([m], anchors)[0]
+    lens = world.output_lengths([m], anchors)[0]
+    lats = world.true_latency([m], anchors, lens[None])[0]
+    mi = world.models[m]
+    zr.onboard_model("future-model-00", y, lens, lats, mi.price_in,
+                     mi.price_out, mi.tokenizer)
+    try:
+        p_e, c_e, l_e = engine.score_queries(texts)
+        assert len(engine.cache) == n_cached, "pool mutation purged cache"
+        assert p_e.shape[0] == len(zr.pool)
+        p_s, c_s, l_s = zr.score_queries(texts)
+        np.testing.assert_allclose(p_e, p_s, atol=2e-6)
+        np.testing.assert_array_equal(c_e, c_s)
+        np.testing.assert_array_equal(l_e, l_s)
+    finally:
+        zr.remove_model("future-model-00")
+    assert engine.score_queries(texts)[0].shape[0] == len(zr.pool)
+
+
+def test_predictor_swap_clears_cache(served):
+    _, zr, _, texts = served
+    engine = RouterEngine(zr, RouterEngineConfig(cache_size=256))
+    engine.score_queries(texts)
+    assert len(engine.cache) > 0
+    old = zr.predictor
+    try:
+        zr.predictor = dataclasses.replace(old)     # identity swap
+        engine.score_queries(texts[:4])
+        assert engine.cache_stats.hits == 0         # cache was cleared
+        assert len(engine.cache) == 4
+    finally:
+        zr.predictor = old
+
+
+# ---------------------------------------------------------------------------
+# micro-batcher
+# ---------------------------------------------------------------------------
+
+
+def test_batcher_coalesces_and_preserves_order(served):
+    _, zr, engine, texts = served
+    # flush() drains FIFO into batches of exactly max_batch, each routed
+    # independently (per-batch cost normalization — serving semantics)
+    names_ref = []
+    for i in range(0, len(texts), 8):
+        names_ref.extend(engine.route_batch(texts[i: i + 8])[0])
+    mb = MicroBatcher(engine, max_batch=8)
+    futs = mb.submit_many(texts)
+    routed = mb.flush()
+    assert routed == len(texts)
+    assert mb.batches_routed >= len(texts) // 8
+    results = [f.result(timeout=5) for f in futs]
+    assert [r.model for r in results] == names_ref
+    assert [r.text for r in results] == list(texts)
+
+
+def test_batcher_survives_cancelled_future(served):
+    """A caller cancelling its pending future must not poison the batch
+    or kill the scheduler."""
+    _, zr, engine, texts = served
+    mb = MicroBatcher(engine, max_batch=8)
+    futs = mb.submit_many(texts[:8])
+    assert futs[3].cancel()
+    mb.flush()
+    done = [f.result(timeout=5) for i, f in enumerate(futs) if i != 3]
+    assert len(done) == 7 and all(r.model for r in done)
+    # scheduler still alive for the next batch
+    fut = mb.submit(texts[0])
+    mb.flush()
+    assert fut.result(timeout=5).model
+
+
+def test_batcher_mixed_policies(served):
+    _, zr, engine, texts = served
+    mb = MicroBatcher(engine, max_batch=64)
+    futs = ([mb.submit(t, policy="min_cost") for t in texts[:8]]
+            + [mb.submit(t, policy="max_acc") for t in texts[:8]])
+    mb.flush()
+    res = [f.result(timeout=5) for f in futs]
+    _, sel_cost = engine.route_batch(texts[:8], policy="min_cost")
+    _, sel_acc = engine.route_batch(texts[:8], policy="max_acc")
+    assert [r.model_index for r in res[:8]] == list(sel_cost)
+    assert [r.model_index for r in res[8:]] == list(sel_acc)
+
+
+def test_batcher_threaded_mode(served):
+    _, zr, engine, texts = served
+    names_ref, _, _ = engine.route(texts[:16])
+    with MicroBatcher(engine, max_batch=8, max_wait_s=0.01) as mb:
+        futs = [mb.submit(t) for t in texts[:16]]
+        results = [f.result(timeout=30) for f in futs]
+    assert [r.model for r in results] == list(names_ref)
+
+
+# ---------------------------------------------------------------------------
+# vectorized input lengths
+# ---------------------------------------------------------------------------
+
+
+def test_piece_count_matches_tokenizer():
+    texts = ["", "hello", "a much longer query with punctuation?! and 123",
+             "antidisestablishmentarianism " * 3]
+    for sw in (4, 12, 30):
+        tok = HashTokenizer(1000, salt="x", subword_len=sw)
+        for t in texts:
+            assert piece_count(t, sw) == tok.count(t)
+
+
+def test_input_lengths_match_per_model_loop(served):
+    """The engine's one-pass ℓ_in equals the seed's M × Q tokenizer loop
+    exactly, including length factors."""
+    from repro.data.tokenizer import model_token_count
+    _, zr, _, texts = served
+    engine = RouterEngine(zr, RouterEngineConfig(cache_size=0))
+    pool = engine._pool()
+    _, _, entries = engine._latent_batch(texts, pool)
+    l_in = engine._input_lengths(texts, entries, pool)
+    want = np.array([[model_token_count(m.tokenizer, t) for t in texts]
+                     for m in zr.pool])
+    np.testing.assert_array_equal(l_in, want)

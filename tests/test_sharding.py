@@ -2,7 +2,9 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
+
+from repro.compat import abstract_mesh
 
 from repro.configs import get_config, get_smoke_config
 from repro.models import abstract_params
@@ -12,7 +14,7 @@ from repro.sharding.planner import ShardingCtx, rules_with
 
 
 def _mesh(shape=(16, 16), axes=("data", "model")):
-    return AbstractMesh(shape, axes)
+    return abstract_mesh(shape, axes)
 
 
 def test_divisible_dims_shard():
@@ -102,7 +104,10 @@ def test_cache_axes_and_specs():
 # shape on ANY mesh — every assigned mesh axis divides its dim, no axis
 # is used twice, and unknown logical names fall back to replication.
 # ---------------------------------------------------------------------------
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:                       # offline container
+    from _hypothesis_fallback import given, settings, st
 
 
 @settings(max_examples=60, deadline=None)
@@ -119,7 +124,7 @@ def test_planner_specs_always_valid(shape, logical, mesh_shape):
     shape, logical = tuple(shape[:n]), tuple(logical[:n])
     axes_names = ("pod", "data", "model")[-len(mesh_shape):] \
         if len(mesh_shape) == 3 else ("data", "model")[:len(mesh_shape)]
-    mesh = AbstractMesh(mesh_shape, axes_names)
+    mesh = abstract_mesh(mesh_shape, axes_names)
     ctx = ShardingCtx(mesh=mesh)
     spec = ctx.pspec(logical, shape)
     used = []
