@@ -1,5 +1,6 @@
-"""Shared benchmark pipeline: one world + one calibrated ZeroRouter reused
-across the paper-table benchmarks, plus the baseline routers.
+"""Shared benchmark pipeline: one world + one calibrated Router (layered
+``repro.api``) reused across the paper-table benchmarks, plus the
+baseline routers.
 
 Baselines (paper §Baselines, re-implemented against the same world):
   * Random Selection
@@ -21,13 +22,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (
-    IRTConfig,
-    PredictorConfig,
-    ZeroRouter,
-    ZeroRouterConfig,
-    reward,
-)
+from repro.api import Router, RouterConfig
+from repro.core import IRTConfig, PredictorConfig, reward
 from repro.core.features import extract_features_batch, normalize_features
 from repro.core.router import POLICIES, normalize
 from repro.data import (
@@ -59,7 +55,7 @@ _SMOKE_SCALE = dict(queries_per_task=50, n_future_models=12,
 @dataclasses.dataclass
 class Bench:
     world: World
-    zr: ZeroRouter
+    router: Router
     qi_train: np.ndarray          # ID queries used for calibration/training
     qi_id_test: np.ndarray
     qi_ood: np.ndarray
@@ -106,21 +102,22 @@ def build_bench(smoke: bool = False, seed: int = 0) -> Bench:
     core_mi = [world.model_index(n) for n in core_names]
     R_core = world.sample_responses(core_mi, qi_train, seed=97)
     R = np.concatenate([R_lb, R_core], axis=0)
-    zr = ZeroRouter(ZeroRouterConfig(
-        irt=IRTConfig(dim=20, epochs=sc["irt_epochs"]),
-        predictor=PredictorConfig(d_model=192, num_layers=3, num_heads=4,
-                                  d_ff=512, max_len=64),
-        n_anchors=min(200, len(qi_train) // 2),
-        predictor_epochs=sc["predictor_epochs"],
-    ))
-    cal = zr.calibrate(R)
     tok = HashTokenizer(32_000)
-    # zr.alpha rows are ordered by qi_train — pass the matching texts
-    zr.fit_predictor([world.queries[i].text for i in qi_train], tok)
+    # latent rows are ordered by qi_train — pass the matching texts
+    router = Router.calibrate(
+        R, texts=[world.queries[i].text for i in qi_train], tokenizer=tok,
+        cfg=RouterConfig(
+            irt=IRTConfig(dim=20, epochs=sc["irt_epochs"]),
+            predictor=PredictorConfig(d_model=192, num_layers=3, num_heads=4,
+                                      d_ff=512, max_len=64),
+            n_anchors=min(200, len(qi_train) // 2),
+            predictor_epochs=sc["predictor_epochs"],
+        ))
+    cal = router.calibration
     n_lb = sc["calibration_models"]
     core_thetas = {n: np.asarray(cal["theta_calibration"][n_lb + i])
                    for i, n in enumerate(core_names)}
-    bench = Bench(world, zr, qi_train, qi_id_test, qi_ood,
+    bench = Bench(world, router, qi_train, qi_id_test, qi_ood,
                   anchor_global=qi_train[cal["anchors"]], tokenizer=tok,
                   core_thetas=core_thetas)
     _CACHE[key] = bench
@@ -136,7 +133,7 @@ def onboard_pool(bench: Bench, pool_names: Sequence[str], seed: int = 0,
     ``force_anchor_profiling`` — are profiled from anchor responses only.
     Verbosity/latency tables always calibrate on the anchors (Eq. 9, 11).
     """
-    bench.zr.pool = []
+    bench.router.reset_pool()
     world = bench.world
     for name in pool_names:
         m = world.model_index(name)
@@ -144,10 +141,10 @@ def onboard_pool(bench: Bench, pool_names: Sequence[str], seed: int = 0,
         lens = world.output_lengths([m], bench.anchor_global)[0]
         lats = world.true_latency([m], bench.anchor_global, lens[None])[0]
         mi = world.models[m]
-        cand = bench.zr.onboard_model(name, y, lens, lats, mi.price_in,
-                                      mi.price_out, mi.tokenizer)
+        bench.router.onboard(name, y, lens, lats, mi.price_in,
+                             mi.price_out, mi.tokenizer)
         if not force_anchor_profiling and name in bench.core_thetas:
-            cand.theta = bench.core_thetas[name]
+            bench.router.pool.update_theta(name, bench.core_thetas[name])
 
 
 # ---------------------------------------------------------------------------

@@ -25,7 +25,7 @@ def run(smoke: bool = False) -> List[Tuple[str, float, float]]:
     p_true, cost_true, lat_true = bench.truth(SMALL_POOL, qi)
 
     # unconstrained max-acc spend = the budget reference
-    _, sel0, diag0 = bench.zr.route(texts, policy="max_acc")
+    _, sel0, diag0 = bench.router.route(texts, policy="max_acc")
     est_cost = diag0["cost"]
     ref_spend = float(est_cost[np.asarray(sel0), np.arange(len(qi))].sum())
 
@@ -33,7 +33,7 @@ def run(smoke: bool = False) -> List[Tuple[str, float, float]]:
     qidx = np.arange(len(qi))
     for frac in (0.1, 0.25, 0.5, 0.75, 1.0):
         cap = ref_spend * frac
-        _, sel, diag = bench.zr.route(
+        _, sel, diag = bench.router.route(
             texts, policy="max_acc",
             constraints=RoutingConstraints(max_total_cost=cap))
         sel = np.asarray(sel)

@@ -39,7 +39,7 @@ def run(smoke: bool = False, rounds: int = 6) -> List[Tuple[str, float, float]]:
         onboard_pool(bench, pool)
         dt = (time.perf_counter() - t0) * 1e6
         for pol, w in EVAL_POLICIES.items():
-            _, sel, _ = bench.zr.route(texts, policy=pol)
+            _, sel, _ = bench.router.route(texts, policy=pol)
             r = evaluate_selection(bench, pool, qi, sel, w)
             rows.append((f"fig3a/{pol}/round{k}", dt, r))
     return rows

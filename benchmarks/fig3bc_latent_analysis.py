@@ -22,7 +22,7 @@ def run(smoke: bool = False) -> List[Tuple[str, float, float]]:
     bench = build_bench(smoke)
     world = bench.world
     qi = bench.qi_train
-    A, B = bench.zr.alpha, bench.zr.b
+    A, B = bench.router.artifacts.alpha, bench.router.artifacts.b
     tasks = np.array([world.queries[i].task for i in qi])
     names = sorted(set(tasks))
     # task-cluster means: (T, D)

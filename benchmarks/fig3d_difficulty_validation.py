@@ -24,11 +24,11 @@ def run(smoke: bool = False) -> List[Tuple[str, float, float]]:
     mi = list(range(10))  # core models
     lens = world.output_lengths(mi, qi).mean(0)
 
-    s_cal = np.sum(bench.zr.alpha * bench.zr.b, -1)
+    s_cal = np.sum(bench.router.artifacts.alpha * bench.router.artifacts.b, -1)
     rows = [("fig3d/spearman_calibrated_s_vs_len", 0.0,
              _spearman(s_cal, lens))]
 
-    a_hat, b_hat = bench.zr.predict_latents(bench.texts(bench.qi_id_test))
+    a_hat, b_hat = bench.router.predict_latents(bench.texts(bench.qi_id_test))
     s_hat = np.sum(a_hat * b_hat, -1)
     lens_test = world.output_lengths(mi, bench.qi_id_test).mean(0)
     rows.append(("fig3d/spearman_predicted_s_vs_len", 0.0,

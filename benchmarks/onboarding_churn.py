@@ -1,0 +1,126 @@
+"""Onboarding churn: pool mutations against a LIVE RouterEngine.
+
+The Fig. 3a evolving-pool scenario stressed end-to-end reward; this
+benchmark stresses the serving mechanics of the same churn: each cycle
+removes a model and onboards a replacement against an engine that keeps
+routing, measuring
+
+  * ``onboard``        — profiling + copy-on-write snapshot bump (θ BCE
+                         fit dominates; the registry write is O(M));
+  * ``mutate_route``   — the first ``route_batch`` after a mutation, i.e.
+                         snapshot adoption (new θ-stack device upload) on
+                         top of a steady route;
+  * ``steady_route``   — ``route_batch`` with an unchanged pool (the
+                         baseline the mutation path should approach).
+
+The tensorized ``ModelPool`` makes the mutation path cheap: the engine
+consumes ``pool.snapshot()`` directly (the canonical tensors), so there
+is no Python-list → array rebuild per version bump.  The benchmark also
+checks the row-leak fix: after C onboard/remove cycles the length table
+still has exactly one row per pool member.
+
+CSV rows: onboarding/<metric>, us_per_call, derived — and the artifact
+``BENCH_onboarding.json`` (path overridable via ``BENCH_ONBOARDING_JSON``)
+tracks the trajectory across PRs.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import List, Tuple
+
+from benchmarks.common import SMALL_POOL, build_bench, onboard_pool
+
+Q = 128
+CYCLES = 8
+
+
+def run(smoke: bool = False) -> List[Tuple[str, float, float]]:
+    import numpy as np
+
+    from repro.serving import RouterEngine, RouterEngineConfig
+
+    bench = build_bench(smoke=True)   # churn perf is scale-independent
+    world = bench.world
+    onboard_pool(bench, SMALL_POOL)
+    router = bench.router
+    engine = RouterEngine(router, RouterEngineConfig(cache_size=4 * Q))
+
+    rng = np.random.default_rng(0)
+    qi_all = np.concatenate([bench.qi_id_test, bench.qi_ood])
+    texts = [world.queries[i].text
+             for i in rng.choice(qi_all, size=Q, replace=True)]
+    futures = [m.name for m in world.models if m.released_after_cutoff]
+
+    def anchor_responses(name):
+        m = world.model_index(name)
+        y = world.sample_responses([m], bench.anchor_global, seed=m)[0]
+        lens = world.output_lengths([m], bench.anchor_global)[0]
+        lats = world.true_latency([m], bench.anchor_global, lens[None])[0]
+        return world.models[m], y, lens, lats
+
+    engine.route_batch(texts)                      # warmup (jit compile)
+    steady = []
+    for _ in range(5):
+        t0 = time.perf_counter()
+        engine.route_batch(texts)
+        steady.append(time.perf_counter() - t0)
+    # min over repeats, like mutate_route below — noise is additive, so
+    # min/min keeps the overhead ratio statistically consistent
+    steady_s = min(steady)
+
+    onboard_s, mutate_route_s = [], []
+    table_rows_max = 0
+    for k in range(CYCLES):
+        new = futures[k % len(futures)]
+        mi, y, lens, lats = anchor_responses(new)
+        t0 = time.perf_counter()
+        router.onboard(new, y, lens, lats, mi.price_in, mi.price_out,
+                       mi.tokenizer)
+        onboard_s.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        engine.route_batch(texts)                  # adopts the new snapshot
+        mutate_route_s.append(time.perf_counter() - t0)
+        snap = router.pool.snapshot()
+        table_rows_max = max(table_rows_max, snap.table.shape[0])
+        assert snap.table.shape[0] == len(snap.names), \
+            "length-table rows leaked past pool size"
+        router.remove(new)
+        engine.route_batch(texts)
+    leak_free = float(table_rows_max == len(SMALL_POOL) + 1)
+
+    results = {
+        "onboard": {"us_per_call": float(np.mean(onboard_s) * 1e6)},
+        "mutate_route": {"us_per_call": float(np.min(mutate_route_s) * 1e6)},
+        "steady_route": {"us_per_call": float(steady_s * 1e6)},
+        "snapshot_overhead": {
+            "ratio": float(np.min(mutate_route_s) / steady_s)},
+        "table_rows_leak_free": leak_free,
+        "final_pool_version": router.pool.version,
+    }
+    artifact = {
+        "workload": {"Q": Q, "M": len(SMALL_POOL), "cycles": CYCLES,
+                     "backend": "cpu"},
+        "results": results,
+    }
+    path = os.environ.get("BENCH_ONBOARDING_JSON", "BENCH_onboarding.json")
+    with open(path, "w") as f:
+        json.dump(artifact, f, indent=2)
+
+    return [
+        ("onboarding/onboard", results["onboard"]["us_per_call"],
+         1e6 / results["onboard"]["us_per_call"]),
+        ("onboarding/mutate_route", results["mutate_route"]["us_per_call"],
+         Q * 1e6 / results["mutate_route"]["us_per_call"]),
+        ("onboarding/steady_route", results["steady_route"]["us_per_call"],
+         Q * 1e6 / results["steady_route"]["us_per_call"]),
+        ("onboarding/snapshot_overhead_x", 0.0,
+         results["snapshot_overhead"]["ratio"]),
+        ("onboarding/table_rows_leak_free", 0.0, leak_free),
+    ]
+
+
+if __name__ == "__main__":
+    for name, us, val in run(smoke=True):
+        print(f"{name},{us:.1f},{val:.4f}")

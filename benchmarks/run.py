@@ -25,6 +25,7 @@ def main(argv=None) -> None:
         fig3bc_latent_analysis,
         fig3d_difficulty_validation,
         kernel_bench,
+        onboarding_churn,
         roofline,
         serving_throughput,
         table1_routing,
@@ -41,6 +42,7 @@ def main(argv=None) -> None:
         "roofline": roofline,
         "constrained": constrained_routing,
         "serving": serving_throughput,
+        "onboarding": onboarding_churn,
     }
     wanted = args.only.split(",") if args.only else list(modules)
 

@@ -1,9 +1,10 @@
-"""Serving throughput: seed ``score_queries`` loop vs the batched
+"""Serving throughput: eager reference path vs the batched
 ``RouterEngine`` (Q=256, M=8, CPU — the ISSUE-1 acceptance workload).
 
 Measures steady-state routed queries/sec (jit warmup excluded) for:
-  * ``seed``            — ``ZeroRouter.route``: per-model×query tokenization
-                          loops + eager predictor forward;
+  * ``seed``            — ``Router.route`` reference path (numerically the
+                          seed's ``ZeroRouter.route``): per-model×query
+                          tokenization loops + eager predictor forward;
   * ``engine_nocache``  — ``RouterEngine.route_batch`` with the latent
                           cache disabled (pure batched/jitted speedup);
   * ``engine_cached``   — warm LRU latent cache (repeat traffic);
@@ -69,19 +70,20 @@ def run(smoke: bool = False) -> List[Tuple[str, float, float]]:
                          "queries_per_sec": qps}
         rows.append((f"serving/{name}/Q{Q}M{M}", sec_per_batch * 1e6, qps))
 
-    zr = bench.zr
+    router = bench.router
     sel_seed, sel_eng = [None], [None]
 
     def seed_call():
-        # seed loop path: per-model×query tokenization + eager predictor
-        _, sel_seed[0], _ = zr.route(texts, policy="balanced")
+        # reference path: per-model×query tokenization + eager predictor
+        # (numerically identical to the seed's ZeroRouter.route)
+        _, sel_seed[0], _ = router.route(texts, policy="balanced")
 
-    eng_nc = RouterEngine(zr, RouterEngineConfig(cache_size=0))
+    eng_nc = RouterEngine(router, RouterEngineConfig(cache_size=0))
 
     def engine_call():
         _, sel_eng[0] = eng_nc.route_batch(texts, policy="balanced")
 
-    eng_c = RouterEngine(zr, RouterEngineConfig(cache_size=4 * Q))
+    eng_c = RouterEngine(router, RouterEngineConfig(cache_size=4 * Q))
 
     def cached_call():
         eng_c.route_batch(texts, policy="balanced")

@@ -61,7 +61,7 @@ def run(smoke: bool = False) -> List[Tuple[str, float, float]]:
             # ZeroRouter
             for pol, w in EVAL_POLICIES.items():
                 t0 = time.perf_counter()
-                _, sel, _ = bench.zr.route(texts, policy=pol)
+                _, sel, _ = bench.router.route(texts, policy=pol)
                 dt = (time.perf_counter() - t0) / len(qi) * 1e6
                 r = evaluate_selection(bench, pool, qi, sel, w)
                 rows.append((f"table1/{dom}/{pool_tag}/{pol}/zerorouter",

@@ -24,8 +24,6 @@ from benchmarks.common import (
 )
 from benchmarks.table1_routing import EVAL_POLICIES
 from repro.core.anchors import select_anchors
-from repro.core.profiling import profile_new_model, predict_accuracy
-from repro.core.latency import calibrate_latency
 
 def run(smoke: bool = False, budget: int = 80) -> List[Tuple[str, float, float]]:
     bench = build_bench(smoke)
@@ -51,38 +49,28 @@ def run(smoke: bool = False, budget: int = 80) -> List[Tuple[str, float, float]]
     m_new = world.model_index(NEW_MODEL)
 
     strategies = ["random", "diff", "disc", "task_aware", "d_optimal"]
+    art = bench.router.artifacts
     for strat in strategies:
         t0 = time.perf_counter()
         # choose budget anchors among the TRAIN queries by this strategy
         a_idx_local = np.asarray(select_anchors(
-            strat, jnp.asarray(bench.zr.alpha), jnp.asarray(bench.zr.b),
+            strat, jnp.asarray(art.alpha), jnp.asarray(art.b),
             budget, seed=0))
         anchor_global = bench.qi_train[a_idx_local]
         # onboard the standing pool with the default anchors, then the new
-        # model with the strategy-specific budget
+        # model with the strategy-specific budget: profile_model with
+        # explicit anchor_rows overrides the artifact's anchor set
         onboard_pool(bench, SMALL_POOL)
         y = world.sample_responses([m_new], anchor_global, seed=m_new)[0]
         lens = world.output_lengths([m_new], anchor_global)[0]
         lats = world.true_latency([m_new], anchor_global, lens[None])[0]
-        theta, _ = profile_new_model(
-            jnp.asarray(bench.zr.alpha[a_idx_local]),
-            jnp.asarray(bench.zr.b[a_idx_local]),
-            jnp.asarray(y), bench.zr.cfg.profiling,
-            prior_mean=bench.zr.theta_prior_mean)
+        profile = art.profile_model(y, lens, lats, anchor_rows=a_idx_local)
         mi = world.models[m_new]
-        # register manually (bypasses the default-anchor length table row)
-        row = bench.zr.length_table.add_model(
-            NEW_MODEL,
-            np.sum(bench.zr.alpha[a_idx_local] * bench.zr.b[a_idx_local], -1),
-            lens)
-        lat_p = calibrate_latency(lens[None], lats[None])
-        from repro.core.zerorouter import CandidateModel
-        bench.zr.pool.append(CandidateModel(
-            NEW_MODEL, np.asarray(theta), mi.price_in, mi.price_out,
-            mi.tokenizer, row, float(lat_p.ttft[0]), float(lat_p.tpot[0])))
+        bench.router.pool.onboard(NEW_MODEL, profile, mi.price_in,
+                                  mi.price_out, mi.tokenizer)
         dt = (time.perf_counter() - t0) * 1e6
         for pol, w in EVAL_POLICIES.items():
-            _, sel, _ = bench.zr.route(texts_eval, policy=pol)
+            _, sel, _ = bench.router.route(texts_eval, policy=pol)
             r = evaluate_selection(bench, pool, qi_eval, sel, w)
             rows.append((f"table2/{pol}/zerorouter+{strat}", dt, r))
 

@@ -2,17 +2,23 @@
 models (all post-dating the router's training) sequentially replace the
 weakest member — zero router retraining (paper Fig. 3a).
 
+Pool mutations are copy-on-write snapshot bumps on the versioned
+ModelPool: each round removes the weakest member (its θ, prices, AND its
+output-length-table row all leave with it) and onboards the next release
+from anchor responses only.
+
     PYTHONPATH=src python examples/onboard_new_model.py --rounds 5
 """
 import argparse
 import time
 
+import jax.numpy as jnp
 import numpy as np
 
-from repro.core import IRTConfig, PredictorConfig, ZeroRouter, ZeroRouterConfig, reward
+from repro.api import Router, RouterConfig
+from repro.core import IRTConfig, PredictorConfig, reward
 from repro.data import ID_TASKS, WorldConfig, build_world, calibration_pool, calibration_responses
 from repro.data.tokenizer import HashTokenizer
-import jax.numpy as jnp
 
 
 def main():
@@ -24,13 +30,15 @@ def main():
     world = build_world(WorldConfig(queries_per_task=60, n_future_models=12))
     qi = world.query_indices(ID_TASKS)
     R = calibration_responses(world, calibration_pool(world, 100), qi)
-    zr = ZeroRouter(ZeroRouterConfig(
-        irt=IRTConfig(dim=20, epochs=1000),
-        predictor=PredictorConfig(d_model=96, num_layers=2, d_ff=192, max_len=48),
-        n_anchors=100, predictor_epochs=5))
-    cal = zr.calibrate(R)
-    zr.fit_predictor([world.queries[i].text for i in qi], HashTokenizer(32_000))
-    anchors = qi[cal["anchors"]]
+    router = Router.calibrate(
+        R, texts=[world.queries[i].text for i in qi],
+        tokenizer=HashTokenizer(32_000),
+        cfg=RouterConfig(
+            irt=IRTConfig(dim=20, epochs=1000),
+            predictor=PredictorConfig(d_model=96, num_layers=2, d_ff=192,
+                                      max_len=48),
+            n_anchors=100, predictor_epochs=5))
+    anchors = qi[router.calibration["anchors"]]
 
     def onboard(name):
         m = world.model_index(name)
@@ -39,8 +47,8 @@ def main():
         lats = world.true_latency([m], anchors, lens[None])[0]
         info = world.models[m]
         t0 = time.time()
-        zr.onboard_model(name, y, lens, lats, info.price_in, info.price_out,
-                         info.tokenizer)
+        router.onboard(name, y, lens, lats, info.price_in, info.price_out,
+                       info.tokenizer)
         return time.time() - t0
 
     pool = ["xlstm-125m", "gemma3-1b", "hymba-1.5b", "paligemma-3b",
@@ -54,27 +62,32 @@ def main():
     texts = [world.queries[i].text for i in qi[:150]]
     w = (0.8, 0.1, 0.1)
     print(f"{'round':>5s} {'new model':>16s} {'onboard_s':>9s} "
-          f"{'pool reward (max-acc)':>22s}")
+          f"{'pool reward (max-acc)':>22s}  pool_version")
     for k in range(args.rounds):
         if k:
-            weakest = min(pool, key=lambda n: zr.pool[
-                [m.name for m in zr.pool].index(n)].theta.mean())
-            zr.remove_model(weakest)
+            snap = router.pool.snapshot()
+            weakest = min(snap.names,
+                          key=lambda n: snap.thetas[snap.index_of(n)].mean())
+            router.remove(weakest)
             pool.remove(weakest)
             new = future.pop()
             dt = onboard(new)
             pool.append(new)
         else:
             new, dt = "(initial pool)", 0.0
-        _, sel, _ = zr.route(texts, policy="max_acc")
-        mi = [world.model_index(m.name) for m in zr.pool]
+        _, sel, _ = router.route(texts, policy="max_acc")
+        mi = [world.model_index(n) for n in router.pool.names]
         p = world.true_prob(mi, qi[:150])
         lens = world.output_lengths(mi, qi[:150])
         r = float(reward(jnp.asarray(sel), p,
                          world.true_cost(mi, qi[:150], lens),
                          world.true_latency(mi, qi[:150], lens), w))
-        print(f"{k:5d} {new:>16s} {dt:9.2f} {r:22.4f}")
-    print("\nNOTE: every onboarding used only anchor responses — the latent "
+        print(f"{k:5d} {new:>16s} {dt:9.2f} {r:22.4f}  "
+              f"v{router.pool.version}")
+    snap = router.pool.snapshot()
+    print(f"\nlength table stayed at pool size through churn: "
+          f"{snap.table.shape[0]} rows for {len(snap.names)} models")
+    print("NOTE: every onboarding used only anchor responses — the latent "
           "space and predictor were never retrained.")
 
 

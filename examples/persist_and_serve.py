@@ -1,0 +1,91 @@
+"""Calibrate once, serve from a fresh process: the artifact workflow the
+three-layer API exists for (ISSUE 2 acceptance demo).
+
+Phase 1 (this process): build a world, calibrate a Router, onboard a
+pool, route a reference batch, and save everything to --dir.
+
+Phase 2 (a FRESH python process spawned below, or run manually with
+--open): ``Router.open(dir)`` restores artifacts + pool in milliseconds —
+no IRT, no predictor training — and must produce byte-identical routing
+selections for the same queries.
+
+    PYTHONPATH=src python examples/persist_and_serve.py
+"""
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import time
+
+from repro.api import Router
+from repro.data import OOD_TASKS, WorldConfig, build_world
+from repro.launch.serve import build_demo_router
+
+
+def _world():
+    # must match build_demo_router's world so both processes see the
+    # same queries
+    return build_world(WorldConfig(queries_per_task=40, n_future_models=4,
+                                   seed=0))
+
+
+def _ood_texts(world, n=24):
+    qi = world.query_indices(OOD_TASKS)[:n]
+    return [world.queries[i].text for i in qi]
+
+
+def calibrate_and_save(out_dir: str) -> None:
+    t0 = time.time()
+    world, router = build_demo_router(seed=0)
+    train_s = time.time() - t0
+    router.save(out_dir)
+    _, sel, _ = router.route(_ood_texts(world), policy="balanced")
+    with open(os.path.join(out_dir, "reference_sel.json"), "w") as f:
+        json.dump([int(i) for i in sel], f)
+    print(f"[calibrate] trained + onboarded in {train_s:.1f}s; "
+          f"saved artifacts + {len(router.pool)}-model pool to {out_dir}")
+
+
+def open_and_route(out_dir: str) -> None:
+    t0 = time.time()
+    router = Router.open(out_dir)
+    open_ms = (time.time() - t0) * 1e3
+    world = _world()
+    names, sel, _ = router.route(_ood_texts(world), policy="balanced")
+    with open(os.path.join(out_dir, "reference_sel.json")) as f:
+        ref = json.load(f)
+    match = list(map(int, sel)) == ref
+    print(f"[serve pid={os.getpid()}] Router.open in {open_ms:.0f}ms "
+          f"({len(router.pool)} models, zero retraining); "
+          f"selections identical to calibrating process: {match}")
+    if not match:
+        raise SystemExit("saved router diverged from the in-memory path")
+    print(f"[serve] decision mix: "
+          f"{ {n: names.count(n) for n in set(names)} }")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=None,
+                    help="artifact directory (default: a temp dir)")
+    ap.add_argument("--open", action="store_true",
+                    help="phase 2 only: open --dir and route")
+    args = ap.parse_args()
+
+    if args.open:
+        open_and_route(args.dir)
+        return
+
+    out_dir = args.dir or os.path.join(tempfile.gettempdir(),
+                                       "zerorouter_persist_demo")
+    calibrate_and_save(out_dir)
+    print("[calibrate] spawning a FRESH process to serve from the saved "
+          "artifact...")
+    subprocess.run([sys.executable, os.path.abspath(__file__),
+                    "--open", "--dir", out_dir], check=True)
+
+
+if __name__ == "__main__":
+    main()

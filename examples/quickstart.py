@@ -1,10 +1,23 @@
-"""ZeroRouter quickstart: calibrate → predict → onboard → route in ~1 min.
+"""ZeroRouter quickstart on the layered API: calibrate ONCE, persist the
+frozen artifacts + model pool, then open-and-route from anywhere.
 
     PYTHONPATH=src python examples/quickstart.py
+
+Layers (see repro/api.py):
+  RouterArtifacts — frozen calibration product (latent space, anchors,
+                    predictor, length bins); save/load via repro.checkpoint
+  ModelPool       — versioned candidate registry; canonical storage is the
+                    tensor snapshot the scorer consumes; JSON round-trip
+  Router          — the façade: calibrate / onboard / route / save / open
 """
+import os
+import tempfile
+from collections import Counter
+
 import numpy as np
 
-from repro.core import IRTConfig, PredictorConfig, ZeroRouter, ZeroRouterConfig
+from repro.api import Policy, Router, RouterConfig
+from repro.core import IRTConfig, PredictorConfig
 from repro.data import (
     ID_TASKS,
     OOD_TASKS,
@@ -23,23 +36,22 @@ def main():
     print(f"  {len(world.queries)} queries over {len(ID_TASKS)} ID + "
           f"{len(OOD_TASKS)} OOD tasks; {len(world.models)} models")
 
-    print("=== 2. calibrate the universal latent space (IRT + SVI) ===")
+    print("=== 2. calibrate ONCE: latent space (IRT/SVI) + predictor ===")
     thetas = calibration_pool(world, 100)
     R = calibration_responses(world, thetas, qi_id)
-    zr = ZeroRouter(ZeroRouterConfig(
-        irt=IRTConfig(dim=20, epochs=1200),
-        predictor=PredictorConfig(d_model=128, num_layers=2, d_ff=256,
-                                  max_len=64),
-        n_anchors=120, predictor_epochs=6))
-    cal = zr.calibrate(R)
+    router = Router.calibrate(
+        R, texts=[world.queries[i].text for i in qi_id],
+        tokenizer=HashTokenizer(32_000),
+        cfg=RouterConfig(
+            irt=IRTConfig(dim=20, epochs=1200),
+            predictor=PredictorConfig(d_model=128, num_layers=2, d_ff=256,
+                                      max_len=64),
+            n_anchors=120, predictor_epochs=6))
+    cal = router.calibration
     print(f"  -ELBO {cal['elbo_trace'][0]:.0f} -> {cal['elbo_trace'][-1]:.0f}; "
           f"{len(cal['anchors'])} D-optimal anchors selected")
 
-    print("=== 3. train the context-aware predictor (text -> latent) ===")
-    zr.fit_predictor([world.queries[i].text for i in qi_id],
-                     HashTokenizer(32_000))
-
-    print("=== 4. onboard models from anchor responses only ===")
+    print("=== 3. onboard models from anchor responses only ===")
     anchor_global = qi_id[cal["anchors"]]
     for name in ("gemma3-1b", "phi3-mini-3.8b", "qwen2-72b", "llama3-405b"):
         m = world.model_index(name)
@@ -47,18 +59,34 @@ def main():
         lens = world.output_lengths([m], anchor_global)[0]
         lats = world.true_latency([m], anchor_global, lens[None])[0]
         info = world.models[m]
-        cand = zr.onboard_model(name, y, lens, lats, info.price_in,
-                                info.price_out, info.tokenizer)
-        print(f"  onboarded {name:18s} ttft={cand.ttft:.2f}s "
-              f"tpot={cand.tpot*1e3:.1f}ms")
+        prof = router.onboard(name, y, lens, lats, info.price_in,
+                              info.price_out, info.tokenizer)
+        print(f"  onboarded {name:18s} ttft={prof.ttft:.2f}s "
+              f"tpot={prof.tpot*1e3:.1f}ms")
+    print(f"  pool: {router.pool!r}")
 
-    print("=== 5. route unseen (OOD) queries under three policies ===")
+    print("=== 4. persist: artifacts (npz) + pool (json) ===")
+    save_dir = os.path.join(tempfile.gettempdir(), "zerorouter_quickstart")
+    router.save(save_dir)
+    print(f"  saved to {save_dir}")
+
+    print("=== 5. Router.open everywhere: no retraining, identical routes ===")
+    served = Router.open(save_dir)
     qi_ood = world.query_indices(OOD_TASKS)[:12]
     texts = [world.queries[i].text for i in qi_ood]
     for policy in ("max_acc", "min_cost", "min_lat"):
-        names, sel, diag = zr.route(texts, policy=policy)
-        from collections import Counter
+        names, sel, _ = served.route(texts, policy=policy)
+        names_mem, sel_mem, _ = router.route(texts, policy=policy)
+        assert np.array_equal(sel, sel_mem), "saved router diverged!"
         print(f"  {policy:9s}: {dict(Counter(names))}")
+
+    print("=== 6. Policy objects carry weights + constraints ===")
+    pol = Policy.of("max_acc").constrained(max_total_cost=0.002)
+    names, sel, diag = served.route(texts, policy=pol)
+    spent = float(diag["cost"][sel, np.arange(len(sel))].sum())
+    print(f"  max_acc under $0.002 cap: spent ${spent:.4f}; "
+          f"mix {dict(Counter(names))}")
+
     print("\nfirst OOD query:", texts[0][:90], "...")
     print("routes to:", names[0])
 

@@ -1,4 +1,5 @@
-"""RouterEngine quickstart: batched serving over a calibrated ZeroRouter.
+"""RouterEngine quickstart: batched serving over a calibrated
+:class:`repro.api.Router`.
 
 Brings up a smoke-world router, wraps it in the jit-compiled
 :class:`~repro.serving.RouterEngine`, and walks the serving lifecycle:
@@ -22,7 +23,7 @@ from repro.serving import MicroBatcher
 
 def main():
     print("=== bring up router + engine ===")
-    world, zr, engine = build_demo_engine(seed=0)
+    world, router, engine = build_demo_engine(seed=0)
     qi = world.query_indices(OOD_TASKS)
     texts = [world.queries[i].text for i in qi[:64]]
 
@@ -41,17 +42,17 @@ def main():
 
     print("\n=== 3. onboard a model mid-serving ===")
     m = world.model_index("future-model-00")
-    anchors = world.query_indices(ID_TASKS)[zr.anchor_idx]
+    anchors = world.query_indices(ID_TASKS)[router.artifacts.anchor_idx]
     y = world.sample_responses([m], anchors)[0]
     lens = world.output_lengths([m], anchors)[0]
     lats = world.true_latency([m], anchors, lens[None])[0]
     mi = world.models[m]
-    zr.onboard_model("future-model-00", y, lens, lats, mi.price_in,
-                     mi.price_out, mi.tokenizer)
+    router.onboard("future-model-00", y, lens, lats, mi.price_in,
+                   mi.price_out, mi.tokenizer)
     n_before = len(engine.cache)
     names2, _, _ = engine.route(texts, policy="balanced")
-    print(f"pool grew to {len(zr.pool)} models; cache kept "
-          f"{len(engine.cache)}/{n_before} entries; new model won "
+    print(f"pool grew to {len(router.pool)} models (v{router.pool.version}); "
+          f"cache kept {len(engine.cache)}/{n_before} entries; new model won "
           f"{names2.count('future-model-00')} queries")
 
     print("\n=== 4. streaming singles through the micro-batcher ===")

@@ -13,8 +13,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import Router, RouterConfig
 from repro.configs import get_smoke_config
-from repro.core import IRTConfig, PredictorConfig, ZeroRouter, ZeroRouterConfig
+from repro.core import IRTConfig, PredictorConfig
 from repro.data import ID_TASKS, OOD_TASKS, WorldConfig, build_world, calibration_pool, calibration_responses
 from repro.data.tokenizer import HashTokenizer
 from repro.models import init_params
@@ -34,21 +35,23 @@ def main():
     world = build_world(WorldConfig(queries_per_task=50, n_future_models=4))
     qi_id = world.query_indices(ID_TASKS)
     R = calibration_responses(world, calibration_pool(world, 80), qi_id)
-    zr = ZeroRouter(ZeroRouterConfig(
-        irt=IRTConfig(dim=20, epochs=800),
-        predictor=PredictorConfig(d_model=96, num_layers=2, d_ff=192, max_len=48),
-        n_anchors=80, predictor_epochs=4))
-    cal = zr.calibrate(R)
-    zr.fit_predictor([world.queries[i].text for i in qi_id], HashTokenizer(32_000))
-    anchors = qi_id[cal["anchors"]]
+    router = Router.calibrate(
+        R, texts=[world.queries[i].text for i in qi_id],
+        tokenizer=HashTokenizer(32_000),
+        cfg=RouterConfig(
+            irt=IRTConfig(dim=20, epochs=800),
+            predictor=PredictorConfig(d_model=96, num_layers=2, d_ff=192,
+                                      max_len=48),
+            n_anchors=80, predictor_epochs=4))
+    anchors = qi_id[router.calibration["anchors"]]
     for name in BACKENDS:
         m = world.model_index(name)
         y = world.sample_responses([m], anchors, seed=m)[0]
         lens = world.output_lengths([m], anchors)[0]
         lats = world.true_latency([m], anchors, lens[None])[0]
         info = world.models[m]
-        zr.onboard_model(name, y, lens, lats, info.price_in, info.price_out,
-                         info.tokenizer)
+        router.onboard(name, y, lens, lats, info.price_in, info.price_out,
+                       info.tokenizer)
 
     print("=== bring up the serving backends (reduced configs on CPU) ===")
     backends = {}
@@ -61,7 +64,7 @@ def main():
     print("=== route + serve a batch of OOD requests ===")
     qi = world.query_indices(OOD_TASKS)[: args.batch]
     texts = [world.queries[i].text for i in qi]
-    names, sel, diag = zr.route(texts, policy="balanced")
+    names, sel, diag = router.route(texts, policy="balanced")
     print("  routing:", dict(Counter(names)))
 
     # group requests per backend and serve each group batched
@@ -83,7 +86,8 @@ def main():
     print(f"=== served {args.batch} requests in {dt:.1f}s "
           f"({args.batch * args.max_new / dt:.1f} tok/s aggregate) ===")
     est_cost = diag["cost"][sel, np.arange(len(sel))].sum()
-    mono_cost = diag["cost"][np.argmax([b.price_in for b in zr.pool])].sum()
+    snap = router.pool.snapshot()
+    mono_cost = diag["cost"][int(np.argmax(snap.lam_in[:, 0]))].sum()
     print(f"estimated cost ${est_cost:.4f} vs always-biggest ${mono_cost:.4f} "
           f"({100 * (1 - est_cost / mono_cost):.0f}% saved)")
 

@@ -12,8 +12,8 @@ import time
 
 import numpy as np
 
-from repro.checkpoint import save_checkpoint
-from repro.core import IRTConfig, PredictorConfig, ZeroRouter, ZeroRouterConfig
+from repro.api import Router, RouterConfig
+from repro.core import IRTConfig, PredictorConfig
 from repro.data import ID_TASKS, WorldConfig, build_world, calibration_pool, calibration_responses
 from repro.data.tokenizer import HashTokenizer
 
@@ -39,31 +39,32 @@ def main():
                 + pc.num_layers * (4 * pc.d_model ** 2 + 2 * pc.d_model * pc.d_ff))
     print(f"encoder: {pc.num_layers}L d={pc.d_model} (~{n_params/1e6:.0f}M params)")
 
-    zr = ZeroRouter(ZeroRouterConfig(
+    router = Router(cfg=RouterConfig(
         irt=IRTConfig(dim=20, epochs=2000),
         predictor=pc, n_anchors=200, predictor_epochs=args.epochs))
     t0 = time.time()
-    zr.calibrate(R)
+    router.calibrate_latent(R)
     print(f"calibration done in {time.time()-t0:.0f}s")
 
     t0 = time.time()
-    losses = zr.fit_predictor([world.queries[i].text for i in qi],
-                              HashTokenizer(pc.vocab_size), verbose=True)
+    losses = router.fit_predictor([world.queries[i].text for i in qi],
+                                  HashTokenizer(pc.vocab_size), verbose=True)
     steps = args.epochs * (len(qi) // 32)
     print(f"trained {steps} steps in {time.time()-t0:.0f}s; "
           f"loss {losses[0]:.4f} -> {losses[-1]:.4f}")
 
     # quality: predicted s_q vs ground truth on the train distribution
-    a_hat, b_hat = zr.predict_latents([world.queries[i].text for i in qi])
+    a_hat, b_hat = router.predict_latents([world.queries[i].text for i in qi])
     s_hat = np.sum(a_hat * b_hat, -1)
     s_true = np.array([world.queries[i].s_star for i in qi])
     rank = lambda x: np.argsort(np.argsort(x))
     print(f"s_q rank corr (train dist): "
           f"{np.corrcoef(rank(s_hat), rank(s_true))[0, 1]:.3f}")
 
-    save_checkpoint(args.ckpt, zr.predictor.params,
-                    {"config": str(pc), "epochs": args.epochs})
-    print(f"checkpoint saved to {args.ckpt}.npz")
+    # full artifact save: the predictor plus everything needed to route
+    # (Router.open(dir) restores it — see examples/persist_and_serve.py)
+    router.save(args.ckpt)
+    print(f"router artifacts saved to {args.ckpt}/")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,424 @@
+"""Public routing API — calibrate once, persist, serve everywhere.
+
+Three layers (ISSUE 2; mirrors how Universal Model Routing and
+LLMRouterBench ship router state):
+
+* :class:`repro.core.artifacts.RouterArtifacts` — the frozen product of
+  calibration (latent space, anchors, predictor, length-bin edges).
+  Saved / loaded through ``repro.checkpoint``.
+* :class:`repro.core.pool.ModelPool` — the versioned candidate registry
+  whose canonical storage is the tensor snapshot the scorer consumes.
+  Serialized as JSON.
+* :class:`Router` (this module) — the façade tying them together:
+  ``Router.calibrate(...)`` trains everything once, ``router.save(dir)``
+  persists both layers, ``Router.open(dir)`` brings a ready-to-route
+  router up in milliseconds in any process.
+
+Typical flow::
+
+    router = Router.calibrate(responses, texts=texts, tokenizer=tok,
+                              cfg=RouterConfig(...))
+    router.onboard("gemma3-1b", scores, lengths, latency, p_in, p_out, tok)
+    router.save("experiments/router")            # artifacts + pool
+    ...
+    router = Router.open("experiments/router")   # any process, no training
+    names, sel, diag = router.route(texts, policy="balanced")
+
+Policies are first-class: a :class:`Policy` carries the (accuracy, cost,
+latency) weights plus optional :class:`RoutingConstraints`; the string
+names ("balanced", "max_acc", ...) resolve through ``POLICIES``.
+Lifecycle errors are typed (``NotCalibratedError``, ``EmptyPoolError``)
+instead of bare asserts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import anchors as anchors_mod
+from repro.core.artifacts import ModelProfile, RouterArtifacts, RouterConfig
+from repro.core.cost import length_bin_edges
+from repro.core.errors import (
+    DuplicateModelError,
+    EmptyPoolError,
+    NotCalibratedError,
+    RouterError,
+    UnknownModelError,
+)
+from repro.core.irt import fit_irt, posterior_means, task_aware_difficulty
+from repro.core.pool import ModelPool, PoolSnapshot
+from repro.core.predictor import cluster_dimensions, train_predictor
+from repro.core.profiling import predict_accuracy
+from repro.core.router import POLICIES, RoutingConstraints
+from repro.core.router import route as core_route
+from repro.data.tokenizer import HashTokenizer, TokenizerSpec, model_token_count
+
+__all__ = [
+    "DuplicateModelError", "EmptyPoolError", "ModelPool", "ModelProfile",
+    "NotCalibratedError", "Policy", "Router", "RouterArtifacts",
+    "RouterConfig", "RouterError", "RoutingConstraints", "UnknownModelError",
+]
+
+ARTIFACTS_NAME = "artifacts"
+POOL_NAME = "pool.json"
+CONFIG_NAME = "config.json"
+
+
+def _cfg_to_json(cfg: RouterConfig) -> Dict:
+    return dataclasses.asdict(cfg)
+
+
+def _cfg_from_json(rec: Dict) -> RouterConfig:
+    from repro.core.irt import IRTConfig
+    from repro.core.predictor import PredictorConfig
+    from repro.core.profiling import ProfilingConfig
+
+    return RouterConfig(
+        irt=IRTConfig(**rec["irt"]),
+        predictor=PredictorConfig(**rec["predictor"]),
+        profiling=ProfilingConfig(**rec["profiling"]),
+        **{k: v for k, v in rec.items()
+           if k not in ("irt", "predictor", "profiling")})
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    """A routing objective: utility weights + optional hard constraints.
+
+    Replaces the seed's loose ``(policy_str, weights_tuple, constraints)``
+    triple.  ``Policy.of`` accepts a name from ``POLICIES``, an existing
+    Policy, or explicit weights."""
+    weights: Tuple[float, float, float]      # (w_accuracy, w_cost, w_latency)
+    name: str = "custom"
+    constraints: Optional[RoutingConstraints] = None
+
+    @classmethod
+    def of(cls, policy: Union[str, "Policy"] = "balanced",
+           weights: Optional[Tuple[float, float, float]] = None,
+           constraints: Optional[RoutingConstraints] = None) -> "Policy":
+        if isinstance(policy, Policy):
+            if weights is not None or constraints is not None:
+                policy = dataclasses.replace(
+                    policy,
+                    weights=policy.weights if weights is None else weights,
+                    constraints=(policy.constraints if constraints is None
+                                 else constraints))
+            return policy
+        if weights is not None:
+            return cls(tuple(weights), name="custom", constraints=constraints)
+        if policy not in POLICIES:
+            raise ValueError(
+                f"unknown policy {policy!r}; known: {sorted(POLICIES)} "
+                f"(or pass explicit weights)")
+        return cls(POLICIES[policy], name=policy, constraints=constraints)
+
+    def constrained(self, **kwargs) -> "Policy":
+        """A copy with ``RoutingConstraints(**kwargs)`` attached."""
+        return dataclasses.replace(
+            self, constraints=RoutingConstraints(**kwargs))
+
+
+class Router:
+    """Façade over (RouterArtifacts, ModelPool); see module docstring."""
+
+    def __init__(self, artifacts: Optional[RouterArtifacts] = None,
+                 pool: Optional[ModelPool] = None,
+                 cfg: RouterConfig = RouterConfig()):
+        self.cfg = cfg
+        self.artifacts = artifacts
+        # always a real (possibly empty) pool, never None: pre-calibration
+        # pool reads stay well-typed (len 0 / version 0 / UnknownModelError)
+        # instead of AttributeError-ing on None
+        self.pool = pool if pool is not None else ModelPool(
+            artifacts.bin_edges if artifacts is not None else np.array([]))
+        self.calibration: Dict[str, np.ndarray] = {}
+
+    # ------------------------------------------------------------------
+    # lifecycle guards
+    # ------------------------------------------------------------------
+    def _require_artifacts(self) -> RouterArtifacts:
+        if self.artifacts is None:
+            raise NotCalibratedError(
+                "no calibrated artifacts — run Router.calibrate(...) or "
+                "Router.open(path) first")
+        return self.artifacts
+
+    def _require_pool(self) -> PoolSnapshot:
+        self._require_artifacts()
+        snap = self.pool.snapshot()
+        if snap.n_models == 0:
+            raise EmptyPoolError(
+                "the candidate pool is empty — onboard at least one model")
+        return snap
+
+    # ------------------------------------------------------------------
+    # 1. calibration (latent space + anchors, then the predictor)
+    # ------------------------------------------------------------------
+    def _calibrate_impl(self, responses: np.ndarray, *,
+                        texts: Optional[Sequence[str]] = None,
+                        tokenizer: Optional[HashTokenizer] = None,
+                        cfg: Optional[RouterConfig] = None,
+                        mask: Optional[np.ndarray] = None,
+                        train_idx: Optional[np.ndarray] = None,
+                        verbose: bool = False) -> "Router":
+        if cfg is not None:
+            self.cfg = cfg
+        self.calibrate_latent(responses, mask=mask, verbose=verbose)
+        if texts is not None:
+            self.fit_predictor(
+                texts,
+                tokenizer or HashTokenizer(self.cfg.predictor.vocab_size),
+                train_idx=train_idx, verbose=verbose)
+        return self
+
+    class _CalibrateDispatch:
+        """``Router.calibrate(R, ...)`` constructs + calibrates a new
+        router; ``router.calibrate(R, ...)`` calibrates THAT router in
+        place (the seed's instance idiom), honoring its ``cfg``.  Both
+        return the calibrated router."""
+
+        def __get__(self, obj, objtype=None):
+            if obj is not None:
+                return obj._calibrate_impl
+
+            def calibrate(responses, *, cfg: Optional[RouterConfig] = None,
+                          **kwargs) -> "Router":
+                return objtype(cfg=cfg or RouterConfig())._calibrate_impl(
+                    responses, **kwargs)
+
+            calibrate.__doc__ = (
+                "One-shot calibration: IRT/SVI latent space + D-optimal "
+                "anchors, then (when ``texts`` is given) the context-aware "
+                "predictor.  Diagnostics (elbo trace, anchors, "
+                "calibration-pool θ) land in ``router.calibration`` — "
+                "ephemeral, not persisted.")
+            return calibrate
+
+    calibrate = _CalibrateDispatch()
+
+    def calibrate_latent(self, responses: np.ndarray,
+                         mask: Optional[np.ndarray] = None,
+                         verbose: bool = False) -> Dict[str, np.ndarray]:
+        """Fit the universal latent space and select anchors (Fig. 2 left).
+
+        Produces latent-only artifacts (models can be profiled; queries
+        cannot be characterized until :meth:`fit_predictor`).  Resets the
+        pool: any previously-onboarded model was profiled against the old
+        latent space and must be re-onboarded against the new one."""
+        cfg = self.cfg
+        post, trace = fit_irt(
+            jnp.asarray(responses), cfg.irt,
+            mask=None if mask is None else jnp.asarray(mask),
+            verbose=verbose)
+        pm = posterior_means(post)
+        alpha = np.asarray(pm["alpha"])
+        b = np.asarray(pm["b"])
+        anchor_idx = np.asarray(anchors_mod.select_anchors(
+            cfg.anchor_strategy, jnp.asarray(alpha), jnp.asarray(b),
+            cfg.n_anchors, seed=cfg.seed))
+        # anchor difficulty through the same jnp f32 path the seed used,
+        # so the length-bin edges are bit-identical to the legacy table's
+        anchor_s = np.asarray(task_aware_difficulty(
+            jnp.asarray(alpha[anchor_idx]), jnp.asarray(b[anchor_idx])))
+        art = RouterArtifacts(
+            alpha=alpha, b=b, anchor_idx=anchor_idx,
+            theta_prior_mean=np.asarray(pm["theta"]).mean(0),
+            bin_edges=length_bin_edges(anchor_s, cfg.n_length_bins),
+            length_global_mean=128.0,
+            profiling=cfg.profiling,
+        )
+        self.artifacts = art
+        # a (re-)calibration always starts a fresh pool: existing entries
+        # were profiled against the OLD latent space / bin edges and would
+        # silently mix coordinate systems — re-onboard against the new one
+        self.pool = ModelPool(art.bin_edges)
+        self.calibration = {
+            "alpha": alpha, "b": b, "anchors": anchor_idx,
+            "elbo_trace": np.asarray(trace),
+            "theta_calibration": np.asarray(pm["theta"]),
+        }
+        return self.calibration
+
+    def fit_predictor(self, texts: Sequence[str], tokenizer: HashTokenizer,
+                      train_idx: Optional[np.ndarray] = None,
+                      verbose: bool = False) -> List[float]:
+        """Train text → (α̂, b̂) on the calibrated latent targets."""
+        from repro.core.features import extract_features_batch, normalize_features
+
+        art = self._require_artifacts()
+        cfg = self.cfg
+        pc = cfg.predictor
+        idx = np.arange(len(texts)) if train_idx is None else train_idx
+        sub_texts = [texts[i] for i in idx]
+        ids, mask = tokenizer.encode_batch(sub_texts, pc.max_len)
+        feats = extract_features_batch(sub_texts)
+        feats_n, stats = normalize_features(feats)
+        clusters = cluster_dimensions(art.alpha[idx], pc.n_clusters)
+        params, losses = train_predictor(
+            jax.random.key(cfg.seed), pc, ids, mask, feats_n,
+            art.alpha[idx], art.b[idx], clusters,
+            epochs=cfg.predictor_epochs, lr=cfg.predictor_lr,
+            verbose=verbose)
+        self.artifacts = art.with_predictor(
+            pc, params, clusters, stats, TokenizerSpec.of(tokenizer))
+        return losses
+
+    def set_predictor(self, predictor,
+                      tokenizer: Union[HashTokenizer, TokenizerSpec,
+                                       None] = None) -> None:
+        """Swap in an externally-built :class:`~repro.core.predictor.Predictor`
+        (A/B testing, checkpoint restore).  Serving engines detect the swap
+        by artifacts identity and clear their latent caches.
+
+        ``tokenizer`` must be the tokenizer the predictor was trained
+        with; it may be omitted only when the artifacts already carry one
+        (an arbitrary default would silently mis-encode every query)."""
+        art = self._require_artifacts()
+        if tokenizer is not None:
+            spec = (tokenizer if isinstance(tokenizer, TokenizerSpec)
+                    else TokenizerSpec.of(tokenizer))
+        else:
+            spec = art.tokenizer_spec
+        if spec is None:
+            raise NotCalibratedError(
+                "these artifacts carry no tokenizer — pass the tokenizer "
+                "this predictor was trained with to set_predictor")
+        new = art.with_predictor(
+            predictor.cfg, predictor.params, predictor.clusters,
+            predictor.feat_stats, spec)
+        # seed the cached property so `router.predictor is predictor`
+        new.__dict__["predictor"] = predictor
+        self.artifacts = new
+
+    @property
+    def predictor(self):
+        return None if self.artifacts is None else self.artifacts.predictor
+
+    def predict_latents(self, texts: Sequence[str]):
+        return self._require_artifacts().predict_latents(texts)
+
+    # ------------------------------------------------------------------
+    # 2. pool management (zero-shot w.r.t. the router)
+    # ------------------------------------------------------------------
+    def onboard(
+        self,
+        name: str,
+        anchor_scores: np.ndarray,
+        anchor_lengths: np.ndarray,
+        anchor_latency: np.ndarray,
+        price_in: float,
+        price_out: float,
+        tokenizer: Union[HashTokenizer, TokenizerSpec],
+    ) -> ModelProfile:
+        """Profile a model from its anchor responses and register it."""
+        art = self._require_artifacts()
+        profile = art.profile_model(anchor_scores, anchor_lengths,
+                                    anchor_latency)
+        self.pool.onboard(name, profile, price_in, price_out, tokenizer)
+        return profile
+
+    def remove(self, name: str) -> None:
+        self.pool.remove(name)
+
+    def update_pricing(self, name: str, price_in: Optional[float] = None,
+                       price_out: Optional[float] = None) -> None:
+        self.pool.update_pricing(name, price_in=price_in, price_out=price_out)
+
+    def reset_pool(self) -> None:
+        """Drop every candidate (the artifacts are untouched)."""
+        self.pool = ModelPool(self._require_artifacts().bin_edges)
+
+    # ------------------------------------------------------------------
+    # 3. scoring + routing (reference path; RouterEngine is the fast path)
+    # ------------------------------------------------------------------
+    def score(self, texts: Sequence[str]
+              ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(p, cost, latency), each (M, Q), for the current pool.
+
+        This is the eager reference implementation (numerically identical
+        to the seed's ``ZeroRouter.score_queries``); batch serving goes
+        through :meth:`engine` instead."""
+        return self._score_snapshot(texts, self._require_pool())
+
+    def _score_snapshot(self, texts: Sequence[str], snap: PoolSnapshot
+                        ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Score against ONE pinned snapshot (callers that map selection
+        indices to names must reuse the same ``snap``)."""
+        art = self._require_artifacts()
+        a_hat, b_hat = art.predict_latents(texts)
+        s_hat = np.sum(a_hat * b_hat, -1)
+        p = np.asarray(predict_accuracy(jnp.asarray(snap.thetas),
+                                        jnp.asarray(a_hat),
+                                        jnp.asarray(b_hat)))
+        l_out = snap.table[:, np.digitize(s_hat, snap.edges)]
+        l_in = np.array([[model_token_count(tok, t) for t in texts]
+                         for tok in snap.tokenizers])
+        cost = (snap.lam_in * l_in + snap.lam_out * l_out) / 1e6
+        lat = snap.ttft + l_out * snap.tpot
+        return p, cost, lat
+
+    def route(self, texts: Sequence[str],
+              policy: Union[str, Policy] = "balanced",
+              weights: Optional[Tuple[float, float, float]] = None,
+              constraints: Optional[RoutingConstraints] = None):
+        """Returns (model names per query, selection indices, diagnostics)."""
+        pol = Policy.of(policy, weights, constraints)
+        snap = self._require_pool()   # pin ONE snapshot: scoring + naming
+        p, cost, lat = self._score_snapshot(texts, snap)
+        sel, diag = core_route(p, cost, lat, weights=pol.weights,
+                               constraints=pol.constraints)
+        sel = np.asarray(sel)
+        names = [snap.names[i] for i in sel]
+        diag.update({"p": p, "cost": cost, "latency": lat})
+        return names, sel, diag
+
+    def engine(self, cfg=None):
+        """A jit-compiled, cached :class:`~repro.serving.RouterEngine`
+        bound to this router."""
+        from repro.serving.engine import RouterEngine, RouterEngineConfig
+        return RouterEngine(self, cfg or RouterEngineConfig())
+
+    # ------------------------------------------------------------------
+    # persistence
+    # ------------------------------------------------------------------
+    def save(self, path: str) -> None:
+        """Persist artifacts (npz + meta json), pool (json) and the
+        calibration config under the directory ``path``; :meth:`open`
+        restores all three."""
+        import json
+
+        os.makedirs(path, exist_ok=True)
+        self._require_artifacts().save(os.path.join(path, ARTIFACTS_NAME))
+        self.pool.save(os.path.join(path, POOL_NAME))
+        with open(os.path.join(path, CONFIG_NAME), "w") as f:
+            json.dump(_cfg_to_json(self.cfg), f, indent=1)
+
+    @classmethod
+    def open(cls, path: str,
+             cfg: Optional[RouterConfig] = None) -> "Router":
+        """Bring up a ready-to-route router from :meth:`save` output —
+        milliseconds of IO, zero training.
+
+        The calibration-time :class:`RouterConfig` is restored too (so a
+        later ``fit_predictor`` / re-calibration on the opened router uses
+        the hyperparameters it was built with), unless ``cfg`` overrides
+        it."""
+        import json
+
+        art = RouterArtifacts.load(os.path.join(path, ARTIFACTS_NAME))
+        pool_path = os.path.join(path, POOL_NAME)
+        pool = (ModelPool.load(pool_path) if os.path.exists(pool_path)
+                else ModelPool(art.bin_edges))
+        if cfg is None:
+            cfg_path = os.path.join(path, CONFIG_NAME)
+            if os.path.exists(cfg_path):
+                with open(cfg_path) as f:
+                    cfg = _cfg_from_json(json.load(f))
+            else:
+                cfg = RouterConfig()
+        return cls(artifacts=art, pool=pool, cfg=cfg)

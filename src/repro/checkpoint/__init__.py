@@ -1,3 +1,9 @@
-from repro.checkpoint.ckpt import load_checkpoint, save_checkpoint
+from repro.checkpoint.ckpt import (
+    load_artifact,
+    load_checkpoint,
+    save_artifact,
+    save_checkpoint,
+)
 
-__all__ = ["load_checkpoint", "save_checkpoint"]
+__all__ = ["load_artifact", "load_checkpoint", "save_artifact",
+           "save_checkpoint"]

@@ -3,6 +3,16 @@
 Good enough for the CPU-scale artifacts in this repo (predictor weights,
 IRT posteriors, reduced-model training runs).  bfloat16 leaves are stored
 as uint16 bit patterns (npz has no native bf16).
+
+Two formats:
+
+* ``save_checkpoint`` / ``load_checkpoint`` — positional: loading needs a
+  ``like`` pytree with the same structure (training-resume style).
+* ``save_artifact`` / ``load_artifact`` — self-describing: the structure
+  (nested dicts / lists / tuples with array leaves and JSON scalars) is
+  recorded alongside the payload, so loading needs only the path.  This is
+  what ``RouterArtifacts.load`` uses: a serving process reconstructs the
+  full artifact with zero knowledge of how it was built.
 """
 from __future__ import annotations
 
@@ -51,6 +61,88 @@ def save_checkpoint(path: str, tree: PyTree, meta: dict | None = None) -> None:
              "meta": meta or {}},
             f,
         )
+
+
+# ---------------------------------------------------------------------------
+# self-describing artifacts
+# ---------------------------------------------------------------------------
+
+_SCALARS = (str, int, float, bool, type(None))
+
+
+def _encode(node: Any, payload: dict, dtypes: dict) -> Any:
+    """Recursively encode ``node`` into a JSON structure; array leaves go
+    into ``payload`` and are referenced by index."""
+    if isinstance(node, dict):
+        bad = [k for k in node if not isinstance(k, str)]
+        if bad:
+            # str(k) coercion would round-trip to a different treedef —
+            # refuse loudly at save time instead
+            raise TypeError(
+                f"save_artifact requires string dict keys; got {bad!r}")
+        return {"__dict__": {k: _encode(v, payload, dtypes)
+                             for k, v in node.items()}}
+    if isinstance(node, tuple):
+        return {"__tuple__": [_encode(v, payload, dtypes) for v in node]}
+    if isinstance(node, list):
+        return {"__list__": [_encode(v, payload, dtypes) for v in node]}
+    if isinstance(node, _SCALARS):
+        return {"__val__": node}
+    arr = np.asarray(node)
+    idx = str(len(payload))
+    if arr.dtype == jnp.bfloat16:
+        dtypes[idx] = _BF16_TAG
+        arr = arr.view(np.uint16)
+    payload[idx] = arr
+    return {"__leaf__": idx}
+
+
+def _decode(node: Any, payload, dtypes: dict) -> Any:
+    if "__dict__" in node:
+        return {k: _decode(v, payload, dtypes)
+                for k, v in node["__dict__"].items()}
+    if "__tuple__" in node:
+        return tuple(_decode(v, payload, dtypes) for v in node["__tuple__"])
+    if "__list__" in node:
+        return [_decode(v, payload, dtypes) for v in node["__list__"]]
+    if "__val__" in node:
+        return node["__val__"]
+    idx = node["__leaf__"]
+    arr = payload[idx]
+    if dtypes.get(idx) == _BF16_TAG:
+        arr = np.asarray(jnp.asarray(arr.view(jnp.bfloat16)))
+    return arr
+
+
+def save_artifact(path: str, tree: PyTree, meta: dict | None = None) -> None:
+    """Self-describing save: structure json + npz payload (see module doc).
+
+    ``tree`` may mix nested dicts / lists / tuples, JSON scalars, and
+    array-like leaves.  ``meta`` must be JSON-serializable.
+    """
+    base = _base(path)
+    os.makedirs(os.path.dirname(base) or ".", exist_ok=True)
+    payload: dict = {}
+    dtypes: dict = {}
+    structure = _encode(tree, payload, dtypes)
+    np.savez(base + ".npz", **payload)
+    with open(base + ".meta.json", "w") as f:
+        json.dump({"structure": structure, "dtypes": dtypes,
+                   "meta": meta or {}}, f)
+
+
+def load_artifact(path: str) -> tuple:
+    """Returns ``(tree, meta)`` saved by :func:`save_artifact`.
+
+    Array leaves come back as numpy arrays with their saved dtypes
+    (bfloat16 restored from bit patterns).
+    """
+    base = _base(path)
+    with open(base + ".meta.json") as f:
+        rec = json.load(f)
+    with np.load(base + ".npz") as data:
+        tree = _decode(rec["structure"], data, rec["dtypes"])
+    return tree, rec.get("meta", {})
 
 
 def load_checkpoint(path: str, like: PyTree) -> PyTree:

@@ -7,22 +7,34 @@ ILP), zerorouter (facade over the whole pipeline).
 """
 from repro.core.irt import IRTConfig, fit_irt, irt_probability, posterior_means, task_aware_difficulty
 from repro.core.anchors import greedy_doptimal, logdet_information, select_anchors
+from repro.core.errors import (
+    DuplicateModelError,
+    EmptyPoolError,
+    NotCalibratedError,
+    RouterError,
+    UnknownModelError,
+)
 from repro.core.profiling import ProfilingConfig, predict_accuracy, profile_new_model
 from repro.core.features import K_FEATURES, extract_features, extract_features_batch
 from repro.core.predictor import Predictor, PredictorConfig, cluster_dimensions, train_predictor
-from repro.core.cost import OutputLengthTable, calibrate_length_table, estimate_cost
+from repro.core.cost import OutputLengthTable, calibrate_length_table, estimate_cost, length_bin_edges
 from repro.core.latency import LatencyParams, RooflineLatencyModel, calibrate_latency
 from repro.core.router import POLICIES, RoutingConstraints, reward, route, utility_matrix
+from repro.core.artifacts import ModelProfile, RouterArtifacts, RouterConfig
+from repro.core.pool import ModelPool, PoolSnapshot
 from repro.core.zerorouter import CandidateModel, ZeroRouter, ZeroRouterConfig
 
 __all__ = [
-    "CandidateModel", "IRTConfig", "K_FEATURES", "LatencyParams",
-    "OutputLengthTable", "POLICIES", "Predictor", "PredictorConfig",
-    "ProfilingConfig", "RooflineLatencyModel", "RoutingConstraints",
-    "ZeroRouter", "ZeroRouterConfig", "calibrate_latency",
-    "calibrate_length_table", "cluster_dimensions", "estimate_cost",
-    "extract_features", "extract_features_batch", "fit_irt",
-    "greedy_doptimal", "irt_probability", "logdet_information",
+    "CandidateModel", "DuplicateModelError", "EmptyPoolError", "IRTConfig",
+    "K_FEATURES", "LatencyParams", "ModelPool", "ModelProfile",
+    "NotCalibratedError", "OutputLengthTable", "POLICIES", "PoolSnapshot",
+    "Predictor", "PredictorConfig", "ProfilingConfig",
+    "RooflineLatencyModel", "RouterArtifacts", "RouterConfig",
+    "RouterError", "RoutingConstraints", "UnknownModelError", "ZeroRouter",
+    "ZeroRouterConfig", "calibrate_latency", "calibrate_length_table",
+    "cluster_dimensions", "estimate_cost", "extract_features",
+    "extract_features_batch", "fit_irt", "greedy_doptimal",
+    "irt_probability", "length_bin_edges", "logdet_information",
     "posterior_means", "predict_accuracy", "profile_new_model", "reward",
     "route", "select_anchors", "task_aware_difficulty", "train_predictor",
     "utility_matrix",

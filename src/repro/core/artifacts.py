@@ -1,0 +1,247 @@
+"""RouterArtifacts — the frozen, persistable product of router calibration.
+
+The paper's headline claim is that the characterization of a query is
+decoupled from the profiling of a model.  This module makes that split
+concrete: everything a router learns ONCE — the universal latent space
+(α, b), the D-optimal anchor set, the trained context-aware predictor,
+the length-table binning, feature-normalization stats — lives here as an
+immutable pytree that round-trips through ``repro.checkpoint`` via
+:meth:`save` / :meth:`RouterArtifacts.load`.  Candidate models are NOT in
+here: they live in :class:`repro.core.pool.ModelPool` and can be
+onboarded / removed / re-priced against a loaded artifact without ever
+touching it.
+
+Lifecycle::
+
+    artifacts = <built by repro.api.Router.calibrate(...)>
+    artifacts.save("experiments/router")          # npz + structure json
+    ...
+    art = RouterArtifacts.load("experiments/router")   # milliseconds
+    profile = art.profile_model(scores, lengths, latency)  # zero-shot
+
+An artifact may be latent-only (no predictor yet): it can profile models
+(that needs only the anchors) but cannot characterize queries;
+:meth:`require_predictor` raises ``NotCalibratedError`` in that state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.ckpt import load_artifact, save_artifact
+from repro.core.cost import _bin_means
+from repro.core.errors import NotCalibratedError
+from repro.core.irt import IRTConfig, task_aware_difficulty
+from repro.core.latency import calibrate_latency
+from repro.core.predictor import Predictor, PredictorConfig
+from repro.core.profiling import ProfilingConfig, profile_new_model
+from repro.data.tokenizer import HashTokenizer, TokenizerSpec
+
+PyTree = Any
+
+ARTIFACT_FORMAT = "zerorouter-artifacts-v1"
+
+
+@dataclasses.dataclass(frozen=True)
+class RouterConfig:
+    """Configuration for the full calibration pipeline (IRT + anchors +
+    predictor + onboarding); consumed by ``repro.api.Router``."""
+    irt: IRTConfig = IRTConfig()
+    predictor: PredictorConfig = PredictorConfig()
+    profiling: ProfilingConfig = ProfilingConfig(l2=0.05)
+    n_anchors: int = 200
+    anchor_strategy: str = "d_optimal"
+    n_length_bins: int = 8
+    predictor_epochs: int = 40
+    predictor_lr: float = 3e-4
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelProfile:
+    """The zero-shot characterization of one candidate model, computed
+    from its anchor responses alone (paper Eq. 5, 9, 11)."""
+    theta: np.ndarray        # (D,) ability in the universal latent space
+    length_row: np.ndarray   # (K,) mean output length per difficulty bin
+    ttft: float              # seconds
+    tpot: float              # seconds per output token
+
+
+@dataclasses.dataclass(frozen=True)
+class RouterArtifacts:
+    # --- universal latent space (calibration, Fig. 2 left) ---
+    alpha: np.ndarray               # (I, D) item discriminations
+    b: np.ndarray                   # (I, D) item difficulties
+    anchor_idx: np.ndarray          # (N,) rows of alpha/b forming the anchors
+    theta_prior_mean: np.ndarray    # (D,) hierarchical prior μ_θ
+    bin_edges: np.ndarray           # (K-1,) length-table difficulty edges
+    length_global_mean: float       # fallback ℓ̂ for empty bins
+    profiling: ProfilingConfig
+    # --- context-aware predictor (optional until trained) ---
+    predictor_cfg: Optional[PredictorConfig] = None
+    predictor_params: Optional[PyTree] = None
+    clusters: Optional[Tuple[np.ndarray, ...]] = None
+    feat_stats: Optional[Tuple[np.ndarray, np.ndarray]] = None
+    tokenizer_spec: Optional[TokenizerSpec] = None
+
+    # ------------------------------------------------------------------
+    # views
+    # ------------------------------------------------------------------
+    @property
+    def latent_dim(self) -> int:
+        return self.alpha.shape[1]
+
+    @property
+    def n_anchors(self) -> int:
+        return len(self.anchor_idx)
+
+    @property
+    def has_predictor(self) -> bool:
+        return self.predictor_params is not None
+
+    @functools.cached_property
+    def anchor_s(self) -> np.ndarray:
+        """Task-aware difficulty s_q = α_qᵀb_q of the anchor set (Eq. 8)."""
+        return np.asarray(task_aware_difficulty(
+            jnp.asarray(self.alpha[self.anchor_idx]),
+            jnp.asarray(self.b[self.anchor_idx])))
+
+    @functools.cached_property
+    def predictor(self) -> Optional[Predictor]:
+        """The trained predictor, rebuilt once per artifact instance.
+
+        Cached so the serving engine can key its jitted closures and
+        latent cache on object identity: a new artifacts instance means a
+        (potentially) new predictor."""
+        if not self.has_predictor:
+            return None
+        return Predictor(self.predictor_cfg, self.predictor_params,
+                         [np.asarray(c) for c in self.clusters],
+                         self.feat_stats)
+
+    @functools.cached_property
+    def tokenizer(self) -> Optional[HashTokenizer]:
+        return (None if self.tokenizer_spec is None
+                else self.tokenizer_spec.build())
+
+    def require_predictor(self) -> Predictor:
+        if self.predictor is None:
+            raise NotCalibratedError(
+                "these artifacts are latent-only — train the context-aware "
+                "predictor (Router.calibrate with texts, or fit_predictor) "
+                "before characterizing queries")
+        return self.predictor
+
+    # ------------------------------------------------------------------
+    # query characterization
+    # ------------------------------------------------------------------
+    def predict_latents(self, texts: Sequence[str]
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+        """(α̂ (Q, D), b̂ (Q, D)) for raw query texts."""
+        from repro.core.features import extract_features_batch
+
+        pred = self.require_predictor()
+        pc = pred.cfg
+        ids, mask = self.tokenizer.encode_batch(list(texts), pc.max_len)
+        feats = extract_features_batch(list(texts))
+        a_hat, b_hat = pred(jnp.asarray(ids), jnp.asarray(mask), feats)
+        return np.asarray(a_hat), np.asarray(b_hat)
+
+    # ------------------------------------------------------------------
+    # model characterization (zero-shot onboarding primitive)
+    # ------------------------------------------------------------------
+    def profile_model(
+        self,
+        anchor_scores: np.ndarray,      # (N,) correctness on the anchors
+        anchor_lengths: np.ndarray,     # (N,) output token lengths
+        anchor_latency: np.ndarray,     # (N,) end-to-end seconds
+        anchor_rows: Optional[np.ndarray] = None,
+    ) -> ModelProfile:
+        """Characterize a new model from anchor responses only (Eq. 5/9/11).
+
+        ``anchor_rows`` overrides the artifact's anchor set with explicit
+        rows of (alpha, b) — used by the anchor-budget ablations that
+        profile on a strategy-specific query subset."""
+        rows = self.anchor_idx if anchor_rows is None else np.asarray(anchor_rows)
+        a = jnp.asarray(self.alpha[rows])
+        bb = jnp.asarray(self.b[rows])
+        theta, _ = profile_new_model(
+            a, bb, jnp.asarray(anchor_scores), self.profiling,
+            prior_mean=self.theta_prior_mean)
+        s = (self.anchor_s if anchor_rows is None
+             else np.asarray(task_aware_difficulty(a, bb)))
+        length_row = _bin_means(s, np.asarray(anchor_lengths),
+                                self.bin_edges, self.length_global_mean)
+        lat = calibrate_latency(np.asarray(anchor_lengths)[None],
+                                np.asarray(anchor_latency)[None])
+        return ModelProfile(theta=np.asarray(theta), length_row=length_row,
+                            ttft=float(lat.ttft[0]), tpot=float(lat.tpot[0]))
+
+    # ------------------------------------------------------------------
+    # persistence (repro.checkpoint self-describing format)
+    # ------------------------------------------------------------------
+    def save(self, path: str) -> None:
+        tree = {
+            "alpha": self.alpha,
+            "b": self.b,
+            "anchor_idx": self.anchor_idx,
+            "theta_prior_mean": self.theta_prior_mean,
+            "bin_edges": self.bin_edges,
+            "predictor": None if not self.has_predictor else {
+                "params": self.predictor_params,
+                "clusters": list(self.clusters),
+                "feat_mu": self.feat_stats[0],
+                "feat_sd": self.feat_stats[1],
+            },
+        }
+        meta = {
+            "format": ARTIFACT_FORMAT,
+            "length_global_mean": self.length_global_mean,
+            "profiling": dataclasses.asdict(self.profiling),
+            "predictor_cfg": (None if self.predictor_cfg is None
+                              else dataclasses.asdict(self.predictor_cfg)),
+            "tokenizer_spec": (None if self.tokenizer_spec is None
+                               else dataclasses.asdict(self.tokenizer_spec)),
+        }
+        save_artifact(path, tree, meta)
+
+    @classmethod
+    def load(cls, path: str) -> "RouterArtifacts":
+        tree, meta = load_artifact(path)
+        if meta.get("format") != ARTIFACT_FORMAT:
+            raise ValueError(
+                f"{path} is not a router-artifacts checkpoint "
+                f"(format={meta.get('format')!r})")
+        pred = tree["predictor"]
+        return cls(
+            alpha=tree["alpha"],
+            b=tree["b"],
+            anchor_idx=tree["anchor_idx"],
+            theta_prior_mean=tree["theta_prior_mean"],
+            bin_edges=tree["bin_edges"],
+            length_global_mean=float(meta["length_global_mean"]),
+            profiling=ProfilingConfig(**meta["profiling"]),
+            predictor_cfg=(None if meta["predictor_cfg"] is None
+                           else PredictorConfig(**meta["predictor_cfg"])),
+            predictor_params=(None if pred is None else jax.tree.map(
+                jnp.asarray, pred["params"])),
+            clusters=(None if pred is None else tuple(pred["clusters"])),
+            feat_stats=(None if pred is None
+                        else (pred["feat_mu"], pred["feat_sd"])),
+            tokenizer_spec=(None if meta["tokenizer_spec"] is None
+                            else TokenizerSpec(**meta["tokenizer_spec"])),
+        )
+
+    def with_predictor(self, predictor_cfg: PredictorConfig,
+                       params: PyTree, clusters: Sequence[np.ndarray],
+                       feat_stats: Tuple[np.ndarray, np.ndarray],
+                       tokenizer_spec: TokenizerSpec) -> "RouterArtifacts":
+        return dataclasses.replace(
+            self, predictor_cfg=predictor_cfg, predictor_params=params,
+            clusters=tuple(np.asarray(c) for c in clusters),
+            feat_stats=feat_stats, tokenizer_spec=tokenizer_spec)

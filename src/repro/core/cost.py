@@ -21,6 +21,13 @@ from repro.data.world import ModelInfo
 
 @dataclasses.dataclass
 class OutputLengthTable:
+    """Legacy standalone (model × complexity-bin) table.
+
+    The router no longer stores rows here: ``repro.core.pool.ModelPool``
+    keeps each model's row inline in its snapshot, so removal reclaims
+    the row by construction (the seed's append-only leak is gone).  This
+    class remains the calibration-time container (Eq. 9) and the
+    reference for ``lookup`` semantics."""
     bin_edges: np.ndarray                  # (K-1,) interior edges over s_q
     table: np.ndarray                      # (M, K) mean output length
     model_names: List[str]
@@ -56,6 +63,12 @@ def _bin_means(s: np.ndarray, lengths: np.ndarray, edges: np.ndarray,
     return out
 
 
+def length_bin_edges(anchor_s: np.ndarray, n_bins: int = 8) -> np.ndarray:
+    """Interior edges of K equal-mass bins over anchor difficulty (Eq. 9)."""
+    qs = np.quantile(anchor_s, np.linspace(0, 1, n_bins + 1)[1:-1])
+    return np.unique(qs)
+
+
 def calibrate_length_table(
     anchor_s: np.ndarray,            # (N,) task-aware difficulty of anchors
     anchor_lengths: np.ndarray,      # (M, N) ground-truth output lengths
@@ -63,8 +76,7 @@ def calibrate_length_table(
     n_bins: int = 8,
 ) -> OutputLengthTable:
     """One-time calibration (Eq. 9): K equal-mass bins over anchor s_q."""
-    qs = np.quantile(anchor_s, np.linspace(0, 1, n_bins + 1)[1:-1])
-    edges = np.unique(qs)
+    edges = length_bin_edges(anchor_s, n_bins)
     gm = float(anchor_lengths.mean()) if anchor_lengths.size else 128.0
     if anchor_lengths.shape[0] == 0:
         table = np.zeros((0, len(edges) + 1))

@@ -1,0 +1,28 @@
+"""Typed lifecycle exceptions for the public routing API.
+
+The seed guarded lifecycle ordering with bare ``assert``s; the façade
+(`repro.api`) raises these instead so callers can distinguish "you forgot
+to calibrate" from "your pool is empty" programmatically.
+"""
+from __future__ import annotations
+
+
+class RouterError(Exception):
+    """Base class for routing-API lifecycle errors."""
+
+
+class NotCalibratedError(RouterError):
+    """An operation needed calibrated artifacts (latent space and/or a
+    trained predictor) that this router does not have yet."""
+
+
+class EmptyPoolError(RouterError):
+    """Routing/scoring was requested against a pool with no models."""
+
+
+class UnknownModelError(RouterError, KeyError):
+    """A pool operation referenced a model name that is not registered."""
+
+
+class DuplicateModelError(RouterError, ValueError):
+    """``onboard`` was called with a name already in the pool."""

@@ -1,0 +1,250 @@
+"""ModelPool — a first-class, versioned registry of candidate models.
+
+The seed kept the pool as a mutable Python list of ``CandidateModel``
+objects and a shared, append-only ``OutputLengthTable``; every serving
+snapshot had to re-stack θ / price / latency vectors from the list, and a
+removed model leaked its table row forever.  Here the CANONICAL storage is
+the tensor snapshot itself:
+
+* θ stack ``(M, D)``, price / ttft / tpot vectors ``(M, 1)``, output-length
+  table rows ``(M, K)`` — exactly the shapes the scoring path consumes, so
+  ``RouterEngine`` takes the snapshot as-is with no per-request Python-list
+  rebuild;
+* ``onboard`` / ``remove`` / ``update_pricing`` / ``update_theta`` are
+  copy-on-write: each builds a fresh :class:`PoolSnapshot` with a bumped
+  version and leaves every previously handed-out snapshot immutable
+  (serving threads never see a half-mutated pool);
+* a model's table row lives inline in its snapshot row, so churn
+  (onboard → remove → onboard, the Fig. 3a evolving-pool scenario) keeps
+  the table at exactly pool size — the seed's row leak is gone by
+  construction;
+* the pool round-trips through JSON (:meth:`to_json` / :meth:`from_json`,
+  :meth:`save` / :meth:`load`): tokenizers are stateless specs and floats
+  survive JSON exactly, so a reloaded pool routes bit-identically.
+
+Model characterization (θ, length row, TTFT/TPOT) is NOT computed here —
+that is :meth:`repro.core.artifacts.RouterArtifacts.profile_model`; the
+pool only registers the resulting :class:`ModelProfile`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import json
+import os
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core.artifacts import ModelProfile
+from repro.core.errors import DuplicateModelError, UnknownModelError
+from repro.data.tokenizer import HashTokenizer, TokenizerSpec
+
+POOL_FORMAT = "zerorouter-pool-v1"
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolSnapshot:
+    """Immutable, fully-tensorized view of the pool at one version."""
+    version: int
+    names: Tuple[str, ...]
+    thetas: np.ndarray            # (M, D) f32 abilities
+    lam_in: np.ndarray            # (M, 1) f64 $/Mtok input
+    lam_out: np.ndarray           # (M, 1) f64 $/Mtok output
+    ttft: np.ndarray              # (M, 1) f64 seconds
+    tpot: np.ndarray              # (M, 1) f64 seconds/token
+    table: np.ndarray             # (M, K) f64 ℓ̂_out rows
+    edges: np.ndarray             # (K-1,) f64 difficulty bin edges
+    tokenizer_specs: Tuple[TokenizerSpec, ...]
+
+    @property
+    def n_models(self) -> int:
+        return len(self.names)
+
+    @property
+    def length_factors(self) -> np.ndarray:
+        return np.array([s.length_factor for s in self.tokenizer_specs])
+
+    @property
+    def subword_lens(self) -> Tuple[int, ...]:
+        return tuple(s.subword_len for s in self.tokenizer_specs)
+
+    @functools.cached_property
+    def tokenizers(self) -> Tuple[HashTokenizer, ...]:
+        """Per-model tokenizers rebuilt from their specs (stateless)."""
+        return tuple(s.build() for s in self.tokenizer_specs)
+
+    def index_of(self, name: str) -> int:
+        try:
+            return self.names.index(name)
+        except ValueError:
+            raise UnknownModelError(name) from None
+
+
+def _empty_snapshot(edges: np.ndarray) -> PoolSnapshot:
+    K = len(edges) + 1
+    return PoolSnapshot(
+        version=0, names=(), thetas=np.zeros((0, 0), np.float32),
+        lam_in=np.zeros((0, 1)), lam_out=np.zeros((0, 1)),
+        ttft=np.zeros((0, 1)), tpot=np.zeros((0, 1)),
+        table=np.zeros((0, K)), edges=np.asarray(edges, np.float64),
+        tokenizer_specs=())
+
+
+class ModelPool:
+    """Versioned candidate registry; all mutations are snapshot bumps."""
+
+    def __init__(self, bin_edges: np.ndarray,
+                 _snapshot: Optional[PoolSnapshot] = None):
+        self._snap = (_empty_snapshot(np.asarray(bin_edges, np.float64))
+                      if _snapshot is None else _snapshot)
+
+    # ------------------------------------------------------------------
+    # views
+    # ------------------------------------------------------------------
+    def snapshot(self) -> PoolSnapshot:
+        """The current canonical tensors — O(1), never a rebuild."""
+        return self._snap
+
+    @property
+    def version(self) -> int:
+        return self._snap.version
+
+    @property
+    def names(self) -> Tuple[str, ...]:
+        return self._snap.names
+
+    def __len__(self) -> int:
+        return self._snap.n_models
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._snap.names
+
+    def __repr__(self) -> str:
+        return (f"ModelPool(v{self.version}, "
+                f"models={list(self._snap.names)!r})")
+
+    # ------------------------------------------------------------------
+    # copy-on-write mutations
+    # ------------------------------------------------------------------
+    def _bump(self, **changes) -> None:
+        changes["version"] = self._snap.version + 1
+        self._snap = dataclasses.replace(self._snap, **changes)
+
+    def onboard(self, name: str, profile: ModelProfile,
+                price_in: float, price_out: float,
+                tokenizer: Union[HashTokenizer, TokenizerSpec]) -> int:
+        """Register a profiled model; returns its pool index."""
+        s = self._snap
+        if name in s.names:
+            raise DuplicateModelError(
+                f"model {name!r} is already in the pool — remove it first "
+                f"or use update_pricing/update_theta")
+        spec = (tokenizer if isinstance(tokenizer, TokenizerSpec)
+                else TokenizerSpec.of(tokenizer))
+        theta = np.asarray(profile.theta, np.float32)[None]
+        row = np.asarray(profile.length_row, np.float64)[None]
+        thetas = (theta if s.n_models == 0
+                  else np.concatenate([s.thetas, theta]))
+        self._bump(
+            names=s.names + (name,),
+            thetas=thetas,
+            lam_in=np.concatenate([s.lam_in, [[float(price_in)]]]),
+            lam_out=np.concatenate([s.lam_out, [[float(price_out)]]]),
+            ttft=np.concatenate([s.ttft, [[float(profile.ttft)]]]),
+            tpot=np.concatenate([s.tpot, [[float(profile.tpot)]]]),
+            table=np.concatenate([s.table, row]),
+            tokenizer_specs=s.tokenizer_specs + (spec,),
+        )
+        return len(self._snap.names) - 1
+
+    def remove(self, name: str) -> None:
+        """Drop a model; its θ / price / latency / table row all go with it
+        (nothing leaks — the table shrinks to the new pool size)."""
+        s = self._snap
+        i = s.index_of(name)
+        keep = np.arange(s.n_models) != i
+        self._bump(
+            names=tuple(n for n in s.names if n != name),
+            thetas=s.thetas[keep],
+            lam_in=s.lam_in[keep], lam_out=s.lam_out[keep],
+            ttft=s.ttft[keep], tpot=s.tpot[keep],
+            table=s.table[keep],
+            tokenizer_specs=tuple(sp for j, sp in
+                                  enumerate(s.tokenizer_specs) if j != i),
+        )
+
+    def update_pricing(self, name: str, price_in: Optional[float] = None,
+                       price_out: Optional[float] = None) -> None:
+        """Re-price a model in place (vendors change $/Mtok all the time —
+        that must not require re-profiling)."""
+        s = self._snap
+        i = s.index_of(name)
+        lam_in, lam_out = s.lam_in.copy(), s.lam_out.copy()
+        if price_in is not None:
+            lam_in[i, 0] = float(price_in)
+        if price_out is not None:
+            lam_out[i, 0] = float(price_out)
+        self._bump(lam_in=lam_in, lam_out=lam_out)
+
+    def update_theta(self, name: str, theta: np.ndarray) -> None:
+        """Swap a model's ability vector (e.g. replace an anchor-profiled θ
+        with a jointly-calibrated one when the model is on the leaderboard)."""
+        s = self._snap
+        i = s.index_of(name)
+        thetas = s.thetas.copy()
+        thetas[i] = np.asarray(theta, np.float32)
+        self._bump(thetas=thetas)
+
+    # ------------------------------------------------------------------
+    # persistence (JSON — floats round-trip exactly via repr)
+    # ------------------------------------------------------------------
+    def to_json(self) -> Dict:
+        s = self._snap
+        return {
+            "format": POOL_FORMAT,
+            "version": s.version,
+            "names": list(s.names),
+            "thetas": [[float(x) for x in row] for row in s.thetas],
+            "price_in": [float(x) for x in s.lam_in[:, 0]],
+            "price_out": [float(x) for x in s.lam_out[:, 0]],
+            "ttft": [float(x) for x in s.ttft[:, 0]],
+            "tpot": [float(x) for x in s.tpot[:, 0]],
+            "table": [[float(x) for x in row] for row in s.table],
+            "edges": [float(x) for x in s.edges],
+            "tokenizers": [dataclasses.asdict(sp) for sp in s.tokenizer_specs],
+        }
+
+    @classmethod
+    def from_json(cls, rec: Dict) -> "ModelPool":
+        if rec.get("format") != POOL_FORMAT:
+            raise ValueError(f"not a model-pool record "
+                             f"(format={rec.get('format')!r})")
+        names = tuple(rec["names"])
+        M = len(names)
+        K = len(rec["edges"]) + 1
+        snap = PoolSnapshot(
+            version=int(rec["version"]),
+            names=names,
+            thetas=(np.asarray(rec["thetas"], np.float32).reshape(M, -1)
+                    if M else np.zeros((0, 0), np.float32)),
+            lam_in=np.asarray(rec["price_in"], np.float64).reshape(M, 1),
+            lam_out=np.asarray(rec["price_out"], np.float64).reshape(M, 1),
+            ttft=np.asarray(rec["ttft"], np.float64).reshape(M, 1),
+            tpot=np.asarray(rec["tpot"], np.float64).reshape(M, 1),
+            table=np.asarray(rec["table"], np.float64).reshape(M, K),
+            edges=np.asarray(rec["edges"], np.float64),
+            tokenizer_specs=tuple(TokenizerSpec(**d)
+                                  for d in rec["tokenizers"]),
+        )
+        return cls(snap.edges, _snapshot=snap)
+
+    def save(self, path: str) -> None:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=1)
+
+    @classmethod
+    def load(cls, path: str) -> "ModelPool":
+        with open(path) as f:
+            return cls.from_json(json.load(f))

@@ -1,59 +1,39 @@
-"""ZeroRouter — the paper's full pipeline as one composable object.
+"""ZeroRouter — deprecated shim over the layered API (``repro.api``).
 
-Lifecycle (mirrors Fig. 2):
-  1. ``calibrate``: fit the universal latent space (IRT/SVI) on a
-     (models × prompts) response matrix; select the D-optimal anchor set.
-  2. ``fit_predictor``: train the context-aware predictor text → (α̂, b̂).
-  3. ``onboard_model``: zero-shot-add a candidate using only its anchor
-     responses (θ via BCE, verbosity row, TTFT/TPOT fit).  No retraining.
-  4. ``route``: predict latent coords for incoming queries, build the
-     (accuracy, cost, latency) tensors, solve the policy ILP.
+The seed's god-object held calibrated state, the candidate pool, and the
+routing loop behind one mutable class, which made the router unsaveable.
+That state now lives in :class:`repro.core.artifacts.RouterArtifacts`
+(frozen, persistable) + :class:`repro.core.pool.ModelPool` (versioned
+tensor snapshots) behind the :class:`repro.api.Router` façade.  This shim
+keeps the seed surface — ``calibrate`` / ``fit_predictor`` /
+``onboard_model`` / ``route`` and the ``pool`` list view — working on top
+of the new layers for older call sites; new code should use
+``repro.api.Router`` directly (and gains ``save``/``open`` persistence).
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Dict, List, Optional, Sequence, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import anchors as anchors_mod
-from repro.core.cost import OutputLengthTable, calibrate_length_table
-from repro.core.features import extract_features_batch, normalize_features
-from repro.core.irt import (
-    IRTConfig,
-    fit_irt,
-    posterior_means,
-    task_aware_difficulty,
-)
-from repro.core.latency import LatencyParams, calibrate_latency
-from repro.core.predictor import (
-    Predictor,
-    PredictorConfig,
-    cluster_dimensions,
-    train_predictor,
-)
-from repro.core.profiling import ProfilingConfig, predict_accuracy, profile_new_model
-from repro.core.router import RoutingConstraints, route, POLICIES
-from repro.data.tokenizer import HashTokenizer, model_token_count
+from repro.core.artifacts import RouterConfig
+from repro.core.router import RoutingConstraints
+from repro.data.tokenizer import HashTokenizer
+
+# legacy alias: the calibration config predates the façade split
+ZeroRouterConfig = RouterConfig
 
 
 @dataclasses.dataclass(frozen=True)
-class ZeroRouterConfig:
-    irt: IRTConfig = IRTConfig()
-    predictor: PredictorConfig = PredictorConfig()
-    profiling: ProfilingConfig = ProfilingConfig(l2=0.05)
-    n_anchors: int = 200
-    anchor_strategy: str = "d_optimal"
-    n_length_bins: int = 8
-    predictor_epochs: int = 40
-    predictor_lr: float = 3e-4
-    seed: int = 0
-
-
-@dataclasses.dataclass
 class CandidateModel:
+    """Legacy per-model record — a read-only VIEW of a pool snapshot row.
+
+    Frozen on purpose: the seed idiom ``cand.theta = ...`` would land on
+    this detached view and silently never reach the pool, so it now
+    raises; mutate through ``ModelPool.update_theta`` /
+    ``update_pricing`` instead."""
     name: str
     theta: np.ndarray
     price_in: float
@@ -65,149 +45,149 @@ class CandidateModel:
 
 
 class ZeroRouter:
+    """Deprecated: use :class:`repro.api.Router`."""
+
     def __init__(self, cfg: ZeroRouterConfig = ZeroRouterConfig()):
-        self.cfg = cfg
-        self.alpha: Optional[np.ndarray] = None     # (I, D) calibrated
-        self.b: Optional[np.ndarray] = None
-        self.anchor_idx: Optional[np.ndarray] = None
-        self.length_table: Optional[OutputLengthTable] = None
-        self.predictor: Optional[Predictor] = None
-        self.pool: List[CandidateModel] = []
-        # bumped on every pool mutation; serving layers key their
-        # pool-tensor snapshots on it (repro.serving.engine)
-        self.pool_version = 0
+        from repro.api import Router
+
+        warnings.warn(
+            "ZeroRouter is a compatibility shim; use repro.api.Router "
+            "(calibrate once, save/open everywhere)", DeprecationWarning,
+            stacklevel=2)
+        self._router = Router(cfg=cfg)
+
+    @property
+    def router(self):
+        """The underlying :class:`repro.api.Router` (new-API escape hatch)."""
+        return self._router
+
+    @property
+    def cfg(self) -> ZeroRouterConfig:
+        return self._router.cfg
 
     # ------------------------------------------------------------------
-    # 1. latent-space calibration + anchor selection
+    # calibrated-state views
+    # ------------------------------------------------------------------
+    def _art(self):
+        return self._router.artifacts
+
+    @property
+    def alpha(self) -> Optional[np.ndarray]:
+        return None if self._art() is None else self._art().alpha
+
+    @property
+    def b(self) -> Optional[np.ndarray]:
+        return None if self._art() is None else self._art().b
+
+    @property
+    def anchor_idx(self) -> Optional[np.ndarray]:
+        return None if self._art() is None else self._art().anchor_idx
+
+    @property
+    def theta_prior_mean(self) -> Optional[np.ndarray]:
+        return None if self._art() is None else self._art().theta_prior_mean
+
+    @property
+    def anchor_s(self) -> np.ndarray:
+        return self._art().anchor_s
+
+    @property
+    def predictor(self):
+        return self._router.predictor
+
+    @predictor.setter
+    def predictor(self, pred) -> None:
+        self._router.set_predictor(pred)
+
+    @property
+    def pool_version(self) -> int:
+        return self._router.pool.version
+
+    @property
+    def pool(self) -> Tuple[CandidateModel, ...]:
+        """The pool as the legacy sequence of records (one rebuild per
+        snapshot — repeated access is a cached read).
+
+        A TUPLE, not a list: the seed's third mutation idiom
+        (``zr.pool.append(cand)``) must fail loudly rather than land on a
+        detached view and silently never route."""
+        snap = self._router.pool.snapshot()
+        if getattr(self, "_pool_view_snap", None) is snap:
+            return self._pool_view
+        view = tuple(
+            CandidateModel(
+                name=snap.names[i], theta=snap.thetas[i],
+                price_in=float(snap.lam_in[i, 0]),
+                price_out=float(snap.lam_out[i, 0]),
+                tokenizer=snap.tokenizers[i], table_row=i,
+                ttft=float(snap.ttft[i, 0]), tpot=float(snap.tpot[i, 0]))
+            for i in range(snap.n_models)
+        )
+        self._pool_view_snap = snap
+        self._pool_view = view
+        return view
+
+    @pool.setter
+    def pool(self, value) -> None:
+        if value:
+            raise TypeError(
+                "assigning a non-empty pool list is no longer supported — "
+                "onboard through the router; `zr.pool = []` resets")
+        self._router.reset_pool()
+
+    # ------------------------------------------------------------------
+    # delegated lifecycle
     # ------------------------------------------------------------------
     def calibrate(self, responses: np.ndarray,
                   mask: Optional[np.ndarray] = None,
                   verbose: bool = False) -> Dict[str, np.ndarray]:
-        post, trace = fit_irt(jnp.asarray(responses), self.cfg.irt,
-                              mask=None if mask is None else jnp.asarray(mask),
-                              verbose=verbose)
-        pm = posterior_means(post)
-        self.alpha = np.asarray(pm["alpha"])
-        self.b = np.asarray(pm["b"])
-        self.theta_prior_mean = np.asarray(pm["theta"]).mean(0)
-        self.anchor_idx = np.asarray(anchors_mod.select_anchors(
-            self.cfg.anchor_strategy, jnp.asarray(self.alpha),
-            jnp.asarray(self.b), self.cfg.n_anchors, seed=self.cfg.seed))
-        return {"alpha": self.alpha, "b": self.b,
-                "anchors": self.anchor_idx,
-                "elbo_trace": np.asarray(trace),
-                "theta_calibration": np.asarray(pm["theta"])}
+        cal = self._router.calibrate_latent(responses, mask=mask,
+                                            verbose=verbose)
+        return {"alpha": cal["alpha"], "b": cal["b"],
+                "anchors": cal["anchors"],
+                "elbo_trace": cal["elbo_trace"],
+                "theta_calibration": cal["theta_calibration"]}
 
-    @property
-    def anchor_s(self) -> np.ndarray:
-        return np.asarray(task_aware_difficulty(
-            jnp.asarray(self.alpha[self.anchor_idx]),
-            jnp.asarray(self.b[self.anchor_idx])))
-
-    # ------------------------------------------------------------------
-    # 2. context-aware predictor
-    # ------------------------------------------------------------------
     def fit_predictor(self, texts: Sequence[str], tokenizer: HashTokenizer,
                       train_idx: Optional[np.ndarray] = None,
                       verbose: bool = False) -> List[float]:
-        assert self.alpha is not None, "calibrate() first"
-        pc = self.cfg.predictor
-        idx = np.arange(len(texts)) if train_idx is None else train_idx
-        sub_texts = [texts[i] for i in idx]
-        ids, mask = tokenizer.encode_batch(sub_texts, pc.max_len)
-        feats = extract_features_batch(sub_texts)
-        feats_n, stats = normalize_features(feats)
-        clusters = cluster_dimensions(self.alpha[idx], pc.n_clusters)
-        params, losses = train_predictor(
-            jax.random.key(self.cfg.seed), pc, ids, mask, feats_n,
-            self.alpha[idx], self.b[idx], clusters,
-            epochs=self.cfg.predictor_epochs, lr=self.cfg.predictor_lr,
-            verbose=verbose)
-        self.predictor = Predictor(pc, params, clusters, stats)
-        self._tokenizer = tokenizer
-        return losses
+        return self._router.fit_predictor(texts, tokenizer,
+                                          train_idx=train_idx,
+                                          verbose=verbose)
 
-    def predict_latents(self, texts: Sequence[str]) -> Tuple[np.ndarray, np.ndarray]:
-        """(α̂ (Q, D), b̂ (Q, D)) for raw query texts."""
-        assert self.predictor is not None, "fit_predictor() first"
-        pc = self.cfg.predictor
-        ids, mask = self._tokenizer.encode_batch(list(texts), pc.max_len)
-        feats = extract_features_batch(list(texts))
-        a_hat, b_hat = self.predictor(jnp.asarray(ids), jnp.asarray(mask), feats)
-        return np.asarray(a_hat), np.asarray(b_hat)
-
-    # ------------------------------------------------------------------
-    # 3. model onboarding (zero-shot w.r.t. the router)
-    # ------------------------------------------------------------------
-    def init_length_table(self, model_names: Sequence[str],
-                          anchor_lengths: np.ndarray) -> None:
-        self.length_table = calibrate_length_table(
-            self.anchor_s, anchor_lengths, model_names,
-            self.cfg.n_length_bins)
+    def predict_latents(self, texts: Sequence[str]
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+        return self._router.predict_latents(texts)
 
     def onboard_model(
         self,
         name: str,
-        anchor_scores: np.ndarray,        # (N,) correctness on anchors
-        anchor_lengths: np.ndarray,       # (N,) output token lengths
-        anchor_latency: np.ndarray,       # (N,) end-to-end seconds
+        anchor_scores: np.ndarray,
+        anchor_lengths: np.ndarray,
+        anchor_latency: np.ndarray,
         price_in: float,
         price_out: float,
         tokenizer: HashTokenizer,
     ) -> CandidateModel:
-        assert self.alpha is not None and self.anchor_idx is not None
-        a = jnp.asarray(self.alpha[self.anchor_idx])
-        bb = jnp.asarray(self.b[self.anchor_idx])
-        theta, _ = profile_new_model(a, bb, jnp.asarray(anchor_scores),
-                                     self.cfg.profiling,
-                                     prior_mean=getattr(self, "theta_prior_mean", None))
-        if self.length_table is None:
-            self.init_length_table([], np.zeros((0, len(self.anchor_idx))))
-        row = self.length_table.add_model(name, self.anchor_s, anchor_lengths)
-        lat = calibrate_latency(anchor_lengths[None], anchor_latency[None])
-        cand = CandidateModel(
-            name=name, theta=np.asarray(theta), price_in=price_in,
-            price_out=price_out, tokenizer=tokenizer, table_row=row,
-            ttft=float(lat.ttft[0]), tpot=float(lat.tpot[0]))
-        self.pool.append(cand)
-        self.pool_version += 1
-        return cand
+        self._router.onboard(name, anchor_scores, anchor_lengths,
+                             anchor_latency, price_in, price_out, tokenizer)
+        return self.pool[-1]
 
     def remove_model(self, name: str) -> None:
-        self.pool = [m for m in self.pool if m.name != name]
-        self.pool_version += 1
+        from repro.core.errors import UnknownModelError
 
-    # ------------------------------------------------------------------
-    # 4. routing
-    # ------------------------------------------------------------------
+        try:
+            self._router.remove(name)
+        except UnknownModelError:
+            pass    # seed semantics: removing an absent name was a no-op
+
     def score_queries(self, texts: Sequence[str]):
         """Returns (p (M, Q), cost (M, Q), latency (M, Q)) for the pool."""
-        assert self.pool, "onboard at least one model"
-        a_hat, b_hat = self.predict_latents(texts)
-        s_hat = np.sum(a_hat * b_hat, -1)
-        thetas = np.stack([m.theta for m in self.pool])
-        p = np.asarray(predict_accuracy(jnp.asarray(thetas),
-                                        jnp.asarray(a_hat), jnp.asarray(b_hat)))
-        rows = np.array([m.table_row for m in self.pool])
-        l_out = self.length_table.lookup(rows, s_hat)           # (M, Q)
-        l_in = np.array([[model_token_count(m.tokenizer, t) for t in texts]
-                         for m in self.pool])
-        lam_in = np.array([m.price_in for m in self.pool])[:, None]
-        lam_out = np.array([m.price_out for m in self.pool])[:, None]
-        cost = (lam_in * l_in + lam_out * l_out) / 1e6
-        ttft = np.array([m.ttft for m in self.pool])[:, None]
-        tpot = np.array([m.tpot for m in self.pool])[:, None]
-        lat = ttft + l_out * tpot
-        return p, cost, lat
+        return self._router.score(texts)
 
     def route(self, texts: Sequence[str], policy: str = "balanced",
               weights: Optional[Tuple[float, float, float]] = None,
               constraints: Optional[RoutingConstraints] = None):
         """Returns (model names per query, selection indices, diagnostics)."""
-        p, cost, lat = self.score_queries(texts)
-        sel, diag = route(p, cost, lat, policy=policy, weights=weights,
-                          constraints=constraints)
-        sel = np.asarray(sel)
-        names = [self.pool[i].name for i in sel]
-        diag.update({"p": p, "cost": cost, "latency": lat})
-        return names, sel, diag
+        return self._router.route(texts, policy=policy, weights=weights,
+                                  constraints=constraints)

@@ -7,6 +7,7 @@ across vendors.
 """
 from __future__ import annotations
 
+import dataclasses
 import hashlib
 import re
 from typing import List
@@ -73,6 +74,32 @@ def piece_count(text: str, subword_len: int = 12) -> int:
     for tok in _TOKEN_RE.findall(text.lower()):
         n += (len(tok) - 1) // subword_len + 1
     return n
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenizerSpec:
+    """Serializable description of a :class:`HashTokenizer`.
+
+    Hash tokenizers are stateless (vocab + salt + subword length fully
+    determine every encoding), so the spec round-trips a tokenizer through
+    JSON exactly — the rebuilt tokenizer produces identical ids and counts.
+    """
+    vocab_size: int = 32_000
+    salt: str = "base"
+    subword_len: int = 12
+    length_factor: float = 1.0
+
+    @classmethod
+    def of(cls, tok: HashTokenizer) -> "TokenizerSpec":
+        return cls(vocab_size=tok.vocab_size, salt=tok.salt,
+                   subword_len=tok.subword_len,
+                   length_factor=float(getattr(tok, "length_factor", 1.0)))
+
+    def build(self) -> HashTokenizer:
+        tok = HashTokenizer(self.vocab_size, salt=self.salt,
+                            subword_len=self.subword_len)
+        tok.length_factor = self.length_factor  # type: ignore[attr-defined]
+        return tok
 
 
 def model_tokenizer(model_name: str, vocab_size: int = 32_000,

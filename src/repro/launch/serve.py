@@ -8,13 +8,21 @@ devices, unchanged from the seed::
     PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --smoke \
         --batch 4 --prompt-len 32 --max-new 16
 
-``--mode route`` — bring up a smoke ZeroRouter, wrap it in the batched
-:class:`~repro.serving.RouterEngine`, and stream queries through the
-:class:`~repro.serving.MicroBatcher` (enqueue → coalesce → route →
-respond).  Queries come from stdin (one per line) with ``--stdin``, else a
-synthetic stream sampled from the world's OOD tasks::
+``--mode route`` — bring up a smoke :class:`repro.api.Router`, wrap it in
+the batched :class:`~repro.serving.RouterEngine`, and stream queries
+through the :class:`~repro.serving.MicroBatcher` (enqueue → coalesce →
+route → respond).  Queries come from stdin (one per line) with
+``--stdin``, else a synthetic stream sampled from the world's OOD tasks::
 
     PYTHONPATH=src python -m repro.launch.serve --mode route -n 512
+
+``--artifact DIR`` makes route mode persistent: the first run calibrates
+and saves the router there; every later run opens the saved artifacts +
+pool in milliseconds instead of re-training (calibrate once, serve
+everywhere)::
+
+    PYTHONPATH=src python -m repro.launch.serve --mode route \
+        --artifact experiments/router_demo -n 512
 """
 from __future__ import annotations
 
@@ -59,38 +67,76 @@ def _generate_main(args) -> None:
     print("sample:", out[0, :12].tolist())
 
 
-def build_demo_engine(seed: int = 0, cache_size: int = 4096):
-    """Small-world router + engine used by route mode and the example."""
-    from repro.core import (IRTConfig, PredictorConfig, ZeroRouter,
-                            ZeroRouterConfig)
+def build_demo_router(seed: int = 0):
+    """Calibrate + onboard the smoke-world demo router (the slow path that
+    ``Router.open`` makes unnecessary after the first run)."""
+    from repro.api import Router, RouterConfig
+    from repro.core import IRTConfig, PredictorConfig
     from repro.data import (ID_TASKS, WorldConfig, build_world,
                             calibration_pool, calibration_responses)
     from repro.data.tokenizer import HashTokenizer
-    from repro.serving import RouterEngine, RouterEngineConfig
 
     world = build_world(WorldConfig(queries_per_task=40, n_future_models=4,
                                     seed=seed))
     qi_id = world.query_indices(ID_TASKS)
     R = calibration_responses(world, calibration_pool(world, 80), qi_id)
-    zr = ZeroRouter(ZeroRouterConfig(
-        irt=IRTConfig(dim=20, epochs=400),
-        predictor=PredictorConfig(d_model=96, num_layers=2, d_ff=192,
-                                  max_len=48),
-        n_anchors=80, predictor_epochs=3))
-    cal = zr.calibrate(R)
-    zr.fit_predictor([world.queries[i].text for i in qi_id],
-                     HashTokenizer(32_000))
-    anchors = qi_id[cal["anchors"]]
+    router = Router.calibrate(
+        R, texts=[world.queries[i].text for i in qi_id],
+        tokenizer=HashTokenizer(32_000),
+        cfg=RouterConfig(
+            irt=IRTConfig(dim=20, epochs=400),
+            predictor=PredictorConfig(d_model=96, num_layers=2, d_ff=192,
+                                      max_len=48),
+            n_anchors=80, predictor_epochs=3))
+    anchors = qi_id[router.calibration["anchors"]]
     for name in ("gemma3-1b", "phi3-mini-3.8b", "qwen2-72b", "llama3-405b"):
         m = world.model_index(name)
         y = world.sample_responses([m], anchors, seed=m)[0]
         lens = world.output_lengths([m], anchors)[0]
         lats = world.true_latency([m], anchors, lens[None])[0]
         mi = world.models[m]
-        zr.onboard_model(name, y, lens, lats, mi.price_in, mi.price_out,
-                         mi.tokenizer)
-    engine = RouterEngine(zr, RouterEngineConfig(cache_size=cache_size))
-    return world, zr, engine
+        router.onboard(name, y, lens, lats, mi.price_in, mi.price_out,
+                       mi.tokenizer)
+    return world, router
+
+
+def build_demo_engine(seed: int = 0, cache_size: int = 4096,
+                      artifact_dir=None):
+    """Small-world router + engine used by route mode and the example.
+
+    With ``artifact_dir``: open saved artifacts when present (ms startup),
+    else calibrate once and save there for every later run."""
+    import os
+
+    from repro.api import Router
+    from repro.data import WorldConfig, build_world
+    from repro.serving import RouterEngine, RouterEngineConfig
+
+    router = None
+    if artifact_dir and os.path.isdir(artifact_dir):
+        t0 = time.time()
+        try:
+            router = Router.open(artifact_dir)
+            if len(router.pool) == 0:      # saved without onboarding —
+                raise ValueError("artifact has an empty model pool")
+        except Exception as e:  # noqa: BLE001 — partial/corrupt/unusable
+            # save: fall through to recalibration rather than crash-looping
+            router = None
+            print(f"  could not serve from {artifact_dir} ({e!r}); "
+                  f"recalibrating from scratch")
+        else:
+            print(f"  opened saved router from {artifact_dir} in "
+                  f"{(time.time() - t0) * 1e3:.0f}ms "
+                  f"({len(router.pool)} models, no retraining)")
+            world = build_world(WorldConfig(queries_per_task=40,
+                                            n_future_models=4, seed=seed))
+    if router is None:
+        world, router = build_demo_router(seed=seed)
+        if artifact_dir:
+            router.save(artifact_dir)
+            print(f"  saved router artifacts + pool to {artifact_dir}")
+    engine = RouterEngine(router, RouterEngineConfig(cache_size=cache_size))
+    return world, router, engine
 
 
 def _route_main(args) -> None:
@@ -98,7 +144,10 @@ def _route_main(args) -> None:
     from repro.serving import MicroBatcher
 
     print("=== bringing up router + engine (smoke world) ===")
-    world, zr, engine = build_demo_engine(seed=args.seed)
+    t0 = time.time()
+    world, router, engine = build_demo_engine(seed=args.seed,
+                                              artifact_dir=args.artifact)
+    print(f"  router ready in {time.time() - t0:.2f}s")
 
     if args.stdin:
         source = (line.strip() for line in sys.stdin if line.strip())
@@ -145,6 +194,10 @@ def main(argv=None):
                     help="route: read queries from stdin instead of the "
                          "synthetic OOD stream")
     ap.add_argument("-n", "--n-queries", type=int, default=256)
+    ap.add_argument("--artifact", default=None,
+                    help="route: artifact directory — open it when it "
+                         "exists (ms startup, no retraining), else "
+                         "calibrate once and save there")
     ap.add_argument("--policy", default="balanced")
     ap.add_argument("--max-batch", type=int, default=64)
     ap.add_argument("--max-wait-ms", type=float, default=2.0)

@@ -1,6 +1,8 @@
-"""Serving layer: batched, jit-compiled, cached routing over ZeroRouter.
+"""Serving layer: batched, jit-compiled, cached routing over the layered
+API (``repro.api.Router`` — artifacts + pool snapshots).
 
-engine   — RouterEngine: padded-bucket jitted scoring + LRU latent cache
+engine   — RouterEngine: padded-bucket jitted scoring + LRU latent cache,
+           consuming ``ModelPool.snapshot()`` tensors directly
 batcher  — MicroBatcher: enqueue → coalesce → route → fan back
 cache    — LatentCache: per-query latents/features/token counts (LRU)
 """

@@ -1,4 +1,5 @@
-"""RouterEngine — the batched, jit-compiled serving layer over ZeroRouter.
+"""RouterEngine — the batched, jit-compiled serving layer over the
+layered routing API (``repro.api.Router``).
 
 Lifecycle of a request batch (enqueue → coalesce → score → route →
 respond):
@@ -8,10 +9,9 @@ respond):
      :class:`~repro.serving.batcher.MicroBatcher` which coalesces
      singleton requests up to ``max_batch``/``max_wait``);
   2. **score**: texts are split into latent-cache hits and misses; misses
-     are tokenized + feature-extracted ONCE PER QUERY (the seed's
-     ``score_queries`` re-tokenized once per model × query) and pushed,
-     padded to fixed (Q, L) buckets, through one jitted program fusing
-     the encoder and prediction heads; a second jitted program fuses
+     are tokenized + feature-extracted ONCE PER QUERY and pushed, padded
+     to fixed (Q, L) buckets, through one jitted program fusing the
+     encoder and prediction heads; a second jitted program fuses
      ``predict_accuracy`` with the task-aware difficulty reduction over
      the whole batch — so XLA recompilation is bounded by the number of
      buckets, not the number of distinct batch sizes;
@@ -21,22 +21,23 @@ respond):
      normalization;
   4. **respond**: per-query decisions are fanned back in submission order.
 
-Cache invalidation rule: latent-cache entries depend only on the
-predictor, NOT on the candidate pool, so ``onboard_model`` /
-``remove_model`` merely bump ``ZeroRouter.pool_version`` — the engine
-rebuilds its pool-tensor snapshot (θ stack, price/latency vectors, output
-length table rows) on the next batch and keeps the cache.  Re-fitting the
-predictor swaps ``ZeroRouter.predictor``, which the engine detects by
-identity and responds to by clearing the cache and re-building its jitted
-closures.
+Pool consumption: the engine reads ``ModelPool.snapshot()`` — the pool's
+CANONICAL tensor storage (θ stack, price/ttft/tpot vectors, length-table
+rows).  There is no per-request Python-list rebuild: a pool mutation
+(onboard / remove / update_pricing) produces a new snapshot, and the
+engine's only per-mutation work is re-uploading the (M, D) θ stack to the
+device.  Latent-cache entries depend only on the predictor, NOT the pool,
+so they survive every pool mutation.  Swapping the predictor produces a
+new ``RouterArtifacts`` instance (they are frozen), which the engine
+detects by identity and answers by re-building its jitted closures and
+clearing the cache.
 
-Numerical contract: the engine's (p, cost, lat) match
-``ZeroRouter.score_queries`` to float32 resolution (the table / cost /
-latency stages are bit-for-bit; the jitted predictor forward differs
-from the seed's eager one by ~1 ulp), scoring is bit-for-bit invariant
-to batch-size padding and batch composition (sequence buckets are pinned
-per query), and routing selections are identical (tested in
-tests/test_serving.py).
+Numerical contract: the engine's (p, cost, lat) match ``Router.score`` to
+float32 resolution (the table / cost / latency stages are bit-for-bit;
+the jitted predictor forward differs from the eager one by ~1 ulp),
+scoring is bit-for-bit invariant to batch-size padding and batch
+composition (sequence buckets are pinned per query), and routing
+selections are identical (tested in tests/test_serving.py).
 """
 from __future__ import annotations
 
@@ -47,12 +48,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.errors import EmptyPoolError, NotCalibratedError
 from repro.core.features import extract_features_batch
+from repro.core.pool import PoolSnapshot
 from repro.core.predictor import apply_heads, encode
 from repro.core.profiling import predict_accuracy
-from repro.core.router import POLICIES, RoutingConstraints
+from repro.core.router import RoutingConstraints
 from repro.core.router import route as core_route
-from repro.core.zerorouter import ZeroRouter
 from repro.data.tokenizer import piece_count
 from repro.kernels import ops
 from repro.serving.cache import CacheEntry, LatentCache
@@ -62,50 +64,49 @@ from repro.serving.cache import CacheEntry, LatentCache
 class RouterEngineConfig:
     max_batch: int = 256          # largest padded bucket / coalesce limit
     min_bucket: int = 8           # smallest padded bucket
-    cache_size: int = 4096        # 0 disables the latent cache
+    cache_size: int = 4096       # 0 disables the latent cache
     seq_multiple: int = 8         # sequence-length bucket granularity
     forward_chunk: int = 64       # queries per predictor-forward chunk
     use_pallas: Optional[bool] = None   # None → Pallas on TPU only
 
 
-@dataclasses.dataclass
-class _PoolTensors:
-    """Immutable snapshot of the candidate pool, vectorized for scoring."""
-    version: int
-    names: Tuple[str, ...]
-    thetas: jnp.ndarray           # (M, D) f32, device-resident
-    lam_in: np.ndarray            # (M, 1) f64 $/Mtok input
-    lam_out: np.ndarray           # (M, 1) f64 $/Mtok output
-    ttft: np.ndarray              # (M, 1) f64 seconds
-    tpot: np.ndarray              # (M, 1) f64 seconds/token
-    table: np.ndarray             # (M, K) f64 ℓ̂_out rows (pre-gathered)
-    edges: np.ndarray             # (K-1,) f64 difficulty bin edges
-    length_factors: np.ndarray    # (M,) f64 tokenizer length factors
-    subword_lens: Tuple[int, ...]   # per-model tokenizer subword length
+class _DevicePool:
+    """A pool snapshot plus its device-resident θ stack.
 
-    @property
-    def n_models(self) -> int:
-        return len(self.names)
+    Everything except ``thetas`` delegates straight to the snapshot — the
+    snapshot already IS the scoring-shaped tensors."""
+
+    def __init__(self, snap: PoolSnapshot):
+        self.snap = snap
+        self.thetas = jnp.asarray(snap.thetas, jnp.float32)
+
+    def __getattr__(self, name):
+        return getattr(self.snap, name)
 
 
 class RouterEngine:
-    def __init__(self, zr: ZeroRouter,
-                 cfg: RouterEngineConfig = RouterEngineConfig()):
-        assert zr.predictor is not None, "fit_predictor() before serving"
-        self.zr = zr
+    def __init__(self, router, cfg: RouterEngineConfig = RouterEngineConfig()):
+        # accept the deprecated ZeroRouter shim transparently
+        self.router = getattr(router, "router", router)
+        if self.router.artifacts is None or not self.router.artifacts.has_predictor:
+            raise NotCalibratedError(
+                "RouterEngine needs fully-calibrated artifacts (latent "
+                "space + predictor) — Router.calibrate(...) or "
+                "Router.open(path) first")
         self.cfg = cfg
         self.cache: Optional[LatentCache] = (
             LatentCache(cfg.cache_size) if cfg.cache_size > 0 else None)
-        self._pool_snapshot: Optional[_PoolTensors] = None
-        self._predictor_ref = None
+        self._device_pool: Optional[_DevicePool] = None
+        self._artifacts_ref = None
         self._build_jits()
 
     # ------------------------------------------------------------------
-    # jitted closures (rebuilt when the predictor object is swapped)
+    # jitted closures (rebuilt when the artifacts object is swapped)
     # ------------------------------------------------------------------
     def _build_jits(self) -> None:
-        pred = self.zr.predictor
-        self._predictor_ref = pred
+        art = self.router.artifacts
+        self._artifacts_ref = art
+        pred = art.require_predictor()
         pc = pred.cfg
         params = pred.params
         clusters = pred.clusters
@@ -128,35 +129,21 @@ class RouterEngine:
     # ------------------------------------------------------------------
     # pool snapshot
     # ------------------------------------------------------------------
-    def _pool(self) -> _PoolTensors:
-        zr = self.zr
-        assert zr.pool, "onboard at least one model"
-        snap = self._pool_snapshot
-        if snap is not None and snap.version == zr.pool_version:
-            return snap
-        rows = np.array([m.table_row for m in zr.pool])
-        snap = _PoolTensors(
-            version=zr.pool_version,
-            names=tuple(m.name for m in zr.pool),
-            thetas=jnp.asarray(np.stack([m.theta for m in zr.pool]),
-                               jnp.float32),
-            lam_in=np.array([m.price_in for m in zr.pool])[:, None],
-            lam_out=np.array([m.price_out for m in zr.pool])[:, None],
-            ttft=np.array([m.ttft for m in zr.pool])[:, None],
-            tpot=np.array([m.tpot for m in zr.pool])[:, None],
-            table=zr.length_table.table[rows],
-            edges=zr.length_table.bin_edges,
-            length_factors=np.array([
-                float(getattr(m.tokenizer, "length_factor", 1.0))
-                for m in zr.pool]),
-            subword_lens=tuple(m.tokenizer.subword_len for m in zr.pool),
-        )
-        self._pool_snapshot = snap
-        return snap
+    def _pool(self) -> _DevicePool:
+        snap = self.router.pool.snapshot()
+        if snap.n_models == 0:
+            raise EmptyPoolError("onboard at least one model before serving")
+        dev = self._device_pool
+        if dev is not None and dev.snap is snap:
+            return dev
+        dev = _DevicePool(snap)
+        self._device_pool = dev
+        return dev
 
     def _check_predictor(self) -> None:
-        if self.zr.predictor is not self._predictor_ref:
-            # re-fit predictor → stale latents; rebuild closures + cache
+        if self.router.artifacts is not self._artifacts_ref:
+            # artifacts swapped (re-fit / replaced predictor) → stale
+            # latents; rebuild closures + cache
             self._build_jits()
             if self.cache is not None:
                 self.cache.clear()
@@ -189,7 +176,7 @@ class RouterEngine:
         paddings can differ by ~1 ulp; pinning the bucket per query makes
         every score reproducible across batch compositions (tested in
         tests/test_serving.py)."""
-        pc = self.zr.predictor.cfg
+        pc = self.router.artifacts.predictor.cfg
         m = self.cfg.seq_multiple
         b = np.minimum((lens + m - 1) // m * m, pc.max_len)
         return np.maximum(b, min(m, pc.max_len)).astype(int)
@@ -198,16 +185,16 @@ class RouterEngine:
                          subword_lens: Sequence[int]) -> List[CacheEntry]:
         """Tokenize + featurize + predict latents for cache-miss texts.
 
-        Tokenization and feature extraction run once per query (the seed's
-        ``score_queries`` re-tokenized once per model × query).  Queries
+        Tokenization and feature extraction run once per query.  Queries
         are grouped into sequence-length buckets — most traffic is much
         shorter than ``max_len``, and the encoder is O(L²) — and each
         group runs through the jitted encoder+heads program over a padded
         (Q_bucket, L_bucket) shape, so compilation count is bounded by
         #Q-buckets × #L-buckets."""
-        pc = self.zr.predictor.cfg
+        art = self.router.artifacts
+        pc = art.predictor.cfg
         n = len(texts)
-        ids, mask = self.zr._tokenizer.encode_batch(list(texts), pc.max_len)
+        ids, mask = art.tokenizer.encode_batch(list(texts), pc.max_len)
         feats = extract_features_batch(list(texts))
         lens = mask.sum(1).astype(int)
         seq_b = self._seq_buckets(lens)
@@ -238,7 +225,7 @@ class RouterEngine:
             for i, t in enumerate(texts)
         ]
 
-    def _latent_batch(self, texts: Sequence[str], pool: _PoolTensors
+    def _latent_batch(self, texts: Sequence[str], pool: _DevicePool
                       ) -> Tuple[np.ndarray, np.ndarray, List[CacheEntry]]:
         """Returns (a_hat (Q, D), b_hat (Q, D), per-query cache entries)."""
         entries: List[Optional[CacheEntry]] = [
@@ -263,7 +250,7 @@ class RouterEngine:
 
     def _input_lengths(self, texts: Sequence[str],
                        entries: List[CacheEntry],
-                       pool: _PoolTensors) -> np.ndarray:
+                       pool: _DevicePool) -> np.ndarray:
         """ℓ_in (M, Q): one tokenization pass per query, scaled per model.
 
         Hash tokenizers produce salt-independent piece counts, so the
@@ -284,13 +271,19 @@ class RouterEngine:
 
     def score_queries(self, texts: Sequence[str]
                       ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-        """Batched equivalent of ``ZeroRouter.score_queries``: (p, cost,
-        latency), each (M, Q).  Chunks internally at ``max_batch``."""
+        """Batched equivalent of ``Router.score``: (p, cost, latency),
+        each (M, Q).  Chunks internally at ``max_batch``."""
         self._check_predictor()
-        pool = self._pool()
+        return self._score(texts, self._pool())
+
+    def _score(self, texts: Sequence[str], pool: _DevicePool
+               ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Score against ONE pinned snapshot — callers that also map
+        selection indices back to names must reuse the same ``pool`` so a
+        concurrent mutation cannot shift indices mid-request."""
         mb = self.cfg.max_batch
         if len(texts) > mb:
-            parts = [self.score_queries(texts[i: i + mb])
+            parts = [self._score(texts[i: i + mb], pool)
                      for i in range(0, len(texts), mb)]
             return tuple(np.concatenate([p[k] for p in parts], axis=1)
                          for k in range(3))
@@ -304,7 +297,7 @@ class RouterEngine:
         p = np.asarray(p_pad)[:, :Q]
         s_hat = np.asarray(s_pad)[:Q]
 
-        # tables in f64 numpy — bit-for-bit with the seed's loop path
+        # tables in f64 numpy — bit-for-bit with the reference path
         l_out = pool.table[:, np.digitize(s_hat, pool.edges)]
         l_in = self._input_lengths(texts, entries, pool)
         cost = (pool.lam_in * l_in + pool.lam_out * l_out) / 1e6
@@ -322,12 +315,17 @@ class RouterEngine:
     def route(self, texts: Sequence[str], policy: str = "balanced",
               weights: Optional[Tuple[float, float, float]] = None,
               constraints: Optional[RoutingConstraints] = None):
-        """Drop-in for ``ZeroRouter.route`` (names, sel, diagnostics)."""
-        p, cost, lat = self.score_queries(texts)
-        sel, diag = core_route(p, cost, lat, policy=policy, weights=weights,
-                               constraints=constraints)
+        """Drop-in for ``Router.route`` (names, sel, diagnostics)."""
+        from repro.api import Policy
+
+        pol = Policy.of(policy, weights, constraints)
+        self._check_predictor()
+        pool = self._pool()      # pin ONE snapshot for scoring AND naming
+        p, cost, lat = self._score(texts, pool)
+        sel, diag = core_route(p, cost, lat, weights=pol.weights,
+                               constraints=pol.constraints)
         sel = np.asarray(sel)
-        names = [self._pool().names[i] for i in sel]
+        names = [pool.names[i] for i in sel]
         diag.update({"p": p, "cost": cost, "latency": lat})
         return names, sel, diag
 
@@ -343,13 +341,22 @@ class RouterEngine:
         batch — beyond ``max_batch`` the kernel runs unpadded (one compile
         per bulk shape) rather than splitting the normalization.
 
+        A :class:`~repro.api.Policy` carrying constraints is honored by
+        falling through to the Lagrangian path in :meth:`route` (the
+        fused kernel is unconstrained-only).
+
         Returns (model names (Q,), selection indices (Q,))."""
+        from repro.api import Policy
+
+        pol = Policy.of(policy, weights)
+        if pol.constraints is not None:
+            names, sel, _ = self.route(texts, policy=pol)
+            return names, sel
         self._check_predictor()
-        pool = self._pool()
+        pool = self._pool()      # pin ONE snapshot for scoring AND naming
         Q = len(texts)
-        p, cost, lat = self.score_queries(texts)
-        w = np.asarray(weights if weights is not None else POLICIES[policy],
-                       np.float32)
+        p, cost, lat = self._score(texts, pool)
+        w = np.asarray(pol.weights, np.float32)
         if Q > self.cfg.max_batch:
             bucket, valid = Q, None
         else:

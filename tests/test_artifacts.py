@@ -1,0 +1,333 @@
+"""The layered API (ISSUE 2): RouterArtifacts persistence, ModelPool
+copy-on-write snapshots + JSON round-trip, the repro.api façade's typed
+lifecycle errors, and churn hygiene (no length-table row leak)."""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    EmptyPoolError,
+    NotCalibratedError,
+    Policy,
+    Router,
+    RouterConfig,
+    UnknownModelError,
+)
+from repro.core import IRTConfig, PredictorConfig
+from repro.core.artifacts import RouterArtifacts
+from repro.core.errors import DuplicateModelError
+from repro.core.pool import ModelPool
+from repro.core.router import POLICIES, RoutingConstraints
+from repro.data import ID_TASKS, OOD_TASKS
+from repro.data.tokenizer import HashTokenizer, TokenizerSpec, model_tokenizer
+
+
+@pytest.fixture(scope="module")
+def demo():
+    """A small calibrated router with a 4-model pool + OOD eval texts."""
+    from repro.launch.serve import build_demo_router
+
+    world, router = build_demo_router(seed=0)
+    qi = world.query_indices(OOD_TASKS)
+    texts = [world.queries[i].text for i in qi[:24]]
+    return world, router, texts
+
+
+# ---------------------------------------------------------------------------
+# artifact round-trips
+# ---------------------------------------------------------------------------
+
+
+def test_artifacts_roundtrip_bitwise(demo, tmp_path):
+    """save → load reproduces every array bit-for-bit and the configs."""
+    _, router, _ = demo
+    art = router.artifacts
+    art.save(str(tmp_path / "art"))
+    back = RouterArtifacts.load(str(tmp_path / "art"))
+    np.testing.assert_array_equal(art.alpha, back.alpha)
+    np.testing.assert_array_equal(art.b, back.b)
+    np.testing.assert_array_equal(art.anchor_idx, back.anchor_idx)
+    np.testing.assert_array_equal(art.bin_edges, back.bin_edges)
+    np.testing.assert_array_equal(art.theta_prior_mean, back.theta_prior_mean)
+    assert art.predictor_cfg == back.predictor_cfg
+    assert art.profiling == back.profiling
+    assert art.tokenizer_spec == back.tokenizer_spec
+    for c1, c2 in zip(art.clusters, back.clusters):
+        np.testing.assert_array_equal(c1, c2)
+    leaves1 = [np.asarray(x) for x in _leaves(art.predictor_params)]
+    leaves2 = [np.asarray(x) for x in _leaves(back.predictor_params)]
+    assert len(leaves1) == len(leaves2)
+    for a, b in zip(leaves1, leaves2):
+        np.testing.assert_array_equal(a, b)
+
+
+def _leaves(tree):
+    import jax
+    return jax.tree_util.tree_leaves(tree)
+
+
+def test_router_save_open_identical_routing(demo, tmp_path):
+    """The acceptance contract: a saved-and-reopened router produces
+    identical selections and bit-identical cost/latency tensors."""
+    _, router, texts = demo
+    router.save(str(tmp_path / "router"))
+    back = Router.open(str(tmp_path / "router"))
+    assert back.pool.names == router.pool.names
+    assert back.pool.version == router.pool.version
+    for pol in POLICIES:
+        n1, s1, d1 = router.route(texts, policy=pol)
+        n2, s2, d2 = back.route(texts, policy=pol)
+        np.testing.assert_array_equal(s1, s2)
+        assert n1 == n2
+        np.testing.assert_array_equal(d1["cost"], d2["cost"])
+        np.testing.assert_array_equal(d1["latency"], d2["latency"])
+        np.testing.assert_array_equal(d1["p"], d2["p"])
+
+
+def test_router_open_restores_config(demo, tmp_path):
+    """Retraining on an opened router must use the calibration-time
+    hyperparameters, not silent defaults."""
+    _, router, _ = demo
+    router.save(str(tmp_path / "r"))
+    back = Router.open(str(tmp_path / "r"))
+    assert back.cfg == router.cfg
+    assert back.cfg.predictor.d_model == 96      # the demo's non-default
+    # explicit override still wins
+    forced = Router.open(str(tmp_path / "r"), cfg=RouterConfig())
+    assert forced.cfg == RouterConfig()
+
+
+def test_set_predictor_requires_tokenizer_on_latent_only():
+    rng = np.random.default_rng(0)
+    art = RouterArtifacts(
+        alpha=np.abs(rng.normal(size=(30, 4))), b=rng.normal(size=(30, 4)),
+        anchor_idx=np.arange(10), theta_prior_mean=np.zeros(4),
+        bin_edges=np.array([-0.5, 0.5]), length_global_mean=128.0,
+        profiling=RouterConfig().profiling)
+    r = Router(artifacts=art)
+    fake = type("P", (), {"cfg": PredictorConfig(), "params": {},
+                          "clusters": [], "feat_stats": (0, 1)})()
+    with pytest.raises(NotCalibratedError, match="tokenizer"):
+        r.set_predictor(fake)
+
+
+def test_pool_json_roundtrip_bitwise(demo):
+    _, router, _ = demo
+    pool = router.pool
+    back = ModelPool.from_json(json.loads(json.dumps(pool.to_json())))
+    s1, s2 = pool.snapshot(), back.snapshot()
+    assert s1.names == s2.names and s1.version == s2.version
+    np.testing.assert_array_equal(s1.thetas, s2.thetas)
+    np.testing.assert_array_equal(s1.table, s2.table)
+    np.testing.assert_array_equal(s1.edges, s2.edges)
+    np.testing.assert_array_equal(s1.lam_in, s2.lam_in)
+    np.testing.assert_array_equal(s1.lam_out, s2.lam_out)
+    np.testing.assert_array_equal(s1.ttft, s2.ttft)
+    np.testing.assert_array_equal(s1.tpot, s2.tpot)
+    assert s1.tokenizer_specs == s2.tokenizer_specs
+
+
+def test_latent_only_artifacts_roundtrip(tmp_path):
+    """Artifacts without a predictor persist and refuse query work."""
+    rng = np.random.default_rng(0)
+    art = RouterArtifacts(
+        alpha=np.abs(rng.normal(size=(30, 4))), b=rng.normal(size=(30, 4)),
+        anchor_idx=np.arange(10), theta_prior_mean=np.zeros(4),
+        bin_edges=np.array([-0.5, 0.5]), length_global_mean=128.0,
+        profiling=dataclasses.replace(RouterConfig().profiling, steps=20))
+    art.save(str(tmp_path / "latent"))
+    back = RouterArtifacts.load(str(tmp_path / "latent"))
+    assert not back.has_predictor
+    with pytest.raises(NotCalibratedError):
+        back.predict_latents(["hi"])
+    # but model profiling works (characterization is decoupled)
+    prof = back.profile_model(rng.random(10), rng.integers(1, 99, 10),
+                              rng.random(10))
+    assert prof.theta.shape == (4,) and prof.length_row.shape == (3,)
+
+
+# ---------------------------------------------------------------------------
+# ModelPool semantics
+# ---------------------------------------------------------------------------
+
+
+def _profile(D=4, K=3, seed=0):
+    from repro.core.artifacts import ModelProfile
+    rng = np.random.default_rng(seed)
+    return ModelProfile(theta=rng.normal(size=D).astype(np.float32),
+                        length_row=rng.uniform(10, 200, K),
+                        ttft=0.2, tpot=0.01)
+
+
+def test_pool_copy_on_write_and_versions():
+    pool = ModelPool(np.array([-0.5, 0.5]))
+    assert len(pool) == 0 and pool.version == 0
+    pool.onboard("a", _profile(seed=1), 1.0, 2.0, TokenizerSpec(1000))
+    snap1 = pool.snapshot()
+    pool.onboard("b", _profile(seed=2), 3.0, 4.0,
+                 TokenizerSpec(1000, salt="b", length_factor=1.1))
+    snap2 = pool.snapshot()
+    # handed-out snapshots are immutable; versions are monotone
+    assert snap1.names == ("a",) and snap2.names == ("a", "b")
+    assert (snap1.version, snap2.version) == (1, 2)
+    assert snap1.thetas.shape == (1, 4) and snap2.thetas.shape == (2, 4)
+    pool.update_pricing("a", price_out=9.0)
+    assert pool.snapshot().lam_out[0, 0] == 9.0
+    assert snap2.lam_out[0, 0] == 2.0          # old snapshot untouched
+    pool.remove("a")
+    assert pool.names == ("b",) and pool.version == 4
+    np.testing.assert_array_equal(pool.snapshot().thetas, snap2.thetas[1:])
+
+
+def test_pool_churn_reclaims_table_rows():
+    """onboard → remove → onboard cycles keep the table at pool size
+    (the seed's OutputLengthTable leaked one row per removed model)."""
+    pool = ModelPool(np.array([0.0]))
+    pool.onboard("keep", _profile(K=2), 1, 1, TokenizerSpec(100))
+    for k in range(10):
+        pool.onboard(f"churn{k}", _profile(K=2, seed=k), 1, 1,
+                     TokenizerSpec(100))
+        assert pool.snapshot().table.shape == (2, 2)
+        pool.remove(f"churn{k}")
+    snap = pool.snapshot()
+    assert snap.table.shape == (1, 2)
+    assert snap.version == 21
+
+
+def test_pool_typed_errors():
+    pool = ModelPool(np.array([0.0]))
+    with pytest.raises(UnknownModelError):
+        pool.remove("ghost")
+    with pytest.raises(UnknownModelError):
+        pool.update_pricing("ghost", price_in=1.0)
+    pool.onboard("m", _profile(K=2), 1, 1, TokenizerSpec(100))
+    with pytest.raises(DuplicateModelError):
+        pool.onboard("m", _profile(K=2), 1, 1, TokenizerSpec(100))
+
+
+def test_update_pricing_changes_cost_only(demo):
+    _, router, texts = demo
+    name = router.pool.names[0]
+    p1, c1, l1 = router.score(texts)
+    old_in = float(router.pool.snapshot().lam_in[0, 0])
+    router.update_pricing(name, price_in=old_in * 10)
+    try:
+        p2, c2, l2 = router.score(texts)
+        np.testing.assert_array_equal(p1, p2)
+        np.testing.assert_array_equal(l1, l2)
+        assert (c2[0] > c1[0]).all()
+        np.testing.assert_array_equal(c1[1:], c2[1:])
+    finally:
+        router.update_pricing(name, price_in=old_in)
+
+
+# ---------------------------------------------------------------------------
+# façade lifecycle + Policy
+# ---------------------------------------------------------------------------
+
+
+def test_typed_lifecycle_errors(demo):
+    blank = Router()
+    with pytest.raises(NotCalibratedError):
+        blank.route(["q"])
+    with pytest.raises(NotCalibratedError):
+        blank.onboard("m", np.zeros(3), np.zeros(3), np.zeros(3), 1, 1,
+                      HashTokenizer(100))
+    # pre-calibration pool reads stay well-typed, never AttributeError
+    assert len(blank.pool) == 0 and blank.pool.version == 0
+    with pytest.raises(UnknownModelError):
+        blank.pool.remove("ghost")
+    _, router, texts = demo
+    empty = Router(artifacts=router.artifacts)    # calibrated, no models
+    with pytest.raises(EmptyPoolError):
+        empty.route(texts[:2])
+    from repro.serving import RouterEngine
+    with pytest.raises(EmptyPoolError):
+        RouterEngine(empty).route_batch(texts[:2])
+    with pytest.raises(NotCalibratedError):
+        RouterEngine(Router())
+
+
+def test_policy_resolution():
+    assert Policy.of("balanced").weights == POLICIES["balanced"]
+    assert Policy.of("max_acc").name == "max_acc"
+    custom = Policy.of(weights=(0.6, 0.3, 0.1))
+    assert custom.name == "custom"
+    with pytest.raises(ValueError, match="unknown policy"):
+        Policy.of("warp_speed")
+    capped = Policy.of("min_cost").constrained(max_total_cost=1.0)
+    assert capped.constraints == RoutingConstraints(max_total_cost=1.0)
+    # Policy.of passes an existing policy through, overriding as asked
+    assert Policy.of(capped) is capped
+    re_w = Policy.of(capped, weights=(1.0, 0.0, 0.0))
+    assert re_w.weights == (1.0, 0.0, 0.0)
+    assert re_w.constraints == capped.constraints
+
+
+def test_policy_object_routes_like_string(demo):
+    _, router, texts = demo
+    _, s1, _ = router.route(texts, policy="min_cost")
+    _, s2, _ = router.route(texts, policy=Policy.of("min_cost"))
+    np.testing.assert_array_equal(s1, s2)
+    # constraints travel inside the Policy
+    cap = float(np.sort(router.score(texts)[1], 0)[0].sum()) * 2
+    pol = Policy.of("max_acc").constrained(max_total_cost=cap)
+    _, sel, diag = router.route(texts, policy=pol)
+    used = float(diag["cost"][np.asarray(sel), np.arange(len(texts))].sum())
+    assert used <= cap * 1.1
+
+
+def test_instance_calibrate_honors_instance_cfg():
+    """router.calibrate(R) (the seed idiom) must calibrate THAT router
+    with ITS cfg — not silently build a default-config throwaway."""
+    rng = np.random.default_rng(0)
+    R = (rng.random((30, 60)) > 0.5).astype(np.float32)
+    cfg = RouterConfig(
+        irt=IRTConfig(dim=4, epochs=30), n_anchors=10,
+        predictor=PredictorConfig(d_model=32, num_layers=1, d_ff=64,
+                                  max_len=16, latent_dim=4, n_clusters=2))
+    r = Router(cfg=cfg)
+    out = r.calibrate(R)
+    assert out is r
+    assert r.artifacts is not None and r.artifacts.n_anchors == 10
+    # the classmethod idiom builds a fresh router with the given cfg
+    r2 = Router.calibrate(R, cfg=cfg)
+    assert r2 is not r and r2.artifacts.n_anchors == 10
+
+
+def test_route_batch_honors_policy_constraints(demo):
+    """A Policy carrying constraints must not be silently unconstrained
+    on the serving hot path (it falls through to the Lagrangian route)."""
+    from repro.serving import RouterEngine, RouterEngineConfig
+
+    _, router, texts = demo
+    engine = RouterEngine(router, RouterEngineConfig(cache_size=0))
+    cap = float(np.sort(router.score(texts)[1], 0)[0].sum()) * 2
+    pol = Policy.of("max_acc").constrained(max_total_cost=cap)
+    _, sel_ref, diag = router.route(texts, policy=pol)
+    names, sel = engine.route_batch(texts, policy=pol)
+    np.testing.assert_array_equal(np.asarray(sel_ref), sel)
+    used = float(diag["cost"][np.asarray(sel), np.arange(len(texts))].sum())
+    assert used <= cap * 1.1
+
+
+def test_zerorouter_shim_matches_facade(demo):
+    """The deprecated shim is a thin view over the same layers."""
+    from repro.core import ZeroRouter
+
+    _, router, texts = demo
+    with pytest.warns(DeprecationWarning):
+        zr = ZeroRouter()
+    zr._router = router
+    np.testing.assert_array_equal(zr.alpha, router.artifacts.alpha)
+    assert [m.name for m in zr.pool] == list(router.pool.names)
+    assert zr.pool_version == router.pool.version
+    _, s1, _ = zr.route(texts, policy="balanced")
+    _, s2, _ = router.route(texts, policy="balanced")
+    np.testing.assert_array_equal(s1, s2)
+    p1, c1, l1 = zr.score_queries(texts)
+    p2, c2, l2 = router.score(texts)
+    np.testing.assert_array_equal(p1, p2)
+    np.testing.assert_array_equal(c1, c2)

@@ -1,6 +1,9 @@
-"""Policy-driven routing ILP (paper Eq. 17–18) — solver invariants."""
+"""Policy-driven routing ILP (paper Eq. 17–18) — solver invariants,
+including the Lagrangian solver's feasibility-repair bisection and its
+``violated`` diagnostics (ISSUE 2 satellite)."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
 try:
     from hypothesis import given, settings, strategies as st
 except ModuleNotFoundError:                       # offline container
@@ -61,6 +64,80 @@ def test_constrained_respects_budget():
                       constraints=RoutingConstraints(max_total_cost=budget))
     used = float(cost[np.asarray(sel), np.arange(Q)].sum())
     assert used <= budget * 1.1, f"budget {budget} exceeded: {used}"
+
+
+def _spread_instance(seed=0, M=4, Q=60):
+    """p increasing with cost: budget caps force real trade-offs."""
+    rng = np.random.default_rng(seed)
+    p = rng.random((M, Q)).astype(np.float32)
+    p[0] += 0.5
+    cost = np.stack([np.full(Q, c) for c in (10.0, 4.0, 1.0, 0.2)]).astype(np.float32)
+    lat = np.stack([np.full(Q, t) for t in (0.1, 0.5, 2.0, 8.0)]).astype(np.float32)
+    lat += rng.random((M, Q)).astype(np.float32) * 0.05
+    return p, cost, lat
+
+
+def test_constrained_latency_cap_binds():
+    """A binding total-latency cap must be respected and reported."""
+    p, cost, lat = _spread_instance()
+    Q = p.shape[1]
+    free, _ = route(p, cost, lat, policy="min_cost")
+    lat_free = float(lat[np.asarray(free), np.arange(Q)].sum())
+    cap = lat_free * 0.3
+    sel, diag = route(p, cost, lat, policy="min_cost",
+                      constraints=RoutingConstraints(max_total_latency=cap))
+    used = float(lat[np.asarray(sel), np.arange(Q)].sum())
+    assert used <= cap * 1.1, f"latency cap {cap} exceeded: {used}"
+    assert not bool(np.asarray(diag["violated"])[1])
+    # the cap actually changed behavior (it was binding)
+    assert used < lat_free * 0.5
+
+
+def test_constrained_min_mean_accuracy():
+    """The (≥) accuracy constraint pushes selections to stronger models."""
+    p, cost, lat = _spread_instance()
+    Q = p.shape[1]
+    cheap, _ = route(p, cost, lat, policy="min_cost")
+    acc_cheap = float(p[np.asarray(cheap), np.arange(Q)].mean())
+    target = min(acc_cheap + 0.2, 0.95)
+    sel, diag = route(p, cost, lat, policy="min_cost",
+                      constraints=RoutingConstraints(min_mean_accuracy=target))
+    acc = float(p[np.asarray(sel), np.arange(Q)].mean())
+    assert acc >= target - 0.02, f"mean accuracy {acc} below target {target}"
+    assert not bool(np.asarray(diag["violated"])[2])
+
+
+def test_constrained_infeasible_cap_best_effort():
+    """A cap below the cheapest possible assignment is infeasible: the
+    solver must fall back to the best-effort t=64 dual scaling, still pick
+    the cheapest models, and flag the violation in diagnostics."""
+    p, cost, lat = _spread_instance()
+    Q = p.shape[1]
+    min_possible = float(cost.min(0).sum())
+    cap = min_possible * 0.5               # impossible budget
+    sel, diag = route(p, cost, lat, policy="max_acc",
+                      constraints=RoutingConstraints(max_total_cost=cap))
+    sel = np.asarray(sel)
+    # best effort = cheapest model everywhere (the dual dominates utility)
+    used = float(cost[sel, np.arange(Q)].sum())
+    assert used <= min_possible * 1.01
+    assert bool(np.asarray(diag["violated"])[0]), \
+        "infeasible budget must be reported as violated"
+    # usage/caps diagnostics are populated on the raw scale
+    assert np.asarray(diag["usage"])[0] == pytest.approx(used, rel=1e-5)
+    assert np.asarray(diag["caps"])[0] == pytest.approx(cap, rel=1e-6)
+
+
+def test_constrained_inactive_constraints_noop():
+    """Slack constraints must not perturb the unconstrained optimum."""
+    p, cost, lat = _spread_instance()
+    free, _ = route(p, cost, lat, policy="balanced")
+    sel, diag = route(p, cost, lat, policy="balanced",
+                      constraints=RoutingConstraints(
+                          max_total_cost=1e9, max_total_latency=1e9,
+                          min_mean_accuracy=0.0))
+    np.testing.assert_array_equal(np.asarray(free), np.asarray(sel))
+    assert not np.asarray(diag["violated"]).any()
 
 
 def test_reward_matches_manual():

@@ -1,5 +1,6 @@
 """RouterEngine serving layer: cache semantics, padded-bucket bitwise
-equivalence, seed-path agreement, scheduler ordering (ISSUE 1)."""
+equivalence, reference-path agreement, scheduler ordering (ISSUE 1);
+snapshot consumption over the versioned ModelPool (ISSUE 2)."""
 import dataclasses
 
 import numpy as np
@@ -15,11 +16,11 @@ from repro.serving import (LatentCache, MicroBatcher, RouterEngine,
 
 @pytest.fixture(scope="module")
 def served():
-    world, zr, engine = build_demo_engine(seed=0)
+    world, router, engine = build_demo_engine(seed=0)
     from repro.data import OOD_TASKS
     qi = world.query_indices(OOD_TASKS)
     texts = [world.queries[i].text for i in qi[:48]]
-    return world, zr, engine, texts
+    return world, router, engine, texts
 
 
 # ---------------------------------------------------------------------------
@@ -28,13 +29,13 @@ def served():
 
 
 def test_engine_matches_seed_score_queries(served):
-    """Vectorized batched scoring vs the seed per-model×query loops: the
+    """Vectorized batched scoring vs the eager reference path: the
     table/cost/latency stages are bit-for-bit (same f64 numpy ops); the
     jitted predictor forward matches the eager one to f32 resolution."""
-    _, zr, _, texts = served
-    engine = RouterEngine(zr, RouterEngineConfig(cache_size=0))
+    _, router, _, texts = served
+    engine = RouterEngine(router, RouterEngineConfig(cache_size=0))
     p_e, c_e, l_e = engine.score_queries(texts)
-    p_s, c_s, l_s = zr.score_queries(texts)
+    p_s, c_s, l_s = router.score(texts)
     np.testing.assert_allclose(p_e, p_s, atol=2e-6)
     np.testing.assert_array_equal(c_e, c_s)
     np.testing.assert_array_equal(l_e, l_s)
@@ -44,8 +45,8 @@ def test_padded_bucket_scoring_is_bitwise_invariant(served):
     """Padding to a bucket must be invisible: scoring a 13-query batch
     (padded to 16) equals the same queries scored inside a 48-query batch
     bit-for-bit on the unpadded entries."""
-    _, zr, _, texts = served
-    engine = RouterEngine(zr, RouterEngineConfig(cache_size=0))
+    _, router, _, texts = served
+    engine = RouterEngine(router, RouterEngineConfig(cache_size=0))
     p_full, c_full, l_full = engine.score_queries(texts)
     p_sub, c_sub, l_sub = engine.score_queries(texts[:13])
     np.testing.assert_array_equal(p_sub, p_full[:, :13])
@@ -55,8 +56,8 @@ def test_padded_bucket_scoring_is_bitwise_invariant(served):
 
 def test_cache_hits_are_bitwise_identical(served):
     """Cold scoring vs fully-cached scoring of the same batch."""
-    _, zr, _, texts = served
-    engine = RouterEngine(zr, RouterEngineConfig(cache_size=256))
+    _, router, _, texts = served
+    engine = RouterEngine(router, RouterEngineConfig(cache_size=256))
     cold = engine.score_queries(texts)
     assert engine.cache_stats.misses > 0 and engine.cache_stats.hits == 0
     warm = engine.score_queries(texts)
@@ -65,11 +66,11 @@ def test_cache_hits_are_bitwise_identical(served):
         np.testing.assert_array_equal(a, b)
 
 
-def test_selections_identical_to_zerorouter(served):
-    _, zr, _, texts = served
-    engine = RouterEngine(zr, RouterEngineConfig(cache_size=256))
+def test_selections_identical_to_reference_router(served):
+    _, router, _, texts = served
+    engine = RouterEngine(router, RouterEngineConfig(cache_size=256))
     for pol in POLICIES:
-        _, sel_seed, _ = zr.route(texts, policy=pol)
+        _, sel_seed, _ = router.route(texts, policy=pol)
         _, sel_eng, _ = engine.route(texts, policy=pol)
         _, sel_fast = engine.route_batch(texts, policy=pol)
         np.testing.assert_array_equal(np.asarray(sel_seed), sel_eng)
@@ -78,9 +79,9 @@ def test_selections_identical_to_zerorouter(served):
 
 def test_chunking_over_max_batch(served):
     """Q > max_batch is chunked internally and reassembled in order."""
-    _, zr, _, texts = served
-    small = RouterEngine(zr, RouterEngineConfig(cache_size=0, max_batch=16))
-    big = RouterEngine(zr, RouterEngineConfig(cache_size=0))
+    _, router, _, texts = served
+    small = RouterEngine(router, RouterEngineConfig(cache_size=0, max_batch=16))
+    big = RouterEngine(router, RouterEngineConfig(cache_size=0))
     for a, b in zip(small.score_queries(texts), big.score_queries(texts)):
         np.testing.assert_array_equal(a, b)
     # routing over max_batch keeps GLOBAL cost normalization: selections
@@ -112,44 +113,49 @@ def test_lru_eviction_order():
 def test_pool_mutation_keeps_cache_and_rebuilds_snapshot(served):
     """onboard/remove only bump pool_version: the latent cache survives
     (latents are pool-independent) while scoring reflects the new pool."""
-    world, zr, _, texts = served
-    engine = RouterEngine(zr, RouterEngineConfig(cache_size=256))
+    world, router, _, texts = served
+    engine = RouterEngine(router, RouterEngineConfig(cache_size=256))
     engine.score_queries(texts)
     n_cached = len(engine.cache)
+    v0 = router.pool.version
     m = world.model_index("future-model-00")
-    anchors = world.query_indices(ID_TASKS)[zr.anchor_idx]
+    anchors = world.query_indices(ID_TASKS)[router.artifacts.anchor_idx]
     y = world.sample_responses([m], anchors)[0]
     lens = world.output_lengths([m], anchors)[0]
     lats = world.true_latency([m], anchors, lens[None])[0]
     mi = world.models[m]
-    zr.onboard_model("future-model-00", y, lens, lats, mi.price_in,
-                     mi.price_out, mi.tokenizer)
+    router.onboard("future-model-00", y, lens, lats, mi.price_in,
+                   mi.price_out, mi.tokenizer)
+    assert router.pool.version == v0 + 1
     try:
         p_e, c_e, l_e = engine.score_queries(texts)
         assert len(engine.cache) == n_cached, "pool mutation purged cache"
-        assert p_e.shape[0] == len(zr.pool)
-        p_s, c_s, l_s = zr.score_queries(texts)
+        assert p_e.shape[0] == len(router.pool)
+        p_s, c_s, l_s = router.score(texts)
         np.testing.assert_allclose(p_e, p_s, atol=2e-6)
         np.testing.assert_array_equal(c_e, c_s)
         np.testing.assert_array_equal(l_e, l_s)
     finally:
-        zr.remove_model("future-model-00")
-    assert engine.score_queries(texts)[0].shape[0] == len(zr.pool)
+        router.remove("future-model-00")
+    assert engine.score_queries(texts)[0].shape[0] == len(router.pool)
 
 
 def test_predictor_swap_clears_cache(served):
-    _, zr, _, texts = served
-    engine = RouterEngine(zr, RouterEngineConfig(cache_size=256))
+    """Swapping the predictor produces a NEW (frozen) artifacts object;
+    the engine detects the identity change and clears its latent cache."""
+    _, router, _, texts = served
+    engine = RouterEngine(router, RouterEngineConfig(cache_size=256))
     engine.score_queries(texts)
     assert len(engine.cache) > 0
-    old = zr.predictor
+    old_art, old_pred = router.artifacts, router.predictor
     try:
-        zr.predictor = dataclasses.replace(old)     # identity swap
+        router.set_predictor(dataclasses.replace(old_pred))  # identity swap
+        assert router.artifacts is not old_art
         engine.score_queries(texts[:4])
         assert engine.cache_stats.hits == 0         # cache was cleared
         assert len(engine.cache) == 4
     finally:
-        zr.predictor = old
+        router.artifacts = old_art
 
 
 # ---------------------------------------------------------------------------
@@ -158,7 +164,7 @@ def test_predictor_swap_clears_cache(served):
 
 
 def test_batcher_coalesces_and_preserves_order(served):
-    _, zr, engine, texts = served
+    _, router, engine, texts = served
     # flush() drains FIFO into batches of exactly max_batch, each routed
     # independently (per-batch cost normalization — serving semantics)
     names_ref = []
@@ -177,7 +183,7 @@ def test_batcher_coalesces_and_preserves_order(served):
 def test_batcher_survives_cancelled_future(served):
     """A caller cancelling its pending future must not poison the batch
     or kill the scheduler."""
-    _, zr, engine, texts = served
+    _, router, engine, texts = served
     mb = MicroBatcher(engine, max_batch=8)
     futs = mb.submit_many(texts[:8])
     assert futs[3].cancel()
@@ -191,7 +197,7 @@ def test_batcher_survives_cancelled_future(served):
 
 
 def test_batcher_mixed_policies(served):
-    _, zr, engine, texts = served
+    _, router, engine, texts = served
     mb = MicroBatcher(engine, max_batch=64)
     futs = ([mb.submit(t, policy="min_cost") for t in texts[:8]]
             + [mb.submit(t, policy="max_acc") for t in texts[:8]])
@@ -204,7 +210,7 @@ def test_batcher_mixed_policies(served):
 
 
 def test_batcher_threaded_mode(served):
-    _, zr, engine, texts = served
+    _, router, engine, texts = served
     names_ref, _, _ = engine.route(texts[:16])
     with MicroBatcher(engine, max_batch=8, max_wait_s=0.01) as mb:
         futs = [mb.submit(t) for t in texts[:16]]
@@ -230,11 +236,11 @@ def test_input_lengths_match_per_model_loop(served):
     """The engine's one-pass ℓ_in equals the seed's M × Q tokenizer loop
     exactly, including length factors."""
     from repro.data.tokenizer import model_token_count
-    _, zr, _, texts = served
-    engine = RouterEngine(zr, RouterEngineConfig(cache_size=0))
+    _, router, _, texts = served
+    engine = RouterEngine(router, RouterEngineConfig(cache_size=0))
     pool = engine._pool()
     _, _, entries = engine._latent_batch(texts, pool)
     l_in = engine._input_lengths(texts, entries, pool)
-    want = np.array([[model_token_count(m.tokenizer, t) for t in texts]
-                     for m in zr.pool])
+    want = np.array([[model_token_count(tok, t) for t in texts]
+                     for tok in router.pool.snapshot().tokenizers])
     np.testing.assert_array_equal(l_in, want)
