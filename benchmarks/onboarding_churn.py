@@ -11,7 +11,16 @@ routing, measuring
                          snapshot adoption (new θ-stack device upload) on
                          top of a steady route;
   * ``steady_route``   — ``route_batch`` with an unchanged pool (the
-                         baseline the mutation path should approach).
+                         baseline the mutation path should approach);
+  * ``warmup`` / ``first_route_after_warmup`` — the warm-start satellite
+                         (ISSUE 3): a FRESH engine pre-compiles its
+                         padded buckets via ``RouterEngine.warmup`` (what
+                         ``Router.open(dir, warmup=...)`` runs at open
+                         time), then the first real batch pays only the
+                         tokenize+score cost instead of the multi-second
+                         XLA stall (``cold_first_route`` is that stall,
+                         measured on an identically-configured un-warmed
+                         engine; ``stall_removed_x`` is their ratio).
 
 The tensorized ``ModelPool`` makes the mutation path cheap: the engine
 consumes ``pool.snapshot()`` directly (the canonical tensors), so there
@@ -60,6 +69,17 @@ def run(smoke: bool = False) -> List[Tuple[str, float, float]]:
         lats = world.true_latency([m], bench.anchor_global, lens[None])[0]
         return world.models[m], y, lens, lats
 
+    # cold-vs-warmed first route: what Router.open(warmup=...) buys
+    cold_engine = RouterEngine(router, RouterEngineConfig(cache_size=0))
+    t0 = time.perf_counter()
+    cold_engine.route_batch(texts)
+    cold_first_s = time.perf_counter() - t0
+    warm_engine = RouterEngine(router, RouterEngineConfig(cache_size=0))
+    warmup_s = warm_engine.warmup(max_queries=Q)
+    t0 = time.perf_counter()
+    warm_engine.route_batch(texts)
+    warm_first_s = time.perf_counter() - t0
+
     engine.route_batch(texts)                      # warmup (jit compile)
     steady = []
     for _ in range(5):
@@ -96,6 +116,11 @@ def run(smoke: bool = False) -> List[Tuple[str, float, float]]:
         "steady_route": {"us_per_call": float(steady_s * 1e6)},
         "snapshot_overhead": {
             "ratio": float(np.min(mutate_route_s) / steady_s)},
+        "warmup": {"us_per_call": float(warmup_s * 1e6)},
+        "cold_first_route": {"us_per_call": float(cold_first_s * 1e6)},
+        "first_route_after_warmup": {
+            "us_per_call": float(warm_first_s * 1e6),
+            "stall_removed_x": float(cold_first_s / max(warm_first_s, 1e-9))},
         "table_rows_leak_free": leak_free,
         "final_pool_version": router.pool.version,
     }
@@ -117,6 +142,12 @@ def run(smoke: bool = False) -> List[Tuple[str, float, float]]:
          Q * 1e6 / results["steady_route"]["us_per_call"]),
         ("onboarding/snapshot_overhead_x", 0.0,
          results["snapshot_overhead"]["ratio"]),
+        ("onboarding/warmup", results["warmup"]["us_per_call"], 0.0),
+        ("onboarding/cold_first_route",
+         results["cold_first_route"]["us_per_call"], 0.0),
+        ("onboarding/first_route_after_warmup",
+         results["first_route_after_warmup"]["us_per_call"],
+         results["first_route_after_warmup"]["stall_removed_x"]),
         ("onboarding/table_rows_leak_free", 0.0, leak_free),
     ]
 

@@ -9,11 +9,19 @@ Measures steady-state routed queries/sec (jit warmup excluded) for:
                           cache disabled (pure batched/jitted speedup);
   * ``engine_cached``   — warm LRU latent cache (repeat traffic);
   * ``microbatcher``    — 1-at-a-time submission coalesced by the
-                          scheduler (threaded end-to-end path).
+                          scheduler (threaded end-to-end path);
+  * ``service_tcp``     — the FULL async transport (ISSUE 3): a
+                          ``RouterService`` behind the JSONL TCP
+                          front-end, driven by a fresh ``ServiceClient``
+                          connection pipelining singleton requests —
+                          asyncio admission + micro-batcher + wire
+                          round-trip included.
 
 CSV rows: serving/<variant>/Q{Q}M{M}, us_per_batch, queries_per_sec —
 plus serving/speedup rows whose ``derived`` column is the ×-factor over
-seed.  Also writes a ``BENCH_serving.json`` artifact (path overridable via
+seed and ``serving/service_transport_overhead_x`` (service_tcp time over
+microbatcher time; the ISSUE-3 acceptance bound is ≤ 2×).  Also writes a
+``BENCH_serving.json`` artifact (path overridable via
 ``BENCH_SERVING_JSON``) so the perf trajectory is tracked across PRs.
 """
 from __future__ import annotations
@@ -95,22 +103,56 @@ def run(smoke: bool = False) -> List[Tuple[str, float, float]]:
             for f in futs:
                 f.result(timeout=60)
 
-    timings = _time_interleaved({
-        "seed": seed_call,
-        "engine_nocache": engine_call,
-        "engine_cached": cached_call,
-        "microbatcher": batcher_call,
-    })
+    from repro.serving import BackgroundServer, ServiceClient, ServiceConfig
+
+    srv = BackgroundServer(
+        router, engine=eng_c,
+        cfg=ServiceConfig(max_batch=64, max_wait_s=0.002,
+                          max_inflight=Q, max_queue=4 * Q))
+    srv.__enter__()
+    client = ServiceClient(srv.host, srv.port)
+
+    def service_call():
+        # full transport, bulk frame: one route_many op → one admission
+        # slot → one engine call (global normalization, Router.route
+        # semantics) → one response frame
+        resps = client.route_many(texts)
+        assert all(r.ok for r in resps)
+
+    def service_pipelined_call():
+        # full transport, streaming shape: one frame per query, admitted
+        # individually, coalesced by the server's micro-batcher
+        resps = client.route_many(texts, pipeline=True)
+        assert all(r.ok for r in resps)
+
+    try:
+        timings = _time_interleaved({
+            "seed": seed_call,
+            "engine_nocache": engine_call,
+            "engine_cached": cached_call,
+            "microbatcher": batcher_call,
+            "service_tcp": service_call,
+            "service_tcp_pipelined": service_pipelined_call,
+        })
+    finally:
+        client.close()
+        srv.__exit__(None, None, None)
     assert np.array_equal(np.asarray(sel_seed[0]), sel_eng[0]), \
         "engine selections diverged from seed"
-    for name in ("seed", "engine_nocache", "engine_cached", "microbatcher"):
+    variants = ("seed", "engine_nocache", "engine_cached", "microbatcher",
+                "service_tcp", "service_tcp_pipelined")
+    for name in variants:
         _row(name, timings[name])
 
-    for name in ("engine_nocache", "engine_cached", "microbatcher"):
+    for name in variants[1:]:
         speedup = (results["seed"]["us_per_batch"]
                    / results[name]["us_per_batch"])
         results[name]["speedup_vs_seed"] = speedup
         rows.append((f"serving/speedup_{name}", 0.0, speedup))
+    overhead = (results["service_tcp"]["us_per_batch"]
+                / results["microbatcher"]["us_per_batch"])
+    results["service_tcp"]["transport_overhead_vs_microbatcher"] = overhead
+    rows.append(("serving/service_transport_overhead_x", 0.0, overhead))
 
     artifact = {
         "workload": {"Q": Q, "M": M, "reps": REPS,

@@ -7,7 +7,9 @@ pool, route a reference batch, and save everything to --dir.
 Phase 2 (a FRESH python process spawned below, or run manually with
 --open): ``Router.open(dir)`` restores artifacts + pool in milliseconds —
 no IRT, no predictor training — and must produce byte-identical routing
-selections for the same queries.
+selections for the same queries.  The fresh process then stands the
+ISSUE-3 service plane up on the opened router (RouterService + JSONL TCP
+front-end) and proves the wire path routes byte-identically too.
 
     PYTHONPATH=src python examples/persist_and_serve.py
 """
@@ -64,6 +66,20 @@ def open_and_route(out_dir: str) -> None:
         raise SystemExit("saved router diverged from the in-memory path")
     print(f"[serve] decision mix: "
           f"{ {n: names.count(n) for n in set(names)} }")
+
+    # the same router behind the full async transport: RouterService +
+    # TCP JSONL protocol, driven like a remote client would
+    from repro.serving import BackgroundServer, ServiceClient
+
+    with BackgroundServer(router) as srv:
+        with ServiceClient(srv.host, srv.port) as client:
+            resps = client.route_many(_ood_texts(world))
+            wire_match = [r.model_index for r in resps] == ref
+            print(f"[serve] TCP service plane on {srv.host}:{srv.port} — "
+                  f"wire selections identical: {wire_match} "
+                  f"(pool v{resps[0].pool_version})")
+            if not wire_match:
+                raise SystemExit("wire transport diverged from Router.route")
 
 
 def main():

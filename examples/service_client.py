@@ -1,0 +1,84 @@
+"""RouterService quickstart: the async serving plane over TCP (ISSUE 3).
+
+Stands up the full transport stack in-process — RouterService (asyncio
+submit/stream + admin plane + admission control) behind the
+length-prefixed JSONL TCP protocol — then talks to it the way a remote
+client would:
+
+  1. route a batch over the wire (one bulk frame; selections match
+     ``Router.route`` exactly, and every response reports the pool
+     snapshot version it was pinned to);
+  2. onboard a brand-new model through the ADMIN plane mid-stream —
+     zero-shot, from anchor responses only — and route again: the next
+     batch picks up the bumped pool while in-flight work keeps its
+     pinned snapshot;
+  3. per-request policy + diagnostics: a single query routed under
+     ``min_cost`` with the per-model (p, cost, latency) fanned back.
+
+Run:  PYTHONPATH=src python examples/service_client.py
+For a real two-process setup, start the server side with
+``python -m repro.launch.serve --mode route --listen 127.0.0.1:7707
+--artifact DIR`` and point ``ServiceClient("127.0.0.1", 7707)`` at it.
+"""
+import time
+
+from repro.data import ID_TASKS, OOD_TASKS
+from repro.launch.serve import build_demo_engine
+from repro.serving import BackgroundServer, ServiceClient
+
+
+def main():
+    print("=== calibrating the demo router (once) ===")
+    world, router, engine = build_demo_engine(seed=0)
+    qi = world.query_indices(OOD_TASKS)
+    texts = [world.queries[i].text for i in qi[:24]]
+
+    with BackgroundServer(router, engine=engine) as srv:
+        print(f"=== RouterService listening on {srv.host}:{srv.port} ===")
+        with ServiceClient(srv.host, srv.port) as client:
+            t0 = time.time()
+            resps = client.route_many(texts)
+            dt = time.time() - t0
+            mix = {}
+            for r in resps:
+                mix[r.model] = mix.get(r.model, 0) + 1
+            print(f"routed {len(resps)} queries over TCP in {dt*1e3:.0f}ms "
+                  f"(pool v{resps[0].pool_version}); mix: {mix}")
+
+            # -- admin plane: onboard a future model mid-stream ---------
+            name = "future-model-00"
+            m = world.model_index(name)
+            anchors = world.query_indices(ID_TASKS)[router.artifacts.anchor_idx]
+            y = world.sample_responses([m], anchors, seed=m)[0]
+            lens = world.output_lengths([m], anchors)[0]
+            lats = world.true_latency([m], anchors, lens[None])[0]
+            mi = world.models[m]
+            info = client.admin.onboard(name, y, lens, lats, mi.price_in,
+                                        mi.price_out, mi.tokenizer)
+            print(f"onboarded {name!r} via the wire admin plane -> "
+                  f"pool v{info['pool_version']}: {info['models']}")
+
+            resps2 = client.route_many(texts)
+            mix2 = {}
+            for r in resps2:
+                mix2[r.model] = mix2.get(r.model, 0) + 1
+            moved = sum(a.model != b.model for a, b in zip(resps, resps2))
+            print(f"re-routed on pool v{resps2[0].pool_version}: "
+                  f"{moved}/{len(texts)} queries moved; mix: {mix2}")
+
+            # -- per-request policy + diagnostics -----------------------
+            r = client.route(texts[0], policy="min_cost", diagnostics=True)
+            cheapest = min(r.diagnostics.items(),
+                           key=lambda kv: kv[1]["cost"])
+            print(f"min_cost routed to {r.model!r} "
+                  f"(queued {r.queued_ms:.1f}ms, compute {r.compute_ms:.1f}ms);"
+                  f" cheapest candidate was {cheapest[0]!r}")
+
+            stats = client.stats()
+            print(f"service stats: {stats['requests_routed']} routed over "
+                  f"{stats['batches_routed']} batches, cache hit rate "
+                  f"{stats['cache']['hit_rate']:.0%}")
+
+
+if __name__ == "__main__":
+    main()

@@ -44,10 +44,14 @@ from repro.core import anchors as anchors_mod
 from repro.core.artifacts import ModelProfile, RouterArtifacts, RouterConfig
 from repro.core.cost import length_bin_edges
 from repro.core.errors import (
+    DeadlineExceededError,
     DuplicateModelError,
     EmptyPoolError,
     NotCalibratedError,
+    OverloadedError,
     RouterError,
+    SchemaVersionError,
+    ServiceError,
     UnknownModelError,
 )
 from repro.core.irt import fit_irt, posterior_means, task_aware_difficulty
@@ -59,9 +63,12 @@ from repro.core.router import route as core_route
 from repro.data.tokenizer import HashTokenizer, TokenizerSpec, model_token_count
 
 __all__ = [
-    "DuplicateModelError", "EmptyPoolError", "ModelPool", "ModelProfile",
-    "NotCalibratedError", "Policy", "Router", "RouterArtifacts",
-    "RouterConfig", "RouterError", "RoutingConstraints", "UnknownModelError",
+    "DeadlineExceededError", "DuplicateModelError", "EmptyPoolError",
+    "ModelPool", "ModelProfile",
+    "NotCalibratedError", "OverloadedError", "Policy", "Router",
+    "RouterArtifacts",
+    "RouterConfig", "RouterError", "RoutingConstraints",
+    "SchemaVersionError", "ServiceError", "UnknownModelError",
 ]
 
 ARTIFACTS_NAME = "artifacts"
@@ -137,6 +144,7 @@ class Router:
         self.pool = pool if pool is not None else ModelPool(
             artifacts.bin_edges if artifacts is not None else np.array([]))
         self.calibration: Dict[str, np.ndarray] = {}
+        self._engine = None   # default-config engine, built once on demand
 
     # ------------------------------------------------------------------
     # lifecycle guards
@@ -378,10 +386,32 @@ class Router:
         return names, sel, diag
 
     def engine(self, cfg=None):
-        """A jit-compiled, cached :class:`~repro.serving.RouterEngine`
-        bound to this router."""
+        """A jit-compiled :class:`~repro.serving.RouterEngine` bound to
+        this router.  The default-config engine is built once and cached
+        (so ``Router.open(warmup=True)`` pre-compilation benefits every
+        later ``engine()`` / ``serve()`` call); passing an explicit
+        ``cfg`` always builds a fresh engine."""
         from repro.serving.engine import RouterEngine, RouterEngineConfig
-        return RouterEngine(self, cfg or RouterEngineConfig())
+        if cfg is not None:
+            return RouterEngine(self, cfg)
+        if self._engine is None:
+            self._engine = RouterEngine(self, RouterEngineConfig())
+        return self._engine
+
+    def serve(self, cfg=None, engine_cfg=None):
+        """The asyncio serving plane for this router — a (not yet
+        started) :class:`~repro.serving.RouterService` exposing
+        ``submit``/``submit_many``/``stream``, the live admin plane and
+        admission control.  Put a TCP front-end on it with
+        :func:`repro.serving.start_server` (or ``python -m
+        repro.launch.serve --mode route --listen HOST:PORT``)::
+
+            async with router.serve() as service:
+                resp = await service.submit("route me")
+        """
+        from repro.serving.service import RouterService, ServiceConfig
+        return RouterService(self, engine=self.engine(engine_cfg),
+                             cfg=cfg or ServiceConfig())
 
     # ------------------------------------------------------------------
     # persistence
@@ -400,14 +430,25 @@ class Router:
 
     @classmethod
     def open(cls, path: str,
-             cfg: Optional[RouterConfig] = None) -> "Router":
+             cfg: Optional[RouterConfig] = None,
+             warmup: Union[bool, int] = False) -> "Router":
         """Bring up a ready-to-route router from :meth:`save` output —
         milliseconds of IO, zero training.
 
         The calibration-time :class:`RouterConfig` is restored too (so a
         later ``fit_predictor`` / re-calibration on the opened router uses
         the hyperparameters it was built with), unless ``cfg`` overrides
-        it."""
+        it.
+
+        ``warmup`` trades open latency for first-request latency: when
+        truthy (and the artifact carries a predictor and a non-empty
+        pool), the cached serving engine is built at open time and its
+        jitted programs are pre-compiled via
+        :meth:`repro.serving.RouterEngine.warmup`, so the first served
+        request pays no jit stall.  Pass an int to pre-compile the bucket
+        ladder up to that batch size; ``True`` covers singleton traffic
+        of any text length.  The seconds spent land in
+        ``router.calibration['warmup_s']``."""
         import json
 
         art = RouterArtifacts.load(os.path.join(path, ARTIFACTS_NAME))
@@ -421,4 +462,10 @@ class Router:
                     cfg = _cfg_from_json(json.load(f))
             else:
                 cfg = RouterConfig()
-        return cls(artifacts=art, pool=pool, cfg=cfg)
+        router = cls(artifacts=art, pool=pool, cfg=cfg)
+        if warmup and art.has_predictor and len(router.pool) > 0:
+            max_q = warmup if isinstance(warmup, int) \
+                and not isinstance(warmup, bool) else 1
+            router.calibration["warmup_s"] = router.engine().warmup(
+                max_queries=max_q)
+        return router

@@ -1,9 +1,10 @@
 from repro.checkpoint.ckpt import (
+    ARTIFACT_SCHEMA_VERSION,
     load_artifact,
     load_checkpoint,
     save_artifact,
     save_checkpoint,
 )
 
-__all__ = ["load_artifact", "load_checkpoint", "save_artifact",
-           "save_checkpoint"]
+__all__ = ["ARTIFACT_SCHEMA_VERSION", "load_artifact", "load_checkpoint",
+           "save_artifact", "save_checkpoint"]

@@ -13,6 +13,12 @@ Two formats:
   recorded alongside the payload, so loading needs only the path.  This is
   what ``RouterArtifacts.load`` uses: a serving process reconstructs the
   full artifact with zero knowledge of how it was built.
+
+Every ``save_artifact`` record carries a ``schema_version``; loading a
+record written by a NEWER schema raises a typed
+:class:`~repro.core.errors.SchemaVersionError` instead of silently
+misreading it.  Records predating the field read as version 1 (the only
+format that ever existed without it).
 """
 from __future__ import annotations
 
@@ -24,8 +30,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.errors import SchemaVersionError
+
 PyTree = Any
 _BF16_TAG = "__bf16__"
+
+#: Version of the self-describing artifact container written by
+#: :func:`save_artifact`.  Bump when the structure encoding changes in a
+#: way old readers would misinterpret.
+ARTIFACT_SCHEMA_VERSION = 1
 
 
 def _flatten_with_names(tree: PyTree):
@@ -127,7 +140,8 @@ def save_artifact(path: str, tree: PyTree, meta: dict | None = None) -> None:
     structure = _encode(tree, payload, dtypes)
     np.savez(base + ".npz", **payload)
     with open(base + ".meta.json", "w") as f:
-        json.dump({"structure": structure, "dtypes": dtypes,
+        json.dump({"schema_version": ARTIFACT_SCHEMA_VERSION,
+                   "structure": structure, "dtypes": dtypes,
                    "meta": meta or {}}, f)
 
 
@@ -135,11 +149,17 @@ def load_artifact(path: str) -> tuple:
     """Returns ``(tree, meta)`` saved by :func:`save_artifact`.
 
     Array leaves come back as numpy arrays with their saved dtypes
-    (bfloat16 restored from bit patterns).
+    (bfloat16 restored from bit patterns).  Raises
+    :class:`~repro.core.errors.SchemaVersionError` when the record was
+    written by a newer schema than this build supports.
     """
     base = _base(path)
     with open(base + ".meta.json") as f:
         rec = json.load(f)
+    found = int(rec.get("schema_version", 1))
+    if found > ARTIFACT_SCHEMA_VERSION:
+        raise SchemaVersionError(f"artifact {base!r}", found,
+                                 ARTIFACT_SCHEMA_VERSION)
     with np.load(base + ".npz") as data:
         tree = _decode(rec["structure"], data, rec["dtypes"])
     return tree, rec.get("meta", {})

@@ -8,10 +8,14 @@ ILP), zerorouter (facade over the whole pipeline).
 from repro.core.irt import IRTConfig, fit_irt, irt_probability, posterior_means, task_aware_difficulty
 from repro.core.anchors import greedy_doptimal, logdet_information, select_anchors
 from repro.core.errors import (
+    DeadlineExceededError,
     DuplicateModelError,
     EmptyPoolError,
     NotCalibratedError,
+    OverloadedError,
     RouterError,
+    SchemaVersionError,
+    ServiceError,
     UnknownModelError,
 )
 from repro.core.profiling import ProfilingConfig, predict_accuracy, profile_new_model
@@ -25,12 +29,15 @@ from repro.core.pool import ModelPool, PoolSnapshot
 from repro.core.zerorouter import CandidateModel, ZeroRouter, ZeroRouterConfig
 
 __all__ = [
-    "CandidateModel", "DuplicateModelError", "EmptyPoolError", "IRTConfig",
+    "CandidateModel", "DeadlineExceededError", "DuplicateModelError",
+    "EmptyPoolError", "IRTConfig",
     "K_FEATURES", "LatencyParams", "ModelPool", "ModelProfile",
-    "NotCalibratedError", "OutputLengthTable", "POLICIES", "PoolSnapshot",
+    "NotCalibratedError", "OutputLengthTable", "OverloadedError",
+    "POLICIES", "PoolSnapshot",
     "Predictor", "PredictorConfig", "ProfilingConfig",
     "RooflineLatencyModel", "RouterArtifacts", "RouterConfig",
-    "RouterError", "RoutingConstraints", "UnknownModelError", "ZeroRouter",
+    "RouterError", "RoutingConstraints", "SchemaVersionError",
+    "ServiceError", "UnknownModelError", "ZeroRouter",
     "ZeroRouterConfig", "calibrate_latency", "calibrate_length_table",
     "cluster_dimensions", "estimate_cost", "extract_features",
     "extract_features_batch", "fit_irt", "greedy_doptimal",

@@ -26,3 +26,32 @@ class UnknownModelError(RouterError, KeyError):
 
 class DuplicateModelError(RouterError, ValueError):
     """``onboard`` was called with a name already in the pool."""
+
+
+class SchemaVersionError(RouterError):
+    """A persisted artifact / pool was written by a NEWER schema than this
+    build supports.  Refusing loudly beats silently dropping fields the
+    newer writer considered load-bearing; upgrade the reader (or re-save
+    with the older writer) instead."""
+
+    def __init__(self, kind: str, found: int, supported: int):
+        super().__init__(
+            f"{kind} was saved with schema_version={found}, but this build "
+            f"supports at most {supported} — upgrade to load it")
+        self.kind = kind
+        self.found = found
+        self.supported = supported
+
+
+class ServiceError(RouterError):
+    """Base class for serving-plane (RouterService) request failures."""
+
+
+class OverloadedError(ServiceError):
+    """The service shed the request at admission: the bounded queue was
+    full.  The request was NEVER routed; retry with backoff."""
+
+
+class DeadlineExceededError(ServiceError):
+    """The request's deadline expired while it waited in the coalescing
+    queue; it was shed before compute was spent on it."""

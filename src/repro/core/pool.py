@@ -37,10 +37,14 @@ from typing import Dict, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from repro.core.artifacts import ModelProfile
-from repro.core.errors import DuplicateModelError, UnknownModelError
+from repro.core.errors import (DuplicateModelError, SchemaVersionError,
+                               UnknownModelError)
 from repro.data.tokenizer import HashTokenizer, TokenizerSpec
 
 POOL_FORMAT = "zerorouter-pool-v1"
+#: Version of the pool JSON schema; bump when a field changes meaning or a
+#: new required field appears.  Records predating the field are version 1.
+POOL_SCHEMA_VERSION = 1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -203,6 +207,7 @@ class ModelPool:
         s = self._snap
         return {
             "format": POOL_FORMAT,
+            "schema_version": POOL_SCHEMA_VERSION,
             "version": s.version,
             "names": list(s.names),
             "thetas": [[float(x) for x in row] for row in s.thetas],
@@ -220,6 +225,9 @@ class ModelPool:
         if rec.get("format") != POOL_FORMAT:
             raise ValueError(f"not a model-pool record "
                              f"(format={rec.get('format')!r})")
+        found = int(rec.get("schema_version", 1))
+        if found > POOL_SCHEMA_VERSION:
+            raise SchemaVersionError("model pool", found, POOL_SCHEMA_VERSION)
         names = tuple(rec["names"])
         M = len(names)
         K = len(rec["edges"]) + 1

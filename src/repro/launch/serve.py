@@ -23,6 +23,16 @@ everywhere)::
 
     PYTHONPATH=src python -m repro.launch.serve --mode route \
         --artifact experiments/router_demo -n 512
+
+``--listen HOST:PORT`` turns route mode into a thin transport: the
+:class:`~repro.serving.RouterService` asyncio plane goes up behind the
+length-prefixed JSONL TCP protocol (``repro.serving.protocol``), and a
+fresh-process :class:`~repro.serving.ServiceClient` can route queries and
+administer the pool live (``PORT`` 0 picks a free port; the bound address
+is printed as ``LISTENING host:port``)::
+
+    PYTHONPATH=src python -m repro.launch.serve --mode route \
+        --artifact experiments/router_demo --listen 127.0.0.1:7707
 """
 from __future__ import annotations
 
@@ -139,6 +149,34 @@ def build_demo_engine(seed: int = 0, cache_size: int = 4096,
     return world, router, engine
 
 
+def _listen_main(args, router, engine) -> None:
+    """TCP front-end: RouterService + JSONL protocol (see --listen)."""
+    import asyncio
+
+    from repro.serving.protocol import server_port, start_server
+    from repro.serving.service import RouterService, ServiceConfig
+
+    host, _, port = args.listen.rpartition(":")
+    host = host or "127.0.0.1"
+
+    async def main() -> None:
+        service = RouterService(
+            router, engine=engine,
+            cfg=ServiceConfig(max_batch=args.max_batch,
+                              max_wait_s=args.max_wait_ms / 1e3))
+        async with service:
+            server = await start_server(service, host, int(port))
+            # parseable ready line — subprocess clients wait for it
+            print(f"LISTENING {host}:{server_port(server)}", flush=True)
+            async with server:
+                await server.serve_forever()
+
+    try:
+        asyncio.run(main())
+    except KeyboardInterrupt:
+        print("shutting down")
+
+
 def _route_main(args) -> None:
     from repro.data import OOD_TASKS
     from repro.serving import MicroBatcher
@@ -148,6 +186,13 @@ def _route_main(args) -> None:
     world, router, engine = build_demo_engine(seed=args.seed,
                                               artifact_dir=args.artifact)
     print(f"  router ready in {time.time() - t0:.2f}s")
+    if args.warmup:
+        print(f"  engine warmup: {engine.warmup(max_queries=args.warmup):.2f}s"
+              f" (padded buckets pre-compiled up to Q={args.warmup})")
+
+    if args.listen:
+        _listen_main(args, router, engine)
+        return
 
     if args.stdin:
         source = (line.strip() for line in sys.stdin if line.strip())
@@ -201,6 +246,13 @@ def main(argv=None):
     ap.add_argument("--policy", default="balanced")
     ap.add_argument("--max-batch", type=int, default=64)
     ap.add_argument("--max-wait-ms", type=float, default=2.0)
+    ap.add_argument("--listen", default=None, metavar="HOST:PORT",
+                    help="route: serve the RouterService wire protocol "
+                         "over TCP instead of the in-process stream "
+                         "(PORT 0 picks a free port)")
+    ap.add_argument("--warmup", type=int, default=0, metavar="Q",
+                    help="route: pre-compile the engine's padded buckets "
+                         "for batches up to Q before serving")
     args = ap.parse_args(argv)
 
     if args.mode == "route":

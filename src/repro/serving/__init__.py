@@ -1,16 +1,30 @@
 """Serving layer: batched, jit-compiled, cached routing over the layered
-API (``repro.api.Router`` — artifacts + pool snapshots).
+API (``repro.api.Router`` — artifacts + pool snapshots), and the asyncio
+service plane in front of it.
 
 engine   — RouterEngine: padded-bucket jitted scoring + LRU latent cache,
-           consuming ``ModelPool.snapshot()`` tensors directly
-batcher  — MicroBatcher: enqueue → coalesce → route → fan back
+           consuming ``ModelPool.snapshot()`` tensors directly;
+           ``warmup()`` pre-compiles the padded buckets
+batcher  — MicroBatcher: enqueue → coalesce (per-policy sub-batches) →
+           route → fan back, with deadline shedding and timings
 cache    — LatentCache: per-query latents/features/token counts (LRU)
+service  — RouterService: asyncio submit/submit_many/stream, admin plane
+           (live pool mutations with snapshot pinning), admission control
+protocol — length-prefixed JSONL wire format, asyncio TCP front-end,
+           synchronous ServiceClient, BackgroundServer
 """
 from repro.serving.batcher import MicroBatcher, RouteResult
 from repro.serving.cache import CacheEntry, CacheStats, LatentCache
-from repro.serving.engine import RouterEngine, RouterEngineConfig
+from repro.serving.engine import (BatchDecision, RouterEngine,
+                                  RouterEngineConfig)
+from repro.serving.protocol import (BackgroundServer, ServiceClient,
+                                    start_server)
+from repro.serving.service import (AdminPlane, RouteRequest, RouteResponse,
+                                   RouterService, ServiceConfig)
 
 __all__ = [
-    "CacheEntry", "CacheStats", "LatentCache", "MicroBatcher",
-    "RouteResult", "RouterEngine", "RouterEngineConfig",
+    "AdminPlane", "BackgroundServer", "BatchDecision", "CacheEntry",
+    "CacheStats", "LatentCache", "MicroBatcher", "RouteRequest",
+    "RouteResponse", "RouteResult", "RouterEngine", "RouterEngineConfig",
+    "RouterService", "ServiceClient", "ServiceConfig", "start_server",
 ]

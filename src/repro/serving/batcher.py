@@ -1,30 +1,49 @@
-"""Micro-batching scheduler: enqueue → coalesce → route → fan back.
+"""Micro-batching coalescer: enqueue → coalesce → route → fan back.
 
 Singleton routing requests are latency-wasteful: every call pays python
 dispatch plus a (M, 1) jit execution.  The :class:`MicroBatcher` coalesces
 concurrent requests into one padded-bucket batch — up to ``max_batch``
 requests, waiting at most ``max_wait_s`` after the first enqueue — routes
-the batch once through :meth:`RouterEngine.route_batch`, and resolves each
-request's future with its own decision, preserving per-query order.
+the batch once through :meth:`RouterEngine.route_pinned`, and resolves
+each request's future with its own decision, preserving per-query order.
 
-Requests carry a (policy, weights) key; one drained batch may mix keys, in
-which case the batch is routed once per distinct key (scores are computed
-once — the engine's latent cache makes the second pass table-only).
+Per-request policies are first-class: every request carries a canonical
+:class:`~repro.api.Policy` (built from the ``policy``/``weights`` pair at
+submit time).  Requests sharing a policy coalesce into ONE jitted call;
+a drained batch that mixes policies is split into per-policy sub-batches
+(scores are computed once per unique text — the engine's latent cache
+makes the second sub-batch table-only).
 
-Two operating modes:
+Admission/deadline semantics (consumed by the asyncio
+:class:`~repro.serving.service.RouterService` on top):
+
+  * a request may carry an absolute ``deadline`` (``time.monotonic``
+    scale); if it expires while the request sits in the queue, the worker
+    sheds it with a typed
+    :class:`~repro.core.errors.DeadlineExceededError` BEFORE any compute
+    is spent on it;
+  * every result reports its queue wait and its sub-batch compute time,
+    plus the pool snapshot version the decision was pinned against.
+
+Three ways to consume a future:
   * threaded: ``start()`` spawns a daemon worker; producers call
-    ``submit`` from any thread and block on the returned future.
+    ``submit`` from any thread and block on the returned future;
+  * awaitable: ``submit_awaitable`` wraps the same future for asyncio
+    callers (requires a running event loop); the service plane uses this;
   * synchronous: without ``start()``, callers ``submit`` then ``flush()``
     deterministically (used by tests and the benchmark).
 """
 from __future__ import annotations
 
+import asyncio
 import dataclasses
 import queue
 import threading
 import time
 from concurrent.futures import Future
-from typing import Iterable, List, Optional, Sequence, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.core.errors import DeadlineExceededError
 
 
 @dataclasses.dataclass
@@ -33,18 +52,27 @@ class RouteResult:
     text: str
     model: str
     model_index: int
+    request_id: Optional[str] = None
+    pool_version: int = -1
+    policy: str = "balanced"
+    queued_s: float = 0.0          # enqueue → sub-batch route start
+    compute_s: float = 0.0         # the sub-batch's score+route wall time
+    diagnostics: Optional[Dict[str, Dict[str, float]]] = None
 
 
 @dataclasses.dataclass
 class _Request:
     text: str
-    policy: str
-    weights: Optional[Tuple[float, float, float]]
+    pol: "object"                  # canonical repro.api.Policy (hashable)
     future: "Future[RouteResult]"
-
-    @property
-    def key(self):
-        return (self.policy, self.weights)
+    request_id: Optional[str] = None
+    deadline: Optional[float] = None      # absolute time.monotonic()
+    want_diag: bool = False
+    t_enqueue: float = 0.0
+    # bulk: the request IS already a batch — routed as its own engine
+    # call (global cost normalization over the whole bulk, exactly
+    # Router.route semantics) and resolved with List[RouteResult]
+    texts: Optional[List[str]] = None
 
 
 class MicroBatcher:
@@ -59,24 +87,79 @@ class MicroBatcher:
         self._closed = False
         self.batches_routed = 0
         self.requests_routed = 0
+        self.requests_shed = 0
 
     # ------------------------------------------------------------------
     # producer side
     # ------------------------------------------------------------------
     def submit(self, text: str, policy: str = "balanced",
-               weights: Optional[Tuple[float, float, float]] = None
-               ) -> "Future[RouteResult]":
+               weights: Optional[Tuple[float, float, float]] = None,
+               *, request_id: Optional[str] = None,
+               deadline: Optional[float] = None,
+               diagnostics: bool = False) -> "Future[RouteResult]":
+        from repro.api import Policy
+
         if self._closed:
             raise RuntimeError("MicroBatcher is closed")
-        fut: "Future[RouteResult]" = Future()
         if weights is not None:
             weights = tuple(weights)   # hashable batch key for any input
-        self._queue.put(_Request(text, policy, weights, fut))
+        pol = Policy.of(policy, weights)
+        fut: "Future[RouteResult]" = Future()
+        self._queue.put(_Request(text, pol, fut, request_id=request_id,
+                                 deadline=deadline, want_diag=diagnostics,
+                                 t_enqueue=time.monotonic()))
+        if self._closed:
+            # close() may have drained between our _closed check and the
+            # put — drain again so this future cannot be orphaned (the
+            # engine lock makes a concurrent flush safe; _resolve
+            # tolerates double resolution)
+            self.flush()
         return fut
+
+    def submit_awaitable(self, text: str, policy: str = "balanced",
+                         weights: Optional[Tuple[float, float, float]] = None,
+                         *, request_id: Optional[str] = None,
+                         deadline: Optional[float] = None,
+                         diagnostics: bool = False) -> "asyncio.Future":
+        """:meth:`submit` for asyncio callers: the same coalescing path,
+        returned as an awaitable bound to the RUNNING event loop."""
+        return asyncio.wrap_future(self.submit(
+            text, policy, weights, request_id=request_id, deadline=deadline,
+            diagnostics=diagnostics))
 
     def submit_many(self, texts: Iterable[str], policy: str = "balanced"
                     ) -> List["Future[RouteResult]"]:
         return [self.submit(t, policy) for t in texts]
+
+    def submit_bulk(self, texts: Sequence[str], policy: str = "balanced",
+                    weights: Optional[Tuple[float, float, float]] = None,
+                    *, request_id: Optional[str] = None,
+                    deadline: Optional[float] = None,
+                    diagnostics: bool = False
+                    ) -> "Future[List[RouteResult]]":
+        """Submit an ALREADY-BATCHED request: one queue slot, one engine
+        call, one future resolving to the per-query results in order.
+
+        Unlike coalesced singletons (whose cost normalization spans their
+        coalesced batch), a bulk's normalization spans the whole bulk —
+        selections match ``Router.route`` on the same texts exactly.  The
+        wire protocol's ``route_many`` op rides this: per-request task
+        overhead is paid once per bulk, not once per query."""
+        from repro.api import Policy
+
+        if self._closed:
+            raise RuntimeError("MicroBatcher is closed")
+        if weights is not None:
+            weights = tuple(weights)
+        pol = Policy.of(policy, weights)
+        fut: "Future[List[RouteResult]]" = Future()
+        self._queue.put(_Request("", pol, fut, request_id=request_id,
+                                 deadline=deadline, want_diag=diagnostics,
+                                 t_enqueue=time.monotonic(),
+                                 texts=list(texts)))
+        if self._closed:
+            self.flush()   # see submit(): close()/submit race
+        return fut
 
     # ------------------------------------------------------------------
     # consumer side
@@ -99,6 +182,22 @@ class MicroBatcher:
         return batch
 
     @staticmethod
+    def _result(dec, j: int, text: str, req: _Request, queued_s: float,
+                compute_s: float) -> RouteResult:
+        """Fan one query's slice of a BatchDecision back into a result."""
+        diag = None
+        if req.want_diag and dec.p is not None:
+            diag = {m: {"p": float(dec.p[i, j]),
+                        "cost": float(dec.cost[i, j]),
+                        "latency": float(dec.latency[i, j])}
+                    for i, m in enumerate(dec.model_names)}
+        return RouteResult(
+            text=text, model=dec.names[j], model_index=int(dec.sel[j]),
+            request_id=req.request_id, pool_version=dec.pool_version,
+            policy=req.pol.name, queued_s=queued_s, compute_s=compute_s,
+            diagnostics=diag)
+
+    @staticmethod
     def _resolve(fut: "Future", result=None, exc=None) -> None:
         """Set a future's outcome, tolerating caller-side cancellation —
         a cancelled future must never kill the worker loop."""
@@ -111,28 +210,62 @@ class MicroBatcher:
             pass
 
     def _route_batch(self, batch: Sequence[_Request]) -> None:
-        by_key = {}
-        for i, req in enumerate(batch):
-            by_key.setdefault(req.key, []).append(i)
-        for (policy, weights), idxs in by_key.items():
-            texts = [batch[i].text for i in idxs]
-            try:
-                names, sel = self.engine.route_batch(
-                    texts, policy=policy, weights=weights)
-            except Exception as exc:  # noqa: BLE001 — fan the error back
-                for i in idxs:
-                    self._resolve(batch[i].future, exc=exc)
+        t_start = time.monotonic()
+        by_pol: Dict[object, List[_Request]] = {}
+        bulks: List[_Request] = []
+        for req in batch:
+            if req.deadline is not None and t_start > req.deadline:
+                # shed BEFORE compute: the deadline covers queue wait, and
+                # a late answer is worthless to a deadline-carrying caller
+                self.requests_shed += 1
+                self._resolve(req.future, exc=DeadlineExceededError(
+                    f"request {req.request_id or req.text[:40]!r} waited "
+                    f"{t_start - req.t_enqueue:.3f}s, past its deadline"))
                 continue
-            for j, i in enumerate(idxs):
-                self._resolve(batch[i].future, RouteResult(
-                    text=batch[i].text, model=names[j],
-                    model_index=int(sel[j])))
+            if req.texts is not None:
+                bulks.append(req)
+            else:
+                by_pol.setdefault(req.pol, []).append(req)
+        for req in bulks:
+            self._route_bulk(req, t_start)
+        for pol, reqs in by_pol.items():
+            texts = [r.text for r in reqs]
+            want_diag = any(r.want_diag for r in reqs)
+            t0 = time.perf_counter()
+            try:
+                dec = self.engine.route_pinned(texts, policy=pol,
+                                               want_scores=want_diag)
+            except Exception as exc:  # noqa: BLE001 — fan the error back
+                for r in reqs:
+                    self._resolve(r.future, exc=exc)
+                continue
+            compute_s = time.perf_counter() - t0
+            for j, r in enumerate(reqs):
+                self._resolve(r.future, self._result(
+                    dec, j, r.text, r,
+                    queued_s=max(t_start - r.t_enqueue, 0.0),
+                    compute_s=compute_s))
+            self.requests_routed += len(reqs)
         self.batches_routed += 1
-        self.requests_routed += len(batch)
+
+    def _route_bulk(self, req: _Request, t_start: float) -> None:
+        t0 = time.perf_counter()
+        try:
+            dec = self.engine.route_pinned(req.texts, policy=req.pol,
+                                           want_scores=req.want_diag)
+        except Exception as exc:  # noqa: BLE001 — fan the error back
+            self._resolve(req.future, exc=exc)
+            return
+        compute_s = time.perf_counter() - t0
+        queued_s = max(t_start - req.t_enqueue, 0.0)
+        results = [self._result(dec, j, text, req, queued_s, compute_s)
+                   for j, text in enumerate(req.texts)]
+        self._resolve(req.future, results)
+        self.requests_routed += len(results)
 
     def flush(self) -> int:
         """Synchronously drain + route everything queued. Returns the
-        number of requests routed."""
+        number of requests drained (routed or deadline-shed)."""
         n = 0
         while True:
             try:

@@ -1,13 +1,25 @@
 """RouterEngine — the batched, jit-compiled serving layer over the
 layered routing API (``repro.api.Router``).
 
+The serving stack, bottom-up: this engine (jitted scoring against pinned
+pool snapshots) → :class:`~repro.serving.batcher.MicroBatcher` (the
+engine's single serialized thread; coalesces singletons, splits
+per-policy sub-batches, sheds expired deadlines) →
+:class:`~repro.serving.service.RouterService` (asyncio request plane:
+``submit``/``submit_many``/``submit_batch``/``stream``, the live admin
+plane, admission control) → :mod:`repro.serving.protocol` (JSONL TCP
+wire).  ``Router.serve()`` assembles the stack; ``launch/serve.py
+--listen`` puts it on a socket.
+
 Lifecycle of a request batch (enqueue → coalesce → score → route →
 respond):
 
   1. **enqueue**: callers submit raw query texts (directly via
-     :meth:`RouterEngine.route_batch`, or through the
+     :meth:`RouterEngine.route_batch`, through the
      :class:`~repro.serving.batcher.MicroBatcher` which coalesces
-     singleton requests up to ``max_batch``/``max_wait``);
+     singleton requests up to ``max_batch``/``max_wait``, or via
+     ``RouterService`` which adds typed requests, deadlines and
+     admission control on top);
   2. **score**: texts are split into latent-cache hits and misses; misses
      are tokenized + feature-extracted ONCE PER QUERY and pushed, padded
      to fixed (Q, L) buckets, through one jitted program fusing the
@@ -32,6 +44,17 @@ new ``RouterArtifacts`` instance (they are frozen), which the engine
 detects by identity and answers by re-building its jitted closures and
 clearing the cache.
 
+Snapshot pinning: every routed batch pins ONE snapshot for scoring AND
+index→name mapping (:meth:`RouterEngine.route_pinned` reports which
+version), so live admin mutations can land mid-traffic without a batch
+ever seeing mixed pool states.
+
+Warm-start: XLA compiles one program per padded-bucket shape, so a cold
+engine pays a multi-second stall on its first request.
+:meth:`RouterEngine.warmup` (run by ``Router.open(dir, warmup=...)``)
+walks the reachable bucket rungs with zero-filled tensors at open time;
+``BENCH_onboarding.json`` tracks the stall it removes.
+
 Numerical contract: the engine's (p, cost, lat) match ``Router.score`` to
 float32 resolution (the table / cost / latency stages are bit-for-bit;
 the jitted predictor forward differs from the eager one by ~1 ulp),
@@ -42,6 +65,7 @@ selections are identical (tested in tests/test_serving.py).
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -68,6 +92,25 @@ class RouterEngineConfig:
     seq_multiple: int = 8         # sequence-length bucket granularity
     forward_chunk: int = 64       # queries per predictor-forward chunk
     use_pallas: Optional[bool] = None   # None → Pallas on TPU only
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchDecision:
+    """One routed batch against ONE pinned pool snapshot.
+
+    ``pool_version`` and ``model_names`` describe the snapshot the
+    selections were computed against — the serving plane reports them so a
+    client can correlate a decision with the pool state that produced it
+    even while the admin plane mutates the live pool.  ``p`` / ``cost`` /
+    ``latency`` are the (M, Q) score tensors, populated only when the
+    caller asked for per-model diagnostics."""
+    names: List[str]                 # selected model name per query (Q,)
+    sel: np.ndarray                  # (Q,) selection indices into the pool
+    pool_version: int
+    model_names: Tuple[str, ...]     # pool membership at the pinned version
+    p: Optional[np.ndarray] = None
+    cost: Optional[np.ndarray] = None
+    latency: Optional[np.ndarray] = None
 
 
 class _DevicePool:
@@ -98,6 +141,13 @@ class RouterEngine:
             LatentCache(cfg.cache_size) if cfg.cache_size > 0 else None)
         self._device_pool: Optional[_DevicePool] = None
         self._artifacts_ref = None
+        # serializes the public scoring/routing entry points: the cached
+        # Router.engine() may be shared by several MicroBatcher workers /
+        # direct callers, and the LRU cache + device-pool rebuild are not
+        # safe under concurrent mutation.  Re-entrant because _score
+        # recurses for Q > max_batch.  Uncontended cost is negligible
+        # next to a jitted forward.
+        self._route_lock = threading.RLock()
         self._build_jits()
 
     # ------------------------------------------------------------------
@@ -273,8 +323,9 @@ class RouterEngine:
                       ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Batched equivalent of ``Router.score``: (p, cost, latency),
         each (M, Q).  Chunks internally at ``max_batch``."""
-        self._check_predictor()
-        return self._score(texts, self._pool())
+        with self._route_lock:
+            self._check_predictor()
+            return self._score(texts, self._pool())
 
     def _score(self, texts: Sequence[str], pool: _DevicePool
                ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
@@ -319,9 +370,10 @@ class RouterEngine:
         from repro.api import Policy
 
         pol = Policy.of(policy, weights, constraints)
-        self._check_predictor()
-        pool = self._pool()      # pin ONE snapshot for scoring AND naming
-        p, cost, lat = self._score(texts, pool)
+        with self._route_lock:
+            self._check_predictor()
+            pool = self._pool()  # pin ONE snapshot for scoring AND naming
+            p, cost, lat = self._score(texts, pool)
         sel, diag = core_route(p, cost, lat, weights=pol.weights,
                                constraints=pol.constraints)
         sel = np.asarray(sel)
@@ -352,8 +404,47 @@ class RouterEngine:
         if pol.constraints is not None:
             names, sel, _ = self.route(texts, policy=pol)
             return names, sel
-        self._check_predictor()
-        pool = self._pool()      # pin ONE snapshot for scoring AND naming
+        with self._route_lock:
+            self._check_predictor()
+            pool = self._pool()  # pin ONE snapshot for scoring AND naming
+            return self._route_fast(texts, pol, pool)
+
+    def route_pinned(self, texts: Sequence[str], policy="balanced",
+                     weights: Optional[Tuple[float, float, float]] = None,
+                     want_scores: bool = False) -> BatchDecision:
+        """Serving-plane entry point: route one batch and report WHICH pool
+        snapshot produced the decision.
+
+        Selections are identical to :meth:`route_batch` / :meth:`route` on
+        the same inputs; the extra return surface (pinned pool version and
+        membership, optional (M, Q) score tensors) is what
+        :class:`~repro.serving.service.RouterService` needs to build
+        responses that stay coherent under live pool administration.
+        ``want_scores`` (or a constrained policy) takes the full scoring
+        path so per-model diagnostics can be fanned back per query."""
+        from repro.api import Policy
+
+        pol = Policy.of(policy, weights)
+        with self._route_lock:
+            self._check_predictor()
+            pool = self._pool()  # pin ONE snapshot for scoring AND naming
+            if pol.constraints is not None or want_scores:
+                p, cost, lat = self._score(texts, pool)
+                sel, _ = core_route(p, cost, lat, weights=pol.weights,
+                                    constraints=pol.constraints)
+                sel = np.asarray(sel)
+                return BatchDecision(
+                    names=[pool.names[i] for i in sel], sel=sel,
+                    pool_version=pool.snap.version, model_names=pool.names,
+                    p=p, cost=cost, latency=lat)
+            names, sel = self._route_fast(texts, pol, pool)
+            return BatchDecision(names=names, sel=sel,
+                                 pool_version=pool.snap.version,
+                                 model_names=pool.names)
+
+    def _route_fast(self, texts: Sequence[str], pol, pool: _DevicePool
+                    ) -> Tuple[List[str], np.ndarray]:
+        """Unconstrained fused-kernel routing against a pinned snapshot."""
         Q = len(texts)
         p, cost, lat = self._score(texts, pool)
         w = np.asarray(pol.weights, np.float32)
@@ -377,6 +468,79 @@ class RouterEngine:
         out = np.zeros((x.shape[0], cols), np.float32)
         out[:, : x.shape[1]] = x
         return out
+
+    # ------------------------------------------------------------------
+    # warm-start
+    # ------------------------------------------------------------------
+    def warmup(self, max_queries: int = 1) -> float:
+        """Pre-compile every jitted program a request of ≤ ``max_queries``
+        queries can hit, so the first SERVED request pays no jit stall.
+
+        XLA compilation is keyed on shape: the encoder+heads program
+        compiles per (Q-bucket, L-bucket), the accuracy reduction and the
+        routing kernel per Q-bucket.  This walks exactly the bucket rungs
+        the runtime can produce — all sequence-length buckets up to the
+        predictor's ``max_len`` and every batch rung reachable for
+        ``max_queries`` — feeding zero-filled tensors of the right
+        shape/dtype through each program.  Subsequent real calls hit jax's
+        compile cache.
+
+        The default (``max_queries=1``) removes the stall for singleton
+        traffic of ANY text length — the shape the micro-batcher's first
+        coalesce produces.  Pass a larger value (e.g. the expected batch
+        size) to pre-compile the full rung ladder; cost grows with the
+        number of rungs.  A pool mutation that changes M invalidates the
+        reduction/kernel programs (their θ-stack shape changed) — re-call
+        after onboarding if the mutation stall matters.  Returns seconds
+        spent compiling."""
+        import time
+
+        t0 = time.perf_counter()
+        with self._route_lock:
+            return self._warmup_locked(max_queries, t0)
+
+    def _warmup_locked(self, max_queries: int, t0: float) -> float:
+        import time
+
+        from repro.core.features import extract_features_batch
+
+        self._check_predictor()
+        pool = self._pool()                      # θ upload happens here too
+        pc = self.router.artifacts.predictor.cfg
+        n_feats = extract_features_batch([""]).shape[1]
+        D = pc.latent_dim
+        m = self.cfg.seq_multiple
+        l_buckets = sorted({min(lb, pc.max_len)
+                            for lb in range(m, pc.max_len + m, m)}
+                           | {min(m, pc.max_len)})
+        fc = min(self.cfg.forward_chunk, self.cfg.max_batch)
+        enc_rungs = sorted({self._bucket(n)
+                            for n in range(1, min(max_queries, fc) + 1)})
+        q_rungs = sorted({self._bucket(n) for n in
+                          range(1, min(max_queries, self.cfg.max_batch) + 1)})
+        for bq in enc_rungs:
+            for lb in l_buckets:
+                a, _ = self._latents_jit(
+                    jnp.zeros((bq, lb), jnp.int32),
+                    jnp.zeros((bq, lb), jnp.float32),
+                    jnp.zeros((bq, n_feats), jnp.float32))
+                a.block_until_ready()
+        M = pool.snap.n_models
+        for bq in q_rungs:
+            p_pad, _ = self._from_latents_jit(
+                jnp.zeros((bq, D), jnp.float32),
+                jnp.zeros((bq, D), jnp.float32), pool.thetas)
+            p_pad.block_until_ready()
+            valid = np.zeros(bq, bool)
+            valid[:1] = True
+            sel, _ = ops.routing_argmax(
+                jnp.zeros((M, bq), jnp.float32),
+                jnp.zeros((M, bq), jnp.float32),
+                jnp.zeros((M, bq), jnp.float32),
+                jnp.zeros(3, jnp.float32), valid=jnp.asarray(valid),
+                use_pallas=self._use_pallas())
+            sel.block_until_ready()
+        return time.perf_counter() - t0
 
     # ------------------------------------------------------------------
     # diagnostics

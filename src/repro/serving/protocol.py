@@ -1,0 +1,577 @@
+"""Length-prefixed JSONL wire protocol + asyncio TCP front-end + client.
+
+Framing — one frame per message, human-debuggable and splice-safe::
+
+    <decimal byte-length of payload>\\n
+    <payload: one JSON object>\\n
+
+(the length covers the payload INCLUDING its trailing newline, so a
+captured stream still reads as JSON-lines; the prefix lets the reader
+allocate exactly once and survive payloads containing no newline-safe
+text).
+
+Message surface (mirrors :mod:`repro.serving.service`):
+
+  * ``{"op": "route", "id", "text", "policy", "deadline_s",
+    "diagnostics"}`` → one response frame per request, in COMPLETION
+    order (correlate by ``id``); ``policy`` is either a ``POLICIES`` name
+    or an inline ``{"name", "weights", "constraints"}`` object;
+  * ``{"op": "admin", "action": "onboard" | "remove" | "update_pricing" |
+    "pool_info", "params": {...}}`` → applied against the LIVE pool
+    (copy-on-write snapshot bump; in-flight batches keep their pinned
+    snapshot).  Admin frames are a per-connection barrier: every route
+    frame sent before the admin op COMPLETES (its response is written)
+    before the mutation lands, so a client never sees a pre-admin
+    request routed against the post-admin pool;
+  * ``{"op": "stats"}`` / ``{"op": "ping"}`` — observability.
+
+Responses carry ``status`` — ``"ok"``, or the typed shed statuses
+``"overloaded"`` / ``"deadline_exceeded"`` / ``"error"`` which
+:class:`ServiceClient` raises back as the matching
+:mod:`repro.core.errors` exception types.
+
+:class:`ServiceClient` is a synchronous socket client (fresh-process
+examples, benchmarks, smoke tests); :class:`BackgroundServer` runs a
+``RouterService`` + TCP server on a dedicated event-loop thread so
+synchronous code can stand up a serving plane in-process.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import itertools
+import json
+import socket
+import threading
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core import errors as errors_mod
+from repro.core.errors import (DeadlineExceededError, OverloadedError,
+                               ServiceError)
+from repro.serving.service import (RouteRequest, RouteResponse,
+                                   RouterService, ServiceConfig)
+
+PROTOCOL_VERSION = 1
+
+_STATUS_EXC = {
+    "overloaded": OverloadedError,
+    "deadline_exceeded": DeadlineExceededError,
+}
+
+
+# ---------------------------------------------------------------------------
+# framing
+# ---------------------------------------------------------------------------
+
+def encode_frame(obj: Dict[str, Any]) -> bytes:
+    payload = json.dumps(obj, separators=(",", ":")).encode() + b"\n"
+    return b"%d\n" % len(payload) + payload
+
+
+async def read_frame(reader: asyncio.StreamReader) -> Optional[Dict]:
+    """One frame from an asyncio stream; None on clean EOF."""
+    line = await reader.readline()
+    if not line:
+        return None
+    try:
+        n = int(line)
+    except ValueError:
+        raise ValueError(f"bad frame length prefix {line!r}") from None
+    payload = await reader.readexactly(n)
+    return json.loads(payload)
+
+
+def read_frame_sync(f) -> Optional[Dict]:
+    """One frame from a blocking file-like (socket.makefile('rb'))."""
+    line = f.readline()
+    if not line:
+        return None
+    payload = f.read(int(line))
+    if len(payload) < int(line):
+        raise ConnectionError("connection closed mid-frame")
+    return json.loads(payload)
+
+
+# ---------------------------------------------------------------------------
+# codecs
+# ---------------------------------------------------------------------------
+
+def policy_to_json(policy) -> Union[str, Dict]:
+    if isinstance(policy, str):
+        return policy
+    rec: Dict[str, Any] = {"name": policy.name,
+                           "weights": [float(w) for w in policy.weights]}
+    if policy.constraints is not None:
+        rec["constraints"] = dataclasses.asdict(policy.constraints)
+    return rec
+
+
+def policy_from_json(v):
+    if isinstance(v, str):
+        return v
+    from repro.api import Policy
+    from repro.core.router import RoutingConstraints
+
+    cons = (RoutingConstraints(**v["constraints"])
+            if v.get("constraints") else None)
+    return Policy(weights=tuple(v["weights"]), name=v.get("name", "custom"),
+                  constraints=cons)
+
+
+def request_to_json(req: RouteRequest) -> Dict:
+    rec: Dict[str, Any] = {"op": "route", "id": req.request_id,
+                           "text": req.text,
+                           "policy": policy_to_json(req.policy)}
+    if req.deadline_s is not None:
+        rec["deadline_s"] = req.deadline_s
+    if req.diagnostics:
+        rec["diagnostics"] = True
+    return rec
+
+
+def request_from_json(frame: Dict) -> RouteRequest:
+    return RouteRequest(
+        text=frame["text"],
+        policy=policy_from_json(frame.get("policy", "balanced")),
+        request_id=frame.get("id"),
+        deadline_s=frame.get("deadline_s"),
+        diagnostics=bool(frame.get("diagnostics", False)))
+
+
+def response_to_json(resp: RouteResponse) -> Dict:
+    rec = {"id": resp.request_id, "status": resp.status,
+           "model": resp.model, "model_index": resp.model_index,
+           "pool_version": resp.pool_version, "policy": resp.policy,
+           "queued_ms": resp.queued_ms, "compute_ms": resp.compute_ms}
+    if resp.diagnostics is not None:
+        rec["diagnostics"] = resp.diagnostics
+    if resp.error is not None:
+        rec["error"] = resp.error
+    return rec
+
+
+def response_from_json(frame: Dict, text: str = "") -> RouteResponse:
+    return RouteResponse(
+        request_id=frame.get("id"), text=text,
+        model=frame.get("model", ""),
+        model_index=int(frame.get("model_index", -1)),
+        pool_version=int(frame.get("pool_version", -1)),
+        policy=frame.get("policy", "balanced"),
+        queued_ms=float(frame.get("queued_ms", 0.0)),
+        compute_ms=float(frame.get("compute_ms", 0.0)),
+        diagnostics=frame.get("diagnostics"),
+        status=frame.get("status", "ok"),
+        error=frame.get("error"))
+
+
+# ---------------------------------------------------------------------------
+# server
+# ---------------------------------------------------------------------------
+
+def _admin_dispatch(service: RouterService, frame: Dict) -> Dict:
+    from repro.data.tokenizer import TokenizerSpec
+
+    action = frame.get("action")
+    params = frame.get("params") or {}
+    admin = service.admin
+    if action == "onboard":
+        return admin.onboard(
+            params["name"], np.asarray(params["anchor_scores"], np.float64),
+            np.asarray(params["anchor_lengths"], np.float64),
+            np.asarray(params["anchor_latency"], np.float64),
+            params["price_in"], params["price_out"],
+            TokenizerSpec(**params["tokenizer"]))
+    if action == "remove":
+        return admin.remove(params["name"])
+    if action == "update_pricing":
+        return admin.update_pricing(params["name"],
+                                    price_in=params.get("price_in"),
+                                    price_out=params.get("price_out"))
+    if action == "pool_info":
+        return admin.pool_info()
+    raise ValueError(f"unknown admin action {action!r}")
+
+
+async def _handle_connection(service: RouterService,
+                             reader: asyncio.StreamReader,
+                             writer: asyncio.StreamWriter) -> None:
+    loop = asyncio.get_running_loop()
+    tasks: set = set()
+    sock = writer.get_extra_info("socket")
+    if sock is not None:
+        # small response frames must not sit in Nagle's buffer waiting
+        # for ACKs — that throttles a pipelined client to ~ACK cadence
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+
+    async def send(obj: Dict) -> None:
+        # StreamWriter.write is synchronous (order is fixed at call time;
+        # no lock needed under a single-threaded loop); drain() only
+        # applies backpressure when the transport buffer is over the
+        # high-water mark
+        writer.write(encode_frame(obj))
+        await writer.drain()
+
+    async def route_one(frame: Dict) -> None:
+        try:
+            resp = await service._submit_or_status(request_from_json(frame))
+            await send(response_to_json(resp))
+        except Exception as e:  # noqa: BLE001 — a malformed frame must
+            # still be ANSWERED, or a pipelined client hangs counting
+            # responses
+            await send({"id": frame.get("id"), "status": "error",
+                        "error": f"{type(e).__name__}: {e}",
+                        "error_type": type(e).__name__})
+
+    async def route_bulk(frame: Dict) -> None:
+        rid = frame.get("id")
+        try:
+            resps = await service.submit_batch(
+                frame["texts"],
+                policy=policy_from_json(frame.get("policy", "balanced")),
+                request_id=rid, deadline_s=frame.get("deadline_s"),
+                diagnostics=bool(frame.get("diagnostics", False)))
+            await send({"id": rid, "status": "ok",
+                        "results": [response_to_json(r) for r in resps]})
+        except OverloadedError as e:
+            await send({"id": rid, "status": "overloaded", "error": str(e)})
+        except DeadlineExceededError as e:
+            await send({"id": rid, "status": "deadline_exceeded",
+                        "error": str(e)})
+        except Exception as e:  # noqa: BLE001 — keep the connection alive
+            await send({"id": rid, "status": "error",
+                        "error": f"{type(e).__name__}: {e}",
+                        "error_type": type(e).__name__})
+
+    try:
+        while True:
+            frame = await read_frame(reader)
+            if frame is None:
+                break
+            op = frame.get("op")
+            if op == "route":
+                t = asyncio.ensure_future(route_one(frame))
+                tasks.add(t)
+                t.add_done_callback(tasks.discard)
+            elif op == "route_many":
+                t = asyncio.ensure_future(route_bulk(frame))
+                tasks.add(t)
+                t.add_done_callback(tasks.discard)
+            elif op == "admin":
+                # per-connection admin barrier: every route frame read
+                # BEFORE this op finishes (response written) before the
+                # mutation lands — scheduling alone wouldn't guarantee a
+                # prior frame's task had even submitted yet
+                if tasks:
+                    await asyncio.gather(*list(tasks),
+                                         return_exceptions=True)
+                try:
+                    result = await loop.run_in_executor(
+                        None, _admin_dispatch, service, frame)
+                    await send({"id": frame.get("id"), "status": "ok",
+                                **result})
+                except Exception as e:  # noqa: BLE001 — fan back typed
+                    await send({"id": frame.get("id"), "status": "error",
+                                "error": str(e),
+                                "error_type": type(e).__name__})
+            elif op == "stats":
+                await send({"id": frame.get("id"), "status": "ok",
+                            "stats": service.stats()})
+            elif op == "ping":
+                await send({"id": frame.get("id"), "status": "ok",
+                            "op": "pong",
+                            "protocol_version": PROTOCOL_VERSION})
+            else:
+                await send({"id": frame.get("id"), "status": "error",
+                            "error": f"unknown op {op!r}"})
+    except (asyncio.IncompleteReadError, ConnectionResetError):
+        pass   # client went away mid-frame
+    finally:
+        if tasks:
+            await asyncio.gather(*tasks, return_exceptions=True)
+        writer.close()
+        try:
+            await writer.wait_closed()
+        except (ConnectionResetError, BrokenPipeError):
+            pass
+
+
+async def start_server(service: RouterService, host: str = "127.0.0.1",
+                       port: int = 0) -> asyncio.AbstractServer:
+    """TCP front-end for a STARTED RouterService; ``port=0`` picks a free
+    port (read it back from ``server.sockets[0].getsockname()[1]``)."""
+
+    async def handle(reader, writer):
+        await _handle_connection(service, reader, writer)
+
+    return await asyncio.start_server(handle, host, port)
+
+
+def server_port(server: asyncio.AbstractServer) -> int:
+    return server.sockets[0].getsockname()[1]
+
+
+# ---------------------------------------------------------------------------
+# synchronous client
+# ---------------------------------------------------------------------------
+
+def _raise_for_status(rep: Dict) -> Dict:
+    status = rep.get("status", "ok")
+    if status == "ok":
+        return rep
+    exc_cls = _STATUS_EXC.get(status)
+    if exc_cls is None:
+        exc_cls = getattr(errors_mod, rep.get("error_type", ""), None)
+        if exc_cls is None or not (isinstance(exc_cls, type)
+                                   and issubclass(exc_cls, Exception)):
+            exc_cls = ServiceError
+    msg = rep.get("error") or status
+    try:
+        raise exc_cls(msg)
+    except TypeError:   # typed ctor with a different signature
+        raise ServiceError(msg) from None
+
+
+class _ClientAdmin:
+    """`client.admin.*` — the admin plane over the wire."""
+
+    def __init__(self, client: "ServiceClient"):
+        self._c = client
+
+    def _rpc(self, action: str, params: Dict) -> Dict:
+        return _raise_for_status(self._c._rpc(
+            {"op": "admin", "action": action, "params": params}))
+
+    def onboard(self, name: str, anchor_scores, anchor_lengths,
+                anchor_latency, price_in: float, price_out: float,
+                tokenizer) -> Dict:
+        from repro.data.tokenizer import TokenizerSpec
+
+        if not isinstance(tokenizer, TokenizerSpec):
+            tokenizer = TokenizerSpec.of(tokenizer)
+        return self._rpc("onboard", {
+            "name": name,
+            "anchor_scores": np.asarray(anchor_scores).tolist(),
+            "anchor_lengths": np.asarray(anchor_lengths).tolist(),
+            "anchor_latency": np.asarray(anchor_latency).tolist(),
+            "price_in": float(price_in), "price_out": float(price_out),
+            "tokenizer": dataclasses.asdict(tokenizer)})
+
+    def remove(self, name: str) -> Dict:
+        return self._rpc("remove", {"name": name})
+
+    def update_pricing(self, name: str, price_in: Optional[float] = None,
+                       price_out: Optional[float] = None) -> Dict:
+        return self._rpc("update_pricing", {"name": name,
+                                            "price_in": price_in,
+                                            "price_out": price_out})
+
+    def pool_info(self) -> Dict:
+        return self._rpc("pool_info", {})
+
+
+class ServiceClient:
+    """Blocking TCP client for the RouterService wire protocol.
+
+    One connection, pipelining-aware: :meth:`route_many` sends every
+    request frame before reading any response, so the server's
+    micro-batcher sees them as one coalescible burst.  Typed shed
+    statuses come back as the matching ``repro.core.errors`` exceptions.
+    """
+
+    def __init__(self, host: str = "127.0.0.1", port: int = 0,
+                 timeout: float = 60.0):
+        self._sock = socket.create_connection((host, port), timeout=timeout)
+        self._sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        self._rfile = self._sock.makefile("rb")
+        self._ids = itertools.count()
+        self.admin = _ClientAdmin(self)
+
+    # -- plumbing ------------------------------------------------------
+    def _send(self, frame: Dict) -> None:
+        self._sock.sendall(encode_frame(frame))
+
+    def _recv(self) -> Dict:
+        rep = read_frame_sync(self._rfile)
+        if rep is None:
+            raise ConnectionError("server closed the connection")
+        return rep
+
+    def _rpc(self, frame: Dict) -> Dict:
+        frame.setdefault("id", f"c{next(self._ids)}")
+        self._send(frame)
+        return self._recv()
+
+    # -- request plane -------------------------------------------------
+    def route(self, text: str, policy="balanced",
+              deadline_s: Optional[float] = None,
+              diagnostics: bool = False,
+              request_id: Optional[str] = None) -> RouteResponse:
+        req = RouteRequest(text=text, policy=policy,
+                           request_id=request_id or f"c{next(self._ids)}",
+                           deadline_s=deadline_s, diagnostics=diagnostics)
+        self._send(request_to_json(req))
+        rep = _raise_for_status(self._recv())
+        return response_from_json(rep, text=text)
+
+    def route_many(self, texts: Sequence[str], policy="balanced",
+                   deadline_s: Optional[float] = None,
+                   diagnostics: bool = False,
+                   pipeline: bool = False) -> List[RouteResponse]:
+        """Route a batch; responses in request order.
+
+        Default is the bulk ``route_many`` op: ONE frame each way, one
+        admission slot, one engine call with global cost normalization —
+        selections match ``Router.route`` on the same texts exactly, and
+        the per-request asyncio overhead is paid once per batch.
+
+        ``pipeline=True`` sends one ``route`` frame per text instead (all
+        frames out, then all responses in, matched by id): each request
+        is admitted individually and coalesced by the server's
+        micro-batcher — the shape streaming clients produce."""
+        if not texts:
+            return []
+        if pipeline:
+            reqs = [RouteRequest(text=t, policy=policy,
+                                 request_id=f"c{next(self._ids)}",
+                                 deadline_s=deadline_s,
+                                 diagnostics=diagnostics) for t in texts]
+            for r in reqs:
+                self._send(request_to_json(r))
+            by_id: Dict[str, Dict] = {}
+            for _ in reqs:
+                rep = self._recv()
+                by_id[rep.get("id")] = rep
+            return [response_from_json(_raise_for_status(by_id[r.request_id]),
+                                       text=r.text) for r in reqs]
+        frame: Dict[str, Any] = {"op": "route_many", "texts": list(texts),
+                                 "policy": policy_to_json(policy)}
+        if deadline_s is not None:
+            frame["deadline_s"] = deadline_s
+        if diagnostics:
+            frame["diagnostics"] = True
+        rep = _raise_for_status(self._rpc(frame))
+        return [response_from_json(r, text=t)
+                for r, t in zip(rep["results"], texts)]
+
+    # -- observability -------------------------------------------------
+    def ping(self) -> Dict:
+        return _raise_for_status(self._rpc({"op": "ping"}))
+
+    def stats(self) -> Dict:
+        return _raise_for_status(self._rpc({"op": "stats"}))["stats"]
+
+    def close(self) -> None:
+        try:
+            self._rfile.close()
+        finally:
+            self._sock.close()
+
+    def __enter__(self) -> "ServiceClient":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def connect(host: str, port: int, timeout: float = 60.0,
+            retries: int = 50, retry_wait_s: float = 0.1) -> ServiceClient:
+    """Connect with retries — the standard 'server is still binding'
+    startup race for subprocess-spawned servers."""
+    import time
+
+    last: Optional[Exception] = None
+    for _ in range(retries):
+        try:
+            return ServiceClient(host, port, timeout=timeout)
+        except OSError as e:
+            last = e
+            time.sleep(retry_wait_s)
+    raise ConnectionError(f"could not reach {host}:{port}: {last!r}")
+
+
+# ---------------------------------------------------------------------------
+# in-process background server (tests / benchmarks / examples)
+# ---------------------------------------------------------------------------
+
+class BackgroundServer:
+    """RouterService + TCP front-end on a dedicated event-loop thread.
+
+    Lets synchronous code (pytest, benchmarks, examples) stand up the
+    full transport stack and talk to it through :class:`ServiceClient`::
+
+        with BackgroundServer(router) as srv:
+            with ServiceClient(srv.host, srv.port) as client:
+                client.route("hello")
+    """
+
+    def __init__(self, router, engine=None, host: str = "127.0.0.1",
+                 port: int = 0, cfg: Optional[ServiceConfig] = None):
+        self._router = router
+        self._engine = engine
+        self.host = host
+        self.port = port
+        self._cfg = cfg or ServiceConfig()
+        self.service: Optional[RouterService] = None
+        self._loop: Optional[asyncio.AbstractEventLoop] = None
+        self._thread: Optional[threading.Thread] = None
+        self._ready = threading.Event()
+        self._stop: Optional[asyncio.Event] = None
+        self._startup_error: Optional[BaseException] = None
+
+    async def _main(self) -> None:
+        try:
+            self.service = RouterService(self._router, engine=self._engine,
+                                         cfg=self._cfg)
+            await self.service.start()
+            server = await start_server(self.service, self.host, self.port)
+            self.port = server_port(server)
+            self._stop = asyncio.Event()
+        except BaseException as e:   # surface to the spawning thread
+            self._startup_error = e
+            self._ready.set()
+            raise
+        self._ready.set()
+        try:
+            await self._stop.wait()
+        finally:
+            server.close()
+            await server.wait_closed()
+            await self.service.close()
+            # wait_closed() does not wait for in-flight connection
+            # handlers — reap them so the loop closes clean
+            rest = [t for t in asyncio.all_tasks()
+                    if t is not asyncio.current_task()]
+            for t in rest:
+                t.cancel()
+            if rest:
+                await asyncio.gather(*rest, return_exceptions=True)
+
+    def _run(self) -> None:
+        self._loop = asyncio.new_event_loop()
+        asyncio.set_event_loop(self._loop)
+        try:
+            self._loop.run_until_complete(self._main())
+        except BaseException:  # noqa: BLE001 — already captured for caller
+            pass
+        finally:
+            self._loop.close()
+
+    def __enter__(self) -> "BackgroundServer":
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name="router-service-tcp")
+        self._thread.start()
+        self._ready.wait(timeout=60)
+        if self._startup_error is not None:
+            raise RuntimeError("service failed to start") \
+                from self._startup_error
+        if not self._ready.is_set():
+            raise TimeoutError("service did not start within 60s")
+        return self
+
+    def __exit__(self, *exc) -> None:
+        if self._loop is not None and self._stop is not None:
+            self._loop.call_soon_threadsafe(self._stop.set)
+        if self._thread is not None:
+            self._thread.join(timeout=30)

@@ -1,0 +1,428 @@
+"""RouterService — the asyncio serving plane over RouterEngine.
+
+The paper's promise is zero-shot onboarding into a *running* routing
+system.  This module is the running system: an asyncio service that owns a
+:class:`~repro.serving.engine.RouterEngine` and a threaded
+:class:`~repro.serving.batcher.MicroBatcher`, and exposes three surfaces:
+
+**Request plane** — typed request/response routing:
+
+  * :meth:`RouterService.submit` — one :class:`RouteRequest` (text,
+    optional per-request policy override, request id, deadline) awaited
+    into a :class:`RouteResponse` (selection, pinned pool version,
+    queue/compute timings, optional per-model diagnostics);
+  * :meth:`RouterService.submit_many` — a batch of requests awaited
+    concurrently (they coalesce in the micro-batcher);
+  * :meth:`RouterService.stream` — an async iterator: feed requests in
+    (any iterable or async iterable), responses come out in COMPLETION
+    order, shed requests surfacing as typed non-``ok`` statuses instead
+    of breaking the stream.
+
+**Admin plane** (:attr:`RouterService.admin`) — live pool administration:
+``onboard`` / ``remove`` / ``update_pricing`` / ``swap_predictor`` apply
+the :class:`~repro.core.pool.ModelPool` copy-on-write mutations against
+the live engine.  Snapshot pinning makes this safe mid-traffic: a batch
+pins ONE ``PoolSnapshot`` when it starts scoring, so in-flight batches
+complete against the pool they started with while the next coalesced
+batch picks up the bump — every response reports the version it was
+pinned to.
+
+**Admission control** — the service degrades predictably instead of
+queuing unboundedly:
+
+  * ``max_inflight`` requests may be inside the batcher at once; further
+    ``submit`` calls WAIT (asyncio backpressure), they are not dropped;
+  * at most ``max_queue`` submitters may be waiting for admission; beyond
+    that the service sheds with a typed
+    :class:`~repro.core.errors.OverloadedError` — the request was never
+    routed, retry with backoff;
+  * a request whose deadline expires while it waits is shed with
+    :class:`~repro.core.errors.DeadlineExceededError` before any compute
+    is spent on it.
+
+The wire protocol and TCP front-end live in
+:mod:`repro.serving.protocol`; ``repro.api.Router.serve()`` is the façade
+entry point::
+
+    async with router.serve() as service:
+        resp = await service.submit("translate this to French")
+        service.admin.onboard("new-model", scores, lengths, lat, pi, po, tok)
+"""
+from __future__ import annotations
+
+import asyncio
+import contextlib
+import dataclasses
+import threading
+import time
+from typing import (Any, AsyncIterator, Dict, Iterable, List, Optional,
+                    Sequence, Tuple, Union)
+
+import numpy as np
+
+from repro.core.errors import (DeadlineExceededError, OverloadedError,
+                               ServiceError)
+from repro.serving.batcher import MicroBatcher, RouteResult
+from repro.serving.engine import RouterEngine, RouterEngineConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class RouteRequest:
+    """One routing request entering the service plane."""
+    text: str
+    policy: Any = "balanced"           # POLICIES name or repro.api.Policy
+    request_id: Optional[str] = None
+    deadline_s: Optional[float] = None  # seconds of budget from submission
+    diagnostics: bool = False           # fan back per-model p/cost/latency
+
+    @classmethod
+    def of(cls, req: Union["RouteRequest", str], **overrides
+           ) -> "RouteRequest":
+        if isinstance(req, RouteRequest):
+            return dataclasses.replace(req, **overrides) if overrides else req
+        return cls(text=req, **overrides)
+
+
+@dataclasses.dataclass(frozen=True)
+class RouteResponse:
+    """The service's answer to one :class:`RouteRequest`.
+
+    ``status`` is ``"ok"`` for a routed decision.  :meth:`stream` also
+    emits typed shed results in-band (``"overloaded"``,
+    ``"deadline_exceeded"``, ``"error"``) with ``model`` empty and
+    ``model_index`` -1; :meth:`submit` raises the typed exception
+    instead."""
+    request_id: Optional[str]
+    text: str
+    model: str
+    model_index: int
+    pool_version: int
+    policy: str
+    queued_ms: float
+    compute_ms: float
+    diagnostics: Optional[Dict[str, Dict[str, float]]] = None
+    status: str = "ok"
+    error: Optional[str] = None
+
+    @property
+    def ok(self) -> bool:
+        return self.status == "ok"
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    max_batch: int = 64            # micro-batcher coalesce limit
+    max_wait_s: float = 0.002      # micro-batcher coalesce window
+    max_inflight: int = 256        # requests inside the batcher at once
+    max_queue: int = 1024          # submitters awaiting admission; beyond
+    #                                this, submit sheds with OverloadedError
+    default_deadline_s: Optional[float] = None   # per-request override wins
+
+
+def _to_response(r: RouteResult) -> RouteResponse:
+    return RouteResponse(
+        request_id=r.request_id, text=r.text, model=r.model,
+        model_index=r.model_index, pool_version=r.pool_version,
+        policy=r.policy, queued_ms=r.queued_s * 1e3,
+        compute_ms=r.compute_s * 1e3, diagnostics=r.diagnostics)
+
+
+def _shed_response(req: RouteRequest, status: str, error: str
+                   ) -> RouteResponse:
+    return RouteResponse(
+        request_id=req.request_id, text=req.text, model="", model_index=-1,
+        pool_version=-1, policy=(req.policy if isinstance(req.policy, str)
+                                 else getattr(req.policy, "name", "custom")),
+        queued_ms=0.0, compute_ms=0.0, status=status, error=error)
+
+
+class AdminPlane:
+    """Live pool administration against a serving :class:`RouterService`.
+
+    Every method applies a copy-on-write ``ModelPool`` mutation (or an
+    artifacts swap) and returns the resulting pool state.  Mutations are
+    serialized by a lock (copy-on-write protects READERS, not two
+    concurrent writers); each is a snapshot bump the engine adopts at its
+    next batch — in-flight batches keep the snapshot they pinned."""
+
+    def __init__(self, service: "RouterService"):
+        self._service = service
+        self._lock = threading.Lock()
+
+    def _info(self) -> Dict[str, Any]:
+        snap = self._service.router.pool.snapshot()
+        return {"pool_version": snap.version, "models": list(snap.names)}
+
+    def pool_info(self) -> Dict[str, Any]:
+        return self._info()
+
+    def onboard(self, name: str, anchor_scores, anchor_lengths,
+                anchor_latency, price_in: float, price_out: float,
+                tokenizer) -> Dict[str, Any]:
+        """Zero-shot onboard a model into the LIVE pool (paper Eq. 5/9/11):
+        profile from anchor responses, register, next batch routes over it."""
+        with self._lock:
+            self._service.router.onboard(
+                name, np.asarray(anchor_scores), np.asarray(anchor_lengths),
+                np.asarray(anchor_latency), float(price_in),
+                float(price_out), tokenizer)
+            return self._info()
+
+    def remove(self, name: str) -> Dict[str, Any]:
+        with self._lock:
+            self._service.router.remove(name)
+            return self._info()
+
+    def update_pricing(self, name: str, price_in: Optional[float] = None,
+                       price_out: Optional[float] = None) -> Dict[str, Any]:
+        with self._lock:
+            self._service.router.update_pricing(
+                name, price_in=price_in, price_out=price_out)
+            return self._info()
+
+    def swap_predictor(self, predictor, tokenizer=None) -> Dict[str, Any]:
+        """Swap the context-aware predictor (A/B test, checkpoint restore).
+        The engine detects the new artifacts identity at its next batch,
+        rebuilds its jitted closures and clears the latent cache.  Not
+        exposed over the wire — predictors don't serialize into a frame."""
+        with self._lock:
+            self._service.router.set_predictor(predictor,
+                                               tokenizer=tokenizer)
+            return self._info()
+
+
+class RouterService:
+    """Asyncio service plane over (Router, RouterEngine); see module doc.
+
+    Use as an async context manager (or ``await start()`` / ``await
+    close()``).  All request-plane methods must be called from the event
+    loop the service was started on; the admin plane is thread-safe and
+    callable from anywhere."""
+
+    def __init__(self, router, engine: Optional[RouterEngine] = None,
+                 cfg: ServiceConfig = ServiceConfig(),
+                 engine_cfg: Optional[RouterEngineConfig] = None):
+        self.router = router
+        self.engine = engine if engine is not None else router.engine(engine_cfg)
+        self.cfg = cfg
+        self.batcher = MicroBatcher(self.engine, max_batch=cfg.max_batch,
+                                    max_wait_s=cfg.max_wait_s)
+        self.admin = AdminPlane(self)
+        self._sem: Optional[asyncio.Semaphore] = None
+        self._waiting = 0
+        self._started = False
+        self.stats_counters: Dict[str, int] = {
+            "submitted": 0, "completed": 0, "shed_overloaded": 0,
+            "shed_deadline": 0, "errors": 0,
+        }
+
+    # ------------------------------------------------------------------
+    # lifecycle
+    # ------------------------------------------------------------------
+    async def start(self) -> "RouterService":
+        if self._started:
+            return self
+        self._sem = asyncio.Semaphore(self.cfg.max_inflight)
+        self.batcher.start()
+        self._started = True
+        return self
+
+    async def close(self) -> None:
+        if not self._started:
+            return
+        self._started = False
+        # batcher.close drains the queue, so no accepted awaiter hangs
+        await asyncio.get_running_loop().run_in_executor(
+            None, self.batcher.close)
+
+    async def __aenter__(self) -> "RouterService":
+        return await self.start()
+
+    async def __aexit__(self, *exc) -> None:
+        await self.close()
+
+    # ------------------------------------------------------------------
+    # request plane
+    # ------------------------------------------------------------------
+    @contextlib.asynccontextmanager
+    async def _admission(self, n: int, deadline_s: Optional[float]):
+        """Shared admission control: shed-or-wait, deadline computation,
+        semaphore hold for the request's lifetime, shed accounting.
+        Yields the absolute deadline (``time.monotonic`` scale).  ``n``
+        is the query count the request represents (counters are
+        per-query)."""
+        if not self._started:
+            raise RuntimeError("RouterService is not started — use "
+                               "'async with router.serve()' or await start()")
+        budget = (deadline_s if deadline_s is not None
+                  else self.cfg.default_deadline_s)
+        deadline = None if budget is None else time.monotonic() + budget
+        self.stats_counters["submitted"] += n
+        # shed only when the request would actually have to WAIT behind a
+        # full admission queue — max_queue=0 means "busy ⇒ shed", never
+        # "idle ⇒ shed"
+        if self._sem.locked() and self._waiting >= self.cfg.max_queue:
+            self.stats_counters["shed_overloaded"] += n
+            raise OverloadedError(
+                f"admission queue full ({self._waiting} waiting ≥ "
+                f"max_queue={self.cfg.max_queue}); retry with backoff")
+        self._waiting += 1
+        try:
+            await self._sem.acquire()
+        finally:
+            self._waiting -= 1
+        try:
+            yield deadline
+        except DeadlineExceededError:
+            self.stats_counters["shed_deadline"] += n
+            raise
+        finally:
+            self._sem.release()
+        self.stats_counters["completed"] += n
+
+    async def submit(self, request: Union[RouteRequest, str], **overrides
+                     ) -> RouteResponse:
+        """Route one request; raises ``OverloadedError`` /
+        ``DeadlineExceededError`` when the request is shed (typed — the
+        caller can distinguish "back off" from "too slow")."""
+        req = RouteRequest.of(request, **overrides)
+        async with self._admission(1, req.deadline_s) as deadline:
+            if deadline is not None and time.monotonic() > deadline:
+                raise DeadlineExceededError(
+                    f"request {req.request_id or req.text[:40]!r} spent its "
+                    f"whole deadline awaiting admission")
+            result: RouteResult = await self.batcher.submit_awaitable(
+                req.text, policy=req.policy, request_id=req.request_id,
+                deadline=deadline, diagnostics=req.diagnostics)
+        return _to_response(result)
+
+    async def submit_many(self, requests: Sequence[Union[RouteRequest, str]],
+                          return_exceptions: bool = False
+                          ) -> List[Union[RouteResponse, BaseException]]:
+        """Route a batch concurrently (one ``submit`` per request, so they
+        coalesce in the micro-batcher).  With ``return_exceptions``, shed
+        requests come back as their typed exception instances in-place;
+        otherwise the first shed propagates (like ``asyncio.gather``).
+
+        For a homogeneous batch (one policy, no per-request ids) prefer
+        :meth:`submit_batch` — one admission slot and one engine call
+        instead of per-request task machinery."""
+        return await asyncio.gather(
+            *(self.submit(r) for r in requests),
+            return_exceptions=return_exceptions)
+
+    async def submit_batch(self, texts: Sequence[str], policy="balanced",
+                           request_id: Optional[str] = None,
+                           deadline_s: Optional[float] = None,
+                           diagnostics: bool = False
+                           ) -> List[RouteResponse]:
+        """Route an ALREADY-BATCHED request under one policy: one
+        admission slot, one engine call, global cost normalization over
+        the whole batch (selections match ``Router.route`` exactly).
+        This is the bulk path the wire protocol's ``route_many`` op uses;
+        it costs O(1) asyncio overhead instead of O(batch)."""
+        if not texts:
+            return []
+        async with self._admission(len(texts), deadline_s) as deadline:
+            results: List[RouteResult] = await asyncio.wrap_future(
+                self.batcher.submit_bulk(
+                    texts, policy=policy, request_id=request_id,
+                    deadline=deadline, diagnostics=diagnostics))
+        return [_to_response(r) for r in results]
+
+    async def _submit_or_status(self, request: Union[RouteRequest, str]
+                                ) -> RouteResponse:
+        """submit() with shed/failure folded into the response status —
+        the in-band form used by stream() and the wire protocol."""
+        req = RouteRequest.of(request)
+        try:
+            return await self.submit(req)
+        except OverloadedError as e:
+            return _shed_response(req, "overloaded", str(e))
+        except DeadlineExceededError as e:
+            return _shed_response(req, "deadline_exceeded", str(e))
+        except ServiceError as e:
+            return _shed_response(req, "error", str(e))
+        except Exception as e:  # noqa: BLE001 — a request must not kill
+            # the connection/stream it rode in on
+            self.stats_counters["errors"] += 1
+            return _shed_response(req, "error", f"{type(e).__name__}: {e}")
+
+    async def stream(self, requests) -> AsyncIterator[RouteResponse]:
+        """Async-iterate responses in COMPLETION order for an (async or
+        sync) iterable of requests.  Shed requests appear as typed
+        non-``ok`` responses; correlate via ``request_id``."""
+        out: "asyncio.Queue[RouteResponse]" = asyncio.Queue()
+        # the loop holds only weak refs to tasks — anchor them or a
+        # pending submission can be garbage-collected mid-flight and its
+        # response never reaches the queue
+        inflight: set = set()
+
+        async def _pump() -> int:
+            n = 0
+            async for req in _as_async_iter(requests):
+                n += 1
+
+                async def _one(r=req):
+                    await out.put(await self._submit_or_status(r))
+
+                t = asyncio.ensure_future(_one())
+                inflight.add(t)
+                t.add_done_callback(inflight.discard)
+            return n
+
+        pump = asyncio.ensure_future(_pump())
+        yielded = 0
+        getter: Optional[asyncio.Future] = None
+        while True:
+            if pump.done():
+                total = pump.result()   # re-raises an ingest failure
+                while yielded < total:
+                    resp = await (getter if getter is not None else out.get())
+                    getter = None
+                    yielded += 1
+                    yield resp
+                if getter is not None:   # pending get on a drained queue
+                    getter.cancel()
+                return
+            if getter is None:
+                getter = asyncio.ensure_future(out.get())
+            await asyncio.wait({getter, pump},
+                               return_when=asyncio.FIRST_COMPLETED)
+            if getter.done():
+                yield getter.result()
+                yielded += 1
+                getter = None
+
+    # ------------------------------------------------------------------
+    # observability
+    # ------------------------------------------------------------------
+    def stats(self) -> Dict[str, Any]:
+        snap = self.router.pool.snapshot()
+        st = dict(self.stats_counters)
+        st.update({
+            "inflight": (0 if self._sem is None
+                         else self.cfg.max_inflight - self._sem._value),
+            "waiting": self._waiting,
+            "pool_version": snap.version,
+            "n_models": snap.n_models,
+            "batches_routed": self.batcher.batches_routed,
+            "requests_routed": self.batcher.requests_routed,
+            "requests_shed": self.batcher.requests_shed,
+        })
+        cs = self.engine.cache_stats
+        if cs is not None:
+            st["cache"] = {"hits": cs.hits, "misses": cs.misses,
+                           "evictions": cs.evictions,
+                           "hit_rate": cs.hit_rate}
+        return st
+
+
+async def _as_async_iter(it) -> AsyncIterator:
+    if hasattr(it, "__aiter__"):
+        async for x in it:
+            yield x
+    else:
+        for x in it:
+            yield x
+            await asyncio.sleep(0)   # let submissions interleave

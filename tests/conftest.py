@@ -14,6 +14,18 @@ def small_world():
 
 
 @pytest.fixture(scope="session")
+def demo_stack():
+    """The smoke-world (world, router, engine) the serving-layer tests
+    share.  Session-scoped: calibration is the expensive part.  Tests
+    that mutate the pool / artifacts MUST restore them (try/finally) —
+    version numbers may advance, so assert on relative versions only."""
+    from repro.launch.serve import build_demo_engine
+
+    world, router, engine = build_demo_engine(seed=0)
+    return world, router, engine
+
+
+@pytest.fixture(scope="session")
 def calibrated(small_world):
     world = small_world
     qi = world.query_indices(ID_TASKS)

@@ -331,3 +331,60 @@ def test_zerorouter_shim_matches_facade(demo):
     p2, c2, l2 = router.score(texts)
     np.testing.assert_array_equal(p1, p2)
     np.testing.assert_array_equal(c1, c2)
+
+
+# ---------------------------------------------------------------------------
+# schema versioning (ISSUE 3 persistence satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_artifact_schema_version_roundtrip(demo, tmp_path):
+    """Every saved artifact records its schema_version; same-version (and
+    version-less legacy) records load; a NEWER version raises the typed
+    SchemaVersionError instead of misreading."""
+    from repro.checkpoint import ARTIFACT_SCHEMA_VERSION
+    from repro.core.errors import SchemaVersionError
+
+    _, router, texts = demo
+    d = tmp_path / "router"
+    router.save(str(d))
+    meta_path = d / "artifacts.meta.json"
+    meta = json.loads(meta_path.read_text())
+    assert meta["schema_version"] == ARTIFACT_SCHEMA_VERSION
+
+    # legacy record (pre-versioning): reads as version 1
+    legacy = dict(meta)
+    del legacy["schema_version"]
+    meta_path.write_text(json.dumps(legacy))
+    _, sel_legacy, _ = Router.open(str(d)).route(texts)
+
+    # newer-than-supported: typed refusal naming both versions
+    newer = dict(meta, schema_version=ARTIFACT_SCHEMA_VERSION + 1)
+    meta_path.write_text(json.dumps(newer))
+    with pytest.raises(SchemaVersionError) as ei:
+        Router.open(str(d))
+    assert ei.value.found == ARTIFACT_SCHEMA_VERSION + 1
+    assert ei.value.supported == ARTIFACT_SCHEMA_VERSION
+
+    # restore → routes identically to the reference
+    meta_path.write_text(json.dumps(meta))
+    _, sel_back, _ = Router.open(str(d)).route(texts)
+    _, sel_ref, _ = router.route(texts)
+    np.testing.assert_array_equal(np.asarray(sel_back), np.asarray(sel_ref))
+    np.testing.assert_array_equal(np.asarray(sel_legacy),
+                                  np.asarray(sel_ref))
+
+
+def test_pool_schema_version_roundtrip(demo):
+    from repro.core.errors import SchemaVersionError
+    from repro.core.pool import POOL_SCHEMA_VERSION
+
+    _, router, _ = demo
+    rec = router.pool.to_json()
+    assert rec["schema_version"] == POOL_SCHEMA_VERSION
+    # legacy (version-less) pool records still load
+    legacy = {k: v for k, v in rec.items() if k != "schema_version"}
+    assert ModelPool.from_json(legacy).names == router.pool.names
+    with pytest.raises(SchemaVersionError):
+        ModelPool.from_json(dict(rec,
+                                 schema_version=POOL_SCHEMA_VERSION + 1))

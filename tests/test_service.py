@@ -1,0 +1,416 @@
+"""RouterService async serving plane (ISSUE 3): typed request/response
+routing, admission control, live pool administration with snapshot
+pinning, the JSONL wire protocol, and the fresh-process TCP acceptance
+path against ``launch/serve.py --listen``."""
+import asyncio
+import dataclasses
+import json
+import time
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.core.errors import (DeadlineExceededError, OverloadedError,
+                               SchemaVersionError)
+from repro.data import ID_TASKS, OOD_TASKS
+from repro.serving import (BackgroundServer, RouteRequest, RouterEngine,
+                           RouterEngineConfig, RouterService, ServiceClient,
+                           ServiceConfig)
+from repro.serving import protocol as proto
+from repro.serving.engine import BatchDecision
+
+
+@pytest.fixture(scope="module")
+def served(demo_stack):
+    world, router, engine = demo_stack
+    qi = world.query_indices(OOD_TASKS)
+    texts = [world.queries[i].text for i in qi[:32]]
+    return world, router, engine, texts
+
+
+def _future_model_responses(world, router, name="future-model-00"):
+    m = world.model_index(name)
+    anchors = world.query_indices(ID_TASKS)[router.artifacts.anchor_idx]
+    y = world.sample_responses([m], anchors, seed=m)[0]
+    lens = world.output_lengths([m], anchors)[0]
+    lats = world.true_latency([m], anchors, lens[None])[0]
+    return world.models[m], y, lens, lats
+
+
+# ---------------------------------------------------------------------------
+# engine: pinned decisions + warm-start
+# ---------------------------------------------------------------------------
+
+
+def test_route_pinned_matches_route(served):
+    _, router, engine, texts = served
+    dec = engine.route_pinned(texts)
+    names_ref, sel_ref, _ = router.route(texts)
+    np.testing.assert_array_equal(dec.sel, np.asarray(sel_ref))
+    assert dec.names == names_ref
+    assert dec.pool_version == router.pool.version
+    assert dec.model_names == router.pool.names
+    # the diagnostics path must select identically and carry (M, Q) scores
+    full = engine.route_pinned(texts, want_scores=True)
+    np.testing.assert_array_equal(full.sel, dec.sel)
+    assert full.p.shape == (len(router.pool), len(texts))
+
+
+def test_warmup_precompiles_first_request(served):
+    """After warmup, the first singleton route must not trigger a fresh
+    jit trace (compilation would be ~100× the steady-state latency)."""
+    _, router, _, texts = served
+    engine = RouterEngine(router, RouterEngineConfig(cache_size=0))
+    warm_s = engine.warmup()
+    assert warm_s > 0
+    t0 = time.perf_counter()
+    names, sel = engine.route_batch([texts[0]])
+    first_s = time.perf_counter() - t0
+    names_ref, sel_ref, _ = router.route([texts[0]])
+    assert names == names_ref and int(sel[0]) == int(np.asarray(sel_ref)[0])
+    # generous bound: steady-state is ~5-10ms; an un-warmed first call
+    # pays seconds of XLA compilation
+    assert first_s < max(1.0, warm_s / 2), \
+        f"first routed request stalled {first_s:.2f}s after warmup"
+
+
+# ---------------------------------------------------------------------------
+# service plane (in-process, asyncio)
+# ---------------------------------------------------------------------------
+
+
+def test_submit_matches_router_route(served):
+    _, router, engine, texts = served
+
+    async def main():
+        async with RouterService(router, engine=engine) as svc:
+            resps = await svc.submit_many(texts)
+            one = await svc.submit(texts[0])
+            return resps, one
+
+    resps, one = asyncio.run(main())
+    names_ref, sel_ref, _ = router.route(texts)
+    assert [r.model for r in resps] == names_ref
+    assert [r.model_index for r in resps] == [int(s) for s in
+                                              np.asarray(sel_ref)]
+    assert all(r.ok and r.pool_version == router.pool.version
+               for r in resps)
+    assert one.model == names_ref[0]
+    assert one.queued_ms >= 0 and one.compute_ms > 0
+
+
+def test_stream_completion_order_and_ids(served):
+    _, router, engine, texts = served
+
+    async def main():
+        async with RouterService(router, engine=engine) as svc:
+            reqs = [RouteRequest(t, request_id=str(i))
+                    for i, t in enumerate(texts[:12])]
+            return [r async for r in svc.stream(reqs)]
+
+    resps = asyncio.run(main())
+    assert len(resps) == 12 and all(r.ok for r in resps)
+    assert sorted(int(r.request_id) for r in resps) == list(range(12))
+    by_id = {int(r.request_id): r for r in resps}
+    names_ref, _, _ = router.route(texts[:12])
+    assert [by_id[i].model for i in range(12)] == names_ref
+
+
+def test_per_request_policy_override(served):
+    """Mixed policies in one service: each request is routed under ITS
+    policy (the batcher splits per-policy sub-batches)."""
+    _, router, engine, texts = served
+
+    async def main():
+        async with RouterService(router, engine=engine) as svc:
+            return await asyncio.gather(
+                svc.submit_many([RouteRequest(t, policy="min_cost")
+                                 for t in texts[:8]]),
+                svc.submit_many([RouteRequest(t, policy="max_acc")
+                                 for t in texts[:8]]))
+
+    cost_r, acc_r = asyncio.run(main())
+    _, sel_cost, _ = router.route(texts[:8], policy="min_cost")
+    _, sel_acc, _ = router.route(texts[:8], policy="max_acc")
+    assert [r.model_index for r in cost_r] == [int(s) for s in
+                                               np.asarray(sel_cost)]
+    assert [r.model_index for r in acc_r] == [int(s) for s in
+                                              np.asarray(sel_acc)]
+
+
+def test_diagnostics_fan_back(served):
+    _, router, engine, texts = served
+
+    async def main():
+        async with RouterService(router, engine=engine) as svc:
+            return await svc.submit(RouteRequest(texts[0],
+                                                 diagnostics=True))
+
+    resp = asyncio.run(main())
+    assert set(resp.diagnostics) == set(router.pool.names)
+    p, cost, lat = router.score([texts[0]])
+    for i, name in enumerate(router.pool.names):
+        d = resp.diagnostics[name]
+        assert d["p"] == pytest.approx(float(p[i, 0]), abs=2e-6)
+        assert d["cost"] == float(cost[i, 0])
+        assert d["latency"] == float(lat[i, 0])
+
+
+class _SlowStubEngine:
+    """Engine double: fixed decision after a delay (admission tests)."""
+
+    def __init__(self, delay_s=0.05):
+        self.delay_s = delay_s
+        self.cache_stats = None
+
+    def route_pinned(self, texts, policy="balanced", want_scores=False):
+        time.sleep(self.delay_s)
+        return BatchDecision(names=["m0"] * len(texts),
+                             sel=np.zeros(len(texts), int),
+                             pool_version=0, model_names=("m0",))
+
+
+def _stub_router():
+    snap = SimpleNamespace(version=0, n_models=1, names=("m0",))
+    return SimpleNamespace(pool=SimpleNamespace(snapshot=lambda: snap))
+
+
+def test_admission_overload_sheds_typed(served):
+    """max_inflight=1 + max_queue=1: one routes, one waits, the rest are
+    shed with a typed OverloadedError — never queued unboundedly."""
+
+    async def main():
+        svc = RouterService(_stub_router(), engine=_SlowStubEngine(),
+                            cfg=ServiceConfig(max_batch=1, max_wait_s=0.0,
+                                              max_inflight=1, max_queue=1))
+        async with svc:
+            results = await svc.submit_many(["a", "b", "c", "d"],
+                                            return_exceptions=True)
+        return results, svc.stats()
+
+    results, stats = asyncio.run(main())
+    ok = [r for r in results if not isinstance(r, BaseException)]
+    shed = [r for r in results if isinstance(r, OverloadedError)]
+    assert len(ok) == 2 and len(shed) == 2
+    assert stats["shed_overloaded"] == 2 and stats["completed"] == 2
+
+
+def test_deadline_shed_before_compute(served):
+    _, router, engine, texts = served
+
+    async def main():
+        async with RouterService(router, engine=engine) as svc:
+            with pytest.raises(DeadlineExceededError):
+                await svc.submit(RouteRequest(texts[0], deadline_s=0.0))
+            # in-band form: stream folds the shed into a typed status
+            resps = [r async for r in svc.stream(
+                [RouteRequest(texts[0], deadline_s=0.0, request_id="x")])]
+            return resps, svc.stats()
+
+    resps, stats = asyncio.run(main())
+    assert resps[0].status == "deadline_exceeded" and not resps[0].ok
+    assert resps[0].model_index == -1
+    assert stats["shed_deadline"] == 2
+
+
+def test_admin_swap_predictor_live(served):
+    """swap_predictor through the admin plane: new artifacts identity,
+    engine clears its latent cache, selections stay consistent."""
+    _, router, _, texts = served
+    engine = RouterEngine(router, RouterEngineConfig(cache_size=64))
+    old_art, old_pred = router.artifacts, router.predictor
+
+    async def main():
+        async with RouterService(router, engine=engine) as svc:
+            before = await svc.submit_many(texts[:8])
+            info = svc.admin.swap_predictor(
+                dataclasses.replace(old_pred))   # identity-equal swap
+            after = await svc.submit_many(texts[:8])
+            return before, info, after
+
+    try:
+        before, info, after = asyncio.run(main())
+        assert router.artifacts is not old_art
+        assert [r.model for r in before] == [r.model for r in after]
+        assert info["pool_version"] == router.pool.version
+    finally:
+        router.artifacts = old_art
+
+
+# ---------------------------------------------------------------------------
+# wire protocol
+# ---------------------------------------------------------------------------
+
+
+def test_frame_roundtrip_sync_reader():
+    import io
+
+    frames = [{"op": "ping"}, {"op": "route", "text": "héllo\nworld",
+                               "id": "a"}]
+    buf = io.BytesIO(b"".join(proto.encode_frame(f) for f in frames))
+    got = []
+    while True:
+        f = proto.read_frame_sync(buf)
+        if f is None:
+            break
+        got.append(f)
+    assert got == frames
+
+
+def test_policy_codec_roundtrip():
+    from repro.api import Policy
+
+    for pol in ("balanced",
+                Policy.of("min_cost"),
+                Policy.of("max_acc").constrained(max_total_cost=0.5),
+                Policy((0.7, 0.2, 0.1))):
+        enc = proto.policy_to_json(pol)
+        json.dumps(enc)   # must be pure JSON
+        dec = proto.policy_from_json(enc)
+        assert dec == pol
+
+
+def test_status_raises_typed_errors():
+    with pytest.raises(OverloadedError):
+        proto._raise_for_status({"status": "overloaded", "error": "x"})
+    with pytest.raises(DeadlineExceededError):
+        proto._raise_for_status({"status": "deadline_exceeded"})
+    from repro.core.errors import DuplicateModelError, ServiceError
+    with pytest.raises(DuplicateModelError):
+        proto._raise_for_status({"status": "error", "error": "dup",
+                                 "error_type": "DuplicateModelError"})
+    with pytest.raises(ServiceError):
+        proto._raise_for_status({"status": "error", "error": "boom",
+                                 "error_type": "NoSuchError"})
+
+
+# ---------------------------------------------------------------------------
+# TCP end-to-end (in-process server thread)
+# ---------------------------------------------------------------------------
+
+
+def test_tcp_roundtrip_with_admin_midstream(served):
+    """The ISSUE-3 acceptance core: a client on the TCP JSONL transport
+    routes queries, onboards a model via the admin plane mid-stream, and
+    selections before/after match ``Router.route`` bit-for-bit for the
+    pinned snapshot versions."""
+    world, router, engine, texts = served
+    mi, y, lens, lats = _future_model_responses(world, router)
+
+    with BackgroundServer(router, engine=engine) as srv:
+        with ServiceClient(srv.host, srv.port) as client:
+            assert client.ping()["op"] == "pong"
+            v0 = router.pool.version
+            pre = client.route_many(texts)
+            _, sel_pre, _ = router.route(texts)
+            assert [r.model_index for r in pre] == \
+                [int(s) for s in np.asarray(sel_pre)]
+            assert all(r.pool_version == v0 for r in pre)
+            # streaming shape: one frame per query, coalesced server-side
+            # (selections depend on coalesced-batch composition, so only
+            # the fan-back contract is asserted here)
+            piped = client.route_many(texts[:8], pipeline=True)
+            assert [r.text for r in piped] == list(texts[:8])
+            assert all(r.ok and r.model == router.pool.names[r.model_index]
+                       for r in piped)
+            try:
+                info = client.admin.onboard(
+                    "future-model-00", y, lens, lats,
+                    mi.price_in, mi.price_out, mi.tokenizer)
+                assert info["pool_version"] == v0 + 1
+                assert "future-model-00" in info["models"]
+                post = client.route_many(texts)
+                _, sel_post, _ = router.route(texts)
+                assert [r.model_index for r in post] == \
+                    [int(s) for s in np.asarray(sel_post)]
+                assert all(r.pool_version == v0 + 1 for r in post)
+                # pricing mutation bumps again; stats see the live pool
+                client.admin.update_pricing("future-model-00",
+                                            price_in=123.0)
+                assert client.stats()["pool_version"] == v0 + 2
+            finally:
+                if "future-model-00" in router.pool:
+                    client.admin.remove("future-model-00")
+            from repro.core.errors import UnknownModelError
+            with pytest.raises(UnknownModelError):
+                client.admin.remove("future-model-00")
+            # a malformed route frame must still be ANSWERED (typed
+            # error), or a pipelined client would hang counting responses
+            client._send({"op": "route", "id": "bad"})   # no "text"
+            rep = client._recv()
+            assert rep["id"] == "bad" and rep["status"] == "error"
+            # and the connection stays usable afterwards
+            assert client.route(texts[0]).ok
+
+
+# ---------------------------------------------------------------------------
+# fresh-process acceptance: launch/serve.py --listen
+# ---------------------------------------------------------------------------
+
+
+def test_fresh_process_tcp_serving(served, tmp_path):
+    """Spawn ``launch/serve.py --mode route --listen`` on a saved
+    artifact in a FRESH process; this process acts as the remote client:
+    route → onboard via wire admin → route, matching a local
+    ``Router.open`` reference bit-for-bit."""
+    import os
+    import subprocess
+    import sys
+    import threading
+
+    world, router, engine, texts = served
+    art_dir = tmp_path / "router_artifact"
+    router.save(str(art_dir))
+    from repro.api import Router
+    ref = Router.open(str(art_dir))
+
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (src, env.get("PYTHONPATH")) if p)
+    pro = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.serve", "--mode", "route",
+         "--listen", "127.0.0.1:0", "--artifact", str(art_dir)],
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True,
+        bufsize=1, env=env)
+    addr = {}
+    lines = []
+
+    def _watch():
+        for line in pro.stdout:
+            lines.append(line)
+            if line.startswith("LISTENING "):
+                host, _, port = line.split()[1].rpartition(":")
+                addr["host"], addr["port"] = host, int(port)
+                return
+
+    w = threading.Thread(target=_watch, daemon=True)
+    w.start()
+    try:
+        w.join(timeout=120)
+        assert addr, f"server never came up:\n{''.join(lines)}"
+        with proto.connect(addr["host"], addr["port"]) as client:
+            pre = client.route_many(texts)
+            _, sel_ref, _ = ref.route(texts)
+            assert [r.model_index for r in pre] == \
+                [int(s) for s in np.asarray(sel_ref)]
+            mi, y, lens, lats = _future_model_responses(world, ref)
+            client.admin.onboard("future-model-00", y, lens, lats,
+                                 mi.price_in, mi.price_out, mi.tokenizer)
+            ref.onboard("future-model-00", y, lens, lats, mi.price_in,
+                        mi.price_out, mi.tokenizer)
+            post = client.route_many(texts)
+            _, sel_post, _ = ref.route(texts)
+            assert [r.model_index for r in post] == \
+                [int(s) for s in np.asarray(sel_post)], \
+                "post-onboard selections diverged from the local reference"
+            assert ref.pool.version == pre[0].pool_version + 1 \
+                == post[0].pool_version
+    finally:
+        pro.terminate()
+        try:
+            pro.wait(timeout=10)
+        except subprocess.TimeoutExpired:
+            pro.kill()

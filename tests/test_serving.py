@@ -9,14 +9,13 @@ import pytest
 from repro.core.router import POLICIES
 from repro.data import ID_TASKS
 from repro.data.tokenizer import HashTokenizer, piece_count
-from repro.launch.serve import build_demo_engine
 from repro.serving import (LatentCache, MicroBatcher, RouterEngine,
                            RouterEngineConfig)
 
 
 @pytest.fixture(scope="module")
-def served():
-    world, router, engine = build_demo_engine(seed=0)
+def served(demo_stack):
+    world, router, engine = demo_stack
     from repro.data import OOD_TASKS
     qi = world.query_indices(OOD_TASKS)
     texts = [world.queries[i].text for i in qi[:48]]
@@ -108,6 +107,28 @@ def test_lru_eviction_order():
     assert cache.stats.evictions == 1
     assert cache.get("b") is None
     assert cache.stats.misses == 1
+
+
+def test_lru_eviction_at_capacity_boundary():
+    """Exactly-at-capacity inserts must not evict; the (cap+1)-th insert
+    evicts exactly the least-recently-USED entry; re-putting an existing
+    key refreshes recency without changing size."""
+    from repro.serving.cache import CacheEntry
+    cap = 4
+    cache = LatentCache(maxsize=cap)
+    e = lambda: CacheEntry(np.zeros(2), np.zeros(2), np.zeros(2), {})
+    for i in range(cap):
+        cache.put(f"t{i}", e())
+    assert len(cache) == cap and cache.stats.evictions == 0
+    # re-put an existing key at capacity: refresh, not insert
+    cache.put("t0", e())
+    assert len(cache) == cap and cache.stats.evictions == 0
+    # t1 is now LRU (t0 was refreshed); the boundary-crossing insert
+    # evicts exactly it
+    cache.put("new", e())
+    assert len(cache) == cap and cache.stats.evictions == 1
+    assert "t1" not in cache
+    assert all(k in cache for k in ("t0", "t2", "t3", "new"))
 
 
 def test_pool_mutation_keeps_cache_and_rebuilds_snapshot(served):
@@ -216,6 +237,66 @@ def test_batcher_threaded_mode(served):
         futs = [mb.submit(t) for t in texts[:16]]
         results = [f.result(timeout=30) for f in futs]
     assert [r.model for r in results] == list(names_ref)
+
+
+def test_batcher_fan_back_under_concurrent_producers(served):
+    """Out-of-order completion: many producer threads submit interleaved
+    requests with jittered timing; every future must resolve with the
+    decision for ITS OWN text (the fan-back may not cross wires), no
+    matter how submissions interleave into batches."""
+    import threading
+    import time as _time
+
+    _, router, engine, texts = served
+    n_producers, per_producer = 6, 12
+    results = [[None] * per_producer for _ in range(n_producers)]
+    errors = []
+
+    with MicroBatcher(engine, max_batch=16, max_wait_s=0.002) as mb:
+        def produce(k):
+            try:
+                rng = np.random.default_rng(k)
+                futs = []
+                for j in range(per_producer):
+                    # unique text per (producer, slot) so a crossed wire
+                    # is detectable
+                    futs.append((j, mb.submit(
+                        f"{texts[(k * per_producer + j) % len(texts)]} "
+                        f"[p{k}q{j}]")))
+                    if rng.random() < 0.5:
+                        _time.sleep(rng.random() * 0.003)
+                for j, f in futs:
+                    results[k][j] = f.result(timeout=30)
+            except Exception as e:  # noqa: BLE001
+                errors.append(e)
+
+        threads = [threading.Thread(target=produce, args=(k,))
+                   for k in range(n_producers)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=60)
+    assert not errors
+    for k in range(n_producers):
+        for j in range(per_producer):
+            r = results[k][j]
+            assert r is not None
+            assert r.text.endswith(f"[p{k}q{j}]"), "fan-back crossed wires"
+            assert r.model == router.pool.names[r.model_index]
+    assert mb.requests_routed == n_producers * per_producer
+
+
+def test_batcher_max_wait_expiry_routes_partial_batch(served):
+    """A partially-filled batch must be routed once max_wait expires —
+    without further submissions or a flush()."""
+    _, _, engine, texts = served
+    with MicroBatcher(engine, max_batch=64, max_wait_s=0.01) as mb:
+        futs = [mb.submit(t) for t in texts[:3]]
+        results = [f.result(timeout=30) for f in futs]
+    assert [r.text for r in results] == list(texts[:3])
+    assert all(r.model for r in results)
+    assert mb.batches_routed == 1, "partial batch was not coalesced once"
+    assert mb.requests_routed == 3
 
 
 # ---------------------------------------------------------------------------
