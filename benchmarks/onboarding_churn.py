@@ -20,7 +20,18 @@ routing, measuring
                          tokenize+score cost instead of the multi-second
                          XLA stall (``cold_first_route`` is that stall,
                          measured on an identically-configured un-warmed
-                         engine; ``stall_removed_x`` is their ratio).
+                         engine; ``stall_removed_x`` is their ratio);
+  * ``cold_reopen`` / ``warm_reopen`` — the persistent-compile-cache
+                         tentpole (ISSUE 4): the router is saved to an
+                         artifact dir and ``Router.open(dir, warmup=Q,
+                         compile_cache=True)`` runs in TWO fresh
+                         subprocesses.  The first (cold) compiles every
+                         bucket program and persists them under
+                         ``<dir>/xla_cache``; the second (warm) loads
+                         them from disk — ``speedup_vs_cold_x`` is the
+                         restart-survival factor the ROADMAP's
+                         "persist the XLA compilation cache" item asked
+                         for.
 
 The tensorized ``ModelPool`` makes the mutation path cheap: the engine
 consumes ``pool.snapshot()`` directly (the canonical tensors), so there
@@ -44,8 +55,49 @@ from benchmarks.common import SMALL_POOL, build_bench, onboard_pool
 Q = 128
 CYCLES = 8
 
+_REOPEN_CHILD = """\
+import sys, time
+from repro.api import Router
+r = Router.open(sys.argv[1], warmup=int(sys.argv[2]), compile_cache=True)
+print("WARMUP_S=%.6f" % r.calibration["warmup_s"])
+"""
 
-def run(smoke: bool = False) -> List[Tuple[str, float, float]]:
+
+def _reopen_warmup_times(router, max_queries: int) -> Tuple[float, float]:
+    """(cold, warm) ``Router.open(dir, warmup=…)`` warmup seconds in two
+    fresh subprocesses sharing one artifact dir (and thus one xla_cache).
+
+    Measured INSIDE each child (interpreter/jax import excluded) so the
+    ratio isolates compile-vs-cache-load."""
+    import shutil
+    import subprocess
+    import sys
+    import tempfile
+
+    art_dir = tempfile.mkdtemp(prefix="bench_router_art_")
+    try:
+        router.save(art_dir)
+
+        def one() -> float:
+            out = subprocess.run(
+                [sys.executable, "-c", _REOPEN_CHILD, art_dir,
+                 str(max_queries)],
+                capture_output=True, text=True, timeout=1800,
+                env=os.environ.copy())
+            for line in out.stdout.splitlines():
+                if line.startswith("WARMUP_S="):
+                    return float(line.split("=", 1)[1])
+            raise RuntimeError(
+                f"reopen-warmup child failed (rc={out.returncode}): "
+                f"{out.stderr[-2000:]}")
+
+        return one(), one()
+    finally:
+        shutil.rmtree(art_dir, ignore_errors=True)
+
+
+def run(smoke: bool = False, quick: bool = False
+        ) -> List[Tuple[str, float, float]]:
     import numpy as np
 
     from repro.serving import RouterEngine, RouterEngineConfig
@@ -68,6 +120,14 @@ def run(smoke: bool = False) -> List[Tuple[str, float, float]]:
         lens = world.output_lengths([m], bench.anchor_global)[0]
         lats = world.true_latency([m], bench.anchor_global, lens[None])[0]
         return world.models[m], y, lens, lats
+
+    # persistent compile cache: warmup in two FRESH processes against the
+    # same saved artifact dir — the first populates <dir>/xla_cache, the
+    # second must reload instead of recompile.  quick mode (CI --smoke)
+    # shrinks the pre-compiled rung ladder: the cold run is the single
+    # most expensive measurement in the suite (~2 min at full Q)
+    cold_reopen_s, warm_reopen_s = _reopen_warmup_times(
+        router, max_queries=16 if quick else Q)
 
     # cold-vs-warmed first route: what Router.open(warmup=...) buys
     cold_engine = RouterEngine(router, RouterEngineConfig(cache_size=0))
@@ -121,6 +181,11 @@ def run(smoke: bool = False) -> List[Tuple[str, float, float]]:
         "first_route_after_warmup": {
             "us_per_call": float(warm_first_s * 1e6),
             "stall_removed_x": float(cold_first_s / max(warm_first_s, 1e-9))},
+        "cold_reopen": {"us_per_call": float(cold_reopen_s * 1e6)},
+        "warm_reopen": {
+            "us_per_call": float(warm_reopen_s * 1e6),
+            "speedup_vs_cold_x": float(cold_reopen_s
+                                       / max(warm_reopen_s, 1e-9))},
         "table_rows_leak_free": leak_free,
         "final_pool_version": router.pool.version,
     }
@@ -148,6 +213,11 @@ def run(smoke: bool = False) -> List[Tuple[str, float, float]]:
         ("onboarding/first_route_after_warmup",
          results["first_route_after_warmup"]["us_per_call"],
          results["first_route_after_warmup"]["stall_removed_x"]),
+        ("onboarding/cold_reopen",
+         results["cold_reopen"]["us_per_call"], 0.0),
+        ("onboarding/warm_reopen",
+         results["warm_reopen"]["us_per_call"],
+         results["warm_reopen"]["speedup_vs_cold_x"]),
         ("onboarding/table_rows_leak_free", 0.0, leak_free),
     ]
 

@@ -14,9 +14,16 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-scale world (slower)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: smoke-scale world AND reduced "
+                         "repetitions for benchmarks that support it "
+                         "(perf regressions still surface; absolute "
+                         "numbers are noisier)")
     ap.add_argument("--only", default=None,
                     help="comma-separated benchmark names")
     args = ap.parse_args(argv)
+    if args.full and args.smoke:
+        ap.error("--full and --smoke are mutually exclusive")
     smoke = not args.full
 
     from benchmarks import (
@@ -46,13 +53,18 @@ def main(argv=None) -> None:
     }
     wanted = args.only.split(",") if args.only else list(modules)
 
+    import inspect
+
     print("name,us_per_call,derived")
     failures = 0
     for name in wanted:
         mod = modules[name]
         t0 = time.time()
+        kwargs = {}
+        if args.smoke and "quick" in inspect.signature(mod.run).parameters:
+            kwargs["quick"] = True
         try:
-            for row_name, us, val in mod.run(smoke=smoke):
+            for row_name, us, val in mod.run(smoke=smoke, **kwargs):
                 print(f"{row_name},{us:.1f},{val:.4f}")
         except Exception as e:  # noqa: BLE001
             failures += 1

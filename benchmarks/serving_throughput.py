@@ -17,12 +17,21 @@ Measures steady-state routed queries/sec (jit warmup excluded) for:
                           asyncio admission + micro-batcher + wire
                           round-trip included.
 
+Since the ingest overhaul the variant list also carries ``ingest_cold`` —
+the pure HOST-side cost of the single-pass ingest pipeline (lex + hash
+ids + features + piece counts, no device work) per Q-query batch; the
+cache-cold serving gap above it is jitted compute, which the engine
+overlaps with ingest via async dispatch.
+
 CSV rows: serving/<variant>/Q{Q}M{M}, us_per_batch, queries_per_sec —
 plus serving/speedup rows whose ``derived`` column is the ×-factor over
 seed and ``serving/service_transport_overhead_x`` (service_tcp time over
 microbatcher time; the ISSUE-3 acceptance bound is ≤ 2×).  Also writes a
 ``BENCH_serving.json`` artifact (path overridable via
-``BENCH_SERVING_JSON``) so the perf trajectory is tracked across PRs.
+``BENCH_SERVING_JSON``) so the perf trajectory is tracked across PRs;
+the previous artifact's engine timings are embedded under ``previous``
+so a single file shows the delta.  ``quick=True`` (the ``--smoke`` CI
+path) drops to 3 interleaved reps.
 """
 from __future__ import annotations
 
@@ -56,11 +65,13 @@ def _time_interleaved(fns: dict, reps: int = REPS) -> dict:
     return {name: min(ts) for name, ts in samples.items()}
 
 
-def run(smoke: bool = False) -> List[Tuple[str, float, float]]:
+def run(smoke: bool = False, quick: bool = False
+        ) -> List[Tuple[str, float, float]]:
     import numpy as np
 
     from repro.serving import MicroBatcher, RouterEngine, RouterEngineConfig
 
+    reps = 3 if quick else REPS
     bench = build_bench(smoke=True)  # serving perf is scale-independent
     pool = (SMALL_POOL + LARGE_POOL)[:M]
     onboard_pool(bench, pool)
@@ -125,6 +136,24 @@ def run(smoke: bool = False) -> List[Tuple[str, float, float]]:
         resps = client.route_many(texts, pipeline=True)
         assert all(r.ok for r in resps)
 
+    # host-side ingest pipeline alone (what the engine overlaps with the
+    # jitted dispatch): lex → hash ids → features → piece counts
+    from repro.core import ingest
+
+    art = router.artifacts
+    ingest_tok = art.tokenizer
+    ingest_max_len = art.predictor.cfg.max_len
+    ingest_sws = sorted({t.subword_len
+                         for t in router.pool.snapshot().tokenizers})
+
+    def ingest_call():
+        lexed = ingest.lex_batch(texts)
+        ingest_tok.encode_lexed(lexed, ingest_max_len)
+        ingest.features_stack(lexed)
+        for lx in lexed:
+            for sw in ingest_sws:
+                lx.piece_count(sw)
+
     try:
         timings = _time_interleaved({
             "seed": seed_call,
@@ -133,14 +162,15 @@ def run(smoke: bool = False) -> List[Tuple[str, float, float]]:
             "microbatcher": batcher_call,
             "service_tcp": service_call,
             "service_tcp_pipelined": service_pipelined_call,
-        })
+            "ingest_cold": ingest_call,
+        }, reps=reps)
     finally:
         client.close()
         srv.__exit__(None, None, None)
     assert np.array_equal(np.asarray(sel_seed[0]), sel_eng[0]), \
         "engine selections diverged from seed"
     variants = ("seed", "engine_nocache", "engine_cached", "microbatcher",
-                "service_tcp", "service_tcp_pipelined")
+                "service_tcp", "service_tcp_pipelined", "ingest_cold")
     for name in variants:
         _row(name, timings[name])
 
@@ -155,11 +185,24 @@ def run(smoke: bool = False) -> List[Tuple[str, float, float]]:
     rows.append(("serving/service_transport_overhead_x", 0.0, overhead))
 
     artifact = {
-        "workload": {"Q": Q, "M": M, "reps": REPS,
+        "workload": {"Q": Q, "M": M, "reps": reps,
                      "backend": "cpu", "policy": "balanced"},
         "results": results,
     }
     path = os.environ.get("BENCH_SERVING_JSON", "BENCH_serving.json")
+    # carry the previous run's engine timings forward so one artifact
+    # shows the delta (absolute times are machine-dependent; the
+    # speedup_vs_seed column is the machine-normalized comparison)
+    try:
+        with open(path) as f:
+            prev = json.load(f)["results"]
+        artifact["previous"] = {
+            k: {m: prev[k][m] for m in ("us_per_batch", "speedup_vs_seed")
+                if m in prev[k]}
+            for k in ("seed", "engine_nocache", "engine_cached")
+            if k in prev}
+    except (OSError, ValueError, KeyError):
+        pass
     with open(path, "w") as f:
         json.dump(artifact, f, indent=2)
 

@@ -74,6 +74,7 @@ __all__ = [
 ARTIFACTS_NAME = "artifacts"
 POOL_NAME = "pool.json"
 CONFIG_NAME = "config.json"
+COMPILE_CACHE_NAME = "xla_cache"
 
 
 def _cfg_to_json(cfg: RouterConfig) -> Dict:
@@ -431,7 +432,8 @@ class Router:
     @classmethod
     def open(cls, path: str,
              cfg: Optional[RouterConfig] = None,
-             warmup: Union[bool, int] = False) -> "Router":
+             warmup: Union[bool, int] = False,
+             compile_cache: Union[bool, str, None] = None) -> "Router":
         """Bring up a ready-to-route router from :meth:`save` output —
         milliseconds of IO, zero training.
 
@@ -448,10 +450,35 @@ class Router:
         request pays no jit stall.  Pass an int to pre-compile the bucket
         ladder up to that batch size; ``True`` covers singleton traffic
         of any text length.  The seconds spent land in
-        ``router.calibration['warmup_s']``."""
+        ``router.calibration['warmup_s']``.
+
+        ``compile_cache`` persists the XLA compilations themselves under
+        ``<path>/xla_cache`` (or the directory you pass), so the warmup
+        compile storm is paid once per ARTIFACT DIRECTORY, not once per
+        process — a fresh process re-opening the same artifacts loads the
+        compiled programs from disk instead of re-compiling them
+        (``BENCH_onboarding.json``'s ``warm_reopen`` row tracks the
+        ratio).  ``None`` (default) enables it exactly when ``warmup`` is
+        requested; ``False`` leaves the process-global jax cache config
+        untouched.  The directory chosen lands in
+        ``router.calibration['compile_cache_dir']``."""
         import json
 
+        # load BEFORE touching the compile cache: enabling it creates
+        # <path>/xla_cache (and <path> itself), which would leave a stray
+        # directory behind — one that looks like a saved artifact dir —
+        # when ``path`` turns out not to hold loadable artifacts
         art = RouterArtifacts.load(os.path.join(path, ARTIFACTS_NAME))
+        if compile_cache is None:
+            compile_cache = bool(warmup)
+        if compile_cache:
+            from repro.serving.cache import enable_persistent_compile_cache
+
+            cache_dir = (compile_cache if isinstance(compile_cache, str)
+                         else os.path.join(path, COMPILE_CACHE_NAME))
+            cache_dir = enable_persistent_compile_cache(cache_dir)
+        else:
+            cache_dir = None
         pool_path = os.path.join(path, POOL_NAME)
         pool = (ModelPool.load(pool_path) if os.path.exists(pool_path)
                 else ModelPool(art.bin_edges))
@@ -463,6 +490,8 @@ class Router:
             else:
                 cfg = RouterConfig()
         router = cls(artifacts=art, pool=pool, cfg=cfg)
+        if cache_dir is not None:
+            router.calibration["compile_cache_dir"] = cache_dir
         if warmup and art.has_predictor and len(router.pool) > 0:
             max_q = warmup if isinstance(warmup, int) \
                 and not isinstance(warmup, bool) else 1

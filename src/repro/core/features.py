@@ -5,93 +5,44 @@ The metric set follows the paper's description (readability scores, parse
 tree depth, …) with offline-computable proxies; selection was guided by
 correlation with the target IRT parameters (see
 benchmarks/fig3bc_latent_analysis.py).
+
+Since the ingest overhaul this module is a thin wrapper over
+:mod:`repro.core.ingest`: one shared lexer pass per query produces the
+feature vector TOGETHER with the tokenizer's token stream and piece
+counts, instead of the original six independent regex scans (word, number,
+punctuation, sentence, operator, nesting) plus a vowel-group scan per
+word.  The output is bit-identical to the original implementation —
+property-tested against a verbatim reference copy in
+tests/test_ingest.py.
 """
 from __future__ import annotations
 
-import math
-import re
-from typing import Iterable, List
+from typing import Iterable
 
 import numpy as np
 
-K_FEATURES = 11
+from repro.core.ingest import K_FEATURES, features_stack, lex, lex_batch
 
-_WORD_RE = re.compile(r"[A-Za-z']+")
-_NUM_RE = re.compile(r"\d+(?:\.\d+)?")
-_PUNCT_RE = re.compile(r"[^\w\s]")
-_OPERATOR_RE = re.compile(r"[+\-*/^=<>∑∫√%]|\\frac|\\sum|\\int")
-_QUESTION_WORDS = frozenset(
-    "what why how when where which who whom whose prove derive compute "
-    "calculate determine evaluate explain".split()
-)
-_SUBORDINATORS = frozenset(
-    "if because although while whereas unless since that which whose "
-    "suppose assuming given when then therefore hence".split()
-)
-
-
-def _syllables(word: str) -> int:
-    word = word.lower()
-    groups = re.findall(r"[aeiouy]+", word)
-    n = len(groups)
-    if word.endswith("e") and n > 1:
-        n -= 1
-    return max(n, 1)
-
-
-def _nesting_depth(text: str) -> int:
-    """Parse-tree-depth proxy: bracket nesting + subordinate clause chains."""
-    depth = best = 0
-    for ch in text:
-        if ch in "([{":
-            depth += 1
-            best = max(best, depth)
-        elif ch in ")]}":
-            depth = max(depth - 1, 0)
-    words = [w.lower() for w in _WORD_RE.findall(text)]
-    clause = sum(1 for w in words if w in _SUBORDINATORS)
-    return best + clause
+__all__ = ["K_FEATURES", "extract_features", "extract_features_batch",
+           "normalize_features"]
 
 
 def extract_features(text: str) -> np.ndarray:
-    """Returns the 11-dim structural feature vector for one query."""
-    words = _WORD_RE.findall(text)
-    n_words = max(len(words), 1)
-    n_chars = max(len(text), 1)
-    sentences = max(len(re.findall(r"[.!?]+", text)), 1)
-    syl = sum(_syllables(w) for w in words)
+    """Returns the 11-dim structural feature vector for one query.
 
-    avg_word_len = sum(len(w) for w in words) / n_words
-    type_token = len({w.lower() for w in words}) / n_words
-    punct_density = len(_PUNCT_RE.findall(text)) / n_chars
-    num_density = len(_NUM_RE.findall(text)) / n_words
-    depth = _nesting_depth(text)
-    qwords = sum(1 for w in words if w.lower() in _QUESTION_WORDS)
-    ops = len(_OPERATOR_RE.findall(text)) / n_chars
-    rare = sum(1 for w in words if len(w) >= 9) / n_words
-    # Flesch reading ease (lower = harder)
-    flesch = 206.835 - 1.015 * (n_words / sentences) - 84.6 * (syl / n_words)
-
-    return np.array(
-        [
-            math.log1p(n_chars),
-            math.log1p(n_words),
-            avg_word_len,
-            type_token,
-            punct_density * 10.0,
-            num_density,
-            math.log1p(depth),
-            math.log1p(qwords),
-            ops * 10.0,
-            rare,
-            -flesch / 100.0,       # higher = harder
-        ],
-        dtype=np.float32,
-    )
+    Metrics: log1p char/word counts, mean word length, type-token ratio,
+    punctuation density ×10, number density, log1p nesting depth (bracket
+    nesting + subordinate-clause chain proxy), log1p question-word count,
+    operator density ×10, rare-word ratio, and negated/rescaled Flesch
+    reading ease (higher = harder).
+    """
+    return lex(text).feats
 
 
 def extract_features_batch(texts: Iterable[str]) -> np.ndarray:
-    return np.stack([extract_features(t) for t in texts])
+    """(B, 11) float32 matrix; an empty batch yields (0, 11) instead of
+    the seed's ``np.stack([])`` crash."""
+    return features_stack(lex_batch(list(texts)))
 
 
 def normalize_features(feats: np.ndarray, stats=None):

@@ -1,0 +1,375 @@
+"""Single-pass query ingest — one lexer scan per query producing the
+token stream, structural features, hash ids, and salt-independent piece
+counts together (the serving cold path).
+
+The seed pipeline scanned every query three times with three independent
+regex modules: ``data/tokenizer.py`` (``_TOKEN_RE`` over the lowered
+text), ``core/features.py`` (six regex passes over the raw text plus one
+vowel-group scan PER WORD), and ``piece_count`` (a second ``_TOKEN_RE``
+pass per distinct subword length).  On a 256-query batch that is ~10k
+regex invocations plus ~10k ``hashlib.blake2s`` calls — pure host-side
+Python that dominates the cache-cold serving path (BENCH_serving.json's
+``engine_nocache`` row).
+
+This module replaces all of it with ONE master-regex scan per query:
+
+  * the master pattern partitions the text into WORD / DIGIT / SENTENCE /
+    PUNCT / skip classes from which every tokenizer token and every
+    feature count is derived in a single walk;
+  * syllable counts are memoized per distinct lowered word (queries share
+    a long tail of common words);
+  * piece hashing is memoized at two levels: within a batch each
+    distinct piece is hashed at most once, and a bounded per-tokenizer
+    memo carries ids across batches (hash tokenizers are pure: salt +
+    vocab fully determine the id).
+
+Equivalence contract: ``lex``-derived outputs are BIT-IDENTICAL to the
+seed implementations for every input — ``tokens`` equals
+``_TOKEN_RE.findall(text.lower())``, ``features`` equals
+``extract_features(text)``, and piece counts equal
+``piece_count(text, sw)`` — property-tested against verbatim reference
+copies in tests/test_ingest.py across unicode, empty, whitespace-only
+and over-length inputs.  ``repro.core.features`` and
+``repro.data.tokenizer`` are thin wrappers over this module.
+
+The ASCII fast path shares one scan between the tokenizer view (defined
+on ``text.lower()``) and the feature view (defined on the raw text):
+ASCII lowering is a per-character, class- and length-preserving map, so
+the lowered scan serves both.  Non-ASCII text (where e.g. ``'İ'.lower()``
+changes length and character classes) takes two scans — still far fewer
+than the seed's per-module passes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import math
+import re
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+K_FEATURES = 11
+
+# Master lexer: one alternation partitioning the text.  Group order is
+# load-bearing — each alternative must reproduce the seed regexes'
+# leftmost-first semantics exactly:
+#   1 WORD   [A-Za-z']+        (== features._WORD_RE == tokenizer word alt)
+#   2 DIGIT  \d                (tokenizer digit alt; NUM matches derived)
+#   3 SENT   [.!?]+            (maximal runs == the sentence regex)
+#   4 PUNCT  [^\w\s]           (everything [^\w\s] not captured above)
+#   -  skip  \s+ | [^\W\da-zA-Z]+   (whitespace; \w chars invisible to
+#                                    every seed regex: _, unicode letters)
+_LEX_RE = re.compile(r"([A-Za-z']+)|(\d)|([.!?]+)|([^\w\s])|\s+|[^\W\da-zA-Z]+")
+
+_OP_CHARS = frozenset("+-*/^=<>∑∫√%")
+_OP_TAILS = ("frac", "sum", "int")       # \frac | \sum | \int
+_BRACKET_OPEN = frozenset("([{")
+_BRACKET_CLOSE = frozenset(")]}")
+
+_QUESTION_WORDS = frozenset(
+    "what why how when where which who whom whose prove derive compute "
+    "calculate determine evaluate explain".split()
+)
+_SUBORDINATORS = frozenset(
+    "if because although while whereas unless since that which whose "
+    "suppose assuming given when then therefore hence".split()
+)
+
+_VOWEL_RE = re.compile(r"[aeiouy]+")
+
+# syllable counts per distinct LOWERED word.  Pure function of the word;
+# bounded because natural-language vocabularies are (cap guards synthetic
+# adversarial streams).
+_SYL_MEMO: Dict[str, int] = {}
+_SYL_MEMO_CAP = 1 << 18
+
+
+def _syllables_lower(word: str) -> int:
+    """Seed ``features._syllables`` for an already-lowered word."""
+    n = _SYL_MEMO.get(word)
+    if n is not None:
+        return n
+    n = len(_VOWEL_RE.findall(word))
+    if word.endswith("e") and n > 1:
+        n -= 1
+    n = max(n, 1)
+    if len(_SYL_MEMO) < _SYL_MEMO_CAP:
+        _SYL_MEMO[word] = n
+    return n
+
+
+@dataclasses.dataclass
+class Lexed:
+    """Everything one lexer pass derives from a query text.
+
+    ``tokens`` is the tokenizer's token stream (``_TOKEN_RE`` over the
+    lowered text, BEFORE subword splitting); ``tok_lens`` its per-token
+    character lengths (piece counts for any subword length are pure
+    arithmetic over it); ``feats`` the 11-dim structural feature vector.
+    """
+    tokens: List[str]
+    tok_lens: np.ndarray          # (T,) int64 — len() of each token
+    feats: np.ndarray             # (K_FEATURES,) float32
+
+    def piece_count(self, subword_len: int) -> int:
+        """== ``tokenizer.piece_count(text, subword_len)``."""
+        if len(self.tokens) == 0:
+            return 0
+        return int(np.sum((self.tok_lens - 1) // subword_len + 1))
+
+    def pieces(self, subword_len: int, limit: Optional[int] = None
+               ) -> List[str]:
+        """Subword pieces in order (== the seed ``encode`` split loop).
+
+        ``limit`` stops early once that many pieces exist — the encoder
+        truncates at ``max_len``, so hashing the tail would be wasted.
+        """
+        out: List[str] = []
+        for tok in self.tokens:
+            while len(tok) > subword_len:
+                out.append(tok[:subword_len])
+                tok = tok[subword_len:]
+            out.append(tok)
+            if limit is not None and len(out) >= limit:
+                return out[:limit]
+        return out
+
+
+def _scan_tokens(low: str) -> List[str]:
+    """Tokenizer view only (non-ASCII fallback): one master scan of the
+    lowered text yielding exactly ``_TOKEN_RE.findall(low)``."""
+    tokens: List[str] = []
+    for m in _LEX_RE.finditer(low):
+        g = m.lastindex
+        if g == 1 or g == 2:
+            tokens.append(m.group())
+        elif g == 3:
+            tokens.extend(m.group())      # each run char is its own token
+        elif g == 4:
+            tokens.append(m.group())
+    return tokens
+
+
+def lex(text: str) -> Lexed:
+    """One lexer pass → (token stream, token lengths, feature vector)."""
+    is_ascii = text.isascii()
+    low = text.lower()
+    scan_src = low if is_ascii else text
+
+    words: List[str] = []
+    tokens: List[str] = []            # only filled on the shared-scan path
+    word_len_sum = 0
+    n_punct = 0
+    n_sent = 0
+    n_ops = 0
+    depth = best = 0
+    digit_runs: List[Tuple[int, int]] = []    # merged (start, end) spans
+    syl = 0
+    n_q = 0
+    n_sub = 0
+    n_rare = 0
+    types = set()
+
+    for m in _LEX_RE.finditer(scan_src):
+        g = m.lastindex
+        if g == 1:                                   # WORD
+            w = m.group()
+            words.append(w)
+            lw = len(w)
+            word_len_sum += lw
+            if lw >= 9:
+                n_rare += 1
+            n_punct += w.count("'")                  # ' is [^\w\s] too
+            wl = w if is_ascii else w.lower()
+            types.add(wl)
+            syl += _syllables_lower(wl)
+            if wl in _QUESTION_WORDS:
+                n_q += 1
+            if wl in _SUBORDINATORS:
+                n_sub += 1
+            if is_ascii:
+                tokens.append(w)
+        elif g == 2:                                 # DIGIT
+            s = m.start()
+            if digit_runs and digit_runs[-1][1] == s:
+                digit_runs[-1] = (digit_runs[-1][0], s + 1)
+            else:
+                digit_runs.append((s, s + 1))
+            if is_ascii:
+                tokens.append(m.group())
+        elif g == 3:                                 # SENTENCE run [.!?]+
+            run = m.group()
+            n_sent += 1
+            n_punct += len(run)
+            if is_ascii:
+                tokens.extend(run)
+        elif g == 4:                                 # PUNCT (single char)
+            ch = m.group()
+            n_punct += 1
+            if ch in _OP_CHARS:
+                n_ops += 1
+            elif ch == "\\":
+                # \frac|\sum|\int are case-sensitive in the seed regex —
+                # check the RAW text (scan positions map 1:1: the ASCII
+                # path's lowering is per-char length-preserving)
+                i = m.end()
+                if (text[i:i + 4] == _OP_TAILS[0]
+                        or text[i:i + 3] in _OP_TAILS[1:]):
+                    n_ops += 1
+            elif ch in _BRACKET_OPEN:
+                depth += 1
+                best = max(best, depth)
+            elif ch in _BRACKET_CLOSE:
+                depth = max(depth - 1, 0)
+            if is_ascii:
+                tokens.append(ch)
+        # else: whitespace / other word chars — invisible to every view
+
+    # _NUM_RE (\d+(?:\.\d+)?) match count, replayed over the digit runs:
+    # a run optionally absorbs '.'+run when they are contiguous in text.
+    n_num = 0
+    k = 0
+    while k < len(digit_runs):
+        _, e = digit_runs[k]
+        n_num += 1
+        if (k + 1 < len(digit_runs) and digit_runs[k + 1][0] == e + 1
+                and scan_src[e] == "."):
+            k += 2
+        else:
+            k += 1
+
+    if not is_ascii:
+        tokens = _scan_tokens(low)
+
+    # -- feature assembly: verbatim seed arithmetic ---------------------
+    n_words = max(len(words), 1)
+    n_chars = max(len(text), 1)
+    sentences = max(n_sent, 1)
+
+    avg_word_len = word_len_sum / n_words
+    type_token = len(types) / n_words
+    punct_density = n_punct / n_chars
+    num_density = n_num / n_words
+    nesting = best + n_sub
+    ops = n_ops / n_chars
+    rare = n_rare / n_words
+    flesch = 206.835 - 1.015 * (n_words / sentences) - 84.6 * (syl / n_words)
+
+    feats = np.array(
+        [
+            math.log1p(n_chars),
+            math.log1p(n_words),
+            avg_word_len,
+            type_token,
+            punct_density * 10.0,
+            num_density,
+            math.log1p(nesting),
+            math.log1p(n_q),
+            ops * 10.0,
+            rare,
+            -flesch / 100.0,
+        ],
+        dtype=np.float32,
+    )
+
+    tok_lens = np.array([len(t) for t in tokens], np.int64) \
+        if tokens else np.zeros(0, np.int64)
+    return Lexed(tokens=tokens, tok_lens=tok_lens, feats=feats)
+
+
+def lex_batch(texts: Sequence[str]) -> List[Lexed]:
+    return [lex(t) for t in texts]
+
+
+def features_stack(lexed: Sequence[Lexed]) -> np.ndarray:
+    """(B, 11) float32 feature matrix; (0, 11) for an empty batch."""
+    if not lexed:
+        return np.zeros((0, K_FEATURES), np.float32)
+    return np.stack([lx.feats for lx in lexed])
+
+
+# ---------------------------------------------------------------------------
+# memoized batch hashing (the tokenizer's encode_batch hot loop)
+# ---------------------------------------------------------------------------
+
+
+HASH_MEMO_CAP = 1 << 17      # shared piece→id memo bound (see hash_piece)
+
+
+def hash_piece(prefix: str, piece: str, span: int, reserved: int) -> int:
+    """THE hash-tokenizer id formula — the single definition both the
+    per-piece ``HashTokenizer._hash`` path and the batched path below
+    share (they also share one memo dict, so the formula must not
+    fork)."""
+    d = hashlib.blake2s((prefix + piece).encode(), digest_size=4).digest()
+    return reserved + int.from_bytes(d, "little") % span
+
+
+def hash_pieces_batch(piece_lists: Sequence[List[str]], salt: str,
+                      vocab_size: int, reserved: int,
+                      memo: Optional[Dict[str, int]] = None,
+                      memo_cap: int = HASH_MEMO_CAP) -> List[np.ndarray]:
+    """Hash ids per piece list with one blake2s call per DISTINCT piece.
+
+    Dedup is a C-speed memo gather: pieces the memo already knows skip
+    hashing entirely, and each previously-unseen piece is hashed exactly
+    once per batch.  ``memo`` (bounded by ``memo_cap``) carries ids
+    across batches — hash ids are a pure function of (salt, vocab), so
+    the memo is observationally stateless; without one, a batch-local
+    memo still collapses the batch's repeated pieces.  Returns one int32
+    id array per input list, bit-identical to the seed per-piece loop.
+    """
+    flat: List[str] = []
+    for pl in piece_lists:
+        flat.extend(pl)
+    if not flat:
+        return [np.zeros(0, np.int32) for _ in piece_lists]
+    span = vocab_size - reserved
+    prefix = f"{salt}:"
+    if memo is None:
+        memo = {}                  # batch-local dedup only
+    hits = list(map(memo.get, flat))
+    if None in hits:
+        fresh: Dict[str, int] = {}
+        for p, h in zip(flat, hits):
+            if h is None and p not in fresh:
+                hv = hash_piece(prefix, p, span, reserved)
+                if len(memo) < memo_cap:
+                    memo[p] = hv
+                fresh[p] = hv
+        hits = [h if h is not None else fresh[p]
+                for p, h in zip(flat, hits)]
+    flat_ids = np.array(hits, np.int32)
+    out: List[np.ndarray] = []
+    pos = 0
+    for pl in piece_lists:
+        out.append(flat_ids[pos: pos + len(pl)])
+        pos += len(pl)
+    return out
+
+
+def encode_lexed(lexed: Sequence[Lexed], max_len: int, *, salt: str,
+                 vocab_size: int, subword_len: int, reserved: int,
+                 pad_id: int, cls_id: int, add_cls: bool = True,
+                 memo: Optional[Dict[str, int]] = None
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+    """Padded (B, max_len) int32 ids + (B, max_len) f32 mask from lexed
+    queries — ``HashTokenizer.encode_batch`` without re-scanning text."""
+    B = len(lexed)
+    out = np.full((B, max_len), pad_id, np.int32)
+    mask = np.zeros((B, max_len), np.float32)
+    budget = max_len - 1 if add_cls else max_len
+    piece_lists = [lx.pieces(subword_len, limit=budget) for lx in lexed]
+    ids_list = hash_pieces_batch(piece_lists, salt, vocab_size, reserved,
+                                 memo=memo)
+    for i, ids in enumerate(ids_list):
+        n = len(ids)
+        if add_cls:
+            out[i, 0] = cls_id
+            out[i, 1: 1 + n] = ids
+            mask[i, : 1 + n] = 1.0
+        else:
+            out[i, :n] = ids
+            mask[i, :n] = 1.0
+    return out, mask

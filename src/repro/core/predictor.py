@@ -83,29 +83,43 @@ def init_encoder_params(key, cfg: PredictorConfig) -> PyTree:
 
 def encode(params: PyTree, ids: jax.Array, mask: jax.Array,
            cfg: PredictorConfig) -> jax.Array:
-    """ids: (B, L) int32; mask: (B, L) 1/0. Returns CLS embedding (B, d)."""
+    """ids: (B, L) int32; mask: (B, L) 1/0. Returns CLS embedding (B, d).
+
+    Only the [CLS] position of the final layer is ever consumed, so the
+    last layer computes its query/attention/output/FFN for that single
+    row — the keys and values still span the full sequence, but the
+    per-position projections and FFN of the other L-1 rows (≈ a quarter
+    of total encoder FLOPs at typical L) are skipped.  The math is
+    unchanged — identical ops on the CLS row — and training pools at
+    [CLS] too, so the same function serves both paths.
+    """
     B, L = ids.shape
     nh = cfg.num_heads
     hd = cfg.d_model // nh
     x = params["tok_emb"][ids] + params["pos_emb"][:L][None]
     bias = jnp.where(mask[:, None, None, :] > 0, 0.0, -1e30)
 
-    def layer(x, p):
-        h = rms_norm(x, p["ln1"])
-        q = (h @ p["wq"]).reshape(B, L, nh, hd)
+    def attn_ffn(x, h, p, rows):
+        """One block over the first ``rows`` positions of the residual
+        stream (keys/values always span all L positions of ``h``)."""
+        q = (h[:, :rows] @ p["wq"]).reshape(B, rows, nh, hd)
         k = (h @ p["wk"]).reshape(B, L, nh, hd)
         v = (h @ p["wv"]).reshape(B, L, nh, hd)
         s = jnp.einsum("blhd,bmhd->bhlm", q, k) * hd ** -0.5 + bias
         a = jax.nn.softmax(s, axis=-1)
-        o = jnp.einsum("bhlm,bmhd->blhd", a, v).reshape(B, L, cfg.d_model)
-        x = x + o @ p["wo"]
+        o = jnp.einsum("bhlm,bmhd->blhd", a, v).reshape(B, rows, cfg.d_model)
+        x = x[:, :rows] + o @ p["wo"]
         h = rms_norm(x, p["ln2"])
-        x = x + jax.nn.gelu(h @ p["w1"]) @ p["w2"]
-        return x, None
+        return x + jax.nn.gelu(h @ p["w1"]) @ p["w2"]
 
-    x, _ = jax.lax.scan(layer, x, params["layers"])
-    x = rms_norm(x, params["final_ln"])
-    return x[:, 0]   # [CLS]
+    def layer(x, p):
+        return attn_ffn(x, rms_norm(x, p["ln1"]), p, L), None
+
+    body = jax.tree.map(lambda a: a[:-1], params["layers"])
+    last = jax.tree.map(lambda a: a[-1], params["layers"])
+    x, _ = jax.lax.scan(layer, x, body)
+    x0 = attn_ffn(x, rms_norm(x, last["ln1"]), last, 1)   # CLS row only
+    return rms_norm(x0, params["final_ln"])[:, 0]   # [CLS]
 
 
 # ---------------------------------------------------------------------------

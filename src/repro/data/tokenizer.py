@@ -4,11 +4,18 @@ Stateless: a word maps to a stable id via blake2-style hashing into the
 vocab; per-model tokenizers differ by salt and a length factor, emulating
 the paper's model-specific tokenizers 𝒯_u (Eq. 7) whose token counts differ
 across vendors.
+
+Serving cold path: ``encode_batch`` runs through the shared single-pass
+lexer (:mod:`repro.core.ingest`) with piece-level hash memoization — one
+``blake2s`` per DISTINCT piece per batch, plus a bounded
+per-tokenizer memo that carries ids across batches.  Ids are a pure
+function of (salt, vocab), so the memo is observationally stateless;
+outputs stay bit-identical to the per-piece ``encode`` loop
+(tests/test_ingest.py).
 """
 from __future__ import annotations
 
 import dataclasses
-import hashlib
 import re
 from typing import List
 
@@ -26,12 +33,23 @@ class HashTokenizer:
         self.vocab_size = vocab_size
         self.salt = salt
         self.subword_len = subword_len
+        # piece → id memo, shared by the per-piece path below and the
+        # batched ingest path (ids are a pure function of salt + vocab,
+        # so memoization is observationally stateless)
+        self._hash_memo: dict = {}
 
     def _hash(self, piece: str) -> int:
-        h = hashlib.blake2s(f"{self.salt}:{piece}".encode(), digest_size=4)
-        return _RESERVED + int.from_bytes(h.digest(), "little") % (
-            self.vocab_size - _RESERVED
-        )
+        h = self._hash_memo.get(piece)
+        if h is None:
+            # lazy import: repro.core pulls cost.py which imports THIS
+            # module, so a top-level import here is circular
+            from repro.core import ingest
+
+            h = ingest.hash_piece(f"{self.salt}:", piece,
+                                  self.vocab_size - _RESERVED, _RESERVED)
+            if len(self._hash_memo) < ingest.HASH_MEMO_CAP:
+                self._hash_memo[piece] = h
+        return h
 
     def encode(self, text: str, max_len: int | None = None,
                add_cls: bool = False) -> List[int]:
@@ -49,14 +67,28 @@ class HashTokenizer:
         return ids
 
     def encode_batch(self, texts, max_len: int, add_cls: bool = True):
-        """Returns (ids (B, max_len) int32 padded, mask (B, max_len) f32)."""
-        out = np.full((len(texts), max_len), PAD_ID, np.int32)
-        mask = np.zeros((len(texts), max_len), np.float32)
-        for i, t in enumerate(texts):
-            ids = self.encode(t, max_len, add_cls=add_cls)
-            out[i, : len(ids)] = ids
-            mask[i, : len(ids)] = 1.0
-        return out, mask
+        """Returns (ids (B, max_len) int32 padded, mask (B, max_len) f32).
+
+        Runs through the shared single-pass lexer with memoized piece
+        hashing (one blake2s per DISTINCT piece instead of one per
+        piece) — bit-identical to the seed per-query ``encode`` loop, and
+        well-defined on an empty batch ((0, max_len) tensors).
+        """
+        from repro.core import ingest
+
+        return self.encode_lexed(ingest.lex_batch(list(texts)), max_len,
+                                 add_cls=add_cls)
+
+    def encode_lexed(self, lexed, max_len: int, add_cls: bool = True):
+        """``encode_batch`` for already-lexed queries (the serving engine
+        lexes once and reuses the pass for features and piece counts)."""
+        from repro.core import ingest
+
+        return ingest.encode_lexed(
+            lexed, max_len, salt=self.salt, vocab_size=self.vocab_size,
+            subword_len=self.subword_len, reserved=_RESERVED,
+            pad_id=PAD_ID, cls_id=CLS_ID, add_cls=add_cls,
+            memo=self._hash_memo)
 
     def count(self, text: str) -> int:
         return len(self.encode(text))

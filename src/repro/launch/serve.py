@@ -19,7 +19,11 @@ route → respond).  Queries come from stdin (one per line) with
 ``--artifact DIR`` makes route mode persistent: the first run calibrates
 and saves the router there; every later run opens the saved artifacts +
 pool in milliseconds instead of re-training (calibrate once, serve
-everywhere)::
+everywhere).  The artifact dir also carries the persistent XLA
+compilation cache (``DIR/xla_cache``, opt out with
+``--no-compile-cache``): ``--warmup Q`` pre-compilation is paid once per
+artifact dir — a restarted server reloads the compiled bucket programs
+from disk instead of re-compiling them::
 
     PYTHONPATH=src python -m repro.launch.serve --mode route \
         --artifact experiments/router_demo -n 512
@@ -111,19 +115,32 @@ def build_demo_router(seed: int = 0):
 
 
 def build_demo_engine(seed: int = 0, cache_size: int = 4096,
-                      artifact_dir=None):
+                      artifact_dir=None, compile_cache: bool = True):
     """Small-world router + engine used by route mode and the example.
 
     With ``artifact_dir``: open saved artifacts when present (ms startup),
-    else calibrate once and save there for every later run."""
+    else calibrate once and save there for every later run.  Unless
+    ``compile_cache`` is off, the artifact directory also carries the
+    persistent XLA compilation cache (``<dir>/xla_cache``), so every
+    jit compile — including ``--warmup`` pre-compilation — is paid once
+    per artifact dir, then loaded from disk by later processes."""
     import os
 
-    from repro.api import Router
+    from repro.api import COMPILE_CACHE_NAME, Router
     from repro.data import WorldConfig, build_world
     from repro.serving import RouterEngine, RouterEngineConfig
 
+    # decide BEFORE enabling the compile cache: creating <dir>/xla_cache
+    # also creates <dir>, which would make a fresh artifact dir look like
+    # a saved router
+    have_saved = bool(artifact_dir) and os.path.isdir(artifact_dir)
+    if artifact_dir and compile_cache:
+        from repro.serving.cache import enable_persistent_compile_cache
+
+        enable_persistent_compile_cache(
+            os.path.join(artifact_dir, COMPILE_CACHE_NAME))
     router = None
-    if artifact_dir and os.path.isdir(artifact_dir):
+    if have_saved:
         t0 = time.time()
         try:
             router = Router.open(artifact_dir)
@@ -183,8 +200,9 @@ def _route_main(args) -> None:
 
     print("=== bringing up router + engine (smoke world) ===")
     t0 = time.time()
-    world, router, engine = build_demo_engine(seed=args.seed,
-                                              artifact_dir=args.artifact)
+    world, router, engine = build_demo_engine(
+        seed=args.seed, artifact_dir=args.artifact,
+        compile_cache=not args.no_compile_cache)
     print(f"  router ready in {time.time() - t0:.2f}s")
     if args.warmup:
         print(f"  engine warmup: {engine.warmup(max_queries=args.warmup):.2f}s"
@@ -253,6 +271,10 @@ def main(argv=None):
     ap.add_argument("--warmup", type=int, default=0, metavar="Q",
                     help="route: pre-compile the engine's padded buckets "
                          "for batches up to Q before serving")
+    ap.add_argument("--no-compile-cache", action="store_true",
+                    help="route: do NOT persist XLA compilations under "
+                         "<artifact>/xla_cache (default: persist, so "
+                         "--warmup is paid once per artifact dir)")
     args = ap.parse_args(argv)
 
     if args.mode == "route":

@@ -7,14 +7,17 @@ engine   — RouterEngine: padded-bucket jitted scoring + LRU latent cache,
            ``warmup()`` pre-compiles the padded buckets
 batcher  — MicroBatcher: enqueue → coalesce (per-policy sub-batches) →
            route → fan back, with deadline shedding and timings
-cache    — LatentCache: per-query latents/features/token counts (LRU)
+cache    — LatentCache: per-query latents/features/token counts (LRU);
+           enable_persistent_compile_cache: on-disk XLA compile cache
+           (``Router.open(dir, warmup=…)`` → ``<dir>/xla_cache``)
 service  — RouterService: asyncio submit/submit_many/stream, admin plane
            (live pool mutations with snapshot pinning), admission control
 protocol — length-prefixed JSONL wire format, asyncio TCP front-end,
            synchronous ServiceClient, BackgroundServer
 """
 from repro.serving.batcher import MicroBatcher, RouteResult
-from repro.serving.cache import CacheEntry, CacheStats, LatentCache
+from repro.serving.cache import (CacheEntry, CacheStats, LatentCache,
+                                 enable_persistent_compile_cache)
 from repro.serving.engine import (BatchDecision, RouterEngine,
                                   RouterEngineConfig)
 from repro.serving.protocol import (BackgroundServer, ServiceClient,
@@ -25,6 +28,7 @@ from repro.serving.service import (AdminPlane, RouteRequest, RouteResponse,
 __all__ = [
     "AdminPlane", "BackgroundServer", "BatchDecision", "CacheEntry",
     "CacheStats", "LatentCache", "MicroBatcher", "RouteRequest",
+    "enable_persistent_compile_cache",
     "RouteResponse", "RouteResult", "RouterEngine", "RouterEngineConfig",
     "RouterService", "ServiceClient", "ServiceConfig", "start_server",
 ]

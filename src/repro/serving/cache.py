@@ -11,14 +11,44 @@ tokenizer it was trained with), never on the candidate pool, so
 engine's pool-tensor snapshot is rebuilt.  Re-fitting the predictor
 (``ZeroRouter.fit_predictor``) must be followed by ``clear()``; the engine
 does this automatically via its predictor identity check.
+
+This module also hosts :func:`enable_persistent_compile_cache` — the
+process-level XLA compilation cache that makes ``RouterEngine.warmup``
+survive restarts (``Router.open(dir, warmup=…)`` points it at
+``<artifact dir>/xla_cache`` so the multi-second bucket pre-compilation
+is paid once per artifact directory, not once per process).
 """
 from __future__ import annotations
 
 import dataclasses
+import os
 from collections import OrderedDict
 from typing import Dict, Optional
 
 import numpy as np
+
+
+def enable_persistent_compile_cache(cache_dir: str) -> str:
+    """Point jax's persistent compilation cache at ``cache_dir``.
+
+    Every XLA compile after this call is written to (and served from)
+    ``cache_dir``, keyed on the lowered program — a fresh process that
+    opens the same artifacts compiles identical programs, so
+    ``RouterEngine.warmup`` turns from a compile storm into cache reads
+    (``BENCH_onboarding.json``'s ``warm_reopen`` row tracks the ratio).
+
+    The thresholds are zeroed so EVERY program in the serving path
+    persists — the engine's jitted closures include sub-second compiles
+    (accuracy reduction, routing kernel) that the defaults would skip.
+    Process-global and idempotent; returns the directory.
+    """
+    import jax
+
+    os.makedirs(cache_dir, exist_ok=True)
+    jax.config.update("jax_compilation_cache_dir", cache_dir)
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+    jax.config.update("jax_persistent_cache_min_entry_size_bytes", 0)
+    return cache_dir
 
 
 @dataclasses.dataclass
@@ -28,6 +58,11 @@ class CacheEntry:
     b_hat: np.ndarray                 # (D,) predicted difficulty
     feats: np.ndarray                 # (k,) structural features (raw)
     token_counts: Dict[int, int]      # subword_len → untruncated piece count
+    # per-token character lengths from the ingest lexer: piece counts for
+    # a subword length the pool did not have at compute time are pure
+    # arithmetic over it (no re-lex of the text).  Optional so synthetic
+    # entries (tests) stay constructible positionally.
+    tok_lens: Optional[np.ndarray] = None
 
 
 @dataclasses.dataclass

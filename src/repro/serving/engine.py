@@ -20,13 +20,16 @@ respond):
      singleton requests up to ``max_batch``/``max_wait``, or via
      ``RouterService`` which adds typed requests, deadlines and
      admission control on top);
-  2. **score**: texts are split into latent-cache hits and misses; misses
-     are tokenized + feature-extracted ONCE PER QUERY and pushed, padded
-     to fixed (Q, L) buckets, through one jitted program fusing the
-     encoder and prediction heads; a second jitted program fuses
-     ``predict_accuracy`` with the task-aware difficulty reduction over
-     the whole batch — so XLA recompilation is bounded by the number of
-     buckets, not the number of distinct batch sizes;
+  2. **score**: texts are split into latent-cache hits and misses; each
+     miss takes ONE ``repro.core.ingest`` lexer pass (token pieces, hash
+     ids, features and piece counts from a single scan) and is pushed,
+     padded to fixed (rows, L) buckets, through one jitted program fusing
+     the encoder and prediction heads — with device dispatch PIPELINED
+     against host ingest of the next chunk (no per-chunk sync); a second
+     jitted program fuses ``predict_accuracy`` with the task-aware
+     difficulty reduction over the whole batch — so XLA recompilation is
+     bounded by the number of buckets, not the number of distinct batch
+     sizes;
   3. **route**: the (M, Q) accuracy/cost/latency tensors feed the fused
      utility+argmax kernel (``repro.kernels.routing``; Pallas on TPU,
      fused-jnp elsewhere) with padded queries masked out of the cost
@@ -72,8 +75,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import ingest
 from repro.core.errors import EmptyPoolError, NotCalibratedError
-from repro.core.features import extract_features_batch
 from repro.core.pool import PoolSnapshot
 from repro.core.predictor import apply_heads, encode
 from repro.core.profiling import predict_accuracy
@@ -162,10 +165,18 @@ class RouterEngine:
         clusters = pred.clusters
         mu, sd = (jnp.asarray(s, jnp.float32) for s in pred.feat_stats)
 
-        def _latents(ids, mask, feats):
-            e_se = encode(params["enc"], ids, mask, pc)
+        # the predictor weights enter as jit ARGUMENTS, not closure
+        # constants: closed-over arrays get embedded into the lowered HLO,
+        # which bloats every persistent-compile-cache entry with ~MBs of
+        # weights and makes cache DESERIALIZATION as slow as compilation —
+        # defeating Router.open(dir, warmup=…)'s xla_cache.  As arguments
+        # they are placeholder parameters: modules stay small, cache reads
+        # stay fast, and the per-call pytree flatten is microseconds.
+        # (clusters / feature stats are tiny and stay closed over.)
+        def _latents(p, ids, mask, feats):
+            e_se = encode(p["enc"], ids, mask, pc)
             f = (feats - mu) / sd
-            return apply_heads(params["heads"], e_se, f, clusters,
+            return apply_heads(p["heads"], e_se, f, clusters,
                                pc.latent_dim)
 
         def _from_latents(a_hat, b_hat, thetas):
@@ -173,7 +184,9 @@ class RouterEngine:
             s_hat = jnp.sum(a_hat * b_hat, -1)
             return p, s_hat
 
-        self._latents_jit = jax.jit(_latents)
+        latents_jit = jax.jit(_latents)
+        self._latents_jit = lambda ids, mask, feats: latents_jit(
+            params, ids, mask, feats)
         self._from_latents_jit = jax.jit(_from_latents)
 
     # ------------------------------------------------------------------
@@ -212,6 +225,20 @@ class RouterEngine:
             b *= 2
         return min(b, max(self.cfg.max_batch, self.cfg.min_bucket))
 
+    def _row_bucket(self, n: int) -> int:
+        """Padded ROW count for an encoder group: multiples of
+        ``min_bucket`` up to the forward chunk.
+
+        The encoder forward is the expensive per-row program (O(L²·d)
+        per row vs the O(M·D) accuracy reduction), so its padding uses a
+        dense rung grid — waste is bounded by ``min_bucket - 1`` rows
+        instead of the coarse ladder's ~50%.  Compilation count stays
+        bounded: ``forward_chunk / min_bucket`` rungs per L-bucket, all
+        walked by :meth:`warmup`."""
+        mb = self.cfg.min_bucket
+        cap = max(min(self.cfg.forward_chunk, self.cfg.max_batch), mb)
+        return min(-(-n // mb) * mb, cap)
+
     def _pad2(self, x: np.ndarray, rows: int) -> np.ndarray:
         out = np.zeros((rows,) + x.shape[1:], x.dtype)
         out[: x.shape[0]] = x
@@ -233,51 +260,74 @@ class RouterEngine:
 
     def _compute_entries(self, texts: Sequence[str],
                          subword_lens: Sequence[int]) -> List[CacheEntry]:
-        """Tokenize + featurize + predict latents for cache-miss texts.
+        """Lex + featurize + predict latents for cache-miss texts, with
+        host ingest PIPELINED against the jitted device dispatch.
 
-        Tokenization and feature extraction run once per query.  Queries
-        are grouped into sequence-length buckets — most traffic is much
-        shorter than ``max_len``, and the encoder is O(L²) — and each
-        group runs through the jitted encoder+heads program over a padded
-        (Q_bucket, L_bucket) shape, so compilation count is bounded by
-        #Q-buckets × #L-buckets."""
+        One :func:`repro.core.ingest.lex` pass per query yields the token
+        stream, hash ids, feature vector and piece counts together.  The
+        batch is walked in ``forward_chunk`` slices (pre-sorted by char
+        length so each slice is length-homogeneous): a slice's encoder
+        groups are DISPATCHED asynchronously and the host immediately
+        starts lexing the next slice — jax's async dispatch keeps the
+        device busy while Python ingests, and no chunk pays a
+        ``block_until_ready``-equivalent sync (results are materialized
+        once, after everything is in flight).
+
+        Grouping stays strictly by the query's OWN length bucket: a
+        query's padded L never depends on its batch-mates, which keeps
+        scoring bitwise-invariant under batch composition and ordering
+        (XLA's reduction tree over keys varies with the padded K
+        dimension) — the char-length presort is therefore a pure
+        padding-efficiency choice, invisible in the outputs."""
         art = self.router.artifacts
         pc = art.predictor.cfg
+        tok = art.tokenizer
         n = len(texts)
-        ids, mask = art.tokenizer.encode_batch(list(texts), pc.max_len)
-        feats = extract_features_batch(list(texts))
-        lens = mask.sum(1).astype(int)
-        seq_b = self._seq_buckets(lens)
+        uniq_sw = sorted(set(subword_lens))
         a_np = np.empty((n, pc.latent_dim), np.float32)
         b_np = np.empty((n, pc.latent_dim), np.float32)
-        # group strictly by the query's OWN length bucket: a query's
-        # padded L never depends on its batch-mates, which keeps scoring
-        # bitwise-invariant under batch composition (XLA's reduction tree
-        # over keys varies with the padded K dimension)
+        feats_all = np.empty((n, ingest.K_FEATURES), np.float32)
+        lex_all: List[Optional[ingest.Lexed]] = [None] * n
+        order = np.argsort(np.fromiter((len(t) for t in texts),
+                                       np.int64, count=n), kind="stable")
         fc = min(self.cfg.forward_chunk, self.cfg.max_batch)
-        for lb in np.unique(seq_b):
-            grp = np.nonzero(seq_b == lb)[0]
-            for s in range(0, len(grp), fc):
-                idx = grp[s: s + fc]
-                bucket = self._bucket(len(idx))
+        in_flight: List[Tuple[np.ndarray, jax.Array, jax.Array, int]] = []
+        for s in range(0, n, fc):
+            idx = order[s: s + fc]
+            lexed = [ingest.lex(texts[i]) for i in idx]
+            ids, mask = tok.encode_lexed(lexed, pc.max_len)
+            feats = ingest.features_stack(lexed)
+            feats_all[idx] = feats
+            for i, lx in zip(idx, lexed):
+                lex_all[i] = lx
+            seq_b = self._seq_buckets(mask.sum(1).astype(int))
+            for lb in np.unique(seq_b):
+                g = np.nonzero(seq_b == lb)[0]
+                rows = self._row_bucket(len(g))
                 a_g, b_g = self._latents_jit(
-                    jnp.asarray(self._pad2(ids[idx, :lb], bucket)),
-                    jnp.asarray(self._pad2(mask[idx, :lb], bucket)),
-                    jnp.asarray(self._pad2(feats[idx].astype(np.float32),
-                                           bucket)))
-                a_np[idx] = np.asarray(a_g)[: len(idx)]
-                b_np[idx] = np.asarray(b_g)[: len(idx)]
-        uniq_sw = sorted(set(subword_lens))
+                    jnp.asarray(self._pad2(ids[g, :lb], rows)),
+                    jnp.asarray(self._pad2(mask[g, :lb], rows)),
+                    jnp.asarray(self._pad2(feats[g], rows)))
+                in_flight.append((idx[g], a_g, b_g, len(g)))
+        for gi, a_g, b_g, m in in_flight:      # single collection point
+            a_np[gi] = np.asarray(a_g)[:m]
+            b_np[gi] = np.asarray(b_g)[:m]
         return [
             CacheEntry(
-                a_hat=a_np[i], b_hat=b_np[i], feats=feats[i],
-                token_counts={sw: piece_count(t, sw) for sw in uniq_sw})
-            for i, t in enumerate(texts)
+                a_hat=a_np[i], b_hat=b_np[i], feats=feats_all[i],
+                token_counts={sw: lex_all[i].piece_count(sw)
+                              for sw in uniq_sw},
+                tok_lens=lex_all[i].tok_lens)
+            for i in range(n)
         ]
 
     def _latent_batch(self, texts: Sequence[str], pool: _DevicePool
                       ) -> Tuple[np.ndarray, np.ndarray, List[CacheEntry]]:
         """Returns (a_hat (Q, D), b_hat (Q, D), per-query cache entries)."""
+        if not texts:
+            D = self.router.artifacts.predictor.cfg.latent_dim
+            return np.zeros((0, D), np.float32), np.zeros((0, D),
+                                                          np.float32), []
         entries: List[Optional[CacheEntry]] = [
             self.cache.get(t) if self.cache is not None else None
             for t in texts]
@@ -305,16 +355,30 @@ class RouterEngine:
 
         Hash tokenizers produce salt-independent piece counts, so the
         per-model count is the shared base count × the model's length
-        factor — exactly ``model_token_count`` without the M × Q loop."""
-        base = np.empty((len(set(pool.subword_lens)), len(texts)))
-        sw_index = {sw: j for j, sw in enumerate(sorted(set(pool.subword_lens)))}
-        for q, (t, e) in enumerate(zip(texts, entries)):
-            for sw, j in sw_index.items():
-                c = e.token_counts.get(sw)
-                if c is None:          # pool gained a new tokenizer shape
-                    c = piece_count(t, sw)
-                    e.token_counts[sw] = c
+        factor — exactly ``model_token_count`` without the M × Q loop.
+        Assembly is one C-speed gather per DISTINCT subword length (the
+        seed's nested Python loop ran per (query, subword) cell); a
+        subword length the entry has not seen (the pool onboarded a new
+        tokenizer shape after the entry was cached) is filled from the
+        entry's lexed token lengths — no text re-scan."""
+        uniq_sw = sorted(set(pool.subword_lens))
+        Q = len(texts)
+        base = np.empty((len(uniq_sw), Q))
+        for j, sw in enumerate(uniq_sw):
+            base[j] = np.fromiter(
+                (e.token_counts.get(sw, -1) for e in entries),
+                np.float64, count=Q)
+        if (base < 0).any():           # pool gained a new tokenizer shape
+            for j, q in zip(*np.nonzero(base < 0)):
+                e, sw = entries[q], uniq_sw[j]
+                if e.tok_lens is not None:
+                    c = int(np.sum((e.tok_lens - 1) // sw + 1)) \
+                        if len(e.tok_lens) else 0
+                else:
+                    c = piece_count(texts[q], sw)
+                e.token_counts[sw] = c
                 base[j, q] = c
+        sw_index = {sw: j for j, sw in enumerate(uniq_sw)}
         rows = np.array([sw_index[sw] for sw in pool.subword_lens])
         l_in = np.rint(base[rows] * pool.length_factors[:, None])
         return np.maximum(l_in.astype(np.int64), 1)
@@ -333,6 +397,10 @@ class RouterEngine:
         selection indices back to names must reuse the same ``pool`` so a
         concurrent mutation cannot shift indices mid-request."""
         mb = self.cfg.max_batch
+        if len(texts) == 0:            # empty batch: empty score tensors
+            M = pool.snap.n_models
+            return (np.zeros((M, 0), np.float32), np.zeros((M, 0)),
+                    np.zeros((M, 0)))
         if len(texts) > mb:
             parts = [self._score(texts[i: i + mb], pool)
                      for i in range(0, len(texts), mb)]
@@ -374,6 +442,9 @@ class RouterEngine:
             self._check_predictor()
             pool = self._pool()  # pin ONE snapshot for scoring AND naming
             p, cost, lat = self._score(texts, pool)
+        if len(texts) == 0:
+            return [], np.zeros(0, np.int64), {"p": p, "cost": cost,
+                                               "latency": lat}
         sel, diag = core_route(p, cost, lat, weights=pol.weights,
                                constraints=pol.constraints)
         sel = np.asarray(sel)
@@ -430,6 +501,11 @@ class RouterEngine:
             pool = self._pool()  # pin ONE snapshot for scoring AND naming
             if pol.constraints is not None or want_scores:
                 p, cost, lat = self._score(texts, pool)
+                if len(texts) == 0:
+                    return BatchDecision(
+                        names=[], sel=np.zeros(0, np.int64),
+                        pool_version=pool.snap.version,
+                        model_names=pool.names, p=p, cost=cost, latency=lat)
                 sel, _ = core_route(p, cost, lat, weights=pol.weights,
                                     constraints=pol.constraints)
                 sel = np.asarray(sel)
@@ -446,6 +522,8 @@ class RouterEngine:
                     ) -> Tuple[List[str], np.ndarray]:
         """Unconstrained fused-kernel routing against a pinned snapshot."""
         Q = len(texts)
+        if Q == 0:
+            return [], np.zeros(0, np.int64)
         p, cost, lat = self._score(texts, pool)
         w = np.asarray(pol.weights, np.float32)
         if Q > self.cfg.max_batch:
@@ -514,32 +592,36 @@ class RouterEngine:
                             for lb in range(m, pc.max_len + m, m)}
                            | {min(m, pc.max_len)})
         fc = min(self.cfg.forward_chunk, self.cfg.max_batch)
-        enc_rungs = sorted({self._bucket(n)
+        enc_rungs = sorted({self._row_bucket(n)
                             for n in range(1, min(max_queries, fc) + 1)})
         q_rungs = sorted({self._bucket(n) for n in
                           range(1, min(max_queries, self.cfg.max_batch) + 1)})
+        # dispatch every program WITHOUT an intermediate sync: the cheap
+        # zero-filled executions run on the device queue while Python is
+        # already tracing/compiling the next shape (same overlap as the
+        # serving path); one final sync closes the tail
+        last = None
         for bq in enc_rungs:
             for lb in l_buckets:
-                a, _ = self._latents_jit(
+                last, _ = self._latents_jit(
                     jnp.zeros((bq, lb), jnp.int32),
                     jnp.zeros((bq, lb), jnp.float32),
                     jnp.zeros((bq, n_feats), jnp.float32))
-                a.block_until_ready()
         M = pool.snap.n_models
         for bq in q_rungs:
-            p_pad, _ = self._from_latents_jit(
+            last, _ = self._from_latents_jit(
                 jnp.zeros((bq, D), jnp.float32),
                 jnp.zeros((bq, D), jnp.float32), pool.thetas)
-            p_pad.block_until_ready()
             valid = np.zeros(bq, bool)
             valid[:1] = True
-            sel, _ = ops.routing_argmax(
+            last, _ = ops.routing_argmax(
                 jnp.zeros((M, bq), jnp.float32),
                 jnp.zeros((M, bq), jnp.float32),
                 jnp.zeros((M, bq), jnp.float32),
                 jnp.zeros(3, jnp.float32), valid=jnp.asarray(valid),
                 use_pallas=self._use_pallas())
-            sel.block_until_ready()
+        if last is not None:
+            last.block_until_ready()
         return time.perf_counter() - t0
 
     # ------------------------------------------------------------------

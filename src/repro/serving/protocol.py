@@ -15,7 +15,11 @@ Message surface (mirrors :mod:`repro.serving.service`):
   * ``{"op": "route", "id", "text", "policy", "deadline_s",
     "diagnostics"}`` → one response frame per request, in COMPLETION
     order (correlate by ``id``); ``policy`` is either a ``POLICIES`` name
-    or an inline ``{"name", "weights", "constraints"}`` object;
+    or an inline ``{"name", "weights", "constraints"}`` object.  Route
+    frames that arrive as one pipelined burst are grouped server-side
+    into per-policy bulk submissions (one admission + one engine call
+    per run, responses coalesced into one write) — plain frames with a
+    deadline or diagnostics keep the per-request path;
   * ``{"op": "admin", "action": "onboard" | "remove" | "update_pricing" |
     "pool_info", "params": {...}}`` → applied against the LIVE pool
     (copy-on-write snapshot bump; in-flight batches keep their pinned
@@ -205,13 +209,42 @@ async def _handle_connection(service: RouterService,
         # for ACKs — that throttles a pipelined client to ~ACK cadence
         sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
 
+    # Response frames are COALESCED per drain: completions append to an
+    # outbox and a single writer task flushes every pending frame with
+    # ONE write + ONE drain.  A micro-batched burst of Q singleton
+    # responses previously paid Q event-loop hops through
+    # ``writer.drain()`` — that per-frame overhead made the pipelined
+    # client SLOWER than the bulk op (BENCH_serving.json's
+    # ``service_tcp_pipelined`` regression); coalescing writes amortizes
+    # it to one hop per completion burst while preserving completion
+    # order and drain()-backpressure.
+    outbox: List[Dict] = []
+    flush = asyncio.Event()
+    closed = False
+
+    async def flush_outbox() -> None:
+        nonlocal closed
+        while True:
+            await flush.wait()
+            flush.clear()
+            if not outbox:
+                continue
+            batch, outbox[:] = outbox[:], []
+            try:
+                writer.write(b"".join(encode_frame(o) for o in batch))
+                await writer.drain()
+            except (OSError, RuntimeError):
+                # any transport failure (reset/abort/closed loop): stop
+                # flushing and drop the rest — the reader will see EOF
+                closed = True
+                return
+
+    flusher = asyncio.ensure_future(flush_outbox())
+
     async def send(obj: Dict) -> None:
-        # StreamWriter.write is synchronous (order is fixed at call time;
-        # no lock needed under a single-threaded loop); drain() only
-        # applies backpressure when the transport buffer is over the
-        # high-water mark
-        writer.write(encode_frame(obj))
-        await writer.drain()
+        if not closed:
+            outbox.append(obj)
+            flush.set()
 
     async def route_one(frame: Dict) -> None:
         try:
@@ -223,6 +256,72 @@ async def _handle_connection(service: RouterService,
             await send({"id": frame.get("id"), "status": "error",
                         "error": f"{type(e).__name__}: {e}",
                         "error_type": type(e).__name__})
+
+    # ``route`` frames are BURST-GROUPED: a pipelined client's frames all
+    # sit in the stream buffer, so the reader loop drains them without
+    # yielding; once it finally awaits the socket, the scheduled flush
+    # groups the burst into per-policy runs and routes each as ONE bulk
+    # submission (one admission, one engine call, one response burst)
+    # instead of one asyncio task per frame — per-frame task overhead was
+    # the ``service_tcp_pipelined`` regression.  Selections within a run
+    # get bulk (``Router.route``) cost normalization; pipelined-batch
+    # composition was never contractual (it used to depend on
+    # micro-batcher coalescing timing).  Frames carrying a deadline,
+    # diagnostics, or no valid text keep the per-request path.
+    route_burst: List[Dict] = []
+
+    def _burst_eligible(frame: Dict) -> bool:
+        return (isinstance(frame.get("text"), str)
+                and frame.get("deadline_s") is None
+                and not frame.get("diagnostics"))
+
+    def _policy_key(frame: Dict):
+        v = frame.get("policy", "balanced")
+        return json.dumps(v, sort_keys=True) if isinstance(v, dict) else v
+
+    async def route_group(frames: List[Dict]) -> None:
+        if len(frames) == 1:
+            await route_one(frames[0])
+            return
+        ids = [f.get("id") for f in frames]
+        try:
+            resps = await service.submit_batch(
+                [f["text"] for f in frames],
+                policy=policy_from_json(frames[0].get("policy", "balanced")))
+            for rid, resp in zip(ids, resps):
+                rec = response_to_json(resp)
+                rec["id"] = rid
+                await send(rec)
+        except OverloadedError as e:
+            for rid in ids:
+                await send({"id": rid, "status": "overloaded",
+                            "error": str(e)})
+        except DeadlineExceededError as e:
+            for rid in ids:
+                await send({"id": rid, "status": "deadline_exceeded",
+                            "error": str(e)})
+        except Exception as e:  # noqa: BLE001 — keep the connection alive
+            for rid in ids:
+                await send({"id": rid, "status": "error",
+                            "error": f"{type(e).__name__}: {e}",
+                            "error_type": type(e).__name__})
+
+    # groups are capped at the service's coalesce limit so a huge
+    # pipelined burst occupies MULTIPLE admission slots — max_inflight
+    # backpressure and max_queue overload shedding still apply per
+    # group, instead of one giant always-admitted batch
+    group_cap = max(service.cfg.max_batch, 1)
+
+    def flush_burst() -> None:
+        if not route_burst:
+            return
+        frames, route_burst[:] = route_burst[:], []
+        for _, grp in itertools.groupby(frames, key=_policy_key):
+            run = list(grp)
+            for s in range(0, len(run), group_cap):
+                t = asyncio.ensure_future(route_group(run[s: s + group_cap]))
+                tasks.add(t)
+                t.add_done_callback(tasks.discard)
 
     async def route_bulk(frame: Dict) -> None:
         rid = frame.get("id")
@@ -251,9 +350,17 @@ async def _handle_connection(service: RouterService,
                 break
             op = frame.get("op")
             if op == "route":
-                t = asyncio.ensure_future(route_one(frame))
-                tasks.add(t)
-                t.add_done_callback(tasks.discard)
+                if _burst_eligible(frame):
+                    route_burst.append(frame)
+                    if len(route_burst) == 1:
+                        # runs once the reader actually awaits the socket
+                        # — i.e. after every already-buffered frame has
+                        # been read into the burst
+                        loop.call_soon(flush_burst)
+                else:
+                    t = asyncio.ensure_future(route_one(frame))
+                    tasks.add(t)
+                    t.add_done_callback(tasks.discard)
             elif op == "route_many":
                 t = asyncio.ensure_future(route_bulk(frame))
                 tasks.add(t)
@@ -263,6 +370,7 @@ async def _handle_connection(service: RouterService,
                 # BEFORE this op finishes (response written) before the
                 # mutation lands — scheduling alone wouldn't guarantee a
                 # prior frame's task had even submitted yet
+                flush_burst()
                 if tasks:
                     await asyncio.gather(*list(tasks),
                                          return_exceptions=True)
@@ -288,8 +396,19 @@ async def _handle_connection(service: RouterService,
     except (asyncio.IncompleteReadError, ConnectionResetError):
         pass   # client went away mid-frame
     finally:
+        flush_burst()        # route frames read but not yet grouped
         if tasks:
             await asyncio.gather(*tasks, return_exceptions=True)
+        flusher.cancel()
+        await asyncio.gather(flusher, return_exceptions=True)
+        # final flush: completions enqueued after the reader saw EOF must
+        # still reach the wire before close
+        if outbox and not closed:
+            try:
+                writer.write(b"".join(encode_frame(o) for o in outbox))
+                await writer.drain()
+            except (OSError, RuntimeError):
+                pass
         writer.close()
         try:
             await writer.wait_closed()
@@ -427,9 +546,11 @@ class ServiceClient:
         the per-request asyncio overhead is paid once per batch.
 
         ``pipeline=True`` sends one ``route`` frame per text instead (all
-        frames out, then all responses in, matched by id): each request
-        is admitted individually and coalesced by the server's
-        micro-batcher — the shape streaming clients produce."""
+        frames out, then all responses in, matched by id) — the shape
+        streaming clients produce.  The server burst-groups frames it
+        reads back-to-back into per-policy bulk submissions; frames that
+        arrive spread out are admitted individually and coalesced by the
+        micro-batcher."""
         if not texts:
             return []
         if pipeline:
@@ -437,8 +558,12 @@ class ServiceClient:
                                  request_id=f"c{next(self._ids)}",
                                  deadline_s=deadline_s,
                                  diagnostics=diagnostics) for t in texts]
-            for r in reqs:
-                self._send(request_to_json(r))
+            # one syscall for the whole pipeline: the frames land in the
+            # server's stream buffer together, so its reader drains them
+            # as one burst (and groups them into bulk submissions)
+            # instead of waking once per packet
+            self._sock.sendall(b"".join(encode_frame(request_to_json(r))
+                                        for r in reqs))
             by_id: Dict[str, Dict] = {}
             for _ in reqs:
                 rep = self._recv()

@@ -1,0 +1,318 @@
+"""Single-pass ingest (ISSUE 4): the shared lexer must match the seed's
+independent regex pipelines BIT-FOR-BIT.
+
+``repro.core.ingest.lex`` replaced three separate scanning modules — the
+tokenizer's ``_TOKEN_RE`` pass, the feature extractor's six regex passes
+(plus a vowel scan per word), and ``piece_count`` — with one master-regex
+walk.  These tests pin the equivalence against VERBATIM reference copies
+of the seed implementations, property-swept over adversarial text
+(unicode case-folding traps, combining marks, operators, TeX commands,
+digit/dot runs, brackets, apostrophes), plus the empty-input regressions
+and the memoized batch-hash path.
+"""
+import math
+import re
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:                        # offline container
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core import ingest
+from repro.core.features import extract_features, extract_features_batch
+from repro.data.tokenizer import (HashTokenizer, PAD_ID, TokenizerSpec,
+                                  model_token_count, piece_count)
+
+# ---------------------------------------------------------------------------
+# verbatim seed reference implementations (pre-ingest-overhaul)
+# ---------------------------------------------------------------------------
+
+_TOKEN_RE = re.compile(r"[A-Za-z']+|\d|[^\w\s]")
+_WORD_RE = re.compile(r"[A-Za-z']+")
+_NUM_RE = re.compile(r"\d+(?:\.\d+)?")
+_PUNCT_RE = re.compile(r"[^\w\s]")
+_OPERATOR_RE = re.compile(r"[+\-*/^=<>∑∫√%]|\\frac|\\sum|\\int")
+_QUESTION_WORDS = frozenset(
+    "what why how when where which who whom whose prove derive compute "
+    "calculate determine evaluate explain".split())
+_SUBORDINATORS = frozenset(
+    "if because although while whereas unless since that which whose "
+    "suppose assuming given when then therefore hence".split())
+
+
+def _ref_syllables(word):
+    word = word.lower()
+    groups = re.findall(r"[aeiouy]+", word)
+    n = len(groups)
+    if word.endswith("e") and n > 1:
+        n -= 1
+    return max(n, 1)
+
+
+def _ref_nesting_depth(text):
+    depth = best = 0
+    for ch in text:
+        if ch in "([{":
+            depth += 1
+            best = max(best, depth)
+        elif ch in ")]}":
+            depth = max(depth - 1, 0)
+    words = [w.lower() for w in _WORD_RE.findall(text)]
+    clause = sum(1 for w in words if w in _SUBORDINATORS)
+    return best + clause
+
+
+def ref_extract_features(text):
+    words = _WORD_RE.findall(text)
+    n_words = max(len(words), 1)
+    n_chars = max(len(text), 1)
+    sentences = max(len(re.findall(r"[.!?]+", text)), 1)
+    syl = sum(_ref_syllables(w) for w in words)
+    avg_word_len = sum(len(w) for w in words) / n_words
+    type_token = len({w.lower() for w in words}) / n_words
+    punct_density = len(_PUNCT_RE.findall(text)) / n_chars
+    num_density = len(_NUM_RE.findall(text)) / n_words
+    depth = _ref_nesting_depth(text)
+    qwords = sum(1 for w in words if w.lower() in _QUESTION_WORDS)
+    ops = len(_OPERATOR_RE.findall(text)) / n_chars
+    rare = sum(1 for w in words if len(w) >= 9) / n_words
+    flesch = 206.835 - 1.015 * (n_words / sentences) - 84.6 * (syl / n_words)
+    return np.array(
+        [math.log1p(n_chars), math.log1p(n_words), avg_word_len, type_token,
+         punct_density * 10.0, num_density, math.log1p(depth),
+         math.log1p(qwords), ops * 10.0, rare, -flesch / 100.0],
+        dtype=np.float32)
+
+
+def ref_encode(tok: HashTokenizer, text, max_len=None, add_cls=False):
+    """Seed ``HashTokenizer.encode`` with the seed's unmemoized hash."""
+    import hashlib
+
+    pieces = []
+    for t in _TOKEN_RE.findall(text.lower()):
+        while len(t) > tok.subword_len:
+            pieces.append(t[: tok.subword_len])
+            t = t[tok.subword_len:]
+        pieces.append(t)
+    ids = []
+    for p in pieces:
+        h = hashlib.blake2s(f"{tok.salt}:{p}".encode(), digest_size=4)
+        ids.append(2 + int.from_bytes(h.digest(), "little")
+                   % (tok.vocab_size - 2))
+    if add_cls:
+        ids = [1] + ids
+    if max_len is not None:
+        ids = ids[:max_len]
+    return ids
+
+
+def ref_piece_count(text, subword_len):
+    n = 0
+    for t in _TOKEN_RE.findall(text.lower()):
+        n += (len(t) - 1) // subword_len + 1
+    return n
+
+
+# adversarial alphabet: ASCII prose + every character class the lexer
+# special-cases + unicode case-folding traps ('İ' lowers to 2 chars; 'K'
+# U+212A lowers to ASCII 'k'; combining dot; CJK; arabic digit)
+_ALPHABET = list(
+    "abcXYZ '\\.!?([{)]}+-*/^=<>%_0123456789\t\n "
+) + ["∑", "∫", "√", "é", "ß", "İ", "\u212a", "\u0307", "漢", "٣",
+     "frac", "sum", "int", "what", "because", "e", "antidisestablish"]
+
+texts_strategy = st.lists(st.sampled_from(_ALPHABET), min_size=0,
+                          max_size=60)
+
+EDGE_TEXTS = [
+    "", " ", "\t\n  ", "'", "''", "a", "What is 2 + 2?",
+    "don't stop''believing",
+    "x = \\frac{a}{b} + \\sum_i i^2 \\int_0^1 ... !!",
+    "\\FRAC \\Sum \\int \\\\frac \\su m",
+    "1.2.3 12.34 1..2 .5 a1.2b 3.5! ٣.٥",
+    "((nested [brackets] {deep})) )]}",
+    "İstanbul ünïcödé ẞß \u212aelvin café 漢字テスト _under_score_",
+    "Prove why, when... THEREFORE; hence: suppose?",
+    "antidisestablishmentarianism " * 10,          # > max_len pieces
+    "e e.g. etc. a?!b??!.c",
+]
+
+
+# ---------------------------------------------------------------------------
+# lexer ≡ seed pipelines, bit for bit
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=300, deadline=None)
+@given(texts_strategy)
+def test_lex_matches_seed_pipelines(chars):
+    text = "".join(chars)
+    lx = ingest.lex(text)
+    assert lx.tokens == _TOKEN_RE.findall(text.lower())
+    ref = ref_extract_features(text)
+    assert np.array_equal(lx.feats, ref), (text, lx.feats, ref)
+    for sw in (1, 3, 12, 30):
+        assert lx.piece_count(sw) == ref_piece_count(text, sw)
+
+
+@pytest.mark.parametrize("text", EDGE_TEXTS)
+def test_lex_edge_cases(text):
+    lx = ingest.lex(text)
+    assert lx.tokens == _TOKEN_RE.findall(text.lower())
+    assert np.array_equal(lx.feats, ref_extract_features(text))
+    assert np.array_equal(lx.feats, extract_features(text))
+    assert lx.piece_count(12) == ref_piece_count(text, 12)
+    assert piece_count(text, 12) == ref_piece_count(text, 12)
+
+
+@settings(max_examples=150, deadline=None)
+@given(texts_strategy, st.sampled_from(["base", "gemma3-1b", "salt:y"]),
+       st.integers(4, 24))
+def test_encode_batch_bit_identical(chars, salt, max_len):
+    text = "".join(chars)
+    tok = HashTokenizer(4_096, salt=salt, subword_len=7)
+    ids, mask = tok.encode_batch([text, text + " extra", ""], max_len)
+    for row, t in zip(ids, [text, text + " extra", ""]):
+        want = ref_encode(tok, t, max_len, add_cls=True)
+        assert list(row[: len(want)]) == want
+        assert (row[len(want):] == PAD_ID).all()
+    assert mask.shape == ids.shape
+    n = (mask > 0).sum(1)
+    assert (n == [min(len(ref_encode(tok, t, add_cls=True)), max_len)
+                  for t in [text, text + " extra", ""]]).all()
+
+
+def test_encode_batch_matches_per_query_encode_over_length():
+    """Truncation at max_len: only the first max_len-1 pieces are hashed
+    and the result equals the seed loop exactly."""
+    tok = HashTokenizer(32_000, salt="trunc")
+    long = "antidisestablishmentarianism " * 40
+    ids, mask = tok.encode_batch([long], 16)
+    assert list(ids[0]) == ref_encode(tok, long, 16, add_cls=True)
+    assert mask[0].sum() == 16
+
+
+def test_hash_memo_is_observationally_stateless():
+    """A warm memo must return exactly what a fresh tokenizer computes."""
+    warm = HashTokenizer(1_000, salt="memo")
+    warm.encode_batch(["the quick brown fox 123!"], 32)
+    fresh = HashTokenizer(1_000, salt="memo")
+    texts = ["the fox!", "quick quick the", "new words entirely"]
+    a, _ = warm.encode_batch(texts, 32)
+    b, _ = fresh.encode_batch(texts, 32)
+    assert np.array_equal(a, b)
+    spec = TokenizerSpec.of(warm)
+    rebuilt = spec.build()
+    c, _ = rebuilt.encode_batch(texts, 32)
+    assert np.array_equal(a, c)
+
+
+@settings(max_examples=100, deadline=None)
+@given(texts_strategy, st.integers(1, 30))
+def test_piece_count_salt_independent(chars, sw):
+    text = "".join(chars)
+    lx = ingest.lex(text)
+    for salt in ("a", "b"):
+        tok = HashTokenizer(1_000, salt=salt, subword_len=sw)
+        assert lx.piece_count(sw) == tok.count(text)
+        assert model_token_count(tok, text) == max(
+            int(round(tok.count(text) * 1.0)), 1)
+
+
+def test_pieces_limit_prefix():
+    lx = ingest.lex("antidisestablishmentarianism hello world")
+    full = lx.pieces(12)
+    assert lx.pieces(12, limit=3) == full[:3]
+    assert lx.pieces(12, limit=0) == []
+    assert lx.pieces(12, limit=999) == full
+
+
+# ---------------------------------------------------------------------------
+# empty-input regressions (the seed crashed on np.stack([]))
+# ---------------------------------------------------------------------------
+
+
+def test_empty_batch_features_and_encode():
+    feats = extract_features_batch([])
+    assert feats.shape == (0, ingest.K_FEATURES)
+    assert feats.dtype == np.float32
+    tok = HashTokenizer(1_000)
+    ids, mask = tok.encode_batch([], 24)
+    assert ids.shape == (0, 24) and mask.shape == (0, 24)
+
+
+def test_engine_empty_text_batch(demo_stack):
+    """The engine returns empty score tensors / selections for an empty
+    batch instead of crashing in np.stack."""
+    from repro.serving import RouterEngine, RouterEngineConfig
+
+    _, router, _ = demo_stack
+    engine = RouterEngine(router, RouterEngineConfig(cache_size=16))
+    M = len(router.pool)
+    p, cost, lat = engine.score_queries([])
+    assert p.shape == cost.shape == lat.shape == (M, 0)
+    names, sel = engine.route_batch([])
+    assert names == [] and sel.shape == (0,)
+    names, sel, diag = engine.route([])
+    assert names == [] and sel.shape == (0,)
+    assert diag["p"].shape == (M, 0)
+    dec = engine.route_pinned([], want_scores=True)
+    assert dec.names == [] and dec.sel.shape == (0,)
+    assert dec.p.shape == (M, 0)
+    dec = engine.route_pinned([])
+    assert dec.names == [] and dec.sel.shape == (0,)
+
+
+def test_input_lengths_new_subword_len_uses_lexed_lengths(demo_stack):
+    """A cached entry asked for a subword length the pool did not have at
+    compute time fills it from the lexed token lengths — and the result
+    still equals the seed per-model tokenizer loop."""
+    from repro.serving import RouterEngine, RouterEngineConfig
+
+    _, router, _ = demo_stack
+    engine = RouterEngine(router, RouterEngineConfig(cache_size=16))
+    texts = ["what is 2+2?", "a much longer elaborate question...... ok"]
+    pool = engine._pool()
+    _, _, entries = engine._latent_batch(texts, pool)
+    for e in entries:                     # simulate pre-mutation entries
+        e.token_counts.clear()
+    l_in = engine._input_lengths(texts, entries, pool)
+    want = np.array([[model_token_count(tok, t) for t in texts]
+                     for tok in router.pool.snapshot().tokenizers])
+    np.testing.assert_array_equal(l_in, want)
+    # and the backfill stored the counts for the next batch
+    for e in entries:
+        assert set(e.token_counts) == set(pool.subword_lens)
+
+
+# ---------------------------------------------------------------------------
+# persistent compile cache plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_enable_persistent_compile_cache(tmp_path):
+    import jax
+
+    from repro.serving.cache import enable_persistent_compile_cache
+
+    prev_dir = jax.config.jax_compilation_cache_dir
+    prev_min_t = jax.config.jax_persistent_cache_min_compile_time_secs
+    prev_min_b = jax.config.jax_persistent_cache_min_entry_size_bytes
+    try:
+        d = str(tmp_path / "xla_cache")
+        out = enable_persistent_compile_cache(d)
+        assert out == d
+        import os
+        assert os.path.isdir(d)
+        assert jax.config.jax_compilation_cache_dir == d
+        assert jax.config.jax_persistent_cache_min_compile_time_secs == 0.0
+        assert jax.config.jax_persistent_cache_min_entry_size_bytes == 0
+    finally:
+        jax.config.update("jax_compilation_cache_dir", prev_dir)
+        jax.config.update("jax_persistent_cache_min_compile_time_secs",
+                          prev_min_t)
+        jax.config.update("jax_persistent_cache_min_entry_size_bytes",
+                          prev_min_b)
