@@ -357,3 +357,47 @@ def evaluate_selection(bench: Bench, pool_names: Sequence[str],
                        weights: Tuple[float, float, float]) -> float:
     p, cost, lat = bench.truth(pool_names, qi)
     return float(reward(jnp.asarray(sel), p, cost, lat, weights))
+
+
+def carry_previous(path: str, artifact: Dict, metric: str,
+                   carry: Optional[Sequence[str]] = None,
+                   workload_keys: Sequence[str] = ()) -> None:
+    """Embed the prior BENCH artifact at ``path`` under
+    ``artifact["previous"]`` and stamp ``speedup_vs_previous`` (prior
+    ``metric`` over current) on every matching row — the one shared
+    implementation behind the serving/onboarding/kernel artifacts'
+    delta blocks (they drifted as three near-copies).
+
+    ``carry`` selects which metrics of each previous row to embed (None
+    = the full row); ``workload_keys`` are fields of the artifacts'
+    ``workload`` records that must MATCH for any comparison to be
+    meaningful (e.g. the kernel bench times different shapes in smoke
+    vs full mode — comparing across them would report phantom
+    speedups).  Any malformed/missing previous file degrades to "no
+    previous block"."""
+    import json
+
+    try:
+        with open(path) as f:
+            prev_art = json.load(f)
+        prev = prev_art.get("results", {})
+        if not isinstance(prev, dict):
+            return
+        if any(prev_art.get("workload", {}).get(k)
+               != artifact.get("workload", {}).get(k)
+               for k in workload_keys):
+            return
+    except (OSError, ValueError):   # no/corrupt previous → no block
+        return
+    artifact["previous"] = {
+        k: (dict(rec) if carry is None
+            else {m: rec[m] for m in carry if m in rec})
+        for k, rec in prev.items() if isinstance(rec, dict)}
+    for k, rec in artifact.get("results", {}).items():
+        if not isinstance(rec, dict):
+            continue
+        p = prev.get(k)
+        try:    # per-row: one malformed row must not drop the rest
+            rec["speedup_vs_previous"] = p[metric] / rec[metric]
+        except (KeyError, TypeError, ZeroDivisionError):
+            pass

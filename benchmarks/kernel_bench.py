@@ -1,21 +1,35 @@
 """Kernel microbenchmarks.
 
 On this CPU container the Pallas kernels run in interpret mode (not
-hardware-representative), so the timed path is the jnp reference under jit
-(what XLA-CPU executes); `derived` reports the kernel's arithmetic
-intensity estimate (FLOPs / byte) used in the roofline discussion.
+hardware-representative), so the timed path is what the backend actually
+executes in production: the jnp reference under jit on CPU, the Mosaic
+kernel on TPU (``ops.*`` dispatch).  ``derived`` reports the kernel's
+arithmetic intensity estimate (FLOPs / byte) used in the roofline
+discussion.
+
+The encoder-block section (ISSUE 5) times the predictor-encoder's fused
+attention block — the serving cold path's dominant program — through the
+``ops.encoder_block`` dispatch at BOTH precision tiers (f32 and the bf16
+scoring tier) and both row modes (full rows = body layers, CLS-row-only
+= final layer).  Those rows also land in a ``BENCH_kernels.json``
+artifact (path overridable via ``BENCH_KERNELS_JSON``) with each bf16
+row's speedup over its f32 twin and the previous run's timings under
+``previous``, so kernel-level perf regressions surface in PR artifacts
+the same way the serving/onboarding trajectories do.
 
 CSV rows: kernel/<name>/<shape>, us_per_call, flops_per_byte
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import List, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref
+from repro.kernels import ops, ref
 
 
 def _time(fn, *args, reps=5) -> float:
@@ -28,8 +42,50 @@ def _time(fn, *args, reps=5) -> float:
     return (time.perf_counter() - t0) / reps * 1e6
 
 
-def run(smoke: bool = False) -> List[Tuple[str, float, float]]:
+def _encoder_block_rows(smoke: bool, reps: int, results: dict
+                        ) -> List[Tuple[str, float, float]]:
+    """Fused attention block at the bench-predictor shape, f32 vs bf16,
+    full-rows vs CLS-row-only."""
     rows: List[Tuple[str, float, float]] = []
+    B, L, d, nh = (64, 32, 192, 4) if smoke else (64, 64, 768, 12)
+    ks = jax.random.split(jax.random.key(5), 5)
+    h32 = jax.random.normal(ks[0], (B, L, d), jnp.float32)
+    ws32 = [jax.random.normal(ks[1 + i], (d, d), jnp.float32) * d ** -0.5
+            for i in range(4)]
+    mask = jnp.ones((B, L), jnp.float32)
+    use_pallas = ops._on_tpu()     # CPU times the jnp ref under jit
+
+    for rmode, nrows in (("rows", L), ("cls", 1)):
+        per_prec = {}
+        for prec, h, ws in (("f32", h32, ws32),
+                            ("bf16", h32.astype(jnp.bfloat16),
+                             [w.astype(jnp.bfloat16) for w in ws32])):
+            fn = lambda hh, *www: ops.encoder_block(
+                hh, *www, mask, num_heads=nh, rows=nrows,
+                use_pallas=use_pallas)
+            us = _time(fn, h, *ws, reps=reps)
+            # qkv+out projections + the two per-head contractions
+            flops = (2.0 * B * (nrows + 2 * L + nrows) * d * d
+                     + 4.0 * B * nh * nrows * L * (d // nh))
+            itemsize = 2.0 if prec == "bf16" else 4.0
+            bytes_ = itemsize * (h.size + 4 * d * d + B * nrows * d)
+            name = f"kernel/encoder_block_{rmode}_{prec}/B{B}L{L}d{d}"
+            rows.append((name, us, flops / bytes_))
+            per_prec[prec] = us
+            results[f"encoder_block_{rmode}_{prec}"] = {
+                "us_per_call": us, "B": B, "L": L, "d": d,
+                "num_heads": nh, "rows": nrows}
+        results[f"encoder_block_{rmode}_bf16"]["speedup_vs_f32"] = \
+            per_prec["f32"] / per_prec["bf16"]
+        rows.append((f"kernel/encoder_block_{rmode}_bf16_speedup_x",
+                     0.0, per_prec["f32"] / per_prec["bf16"]))
+    return rows
+
+
+def run(smoke: bool = False, quick: bool = False
+        ) -> List[Tuple[str, float, float]]:
+    rows: List[Tuple[str, float, float]] = []
+    reps = 3 if quick else 5
     key = jax.random.key(0)
     ks = jax.random.split(key, 4)
 
@@ -39,7 +95,7 @@ def run(smoke: bool = False) -> List[Tuple[str, float, float]]:
     k = jax.random.normal(ks[1], (B, KV, L, dk), jnp.bfloat16)
     v = jax.random.normal(ks[2], (B, KV, L, dk), jnp.bfloat16)
     f = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v))
-    us = _time(f, q, k, v)
+    us = _time(f, q, k, v, reps=reps)
     flops = 4.0 * B * H * L * L * dk
     bytes_ = 2.0 * (q.size + k.size + v.size + q.size)
     rows.append((f"kernel/flash_attention/B{B}H{H}L{L}", us, flops / bytes_))
@@ -51,7 +107,7 @@ def run(smoke: bool = False) -> List[Tuple[str, float, float]]:
     vc = jax.random.normal(ks[2], (B, KV, S, dk), jnp.bfloat16)
     vl = jnp.full((B,), S, jnp.int32)
     fd = jax.jit(lambda q, k, v, l: ref.decode_attention_ref(q, k, v, l))
-    us = _time(fd, qd, kc, vc, vl)
+    us = _time(fd, qd, kc, vc, vl, reps=reps)
     flops = 4.0 * B * H * S * dk
     bytes_ = 2.0 * (kc.size + vc.size)
     rows.append((f"kernel/decode_attention/B{B}H{H}S{S}", us, flops / bytes_))
@@ -61,7 +117,7 @@ def run(smoke: bool = False) -> List[Tuple[str, float, float]]:
     alpha = jax.random.normal(ks[0], (I, D))
     a_inv = jnp.eye(D) * 2.0
     fo = jax.jit(ref.doptimal_score_ref)
-    us = _time(fo, alpha, a_inv)
+    us = _time(fo, alpha, a_inv, reps=reps)
     flops = 2.0 * I * D * D + 2.0 * I * D
     bytes_ = 4.0 * (alpha.size * 2 + a_inv.size)
     rows.append((f"kernel/doptimal/I{I}D{D}", us, flops / bytes_))
@@ -73,10 +129,32 @@ def run(smoke: bool = False) -> List[Tuple[str, float, float]]:
     b = jax.random.normal(ks[2], (I2, 20))
     y = (jax.random.uniform(ks[3], (U, I2)) < 0.5).astype(jnp.float32)
     fi = jax.jit(lambda t, a, bb, yy: ref.irt_2pl_ref(t, a, bb, yy))
-    us = _time(fi, theta, al, b, y)
+    us = _time(fi, theta, al, b, y, reps=reps)
     flops = 2.0 * U * I2 * 20 + 10.0 * U * I2
     bytes_ = 4.0 * (U * 20 + I2 * 40 + U * I2 * 4)
     rows.append((f"kernel/irt_2pl/U{U}I{I2}", us, flops / bytes_))
+
+    # encoder block (ISSUE 5) + BENCH_kernels.json artifact
+    results: dict = {}
+    rows.extend(_encoder_block_rows(smoke, reps, results))
+    artifact = {
+        "workload": {"backend": jax.default_backend(),
+                     "timed_path": ("pallas" if ops._on_tpu()
+                                    else "jnp_ref_jit"),
+                     "reps": reps, "smoke": smoke},
+        "results": results,
+    }
+    path = os.environ.get("BENCH_KERNELS_JSON", "BENCH_kernels.json")
+    # workload_keys guard: smoke and full mode time DIFFERENT shapes
+    # under the same row names — a cross-mode comparison would report a
+    # phantom ~20× "regression"/"speedup" in the CI artifact
+    from benchmarks.common import carry_previous
+
+    carry_previous(path, artifact, "us_per_call",
+                   carry=("us_per_call", "speedup_vs_f32"),
+                   workload_keys=("backend", "smoke", "timed_path"))
+    with open(path, "w") as f:
+        json.dump(artifact, f, indent=2)
     return rows
 
 

@@ -22,16 +22,20 @@ routing, measuring
                          measured on an identically-configured un-warmed
                          engine; ``stall_removed_x`` is their ratio);
   * ``cold_reopen`` / ``warm_reopen`` — the persistent-compile-cache
-                         tentpole (ISSUE 4): the router is saved to an
-                         artifact dir and ``Router.open(dir, warmup=Q,
+                         tentpole (ISSUE 4), upgraded by the ISSUE-5
+                         AOT export: the router is saved to an artifact
+                         dir and ``Router.open(dir, warmup=Q,
                          compile_cache=True)`` runs in TWO fresh
-                         subprocesses.  The first (cold) compiles every
-                         bucket program and persists them under
-                         ``<dir>/xla_cache``; the second (warm) loads
-                         them from disk — ``speedup_vs_cold_x`` is the
-                         restart-survival factor the ROADMAP's
-                         "persist the XLA compilation cache" item asked
-                         for.
+                         subprocesses.  The first (cold) traces, exports
+                         (``jax.export`` → ``<dir>/xla_cache/exported``)
+                         and compiles every bucket program, persisting
+                         the executables under ``<dir>/xla_cache``; the
+                         second (warm) deserializes the exported
+                         programs and the compiled executables — no
+                         per-shape Python tracing, which was the ~0.25
+                         s/shape residual the ISSUE-4 warm reopen still
+                         paid — ``speedup_vs_cold_x`` is the
+                         restart-survival factor.
 
 The tensorized ``ModelPool`` makes the mutation path cheap: the engine
 consumes ``pool.snapshot()`` directly (the canonical tensors), so there
@@ -50,7 +54,8 @@ import os
 import time
 from typing import List, Tuple
 
-from benchmarks.common import SMALL_POOL, build_bench, onboard_pool
+from benchmarks.common import (SMALL_POOL, build_bench, carry_previous,
+                               onboard_pool)
 
 Q = 128
 CYCLES = 8
@@ -195,6 +200,11 @@ def run(smoke: bool = False, quick: bool = False
         "results": results,
     }
     path = os.environ.get("BENCH_ONBOARDING_JSON", "BENCH_onboarding.json")
+    # carry every previous row + per-row speedup_vs_previous, mirroring
+    # BENCH_serving.json — the warm_reopen trajectory (tracing warmup →
+    # persistent XLA cache → AOT-exported dispatch) reads off one file
+    carry_previous(path, artifact, "us_per_call",
+                   workload_keys=("Q", "M", "backend"))
     with open(path, "w") as f:
         json.dump(artifact, f, indent=2)
 

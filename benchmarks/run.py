@@ -26,6 +26,12 @@ def main(argv=None) -> None:
         ap.error("--full and --smoke are mutually exclusive")
     smoke = not args.full
 
+    # before any jax computation: let bf16 matmuls (the serving precision
+    # tiers) use the host's AMX tiles instead of f32-convert emulation
+    from repro.compat import enable_amx_bf16
+
+    enable_amx_bf16()
+
     from benchmarks import (
         constrained_routing,
         fig3a_evolving_pool,

@@ -6,7 +6,24 @@ Measures steady-state routed queries/sec (jit warmup excluded) for:
                           seed's ``ZeroRouter.route``): per-model×query
                           tokenization loops + eager predictor forward;
   * ``engine_nocache``  — ``RouterEngine.route_batch`` with the latent
-                          cache disabled (pure batched/jitted speedup);
+                          cache disabled, at the SERVING tier
+                          (``precision="bf16_recheck"``: bf16 bulk
+                          scoring + margin-triggered fp32 re-check,
+                          with the bulk dtype resolved per backend —
+                          bf16 on TPU's MXU, f32 on this CPU container
+                          where XLA lowers bf16 dots through f32
+                          converts at a measured 1.1–1.3× SLOWDOWN;
+                          selections asserted identical to ``seed``;
+                          the resolved bulk dtype and re-checked
+                          fraction land in the JSON);
+  * ``engine_nocache_bf16`` — the same tier with the bf16 bulk pass
+                          FORCED on (what a TPU engine runs, minus the
+                          MXU): quantifies the bulk+re-check machinery
+                          cost on this backend, selections still
+                          asserted identical to ``seed``;
+  * ``engine_nocache_f32`` — the explicit full-f32 tier (the
+                          pre-ISSUE-5 configuration), the same-file
+                          baseline for both rows above;
   * ``engine_cached``   — warm LRU latent cache (repeat traffic);
   * ``microbatcher``    — 1-at-a-time submission coalesced by the
                           scheduler (threaded end-to-end path);
@@ -29,9 +46,11 @@ seed and ``serving/service_transport_overhead_x`` (service_tcp time over
 microbatcher time; the ISSUE-3 acceptance bound is ≤ 2×).  Also writes a
 ``BENCH_serving.json`` artifact (path overridable via
 ``BENCH_SERVING_JSON``) so the perf trajectory is tracked across PRs;
-the previous artifact's engine timings are embedded under ``previous``
-so a single file shows the delta.  ``quick=True`` (the ``--smoke`` CI
-path) drops to 3 interleaved reps.
+EVERY row of the previous artifact is embedded under ``previous`` and
+every current row carries ``speedup_vs_previous`` (prior runs only
+carried the engine rows, so new rows like ``ingest_cold`` dropped out of
+the delta comparison).  ``quick=True`` (the ``--smoke`` CI path) drops
+to 3 interleaved reps.
 """
 from __future__ import annotations
 
@@ -40,7 +59,8 @@ import os
 import time
 from typing import List, Tuple
 
-from benchmarks.common import LARGE_POOL, SMALL_POOL, build_bench, onboard_pool
+from benchmarks.common import (LARGE_POOL, SMALL_POOL, build_bench,
+                               carry_previous, onboard_pool)
 
 Q = 256
 M = 8
@@ -90,17 +110,32 @@ def run(smoke: bool = False, quick: bool = False
         rows.append((f"serving/{name}/Q{Q}M{M}", sec_per_batch * 1e6, qps))
 
     router = bench.router
-    sel_seed, sel_eng = [None], [None]
+    sel_seed, sel_eng, sel_eng16, sel_eng32 = [None], [None], [None], [None]
 
     def seed_call():
         # reference path: per-model×query tokenization + eager predictor
         # (numerically identical to the seed's ZeroRouter.route)
         _, sel_seed[0], _ = router.route(texts, policy="balanced")
 
-    eng_nc = RouterEngine(router, RouterEngineConfig(cache_size=0))
+    # the serving tier: bf16 bulk + fp32 re-check with the bulk dtype
+    # resolved per backend; selections identical to the reference path
+    # (asserted below, every run)
+    eng_nc = RouterEngine(router, RouterEngineConfig(
+        cache_size=0, precision="bf16_recheck"))
 
     def engine_call():
         _, sel_eng[0] = eng_nc.route_batch(texts, policy="balanced")
+
+    eng_nc16 = RouterEngine(router, RouterEngineConfig(
+        cache_size=0, precision="bf16_recheck", bf16_bulk=True))
+
+    def engine_bf16_call():
+        _, sel_eng16[0] = eng_nc16.route_batch(texts, policy="balanced")
+
+    eng_nc32 = RouterEngine(router, RouterEngineConfig(cache_size=0))
+
+    def engine_f32_call():
+        _, sel_eng32[0] = eng_nc32.route_batch(texts, policy="balanced")
 
     eng_c = RouterEngine(router, RouterEngineConfig(cache_size=4 * Q))
 
@@ -158,6 +193,8 @@ def run(smoke: bool = False, quick: bool = False
         timings = _time_interleaved({
             "seed": seed_call,
             "engine_nocache": engine_call,
+            "engine_nocache_bf16": engine_bf16_call,
+            "engine_nocache_f32": engine_f32_call,
             "engine_cached": cached_call,
             "microbatcher": batcher_call,
             "service_tcp": service_call,
@@ -168,11 +205,29 @@ def run(smoke: bool = False, quick: bool = False
         client.close()
         srv.__exit__(None, None, None)
     assert np.array_equal(np.asarray(sel_seed[0]), sel_eng[0]), \
-        "engine selections diverged from seed"
-    variants = ("seed", "engine_nocache", "engine_cached", "microbatcher",
+        "bf16_recheck engine selections diverged from seed"
+    assert np.array_equal(np.asarray(sel_seed[0]), sel_eng16[0]), \
+        "forced-bf16 re-check engine selections diverged from seed"
+    assert np.array_equal(np.asarray(sel_seed[0]), sel_eng32[0]), \
+        "f32 engine selections diverged from seed"
+    variants = ("seed", "engine_nocache", "engine_nocache_bf16",
+                "engine_nocache_f32", "engine_cached", "microbatcher",
                 "service_tcp", "service_tcp_pipelined", "ingest_cold")
     for name in variants:
         _row(name, timings[name])
+    results["engine_nocache"]["precision"] = "bf16_recheck"
+    results["engine_nocache"]["bulk_dtype"] = (
+        "bf16" if eng_nc._bf16_bulk() else "f32")
+    results["engine_nocache"]["recheck_fraction"] = \
+        eng_nc.last_recheck_fraction
+    results["engine_nocache_bf16"]["precision"] = "bf16_recheck"
+    results["engine_nocache_bf16"]["bulk_dtype"] = "bf16"
+    results["engine_nocache_bf16"]["recheck_fraction"] = \
+        eng_nc16.last_recheck_fraction
+    for name in ("engine_nocache", "engine_nocache_bf16"):
+        results[name]["speedup_vs_f32_tier"] = (
+            results["engine_nocache_f32"]["us_per_batch"]
+            / results[name]["us_per_batch"])
 
     for name in variants[1:]:
         speedup = (results["seed"]["us_per_batch"]
@@ -190,19 +245,14 @@ def run(smoke: bool = False, quick: bool = False
         "results": results,
     }
     path = os.environ.get("BENCH_SERVING_JSON", "BENCH_serving.json")
-    # carry the previous run's engine timings forward so one artifact
-    # shows the delta (absolute times are machine-dependent; the
-    # speedup_vs_seed column is the machine-normalized comparison)
-    try:
-        with open(path) as f:
-            prev = json.load(f)["results"]
-        artifact["previous"] = {
-            k: {m: prev[k][m] for m in ("us_per_batch", "speedup_vs_seed")
-                if m in prev[k]}
-            for k in ("seed", "engine_nocache", "engine_cached")
-            if k in prev}
-    except (OSError, ValueError, KeyError):
-        pass
+    # carry EVERY row of the previous run forward (not just the engine
+    # rows — new rows like ingest_cold used to drop out of the delta
+    # comparison) and stamp each current row with speedup_vs_previous;
+    # absolute times are machine-dependent, the speedup columns are the
+    # machine-normalized comparison
+    carry_previous(path, artifact, "us_per_batch",
+                   carry=("us_per_batch", "speedup_vs_seed"),
+                   workload_keys=("Q", "M", "backend"))
     with open(path, "w") as f:
         json.dump(artifact, f, indent=2)
 

@@ -433,7 +433,9 @@ class Router:
     def open(cls, path: str,
              cfg: Optional[RouterConfig] = None,
              warmup: Union[bool, int] = False,
-             compile_cache: Union[bool, str, None] = None) -> "Router":
+             compile_cache: Union[bool, str, None] = None,
+             aot_export: Union[bool, str, None] = None,
+             precision: str = "f32") -> "Router":
         """Bring up a ready-to-route router from :meth:`save` output —
         milliseconds of IO, zero training.
 
@@ -461,7 +463,27 @@ class Router:
         ratio).  ``None`` (default) enables it exactly when ``warmup`` is
         requested; ``False`` leaves the process-global jax cache config
         untouched.  The directory chosen lands in
-        ``router.calibration['compile_cache_dir']``."""
+        ``router.calibration['compile_cache_dir']``.
+
+        ``aot_export`` persists the engine's jitted scoring PROGRAMS via
+        ``jax.export`` under ``<path>/xla_cache/exported`` (or the
+        directory you pass).  The XLA cache elides compilation but not
+        the per-shape Python tracing a reopen still pays; with a
+        populated export store, warmup deserializes each padded-bucket
+        program and wires it straight into the engine's dispatch — a
+        warm reopen re-traces nothing (``BENCH_onboarding.json``'s
+        ``warm_reopen`` row is the trajectory).  ``None`` (default)
+        enables it exactly when the compile cache is enabled; ``False``
+        disables.  The directory lands in
+        ``router.calibration['aot_export_dir']``.
+
+        ``precision`` selects the serving engine's scoring tier
+        (``RouterEngineConfig.precision``: ``"f32"``, ``"bf16_recheck"``
+        — bf16 bulk scoring with an fp32 re-check that keeps selections
+        identical to ``Router.route`` — or ``"bf16"``).  It configures
+        the CACHED default engine, so warmup pre-compiles (and exports)
+        the tier's programs and every later ``engine()`` / ``serve()``
+        call serves at that tier."""
         import json
 
         # load BEFORE touching the compile cache: enabling it creates
@@ -492,9 +514,27 @@ class Router:
         router = cls(artifacts=art, pool=pool, cfg=cfg)
         if cache_dir is not None:
             router.calibration["compile_cache_dir"] = cache_dir
+        if aot_export is None:
+            aot_export = cache_dir is not None
+        export_dir = None
+        if aot_export:
+            from repro.serving.cache import exported_program_dir
+
+            export_dir = (aot_export if isinstance(aot_export, str)
+                          else exported_program_dir(path))
+            router.calibration["aot_export_dir"] = export_dir
+        if precision != "f32" and art.has_predictor:
+            # seed the cached default engine with the tier so warmup —
+            # and every later engine()/serve() — runs that tier's stack
+            # (an uncalibrated artifact opens fine without an engine,
+            # same as the warmup guard below)
+            from repro.serving.engine import RouterEngine, RouterEngineConfig
+
+            router._engine = RouterEngine(
+                router, RouterEngineConfig(precision=precision))
         if warmup and art.has_predictor and len(router.pool) > 0:
             max_q = warmup if isinstance(warmup, int) \
                 and not isinstance(warmup, bool) else 1
             router.calibration["warmup_s"] = router.engine().warmup(
-                max_queries=max_q)
+                max_queries=max_q, exports=export_dir)
         return router

@@ -20,6 +20,38 @@ except AttributeError:  # jax 0.4.x: experimental, takes check_rep
     _NATIVE = False
 
 
+def enable_amx_bf16() -> bool:
+    """Lift XLA:CPU's ISA cap to AMX when the host supports AMX-BF16.
+
+    The pinned jaxlib caps oneDNN below AMX by default, so bfloat16
+    matmuls (the serving precision tiers) emulate through f32 converts
+    instead of using the 16×-wider AMX tiles this container's CPU
+    exposes (``amx_bf16`` in /proc/cpuinfo).  Appending
+    ``--xla_cpu_max_isa=AMX`` to ``XLA_FLAGS`` lifts the cap; float32
+    codegen is unchanged (AMX has no f32 path — the engine's f32-tier
+    numerics and every bit-exactness contract are unaffected).
+
+    Must run BEFORE the first jax computation initializes the CPU
+    backend — ``benchmarks.run`` and ``launch/serve.py`` call it at
+    process start.  Returns True when the flag was (already) applied;
+    False when the host has no AMX-BF16 or XLA_FLAGS already pins an
+    ISA cap.  No-op on non-Linux hosts and non-CPU backends.
+    """
+    import os
+
+    cur = os.environ.get("XLA_FLAGS", "")
+    if "xla_cpu_max_isa" in cur:
+        return "xla_cpu_max_isa=AMX" in cur
+    try:
+        with open("/proc/cpuinfo") as f:
+            if "amx_bf16" not in f.read():
+                return False
+    except OSError:
+        return False
+    os.environ["XLA_FLAGS"] = (cur + " --xla_cpu_max_isa=AMX").strip()
+    return True
+
+
 def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True,
               **kwargs: Any):
     """``jax.shard_map`` facade working on both old and new jax."""

@@ -20,7 +20,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.layers import normal_init, rms_norm
+from repro.kernels import ops
+from repro.models.layers import matmul_f32acc, normal_init, rms_norm
 from repro.optim import AdamConfig, adam_update, init_adam_state
 
 PyTree = Any
@@ -82,7 +83,7 @@ def init_encoder_params(key, cfg: PredictorConfig) -> PyTree:
 
 
 def encode(params: PyTree, ids: jax.Array, mask: jax.Array,
-           cfg: PredictorConfig) -> jax.Array:
+           cfg: PredictorConfig, *, use_pallas: bool = False) -> jax.Array:
     """ids: (B, L) int32; mask: (B, L) 1/0. Returns CLS embedding (B, d).
 
     Only the [CLS] position of the final layer is ever consumed, so the
@@ -92,25 +93,29 @@ def encode(params: PyTree, ids: jax.Array, mask: jax.Array,
     of total encoder FLOPs at typical L) are skipped.  The math is
     unchanged — identical ops on the CLS row — and training pools at
     [CLS] too, so the same function serves both paths.
+
+    The compute dtype is the PARAMS' dtype: float32 params reproduce the
+    original path elementwise-exactly; bfloat16 params (cast once at
+    engine upload — the serving precision tiers) run every matmul with
+    float32 accumulation and keep the masked softmax and rms_norm
+    statistics in float32, so only the stored activations/weights drop
+    precision.  The attention sub-block dispatches through
+    ``repro.kernels.ops.encoder_block`` — the fused Pallas kernel on TPU
+    (``use_pallas=True``), the identical-math einsum reference elsewhere.
     """
     B, L = ids.shape
-    nh = cfg.num_heads
-    hd = cfg.d_model // nh
     x = params["tok_emb"][ids] + params["pos_emb"][:L][None]
-    bias = jnp.where(mask[:, None, None, :] > 0, 0.0, -1e30)
+    mm = matmul_f32acc
 
     def attn_ffn(x, h, p, rows):
         """One block over the first ``rows`` positions of the residual
         stream (keys/values always span all L positions of ``h``)."""
-        q = (h[:, :rows] @ p["wq"]).reshape(B, rows, nh, hd)
-        k = (h @ p["wk"]).reshape(B, L, nh, hd)
-        v = (h @ p["wv"]).reshape(B, L, nh, hd)
-        s = jnp.einsum("blhd,bmhd->bhlm", q, k) * hd ** -0.5 + bias
-        a = jax.nn.softmax(s, axis=-1)
-        o = jnp.einsum("bhlm,bmhd->blhd", a, v).reshape(B, rows, cfg.d_model)
-        x = x[:, :rows] + o @ p["wo"]
+        o = ops.encoder_block(h, p["wq"], p["wk"], p["wv"], p["wo"], mask,
+                              num_heads=cfg.num_heads, rows=rows,
+                              use_pallas=use_pallas)
+        x = x[:, :rows] + o
         h = rms_norm(x, p["ln2"])
-        return x + jax.nn.gelu(h @ p["w1"]) @ p["w2"]
+        return x + mm(jax.nn.gelu(mm(h, p["w1"])), p["w2"])
 
     def layer(x, p):
         return attn_ffn(x, rms_norm(x, p["ln1"]), p, L), None
@@ -172,24 +177,37 @@ def init_head_params(key, cfg: PredictorConfig,
 
 def apply_heads(p: PyTree, e_se: jax.Array, e_st: jax.Array,
                 clusters: List[np.ndarray], D: int) -> Tuple[jax.Array, jax.Array]:
-    """Returns (alpha_hat (B, D), b_hat (B, D))."""
-    se = e_se @ p["w_se"] + e_se                       # residual projections
-    st = e_st @ p["w_st"] + p["b_st"]
-    h = jnp.concatenate([se, st], axis=-1)
-    h = jax.nn.gelu(h @ p["fuse1"])
-    h = jax.nn.gelu(h @ p["fuse2"])                    # h_shared
+    """Returns (alpha_hat (B, D), b_hat (B, D)), always float32.
 
-    db = jax.nn.gelu(h @ p["diff1"]) @ p["diff2"]
+    Computes in the PARAMS' dtype (float32 = the original path exactly;
+    bfloat16 = the serving precision tiers, matmuls f32-accumulated) and
+    casts the latent outputs up to float32 — everything downstream
+    (``predict_accuracy``, the difficulty reduction, the cost tables)
+    stays in full precision whatever the encoder tier was."""
+    dt = p["w_se"].dtype
+    mm = matmul_f32acc
+
+    se = mm(e_se, p["w_se"]) + e_se                    # residual projections
+    st = mm(e_st.astype(dt), p["w_st"]) + p["b_st"]
+    h = jnp.concatenate([se, st], axis=-1)
+    h = jax.nn.gelu(mm(h, p["fuse1"]))
+    h = jax.nn.gelu(mm(h, p["fuse2"]))                 # h_shared
+
+    db = mm(jax.nn.gelu(mm(h, p["diff1"])), p["diff2"])
     b_hat = p["b_mean"][None, :] + db                  # Eq. 15
 
-    B = h.shape[0]
-    alpha_hat = jnp.zeros((B, D))
-    for c, dims in enumerate(clusters):
-        out = jax.nn.gelu(h @ p[f"disc{c}_1"]) @ p[f"disc{c}_2"]
-        alpha_hat = alpha_hat.at[:, jnp.asarray(dims)].set(out)   # Eq. 16 ⊕
+    # Eq. 16 ⊕: per-cluster expert outputs, concatenated in cluster order
+    # and re-ordered to latent-dim order by ONE static permutation gather
+    # (the per-cluster ``.at[:, dims].set`` scatter loop this replaces
+    # cost C scatter kernels for bit-identical output)
+    out = jnp.concatenate(
+        [mm(jax.nn.gelu(mm(h, p[f"disc{c}_1"])), p[f"disc{c}_2"])
+         for c in range(len(clusters))], axis=-1)
+    perm = np.argsort(np.concatenate(clusters))        # static at trace time
     # discrimination is non-negative in the 2PL parameterization we calibrate
-    alpha_hat = jax.nn.softplus(alpha_hat)
-    return alpha_hat, b_hat
+    alpha_hat = jax.nn.softplus(out[:, perm])
+    return (alpha_hat.astype(jnp.float32),
+            jnp.asarray(b_hat, jnp.float32))
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,100 @@
+"""Pallas TPU kernel for the predictor-encoder attention block.
+
+The serving cold path is compute-bound in ``core.predictor.encode``: per
+layer, the einsum path materializes q/k/v projections, the (B, H, L, L)
+score tensor, the softmax weights and the attention output as separate
+HBM-resident tensors — five HBM round trips per block for tensors that
+are tiny per sequence (L ≤ 128, d ≤ 768) but hot, since every cache-miss
+query pays every layer.  This kernel fuses the whole attention sub-block
+(qkv projection → masked softmax → output projection) per sequence: one
+grid step streams one sequence's residual stream plus the four weight
+matrices through VMEM and writes only the projected attention output.
+
+Layout choices, sized for the predictor shapes (B ≤ 64 rows per padded
+bucket, L ≤ 128, d ∈ {192, 256, 768}):
+
+  * grid = (B,): one program per sequence — blocks stay far under VMEM
+    (the largest resident tensor is a (d, d) weight tile, shared across
+    grid steps) and the per-head score tile (rows, L) is register/VMEM
+    local, never written out;
+  * heads are unrolled statically (num_heads ≤ 12): each head is a pair
+    of MXU contractions around a VPU softmax, with the contraction axes
+    expressed through ``dot_general`` dimension numbers so no transpose
+    is materialized;
+  * the CLS-only final layer (``rows=1``) reuses the same kernel — the q
+    projection and both per-head contractions shrink to one query row
+    while keys/values still span the full sequence.
+
+Precision contract (shared with ``ref.encoder_block_ref``, the allclose
+oracle and the non-TPU path): MXU accumulation and the masked softmax run
+in float32 whatever the activation dtype; intermediates are cast back to
+the activation dtype between ops.  float32 in → elementwise-exactly the
+einsum path; bfloat16 in → the tiered-scoring variant (~half the
+bandwidth/FLOP cost on MXU-class hardware).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _encoder_block_kernel(h_ref, wq_ref, wk_ref, wv_ref, wo_ref, mask_ref,
+                          o_ref, *, num_heads: int, rows: int):
+    """One sequence: o = softmax(mask(q kᵀ)) v @ wo, heads unrolled."""
+    f32 = jnp.float32
+    h = h_ref[0]                                   # (L, d) activation dtype
+    dt = h.dtype
+    d = h.shape[-1]
+    hd = d // num_heads
+
+    def mm(a, w):
+        # the dot_general spelling of models.layers.matmul_f32acc — the
+        # tiers' shared f32-accumulation contract, expressed without the
+        # transposes jnp.matmul could materialize inside Mosaic
+        return jax.lax.dot_general(
+            a, w, (((a.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=f32).astype(dt)
+
+    q = mm(h[:rows], wq_ref[...])                  # (rows, d)
+    k = mm(h, wk_ref[...])                         # (L, d)
+    v = mm(h, wv_ref[...])
+    bias = jnp.where(mask_ref[0] > 0, 0.0, -1e30).astype(f32)  # (L,)
+    scale = hd ** -0.5
+    outs = []
+    for head in range(num_heads):                  # static unroll
+        sl = slice(head * hd, (head + 1) * hd)
+        s = jax.lax.dot_general(                   # (rows, L), contract hd
+            q[:, sl], k[:, sl], (((1,), (1,)), ((), ())),
+            preferred_element_type=f32) * scale + bias[None, :]
+        a = jax.nn.softmax(s, axis=-1).astype(dt)
+        outs.append(jax.lax.dot_general(           # (rows, hd), contract L
+            a, v[:, sl], (((1,), (0,)), ((), ())),
+            preferred_element_type=f32).astype(dt))
+    o_ref[0] = mm(jnp.concatenate(outs, axis=-1), wo_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("num_heads", "rows",
+                                             "interpret"))
+def encoder_block_tpu(h, wq, wk, wv, wo, mask, *, num_heads: int,
+                      rows: int, interpret: bool = False):
+    """h: (B, L, d); wq/wk/wv/wo: (d, d); mask: (B, L).  → (B, rows, d)."""
+    B, L, d = h.shape
+    return pl.pallas_call(
+        functools.partial(_encoder_block_kernel, num_heads=num_heads,
+                          rows=rows),
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, L, d), lambda b: (b, 0, 0)),
+            pl.BlockSpec((d, d), lambda b: (0, 0)),
+            pl.BlockSpec((d, d), lambda b: (0, 0)),
+            pl.BlockSpec((d, d), lambda b: (0, 0)),
+            pl.BlockSpec((d, d), lambda b: (0, 0)),
+            pl.BlockSpec((1, L), lambda b: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, rows, d), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, rows, d), h.dtype),
+        interpret=interpret,
+    )(h, wq, wk, wv, wo, mask)

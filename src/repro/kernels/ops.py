@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention_tpu
 from repro.kernels.doptimal import doptimal_score_tpu
+from repro.kernels.encoder_block import encoder_block_tpu
 from repro.kernels.flash_attention import flash_attention_tpu
 from repro.kernels.irt2pl import irt_2pl_tpu
 from repro.kernels.routing import routing_argmax_tpu
@@ -41,6 +42,22 @@ def decode_attention(q, k_cache, v_cache, valid_len, *, use_pallas: bool = True)
         return ref.decode_attention_ref(q, k_cache, v_cache, valid_len)
     return decode_attention_tpu(q, k_cache, v_cache, valid_len,
                                 interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("num_heads", "rows", "use_pallas"))
+def encoder_block(h, wq, wk, wv, wo, mask, *, num_heads: int, rows: int,
+                  use_pallas: bool = True):
+    """Fused encoder attention block → (B, rows, d); see encoder_block.py.
+
+    ``use_pallas=False`` (the default inside ``core.predictor.encode`` off
+    TPU) is the einsum reference — elementwise-exactly the pre-kernel
+    path at float32, the f32-accumulated bfloat16 variant otherwise."""
+    if not use_pallas:
+        return ref.encoder_block_ref(h, wq, wk, wv, wo, mask,
+                                     num_heads=num_heads, rows=rows)
+    return encoder_block_tpu(h, wq, wk, wv, wo, mask, num_heads=num_heads,
+                             rows=rows, interpret=not _on_tpu())
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas",))

@@ -4,6 +4,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.models.layers import matmul_f32acc
+
 
 def flash_attention_ref(q, k, v, *, causal: bool = True, scale=None):
     """q: (B, H, L, dk); k/v: (B, KV, S, d*); GQA via H = KV * G.
@@ -38,6 +40,41 @@ def decode_attention_ref(q, k_cache, v_cache, valid_len, *, scale=None):
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgs,bksd->bkgd", p, v_cache.astype(jnp.float32))
     return o.reshape(B, H, -1).astype(q.dtype)
+
+
+def encoder_block_ref(h, wq, wk, wv, wo, mask, *, num_heads: int,
+                      rows: int):
+    """Fused predictor-encoder attention block (qkv projection → masked
+    softmax → output projection) over the first ``rows`` query positions.
+
+    h: (B, L, d) normalized residual stream (keys/values span all L
+    positions); wq/wk/wv/wo: (d, d); mask: (B, L) 1/0 key validity.
+    Returns the attention output AFTER the output projection, (B, rows, d)
+    — the residual add and the FFN stay with the caller.
+
+    Precision contract: matmul accumulation and the masked softmax run in
+    float32 regardless of the activation dtype; intermediates are cast
+    back to ``h.dtype`` between ops.  For float32 inputs this is
+    elementwise-exactly the einsum path ``core.predictor.encode`` shipped
+    before the kernel existed (the f32 casts are no-ops); for bfloat16 it
+    is the scoring tier's reduced-bandwidth variant.
+    """
+    B, L, d = h.shape
+    hd = d // num_heads
+    dt = h.dtype
+    f32 = jnp.float32
+    mm = matmul_f32acc
+
+    q = mm(h[:, :rows], wq).reshape(B, rows, num_heads, hd)
+    k = mm(h, wk).reshape(B, L, num_heads, hd)
+    v = mm(h, wv).reshape(B, L, num_heads, hd)
+    bias = jnp.where(mask[:, None, None, :] > 0, 0.0, -1e30).astype(f32)
+    s = jnp.einsum("blhd,bmhd->bhlm", q, k,
+                   preferred_element_type=f32) * hd ** -0.5 + bias
+    a = jax.nn.softmax(s, axis=-1).astype(dt)
+    o = jnp.einsum("bhlm,bmhd->blhd", a, v,
+                   preferred_element_type=f32).astype(dt)
+    return mm(o.reshape(B, rows, d), wo)
 
 
 def doptimal_score_ref(alpha, a_inv):

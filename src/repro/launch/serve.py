@@ -115,7 +115,8 @@ def build_demo_router(seed: int = 0):
 
 
 def build_demo_engine(seed: int = 0, cache_size: int = 4096,
-                      artifact_dir=None, compile_cache: bool = True):
+                      artifact_dir=None, compile_cache: bool = True,
+                      precision: str = "f32"):
     """Small-world router + engine used by route mode and the example.
 
     With ``artifact_dir``: open saved artifacts when present (ms startup),
@@ -162,7 +163,8 @@ def build_demo_engine(seed: int = 0, cache_size: int = 4096,
         if artifact_dir:
             router.save(artifact_dir)
             print(f"  saved router artifacts + pool to {artifact_dir}")
-    engine = RouterEngine(router, RouterEngineConfig(cache_size=cache_size))
+    engine = RouterEngine(router, RouterEngineConfig(cache_size=cache_size,
+                                                     precision=precision))
     return world, router, engine
 
 
@@ -202,11 +204,24 @@ def _route_main(args) -> None:
     t0 = time.time()
     world, router, engine = build_demo_engine(
         seed=args.seed, artifact_dir=args.artifact,
-        compile_cache=not args.no_compile_cache)
+        compile_cache=not args.no_compile_cache,
+        precision=args.precision)
     print(f"  router ready in {time.time() - t0:.2f}s")
     if args.warmup:
-        print(f"  engine warmup: {engine.warmup(max_queries=args.warmup):.2f}s"
-              f" (padded buckets pre-compiled up to Q={args.warmup})")
+        exports = None
+        if args.artifact and not args.no_compile_cache:
+            from repro.serving.cache import exported_program_dir
+
+            exports = exported_program_dir(args.artifact)
+        warmup_s = engine.warmup(max_queries=args.warmup, exports=exports)
+        st = engine.export_stats
+        via = ""
+        if st["loaded"]:        # the warm-reopen signal: store hits
+            via = f", {st['loaded']} AOT programs loaded from the store"
+        if st["exported"]:      # cold: traced + serialized this run
+            via += f", {st['exported']} programs exported for next open"
+        print(f"  engine warmup: {warmup_s:.2f}s"
+              f" (padded buckets pre-compiled up to Q={args.warmup}{via})")
 
     if args.listen:
         _listen_main(args, router, engine)
@@ -243,6 +258,9 @@ def _route_main(args) -> None:
 
 
 def main(argv=None):
+    from repro.compat import enable_amx_bf16
+
+    enable_amx_bf16()   # before the first computation: AMX for bf16 tiers
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", choices=("generate", "route"),
                     default="generate")
@@ -262,6 +280,11 @@ def main(argv=None):
                          "exists (ms startup, no retraining), else "
                          "calibrate once and save there")
     ap.add_argument("--policy", default="balanced")
+    ap.add_argument("--precision", default="f32",
+                    choices=("f32", "bf16_recheck", "bf16"),
+                    help="route: engine scoring tier — bf16_recheck "
+                         "scores in bfloat16 with an fp32 re-check that "
+                         "keeps selections identical to Router.route")
     ap.add_argument("--max-batch", type=int, default=64)
     ap.add_argument("--max-wait-ms", type=float, default=2.0)
     ap.add_argument("--listen", default=None, metavar="HOST:PORT",

@@ -9,6 +9,20 @@ def normal_init(key, shape, scale, dtype):
     return (scale * jax.random.normal(key, shape, dtype=jnp.float32)).astype(dtype)
 
 
+def matmul_f32acc(a, w):
+    """Matmul accumulated in float32, cast back to the activation dtype.
+
+    THE precision contract of the serving scoring tiers (one shared
+    implementation — ``core.predictor.encode``/``apply_heads`` and
+    ``kernels.ref.encoder_block_ref`` all route through it; the Pallas
+    kernel mirrors it with ``dot_general`` + ``preferred_element_type``):
+    float32 activations re-express a plain ``a @ w`` exactly, bfloat16
+    activations drop only storage precision — every reduction still
+    accumulates in f32, like :func:`rms_norm`'s statistics."""
+    return jnp.matmul(a, w, preferred_element_type=jnp.float32
+                      ).astype(a.dtype)
+
+
 def rms_norm(x, gamma, eps: float = 1e-6):
     """RMSNorm in float32, cast back to input dtype."""
     xf = x.astype(jnp.float32)

@@ -4,20 +4,26 @@ service plane in front of it.
 
 engine   — RouterEngine: padded-bucket jitted scoring + LRU latent cache,
            consuming ``ModelPool.snapshot()`` tensors directly;
-           ``warmup()`` pre-compiles the padded buckets
+           precision tiers (f32 / bf16+fp32-re-check / bf16);
+           ``warmup()`` pre-compiles the padded buckets and can stage
+           every program through ``jax.export`` for trace-free reopens
 batcher  — MicroBatcher: enqueue → coalesce (per-policy sub-batches) →
            route → fan back, with deadline shedding and timings
 cache    — LatentCache: per-query latents/features/token counts (LRU);
            enable_persistent_compile_cache: on-disk XLA compile cache
-           (``Router.open(dir, warmup=…)`` → ``<dir>/xla_cache``)
+           (``Router.open(dir, warmup=…)`` → ``<dir>/xla_cache``);
+           ExportedStore: AOT-exported engine programs
+           (``<dir>/xla_cache/exported``)
 service  — RouterService: asyncio submit/submit_many/stream, admin plane
            (live pool mutations with snapshot pinning), admission control
 protocol — length-prefixed JSONL wire format, asyncio TCP front-end,
            synchronous ServiceClient, BackgroundServer
 """
 from repro.serving.batcher import MicroBatcher, RouteResult
-from repro.serving.cache import (CacheEntry, CacheStats, LatentCache,
-                                 enable_persistent_compile_cache)
+from repro.serving.cache import (CacheEntry, CacheStats, ExportedStore,
+                                 LatentCache,
+                                 enable_persistent_compile_cache,
+                                 exported_program_dir)
 from repro.serving.engine import (BatchDecision, RouterEngine,
                                   RouterEngineConfig)
 from repro.serving.protocol import (BackgroundServer, ServiceClient,
@@ -27,8 +33,9 @@ from repro.serving.service import (AdminPlane, RouteRequest, RouteResponse,
 
 __all__ = [
     "AdminPlane", "BackgroundServer", "BatchDecision", "CacheEntry",
-    "CacheStats", "LatentCache", "MicroBatcher", "RouteRequest",
-    "enable_persistent_compile_cache",
+    "CacheStats", "ExportedStore", "LatentCache", "MicroBatcher",
+    "RouteRequest",
+    "enable_persistent_compile_cache", "exported_program_dir",
     "RouteResponse", "RouteResult", "RouterEngine", "RouterEngineConfig",
     "RouterService", "ServiceClient", "ServiceConfig", "start_server",
 ]

@@ -12,15 +12,23 @@ engine's pool-tensor snapshot is rebuilt.  Re-fitting the predictor
 (``ZeroRouter.fit_predictor``) must be followed by ``clear()``; the engine
 does this automatically via its predictor identity check.
 
-This module also hosts :func:`enable_persistent_compile_cache` — the
-process-level XLA compilation cache that makes ``RouterEngine.warmup``
-survive restarts (``Router.open(dir, warmup=…)`` points it at
-``<artifact dir>/xla_cache`` so the multi-second bucket pre-compilation
-is paid once per artifact directory, not once per process).
+This module also hosts the two persistence layers that make
+``RouterEngine.warmup`` survive restarts (``Router.open(dir, warmup=…)``
+wires both):
+
+* :func:`enable_persistent_compile_cache` — the process-level XLA
+  compilation cache at ``<artifact dir>/xla_cache``, so the bucket
+  pre-compilation is paid once per artifact directory, not per process;
+* :class:`ExportedStore` — ``jax.export``-serialized engine programs
+  under ``<artifact dir>/xla_cache/exported/``.  The XLA cache elides
+  compilation but NOT the ~0.25 s/shape of Python tracing each jitted
+  program still pays on reopen; a stored StableHLO program is
+  deserialized and called directly, so a warm reopen re-traces nothing.
 """
 from __future__ import annotations
 
 import dataclasses
+import json
 import os
 from collections import OrderedDict
 from typing import Dict, Optional
@@ -63,6 +71,11 @@ class CacheEntry:
     # arithmetic over it (no re-lex of the text).  Optional so synthetic
     # entries (tests) stay constructible positionally.
     tok_lens: Optional[np.ndarray] = None
+    # which scoring tier produced (a_hat, b_hat): "f32" entries serve any
+    # tier (full precision is always acceptable — the fp32 re-check
+    # upgrades borderline entries in place); "bf16" entries serve only
+    # the bf16 bulk pass and read as misses from an f32 consumer
+    precision: str = "f32"
 
 
 @dataclasses.dataclass
@@ -93,8 +106,16 @@ class LatentCache:
     def __contains__(self, text: str) -> bool:
         return text in self._data
 
-    def get(self, text: str) -> Optional[CacheEntry]:
+    def get(self, text: str,
+            precision: Optional[str] = None) -> Optional[CacheEntry]:
+        """``precision`` is the consumer's tier: an entry satisfies the
+        lookup when it is full-precision ("f32") or tier-matching; a
+        lower-tier entry reads as a miss (the consumer recomputes and
+        ``put`` overwrites it with the higher-precision result)."""
         entry = self._data.get(text)
+        if entry is not None and precision is not None \
+                and entry.precision not in ("f32", precision):
+            entry = None
         if entry is None:
             self.stats.misses += 1
             return None
@@ -112,3 +133,98 @@ class LatentCache:
 
     def clear(self) -> None:
         self._data.clear()
+
+
+MANIFEST_NAME = "manifest.json"
+
+
+def exported_program_dir(artifact_dir: str) -> str:
+    """Where ``Router.open(dir, warmup=…)`` keeps the AOT-exported engine
+    programs for an artifact directory (inside its xla_cache)."""
+    return os.path.join(artifact_dir, "xla_cache", "exported")
+
+
+class ExportedStore:
+    """Directory of ``jax.export``-serialized engine programs.
+
+    Layout: ``<dir>/manifest.json`` (fingerprint + name → file map) plus
+    one ``<name>.jaxexp`` StableHLO blob per (program, precision,
+    padded-bucket rung).  The fingerprint covers everything a program
+    closes over or specializes on that is NOT an argument — predictor
+    config, cluster layout, feature stats, jax version, backend — so a
+    re-calibrated artifact or an upgraded runtime silently invalidates
+    the store instead of serving stale constants.  Every load/save error
+    degrades to "not stored": the engine falls back to tracing, exactly
+    the pre-AOT behavior.
+    """
+
+    def __init__(self, path: str, fingerprint: str):
+        import threading
+
+        self.path = path
+        self.fingerprint = fingerprint
+        self._entries: Dict[str, str] = {}
+        self._lock = threading.Lock()   # warmup saves from a thread pool
+        os.makedirs(path, exist_ok=True)
+        stale = {}
+        try:
+            with open(os.path.join(path, MANIFEST_NAME)) as f:
+                rec = json.load(f)
+            import jax
+
+            if (rec.get("fingerprint") == fingerprint
+                    and rec.get("jax") == jax.__version__):
+                self._entries = dict(rec.get("entries", {}))
+            else:
+                stale = dict(rec.get("entries", {}))
+        except (OSError, ValueError):
+            pass
+        # a stale generation's blobs are unreachable forever (the new
+        # manifest will never reference them) — delete them instead of
+        # letting re-calibrations grow the artifact dir without bound
+        for fname in stale.values():
+            try:
+                os.unlink(os.path.join(path, str(fname)))
+            except OSError:
+                pass
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def load(self, name: str):
+        """Deserialized ``jax.export.Exported`` for ``name``, or None."""
+        fname = self._entries.get(name)
+        if fname is None:
+            return None
+        import jax
+        from jax import export as jax_export
+
+        try:
+            with open(os.path.join(self.path, fname), "rb") as f:
+                blob = f.read()
+            exported = jax_export.deserialize(blob)
+            if jax.default_backend() not in exported.platforms:
+                return None
+            return exported
+        except Exception:  # noqa: BLE001 — any corruption → re-export
+            return None
+
+    def save(self, name: str, exported) -> None:
+        import jax
+
+        fname = name + ".jaxexp"
+        tmp = os.path.join(self.path, fname + ".tmp")
+        try:
+            blob = exported.serialize()
+            with self._lock:
+                with open(tmp, "wb") as f:
+                    f.write(blob)
+                os.replace(tmp, os.path.join(self.path, fname))
+                self._entries[name] = fname
+                with open(os.path.join(self.path, MANIFEST_NAME),
+                          "w") as f:
+                    json.dump({"fingerprint": self.fingerprint,
+                               "jax": jax.__version__,
+                               "entries": self._entries}, f, indent=1)
+        except OSError:  # read-only artifact dir etc. — stay tracing
+            pass

@@ -56,24 +56,48 @@ Warm-start: XLA compiles one program per padded-bucket shape, so a cold
 engine pays a multi-second stall on its first request.
 :meth:`RouterEngine.warmup` (run by ``Router.open(dir, warmup=...)``)
 walks the reachable bucket rungs with zero-filled tensors at open time;
-``BENCH_onboarding.json`` tracks the stall it removes.
+``BENCH_onboarding.json`` tracks the stall it removes.  With an export
+directory (``Router.open`` wires ``<artifact>/xla_cache/exported``) the
+walked programs are additionally staged through ``jax.export``: a warm
+reopen deserializes the stored StableHLO per rung and dispatches through
+it directly — no per-shape Python tracing, which is what dominates
+reopen once the persistent XLA cache elides compilation.
 
-Numerical contract: the engine's (p, cost, lat) match ``Router.score`` to
-float32 resolution (the table / cost / latency stages are bit-for-bit;
-the jitted predictor forward differs from the eager one by ~1 ulp),
-scoring is bit-for-bit invariant to batch-size padding and batch
-composition (sequence buckets are pinned per query), and routing
-selections are identical (tested in tests/test_serving.py).
+Precision tiers (``RouterEngineConfig.precision``): the default ``f32``
+scores everything in float32; ``bf16_recheck`` runs the unconstrained
+hot path's encoder forward in bfloat16 (weights cast once at upload,
+matmul accumulation and softmax/rms_norm statistics kept in f32) and
+re-scores margin-uncertain queries at f32 so SELECTIONS stay identical
+to ``Router.route`` (see :meth:`RouterEngine._score_recheck` for the
+exactness argument) — with the bulk dtype resolved per backend
+(``RouterEngineConfig.bf16_bulk``: bf16 pays ~2× on TPU's MXU but
+measures SLOWER than f32 under XLA:CPU's convert-based bf16 lowering,
+so off-TPU the tier scores exactly at f32 unless forced); ``bf16``
+drops the re-check for maximum throughput at a measured
+(tests/test_precision.py) selection-agreement floor.
+
+Numerical contract: at the f32 tier the engine's (p, cost, lat) match
+``Router.score`` to float32 resolution (the table / cost / latency
+stages are bit-for-bit; the jitted predictor forward differs from the
+eager one by ~1 ulp), scoring is bit-for-bit invariant to batch-size
+padding and batch composition (sequence buckets are pinned per query),
+to AOT-exported vs traced dispatch (same lowerings), and routing
+selections are identical (tested in tests/test_serving.py).  Under
+``bf16_recheck`` the SELECTION guarantee carries over; the diagnostics
+paths (``score_queries``, ``route``, ``want_scores``) keep scoring at
+f32.
 """
 from __future__ import annotations
 
 import dataclasses
+import os
 import threading
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import export as jax_export
 
 from repro.core import ingest
 from repro.core.errors import EmptyPoolError, NotCalibratedError
@@ -95,6 +119,56 @@ class RouterEngineConfig:
     seq_multiple: int = 8         # sequence-length bucket granularity
     forward_chunk: int = 64       # queries per predictor-forward chunk
     use_pallas: Optional[bool] = None   # None → Pallas on TPU only
+    # Scoring precision tier (ISSUE 5):
+    #   "f32"          — full precision everywhere (the reference tier);
+    #   "bf16_recheck" — the serving hot path (route_batch/route_pinned,
+    #                    unconstrained) scores in bfloat16 and re-scores
+    #                    margin-uncertain queries at f32, keeping final
+    #                    SELECTIONS identical to Router.route while the
+    #                    bulk of the batch pays ~half the encoder
+    #                    bandwidth/FLOP cost; diagnostics/constrained
+    #                    paths (score_queries, route, want_scores) stay
+    #                    at f32;
+    #   "bf16"         — everything scores in bfloat16, no re-check
+    #                    (cheapest; selections may differ on queries
+    #                    whose utilities are closer than bf16 resolution)
+    precision: str = "f32"
+    # Whether bf16_recheck actually runs its bulk pass in bf16.  None
+    # (default) resolves by backend capability, mirroring use_pallas:
+    # True on TPU, where the MXU makes a bf16 forward ~half the cost of
+    # f32; False elsewhere — XLA:CPU (jax 0.4.37) lowers bf16 dots
+    # through f32 converts, measuring 1.1–1.3× SLOWER than f32, so a
+    # bf16 bulk pass plus re-check would only add latency.  With the
+    # bulk pass resolved to f32 the tier scores exactly (re-check
+    # becomes a no-op and reports fraction 0.0).  Force True to exercise
+    # the full bf16+re-check machinery off-TPU (tests do), False to pin
+    # a TPU engine to exact scoring.  The pure "bf16" tier is an
+    # explicit user choice and ignores this gate.
+    bf16_bulk: Optional[bool] = None
+    # fp32 re-check calibration (bf16_recheck only).  A query is
+    # re-scored when its top-1/top-2 utility gap is below
+    #
+    #   2 · w_acc · min(recheck_margin,
+    #                   max_m p(1−p) · recheck_logit_tol)
+    #
+    # recheck_logit_tol bounds the bf16-induced LOGIT error of the
+    # predictor forward; it reaches a predicted accuracy scaled by the
+    # sigmoid derivative p(1−p) — the 2PL Fisher weight — so easy
+    # saturated queries (p→0/1, where most near-ties live) get a
+    # near-zero threshold instead of paying a worst-case one.
+    # recheck_margin is the absolute Δp cap (binding only where the
+    # sigmoid is steep).  recheck_s_tol bounds the RELATIVE bf16 error
+    # of the difficulty scalar ŝ: a query whose ŝ sits within
+    # tol·max(1,|ŝ|) of a length-bin edge is re-scored so its cost/
+    # latency row can never bin-flip versus f32.  The defaults carry
+    # 2–3× safety over the errors measured across the repo's predictor
+    # shapes (max |Δlogit| ≈ 5.4e-3, max |Δp| ≈ 1.1e-3, max relative
+    # |Δŝ| ≈ 3.0e-3; the serving benchmark re-asserts selection parity
+    # on the bench stack every run, tests/test_precision.py on the demo
+    # corpus across every policy).
+    recheck_margin: float = 0.01
+    recheck_logit_tol: float = 0.012
+    recheck_s_tol: float = 0.006
 
 
 @dataclasses.dataclass(frozen=True)
@@ -114,6 +188,9 @@ class BatchDecision:
     p: Optional[np.ndarray] = None
     cost: Optional[np.ndarray] = None
     latency: Optional[np.ndarray] = None
+    # fraction of the batch the bf16_recheck tier re-scored at f32 (None
+    # when the batch took a single-precision path)
+    recheck_fraction: Optional[float] = None
 
 
 class _DevicePool:
@@ -139,11 +216,29 @@ class RouterEngine:
                 "RouterEngine needs fully-calibrated artifacts (latent "
                 "space + predictor) — Router.calibrate(...) or "
                 "Router.open(path) first")
+        if cfg.precision not in ("f32", "bf16_recheck", "bf16"):
+            raise ValueError(
+                f"unknown precision tier {cfg.precision!r}; expected "
+                f"'f32', 'bf16_recheck' or 'bf16'")
         self.cfg = cfg
         self.cache: Optional[LatentCache] = (
             LatentCache(cfg.cache_size) if cfg.cache_size > 0 else None)
         self._device_pool: Optional[_DevicePool] = None
         self._artifacts_ref = None
+        # how many times each scoring program's Python body was traced —
+        # the observable the AOT-export path is built to keep at ZERO on
+        # a warm reopen (tests/test_precision.py asserts it from a fresh
+        # subprocess); exported-program wrapper traces are not counted
+        self.trace_counts: Dict[str, int] = {}
+        # (program, precision, *shape) → jitted exported call; populated
+        # by warmup(exports=…), consulted first by every dispatch
+        self._exported: Dict[Tuple, object] = {}
+        self._export_broken = False   # jax.export failed → tracing only
+        # how the AOT programs got here: "loaded" (deserialized from the
+        # ExportedStore — the warm-reopen signal) vs "exported" (freshly
+        # traced+serialized this process — a cold walk)
+        self.export_stats: Dict[str, int] = {"loaded": 0, "exported": 0}
+        self.last_recheck_fraction: Optional[float] = None
         # serializes the public scoring/routing entry points: the cached
         # Router.engine() may be shared by several MicroBatcher workers /
         # direct callers, and the LRU cache + device-pool rebuild are not
@@ -161,9 +256,9 @@ class RouterEngine:
         self._artifacts_ref = art
         pred = art.require_predictor()
         pc = pred.cfg
-        params = pred.params
         clusters = pred.clusters
         mu, sd = (jnp.asarray(s, jnp.float32) for s in pred.feat_stats)
+        use_pallas = self._use_pallas()
 
         # the predictor weights enter as jit ARGUMENTS, not closure
         # constants: closed-over arrays get embedded into the lowered HLO,
@@ -173,21 +268,78 @@ class RouterEngine:
         # they are placeholder parameters: modules stay small, cache reads
         # stay fast, and the per-call pytree flatten is microseconds.
         # (clusters / feature stats are tiny and stay closed over.)
+        #
+        # Per precision tier the engine keeps one device-resident params
+        # pytree: the bf16 copy is cast ONCE at upload, so the scoring
+        # tier is selected purely by which pytree a dispatch passes — the
+        # params dtype drives encode/apply_heads' compute dtype, and jit
+        # specializes per dtype automatically.
+        self._params = {"f32": pred.params}
+        if self.cfg.precision == "bf16" or (
+                self.cfg.precision == "bf16_recheck" and self._bf16_bulk()):
+            self._params["bf16"] = jax.tree.map(
+                lambda a: jnp.asarray(a, jnp.bfloat16), pred.params)
+
         def _latents(p, ids, mask, feats):
-            e_se = encode(p["enc"], ids, mask, pc)
+            self.trace_counts["latents"] = \
+                self.trace_counts.get("latents", 0) + 1
+            e_se = encode(p["enc"], ids, mask, pc, use_pallas=use_pallas)
             f = (feats - mu) / sd
             return apply_heads(p["heads"], e_se, f, clusters,
                                pc.latent_dim)
 
         def _from_latents(a_hat, b_hat, thetas):
+            self.trace_counts["from_latents"] = \
+                self.trace_counts.get("from_latents", 0) + 1
             p = predict_accuracy(thetas, a_hat, b_hat)
             s_hat = jnp.sum(a_hat * b_hat, -1)
             return p, s_hat
 
-        latents_jit = jax.jit(_latents)
-        self._latents_jit = lambda ids, mask, feats: latents_jit(
-            params, ids, mask, feats)
+        self._latents_jit = jax.jit(_latents)
         self._from_latents_jit = jax.jit(_from_latents)
+        # a rebuild (predictor swap) invalidates every exported program:
+        # their StableHLO embeds the OLD closure constants (feature
+        # stats, cluster layout) even though the weights are arguments
+        self._exported = {}
+
+    # ------------------------------------------------------------------
+    # program dispatch: AOT-exported programs first, tracing jit second
+    # ------------------------------------------------------------------
+    def _call_latents(self, ids, mask, feats, prec: str):
+        """One encoder+heads forward at the given tier.  Exact padded
+        shapes that :meth:`warmup` exported dispatch through the
+        deserialized program (zero Python tracing); anything else falls
+        back to the tracing jit."""
+        fn = self._exported.get(("lat", prec) + tuple(ids.shape))
+        if fn is None:
+            fn = self._latents_jit
+        return fn(self._params[prec], ids, mask, feats)
+
+    def _call_from_latents(self, a_hat, b_hat, pool: "_DevicePool"):
+        fn = self._exported.get(
+            ("acc", a_hat.shape[0], pool.thetas.shape[0]))
+        if fn is None:
+            fn = self._from_latents_jit
+        return fn(a_hat, b_hat, pool.thetas)
+
+    def _program_fingerprint(self) -> str:
+        """Hash of everything an exported program specializes on that is
+        NOT a runtime argument — guards the on-disk ExportedStore against
+        re-calibrated artifacts and runtime upgrades."""
+        import hashlib
+
+        pred = self.router.artifacts.require_predictor()
+        mu, sd = pred.feat_stats
+        h = hashlib.sha256()
+        h.update(repr(pred.cfg).encode())
+        for dims in pred.clusters:
+            h.update(np.asarray(dims, np.int64).tobytes())
+        h.update(np.asarray(mu, np.float64).tobytes())
+        h.update(np.asarray(sd, np.float64).tobytes())
+        h.update(jax.__version__.encode())
+        h.update(jax.default_backend().encode())
+        h.update(str(bool(self._use_pallas())).encode())
+        return h.hexdigest()[:16]
 
     # ------------------------------------------------------------------
     # pool snapshot
@@ -259,7 +411,8 @@ class RouterEngine:
         return np.maximum(b, min(m, pc.max_len)).astype(int)
 
     def _compute_entries(self, texts: Sequence[str],
-                         subword_lens: Sequence[int]) -> List[CacheEntry]:
+                         subword_lens: Sequence[int],
+                         prec: str = "f32") -> List[CacheEntry]:
         """Lex + featurize + predict latents for cache-miss texts, with
         host ingest PIPELINED against the jitted device dispatch.
 
@@ -278,7 +431,15 @@ class RouterEngine:
         scoring bitwise-invariant under batch composition and ordering
         (XLA's reduction tree over keys varies with the padded K
         dimension) — the char-length presort is therefore a pure
-        padding-efficiency choice, invisible in the outputs."""
+        padding-efficiency choice, invisible in the outputs.
+
+        Slices span FOUR forward chunks: an L-bucket's queries across the
+        wider slice land in one padded dispatch (row count still capped
+        at ``forward_chunk``, so the warmup/export rung grid is
+        unchanged) — fuller encoder groups and fewer row-padding rows
+        than per-chunk grouping, at a slightly coarser host/device
+        overlap grain (ingest is ~10% of the cold path, so the shorter
+        pipeline costs less than the padding it removes)."""
         art = self.router.artifacts
         pc = art.predictor.cfg
         tok = art.tokenizer
@@ -291,9 +452,10 @@ class RouterEngine:
         order = np.argsort(np.fromiter((len(t) for t in texts),
                                        np.int64, count=n), kind="stable")
         fc = min(self.cfg.forward_chunk, self.cfg.max_batch)
+        sl = min(4 * fc, self.cfg.max_batch)
         in_flight: List[Tuple[np.ndarray, jax.Array, jax.Array, int]] = []
-        for s in range(0, n, fc):
-            idx = order[s: s + fc]
+        for s in range(0, n, sl):
+            idx = order[s: s + sl]
             lexed = [ingest.lex(texts[i]) for i in idx]
             ids, mask = tok.encode_lexed(lexed, pc.max_len)
             feats = ingest.features_stack(lexed)
@@ -303,12 +465,14 @@ class RouterEngine:
             seq_b = self._seq_buckets(mask.sum(1).astype(int))
             for lb in np.unique(seq_b):
                 g = np.nonzero(seq_b == lb)[0]
-                rows = self._row_bucket(len(g))
-                a_g, b_g = self._latents_jit(
-                    jnp.asarray(self._pad2(ids[g, :lb], rows)),
-                    jnp.asarray(self._pad2(mask[g, :lb], rows)),
-                    jnp.asarray(self._pad2(feats[g], rows)))
-                in_flight.append((idx[g], a_g, b_g, len(g)))
+                for r0 in range(0, len(g), fc):
+                    sub = g[r0: r0 + fc]
+                    rows = self._row_bucket(len(sub))
+                    a_g, b_g = self._call_latents(
+                        jnp.asarray(self._pad2(ids[sub, :lb], rows)),
+                        jnp.asarray(self._pad2(mask[sub, :lb], rows)),
+                        jnp.asarray(self._pad2(feats[sub], rows)), prec)
+                    in_flight.append((idx[sub], a_g, b_g, len(sub)))
         for gi, a_g, b_g, m in in_flight:      # single collection point
             a_np[gi] = np.asarray(a_g)[:m]
             b_np[gi] = np.asarray(b_g)[:m]
@@ -317,19 +481,27 @@ class RouterEngine:
                 a_hat=a_np[i], b_hat=b_np[i], feats=feats_all[i],
                 token_counts={sw: lex_all[i].piece_count(sw)
                               for sw in uniq_sw},
-                tok_lens=lex_all[i].tok_lens)
+                tok_lens=lex_all[i].tok_lens, precision=prec)
             for i in range(n)
         ]
 
-    def _latent_batch(self, texts: Sequence[str], pool: _DevicePool
+    def _latent_batch(self, texts: Sequence[str], pool: _DevicePool,
+                      prec: str = "f32"
                       ) -> Tuple[np.ndarray, np.ndarray, List[CacheEntry]]:
-        """Returns (a_hat (Q, D), b_hat (Q, D), per-query cache entries)."""
+        """Returns (a_hat (Q, D), b_hat (Q, D), per-query cache entries).
+
+        ``prec`` is the tier this batch scores at: f32 entries satisfy
+        any tier (the re-check upgrade path relies on this — a borderline
+        query re-scored at f32 overwrites its bf16 entry and serves every
+        later lookup exactly); a bf16 entry reads as a miss to an f32
+        consumer."""
         if not texts:
             D = self.router.artifacts.predictor.cfg.latent_dim
             return np.zeros((0, D), np.float32), np.zeros((0, D),
                                                           np.float32), []
         entries: List[Optional[CacheEntry]] = [
-            self.cache.get(t) if self.cache is not None else None
+            self.cache.get(t, precision=prec)
+            if self.cache is not None else None
             for t in texts]
         # dedup within the batch: each unique miss text is computed once
         miss_pos: Dict[str, List[int]] = {}
@@ -338,7 +510,8 @@ class RouterEngine:
                 miss_pos.setdefault(texts[i], []).append(i)
         if miss_pos:
             uniq_texts = list(miss_pos)
-            fresh = self._compute_entries(uniq_texts, pool.subword_lens)
+            fresh = self._compute_entries(uniq_texts, pool.subword_lens,
+                                          prec)
             for t, e in zip(uniq_texts, fresh):
                 for i in miss_pos[t]:
                     entries[i] = e
@@ -383,36 +556,60 @@ class RouterEngine:
         l_in = np.rint(base[rows] * pool.length_factors[:, None])
         return np.maximum(l_in.astype(np.int64), 1)
 
+    def _tier_prec(self) -> str:
+        """Default tier for the SAFE scoring paths (score_queries, route
+        diagnostics, constrained routing): f32 unless the engine runs the
+        pure-bf16 tier — bf16_recheck's margin logic needs the policy
+        utilities, so only the unconstrained fast path uses it."""
+        return "bf16" if self.cfg.precision == "bf16" else "f32"
+
     def score_queries(self, texts: Sequence[str]
                       ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Batched equivalent of ``Router.score``: (p, cost, latency),
-        each (M, Q).  Chunks internally at ``max_batch``."""
+        each (M, Q).  Chunks internally at ``max_batch``.  Scores at the
+        tier's safe precision (f32, or bf16 under the pure-bf16 tier)."""
         with self._route_lock:
             self._check_predictor()
             return self._score(texts, self._pool())
 
-    def _score(self, texts: Sequence[str], pool: _DevicePool
+    def _score(self, texts: Sequence[str], pool: _DevicePool,
+               prec: Optional[str] = None
                ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        p, cost, lat, _ = self._score_parts(texts, pool, prec)
+        return p, cost, lat
+
+    def _score_parts(self, texts: Sequence[str], pool: _DevicePool,
+                     prec: Optional[str] = None
+                     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                np.ndarray]:
         """Score against ONE pinned snapshot — callers that also map
         selection indices back to names must reuse the same ``pool`` so a
-        concurrent mutation cannot shift indices mid-request."""
+        concurrent mutation cannot shift indices mid-request.
+
+        Returns (p, cost, latency, ŝ): the (M, Q) score tensors plus the
+        (Q,) task-aware difficulty scalar the length table was binned on
+        (the re-check pass needs ŝ to detect bin-edge-uncertain
+        queries)."""
+        if prec is None:
+            prec = self._tier_prec()
         mb = self.cfg.max_batch
         if len(texts) == 0:            # empty batch: empty score tensors
             M = pool.snap.n_models
             return (np.zeros((M, 0), np.float32), np.zeros((M, 0)),
-                    np.zeros((M, 0)))
+                    np.zeros((M, 0)), np.zeros((0,), np.float32))
         if len(texts) > mb:
-            parts = [self._score(texts[i: i + mb], pool)
+            parts = [self._score_parts(texts[i: i + mb], pool, prec)
                      for i in range(0, len(texts), mb)]
-            return tuple(np.concatenate([p[k] for p in parts], axis=1)
-                         for k in range(3))
+            return tuple(np.concatenate([p[k] for p in parts],
+                                        axis=1 if k < 3 else 0)
+                         for k in range(4))
 
         Q = len(texts)
-        a_hat, b_hat, entries = self._latent_batch(texts, pool)
+        a_hat, b_hat, entries = self._latent_batch(texts, pool, prec)
         bucket = self._bucket(Q)
-        p_pad, s_pad = self._from_latents_jit(
+        p_pad, s_pad = self._call_from_latents(
             jnp.asarray(self._pad2(a_hat, bucket)),
-            jnp.asarray(self._pad2(b_hat, bucket)), pool.thetas)
+            jnp.asarray(self._pad2(b_hat, bucket)), pool)
         p = np.asarray(p_pad)[:, :Q]
         s_hat = np.asarray(s_pad)[:Q]
 
@@ -421,7 +618,83 @@ class RouterEngine:
         l_in = self._input_lengths(texts, entries, pool)
         cost = (pool.lam_in * l_in + pool.lam_out * l_out) / 1e6
         lat = pool.ttft + l_out * pool.tpot
-        return p, cost, lat
+        return p, cost, lat, s_hat
+
+    def _score_recheck(self, texts: Sequence[str], weights,
+                       pool: _DevicePool
+                       ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                  float]:
+        """The bf16_recheck tier: bulk bf16 scoring + margin-triggered
+        f32 re-scoring, returning (p, cost, latency, recheck_fraction)
+        whose downstream SELECTIONS are identical to full-f32 scoring.
+
+        Why this is selection-exact: a query is re-scored (its p/cost/
+        latency columns replaced by f32 values, its cache entry upgraded)
+        when EITHER (a) its ŝ lies within ``recheck_s_tol`` of a
+        length-bin edge — so every non-re-scored query's cost/latency row
+        is guaranteed to bin-match f32, making the full cost/latency
+        tensors (and hence the min-max normalization scalars) identical
+        to the f32 run's — or (b) its top-1/top-2 utility gap is inside
+        the query's bf16 error envelope
+        ``2·w_acc·min(recheck_margin, max_m p(1−p)·recheck_logit_tol)``
+        — so every non-re-scored query's argmax is decided by a gap
+        larger than its only remaining error term (w_acc·Δp, with Δp
+        bounded through the sigmoid derivative).  Because replacing a
+        column can shift the normalization scalars the gaps were
+        computed under, the margin test re-runs on the patched tensors
+        until no new query falls inside it (monotone — each pass only
+        adds re-scored queries; in practice one pass suffices)."""
+        if not self._bf16_bulk():
+            # backend gate: no fast bf16 path here — the bulk pass IS
+            # the exact tier, nothing can need re-checking
+            p, cost, lat, _ = self._score_parts(texts, pool, "f32")
+            return np.array(p), cost, lat, 0.0
+        p, cost, lat, s16 = self._score_parts(texts, pool, "bf16")
+        # device-derived arrays can be read-only views; the re-check
+        # patches columns in place
+        p = np.array(p)
+        Q = len(texts)
+        M = p.shape[0]
+        if M < 2:       # a 1-model argmax can never flip: bf16 is exact
+            return p, cost, lat, 0.0
+        w = np.asarray(weights, np.float64)
+        edges = np.asarray(pool.edges, np.float64)
+        if edges.size and Q:
+            d_edge = np.min(np.abs(np.asarray(s16, np.float64)[None, :]
+                                   - edges[:, None]), axis=0)
+            near_edge = d_edge < (self.cfg.recheck_s_tol
+                                  * np.maximum(1.0, np.abs(s16)))
+        else:
+            near_edge = np.zeros(Q, bool)
+        # per-query threshold: bf16 logit error reaches p through the
+        # sigmoid derivative (the 2PL Fisher weight), so saturated
+        # queries — where most near-ties live — need no re-check
+        sens = np.max(p * (1.0 - p), axis=0) if Q else np.zeros(0)
+        thr = 2.0 * w[0] * np.minimum(self.cfg.recheck_margin,
+                                      sens * self.cfg.recheck_logit_tol)
+        rechecked = np.zeros(Q, bool)
+        from repro.kernels import ref as _kref
+
+        while True:
+            # the gap must be measured in the SAME utility the routing
+            # decision uses — reuse the kernel's reference formula
+            # rather than re-deriving it here
+            _, util = _kref.routing_argmax_ref(p, cost, lat, weights)
+            util = np.asarray(util, np.float64)
+            top2 = np.partition(util, (M - 2, M - 1), axis=0)[M - 2:]
+            gap = top2[1] - top2[0]
+            uncertain = ((gap < thr) | near_edge) & ~rechecked
+            idx = np.nonzero(uncertain)[0]
+            if idx.size == 0:
+                break
+            sub = [texts[i] for i in idx]
+            p_s, cost_s, lat_s, _ = self._score_parts(sub, pool, "f32")
+            p[:, idx] = p_s
+            cost[:, idx] = cost_s
+            lat[:, idx] = lat_s
+            rechecked[idx] = True
+            near_edge[idx] = False     # now exact; edges can't flip it
+        return p, cost, lat, float(rechecked.mean()) if Q else 0.0
 
     # ------------------------------------------------------------------
     # routing
@@ -429,6 +702,13 @@ class RouterEngine:
     def _use_pallas(self) -> bool:
         if self.cfg.use_pallas is not None:
             return self.cfg.use_pallas
+        return ops._on_tpu()
+
+    def _bf16_bulk(self) -> bool:
+        """Whether the bf16_recheck tier's bulk pass runs in bf16 on this
+        backend (see ``RouterEngineConfig.bf16_bulk``)."""
+        if self.cfg.bf16_bulk is not None:
+            return self.cfg.bf16_bulk
         return ops._on_tpu()
 
     def route(self, texts: Sequence[str], policy: str = "balanced",
@@ -516,15 +796,30 @@ class RouterEngine:
             names, sel = self._route_fast(texts, pol, pool)
             return BatchDecision(names=names, sel=sel,
                                  pool_version=pool.snap.version,
-                                 model_names=pool.names)
+                                 model_names=pool.names,
+                                 recheck_fraction=self.last_recheck_fraction)
 
     def _route_fast(self, texts: Sequence[str], pol, pool: _DevicePool
                     ) -> Tuple[List[str], np.ndarray]:
-        """Unconstrained fused-kernel routing against a pinned snapshot."""
+        """Unconstrained fused-kernel routing against a pinned snapshot.
+
+        This is where the ``bf16_recheck`` tier lives: the bulk of the
+        batch scores at bf16 and only margin-uncertain queries re-score
+        at f32 (see :meth:`_score_recheck`), keeping selections identical
+        to ``Router.route`` at ~half the encoder cost.  The re-checked
+        fraction of the last batch lands in ``last_recheck_fraction`` /
+        ``BatchDecision.recheck_fraction``."""
         Q = len(texts)
         if Q == 0:
+            self.last_recheck_fraction = None
             return [], np.zeros(0, np.int64)
-        p, cost, lat = self._score(texts, pool)
+        if self.cfg.precision == "bf16_recheck":
+            p, cost, lat, frac = self._score_recheck(texts, pol.weights,
+                                                     pool)
+            self.last_recheck_fraction = frac
+        else:
+            p, cost, lat = self._score(texts, pool)
+            self.last_recheck_fraction = None
         w = np.asarray(pol.weights, np.float32)
         if Q > self.cfg.max_batch:
             bucket, valid = Q, None
@@ -550,18 +845,31 @@ class RouterEngine:
     # ------------------------------------------------------------------
     # warm-start
     # ------------------------------------------------------------------
-    def warmup(self, max_queries: int = 1) -> float:
+    def warmup(self, max_queries: int = 1,
+               exports: Optional[str] = None) -> float:
         """Pre-compile every jitted program a request of ≤ ``max_queries``
         queries can hit, so the first SERVED request pays no jit stall.
 
         XLA compilation is keyed on shape: the encoder+heads program
-        compiles per (Q-bucket, L-bucket), the accuracy reduction and the
-        routing kernel per Q-bucket.  This walks exactly the bucket rungs
-        the runtime can produce — all sequence-length buckets up to the
-        predictor's ``max_len`` and every batch rung reachable for
-        ``max_queries`` — feeding zero-filled tensors of the right
-        shape/dtype through each program.  Subsequent real calls hit jax's
-        compile cache.
+        compiles per (Q-bucket, L-bucket) — and per precision tier the
+        engine's ``cfg.precision`` can dispatch — the accuracy reduction
+        and the routing kernel per Q-bucket.  This walks exactly the
+        bucket rungs the runtime can produce — all sequence-length
+        buckets up to the predictor's ``max_len`` and every batch rung
+        reachable for ``max_queries`` — feeding zero-filled tensors of
+        the right shape/dtype through each program.  Subsequent real
+        calls hit jax's compile cache.
+
+        ``exports`` names an :class:`~repro.serving.cache.ExportedStore`
+        directory (``Router.open`` passes
+        ``<artifact>/xla_cache/exported``): each scoring program is then
+        staged through ``jax.export`` — a stored program is DESERIALIZED
+        and wired into the engine's dispatch (zero Python tracing, which
+        is what dominates a reopen once the XLA cache elides
+        compilation); a missing one is exported once (same single trace
+        the plain path would pay) and serialized for the next process.
+        Serving dispatch keeps using the exported programs afterwards —
+        they are the same lowerings, byte-identical results.
 
         The default (``max_queries=1``) removes the stall for singleton
         traffic of ANY text length — the shape the micro-batcher's first
@@ -575,9 +883,39 @@ class RouterEngine:
 
         t0 = time.perf_counter()
         with self._route_lock:
-            return self._warmup_locked(max_queries, t0)
+            return self._warmup_locked(max_queries, t0, exports)
 
-    def _warmup_locked(self, max_queries: int, t0: float) -> float:
+    def _ensure_exported(self, store, key: Tuple, jitted,
+                         arg_shapes: Tuple) -> None:
+        """Back the dispatch ``key`` with an AOT program: deserialize it
+        from ``store`` when present, else export it once (one trace) and
+        persist it.  No-op without a store (plain tracing warmup); any
+        export/serialize failure (e.g. a custom call jax.export refuses
+        to serialize on some backend) degrades to the tracing path for
+        the whole walk rather than failing ``Router.open``."""
+        if store is None or key in self._exported or self._export_broken:
+            return
+        name = "-".join(str(part) for part in key)
+        exported = store.load(name)
+        if exported is None:
+            try:
+                exported = jax_export.export(jitted)(*arg_shapes)
+                store.save(name, exported)
+            except Exception as e:  # noqa: BLE001 — degrade, don't fail
+                import warnings
+
+                warnings.warn(
+                    f"jax.export of {name} failed ({e!r}); warmup "
+                    f"continues on the tracing path without AOT programs")
+                self._export_broken = True
+                return
+            self.export_stats["exported"] += 1
+        else:
+            self.export_stats["loaded"] += 1
+        self._exported[key] = jax.jit(exported.call)
+
+    def _warmup_locked(self, max_queries: int, t0: float,
+                       exports: Optional[str]) -> float:
         import time
 
         from repro.core.features import extract_features_batch
@@ -596,32 +934,88 @@ class RouterEngine:
                             for n in range(1, min(max_queries, fc) + 1)})
         q_rungs = sorted({self._bucket(n) for n in
                           range(1, min(max_queries, self.cfg.max_batch) + 1)})
-        # dispatch every program WITHOUT an intermediate sync: the cheap
-        # zero-filled executions run on the device queue while Python is
-        # already tracing/compiling the next shape (same overlap as the
-        # serving path); one final sync closes the tail
-        last = None
-        for bq in enc_rungs:
-            for lb in l_buckets:
-                last, _ = self._latents_jit(
-                    jnp.zeros((bq, lb), jnp.int32),
-                    jnp.zeros((bq, lb), jnp.float32),
-                    jnp.zeros((bq, n_feats), jnp.float32))
+        store = None
+        if exports:
+            from repro.serving.cache import ExportedStore
+
+            store = ExportedStore(exports, self._program_fingerprint())
+        # which encoder tiers this engine can dispatch: the re-check tier
+        # needs BOTH (bf16 bulk + f32 re-score / safe paths) — unless its
+        # bulk pass is backend-gated down to f32
+        precs = {"f32": ("f32",), "bf16": ("bf16",),
+                 "bf16_recheck": (("bf16", "f32") if self._bf16_bulk()
+                                  else ("f32",))}[self.cfg.precision]
+        sds = jax.ShapeDtypeStruct
         M = pool.snap.n_models
-        for bq in q_rungs:
-            last, _ = self._from_latents_jit(
+
+        # one task per program: load-or-export its AOT form, then push a
+        # zero-filled execution through the dispatch path (whose first
+        # call compiles — a persistent-cache READ on a warm reopen)
+        def _lat_task(prec, pshapes, bq, lb):
+            self._ensure_exported(
+                store, ("lat", prec, bq, lb), self._latents_jit,
+                (pshapes, sds((bq, lb), jnp.int32),
+                 sds((bq, lb), jnp.float32),
+                 sds((bq, n_feats), jnp.float32)))
+            out, _ = self._call_latents(
+                jnp.zeros((bq, lb), jnp.int32),
+                jnp.zeros((bq, lb), jnp.float32),
+                jnp.zeros((bq, n_feats), jnp.float32), prec)
+            return out
+
+        def _acc_task(bq):
+            self._ensure_exported(
+                store, ("acc", bq, M), self._from_latents_jit,
+                (sds((bq, D), jnp.float32), sds((bq, D), jnp.float32),
+                 sds((M, D), jnp.float32)))
+            out, _ = self._call_from_latents(
                 jnp.zeros((bq, D), jnp.float32),
-                jnp.zeros((bq, D), jnp.float32), pool.thetas)
+                jnp.zeros((bq, D), jnp.float32), pool)
             valid = np.zeros(bq, bool)
             valid[:1] = True
-            last, _ = ops.routing_argmax(
+            out, _ = ops.routing_argmax(
                 jnp.zeros((M, bq), jnp.float32),
                 jnp.zeros((M, bq), jnp.float32),
                 jnp.zeros((M, bq), jnp.float32),
                 jnp.zeros(3, jnp.float32), valid=jnp.asarray(valid),
                 use_pallas=self._use_pallas())
-        if last is not None:
-            last.block_until_ready()
+            return out
+
+        tasks = []
+        for prec in precs:
+            pshapes = jax.tree.map(lambda a: sds(a.shape, a.dtype),
+                                   self._params[prec])
+            for bq in enc_rungs:
+                for lb in l_buckets:
+                    tasks.append((("lat", prec, bq, lb),
+                                  lambda p=prec, ps=pshapes, b=bq, l=lb:
+                                  _lat_task(p, ps, b, l)))
+        for bq in q_rungs:
+            tasks.append((("acc", bq, M), lambda b=bq: _acc_task(b)))
+
+        # Sequential by default: the warm path's per-program cost is
+        # dominated by GIL-holding Python work (StableHLO deserialize
+        # bindings, wrapper tracing, dispatch bookkeeping), so a thread
+        # pool SLOWS it down on the small CPU hosts this runs on
+        # (measured 14.5 s serial vs 20–27 s with 2 workers at Q=128).
+        # REPRO_WARMUP_WORKERS opts into threading on beefier hosts
+        # where the C++ compile phase (which does release the GIL)
+        # dominates a COLD walk.  jit compilation/tracing is
+        # thread-safe; duplicate keys are impossible (one task per
+        # rung).
+        import concurrent.futures as cf
+
+        outs = []
+        workers = int(os.environ.get("REPRO_WARMUP_WORKERS", "1"))
+        if workers <= 1:
+            for _, fn in tasks:
+                outs.append(fn())
+        else:
+            with cf.ThreadPoolExecutor(max_workers=workers) as ex:
+                for fut in [ex.submit(fn) for _, fn in tasks]:
+                    outs.append(fut.result())
+        if outs:
+            outs[-1].block_until_ready()
         return time.perf_counter() - t0
 
     # ------------------------------------------------------------------

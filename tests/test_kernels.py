@@ -56,6 +56,72 @@ def test_decode_attention_sweep(B, H, KV, S, dk, dv, dtype):
         atol=_TOL[dtype], rtol=_TOL[dtype])
 
 
+@pytest.mark.parametrize("B,L,d,nh,rows", [
+    (4, 16, 64, 4, 16),       # full rows (body layers)
+    (3, 48, 192, 4, 48),      # the bench predictor shape
+    (5, 33, 96, 2, 33),       # odd L, 2 heads (demo predictor shape)
+    (2, 24, 192, 4, 1),       # CLS-row-only final layer
+    (1, 96, 256, 4, 1),       # default predictor max_len, CLS row
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_encoder_block_sweep(B, L, d, nh, rows, dtype):
+    """Pallas fused attention block (interpret on CPU) vs the einsum
+    reference that ``core.predictor.encode`` dispatches to off-TPU.
+
+    float32 full-rows blocks are BITWISE equal (identical contractions,
+    per-row reductions); the CLS-row variant is allowed the ~1-ulp wiggle
+    of XLA-CPU's gemv-vs-gemm accumulation order for the single query
+    row; bfloat16 is tolerance-bounded (f32-accumulated on both sides)."""
+    rng = np.random.default_rng(B * L + rows)
+    h = jnp.asarray(rng.normal(size=(B, L, d)), jnp.float32).astype(dtype)
+    ws = [jnp.asarray(rng.normal(size=(d, d)) * d ** -0.5,
+                      jnp.float32).astype(dtype) for _ in range(4)]
+    m = np.ones((B, L), np.float32)
+    for i in range(B):
+        m[i, rng.integers(1, L):] = 0
+    m = jnp.asarray(m)
+    got = ops.encoder_block(h, *ws, m, num_heads=nh, rows=rows,
+                            use_pallas=True)
+    want = ref.encoder_block_ref(h, *ws, m, num_heads=nh, rows=rows)
+    assert got.dtype == want.dtype == dtype
+    if dtype == jnp.float32 and rows == L:
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    elif dtype == jnp.float32:
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-6, rtol=1e-6)
+    else:
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            atol=_TOL[jnp.bfloat16], rtol=_TOL[jnp.bfloat16])
+
+
+def test_encoder_block_ref_matches_pre_kernel_einsum_path():
+    """The ref (and thus the f32 encode path) is elementwise-exactly the
+    einsum attention ``encode`` inlined before the kernel existed."""
+    rng = np.random.default_rng(7)
+    B, L, d, nh = 6, 40, 96, 4
+    hd = d // nh
+    h = jnp.asarray(rng.normal(size=(B, L, d)), jnp.float32)
+    wq, wk, wv, wo = (jnp.asarray(rng.normal(size=(d, d)) * d ** -0.5,
+                                  jnp.float32) for _ in range(4))
+    m = np.ones((B, L), np.float32)
+    for i in range(B):
+        m[i, rng.integers(1, L):] = 0
+    mask = jnp.asarray(m)
+    for rows in (L, 1):
+        q = (h[:, :rows] @ wq).reshape(B, rows, nh, hd)
+        k = (h @ wk).reshape(B, L, nh, hd)
+        v = (h @ wv).reshape(B, L, nh, hd)
+        bias = jnp.where(mask[:, None, None, :] > 0, 0.0, -1e30)
+        s = jnp.einsum("blhd,bmhd->bhlm", q, k) * hd ** -0.5 + bias
+        a = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhlm,bmhd->blhd", a, v).reshape(B, rows, d)
+        want = o @ wo
+        got = ref.encoder_block_ref(h, wq, wk, wv, wo, mask,
+                                    num_heads=nh, rows=rows)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
 @pytest.mark.parametrize("I,D", [(100, 8), (1000, 20), (257, 130)])
 def test_doptimal_score_sweep(I, D):
     ks = jax.random.split(jax.random.key(2), 2)

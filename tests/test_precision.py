@@ -1,0 +1,268 @@
+"""Precision tiers + AOT-exported dispatch (ISSUE 5).
+
+Three contracts:
+
+* ``bf16_recheck`` — selections BIT-IDENTICAL to ``Router.route`` on the
+  full test corpus for every policy (the margin-based fp32 re-check is
+  calibrated so a bf16-induced error can never flip an argmax or a
+  length-bin);
+* ``bf16`` — no exactness guarantee, but a measured agreement floor with
+  the f32 selections (and exact score agreement on the safe paths);
+* AOT export — a WARM ``Router.open(dir, warmup=…)`` in a fresh process
+  dispatches every scoring program from the ExportedStore without a
+  single Python re-trace (engine trace counters stay zero), and the
+  store survives fingerprint checks / degrades safely on mismatch.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.router import POLICIES
+from repro.serving import RouterEngine, RouterEngineConfig
+from repro.serving.cache import ExportedStore
+
+
+@pytest.fixture(scope="module")
+def corpus(demo_stack):
+    world, router, _ = demo_stack
+    from repro.data import ID_TASKS, OOD_TASKS
+
+    qi = np.concatenate([world.query_indices(OOD_TASKS),
+                         world.query_indices(ID_TASKS)])
+    return world, router, [world.queries[i].text for i in qi]
+
+
+# ---------------------------------------------------------------------------
+# bf16_recheck: exact selection parity
+# ---------------------------------------------------------------------------
+
+
+def test_bf16_recheck_selections_bit_identical_all_policies(corpus):
+    _, router, texts = corpus
+    engine = RouterEngine(router, RouterEngineConfig(
+        cache_size=0, precision="bf16_recheck", bf16_bulk=True))
+    for pol in POLICIES:
+        _, sel_ref, _ = router.route(texts, policy=pol)
+        _, sel = engine.route_batch(texts, policy=pol)
+        np.testing.assert_array_equal(np.asarray(sel_ref), sel,
+                                      err_msg=f"policy {pol}")
+        frac = engine.last_recheck_fraction
+        assert frac is not None and 0.0 <= frac < 1.0, \
+            "re-check should resolve a strict subset of the batch"
+
+
+def test_bf16_recheck_parity_with_custom_weights_and_cache(corpus):
+    """Parity must hold through the latent cache too — including the
+    second pass, where re-checked queries come back as upgraded f32
+    entries and the rest stay bf16."""
+    _, router, texts = corpus
+    engine = RouterEngine(router, RouterEngineConfig(
+        cache_size=4 * len(texts), precision="bf16_recheck",
+        bf16_bulk=True))
+    w = (0.45, 0.45, 0.10)
+    _, sel_ref, _ = router.route(texts, weights=w)
+    for _ in range(2):                      # cold, then cache-warm
+        _, sel = engine.route_batch(texts, weights=w)
+        np.testing.assert_array_equal(np.asarray(sel_ref), sel)
+
+
+def test_bf16_recheck_reported_in_batch_decision(corpus):
+    _, router, texts = corpus
+    engine = RouterEngine(router, RouterEngineConfig(
+        cache_size=0, precision="bf16_recheck", bf16_bulk=True))
+    dec = engine.route_pinned(texts[:32])
+    assert dec.recheck_fraction is not None
+    assert 0.0 <= dec.recheck_fraction <= 1.0
+    # the f32 tier reports no re-check fraction
+    e32 = RouterEngine(router, RouterEngineConfig(cache_size=0))
+    assert e32.route_pinned(texts[:8]).recheck_fraction is None
+
+
+def test_bf16_recheck_safe_paths_stay_f32(corpus):
+    """score_queries / route diagnostics / constrained routing under the
+    re-check tier score at f32 — bit-for-bit with the f32 engine."""
+    _, router, texts = corpus
+    tier = RouterEngine(router, RouterEngineConfig(
+        cache_size=0, precision="bf16_recheck", bf16_bulk=True))
+    base = RouterEngine(router, RouterEngineConfig(cache_size=0))
+    for a, b in zip(tier.score_queries(texts[:24]),
+                    base.score_queries(texts[:24])):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_recheck_upgrades_cache_entries(corpus):
+    """A re-checked query's cache entry is replaced by the f32 result, so
+    later lookups (any tier) serve full precision."""
+    _, router, texts = corpus
+    engine = RouterEngine(router, RouterEngineConfig(
+        cache_size=1024, precision="bf16_recheck", bf16_bulk=True))
+    engine.route_batch(texts)
+    precs = {engine.cache._data[t].precision
+             for t in texts if t in engine.cache}
+    assert "bf16" in precs, "bulk tier should leave bf16 entries"
+    n_f32 = sum(1 for t in set(texts)
+                if t in engine.cache
+                and engine.cache._data[t].precision == "f32")
+    assert engine.last_recheck_fraction == 0 or n_f32 > 0, \
+        "re-checked queries must upgrade their entries to f32"
+
+
+# ---------------------------------------------------------------------------
+# pure bf16: measured agreement floor
+# ---------------------------------------------------------------------------
+
+
+def test_pure_bf16_agreement_floor(corpus):
+    _, router, texts = corpus
+    engine = RouterEngine(router, RouterEngineConfig(
+        cache_size=0, precision="bf16"))
+    for pol in POLICIES:
+        _, sel_ref, _ = router.route(texts, policy=pol)
+        _, sel = engine.route_batch(texts, policy=pol)
+        agree = float(np.mean(np.asarray(sel_ref) == sel))
+        assert agree >= 0.9, f"policy {pol}: agreement {agree:.3f} < 0.9"
+        assert engine.last_recheck_fraction is None
+
+
+def test_bf16_latents_close_to_f32(corpus):
+    """The bf16 tier's predicted accuracies stay inside the calibrated
+    re-check envelope — the property the margin defaults rely on."""
+    _, router, texts = corpus
+    e32 = RouterEngine(router, RouterEngineConfig(cache_size=0))
+    e16 = RouterEngine(router, RouterEngineConfig(cache_size=0,
+                                                  precision="bf16"))
+    p32, _, _, s32 = e32._score_parts(texts, e32._pool())
+    p16, _, _, s16 = e16._score_parts(texts, e16._pool())
+    cfg = RouterEngineConfig()
+    assert np.max(np.abs(p32 - p16)) < cfg.recheck_margin
+    rel = np.max(np.abs(s32 - s16) / np.maximum(1.0, np.abs(s32)))
+    assert rel < cfg.recheck_s_tol
+
+
+def test_invalid_precision_rejected(corpus):
+    _, router, _ = corpus
+    with pytest.raises(ValueError, match="precision"):
+        RouterEngine(router, RouterEngineConfig(precision="fp8"))
+
+
+def test_bf16_bulk_backend_gate_scores_exactly(corpus):
+    """With the default backend gate (None → bf16 bulk on TPU only), a
+    bf16_recheck engine on this CPU container resolves its bulk pass to
+    f32: selections AND scores are bit-for-bit the f32 engine's, the
+    re-check is a no-op (fraction 0.0), and no bf16 weight copy is ever
+    uploaded."""
+    import jax
+
+    _, router, texts = corpus
+    gated = RouterEngine(router, RouterEngineConfig(
+        cache_size=0, precision="bf16_recheck"))
+    base = RouterEngine(router, RouterEngineConfig(cache_size=0))
+    if jax.default_backend() == "tpu":      # gate resolves the other way
+        pytest.skip("backend gate enables the bf16 bulk pass on TPU")
+    assert "bf16" not in gated._params
+    _, sel_ref = base.route_batch(texts[:32])
+    _, sel = gated.route_batch(texts[:32])
+    np.testing.assert_array_equal(sel_ref, sel)
+    assert gated.last_recheck_fraction == 0.0
+
+
+# ---------------------------------------------------------------------------
+# AOT export: warm reopen re-traces nothing (fresh subprocesses)
+# ---------------------------------------------------------------------------
+
+_REOPEN_CHILD = """\
+import sys, time, json
+t0 = time.perf_counter()
+from repro.api import Router
+r = Router.open(sys.argv[1], warmup=int(sys.argv[2]), compile_cache=True)
+e = r.engine()
+texts = ["aot reopen smoke query", "another, longer smoke query for the bucket ladder"]
+names, sel, _ = r.route(texts)
+names2, sel2 = e.route_batch(texts)
+assert list(sel) == list(sel2), (sel, sel2)
+print("CHILD=" + json.dumps({
+    "warmup_s": r.calibration["warmup_s"],
+    "traces": e.trace_counts,
+    "exported": len(e._exported),
+    "total_s": time.perf_counter() - t0,
+}))
+"""
+
+
+@pytest.mark.slow
+def test_warm_reopen_uses_exports_no_retrace(corpus, tmp_path_factory):
+    """Two fresh subprocesses share one artifact dir: the first (cold)
+    exports + compiles every rung; the second (warm) must deserialize the
+    exported programs and perform ZERO per-shape re-traces of the scoring
+    programs — and still route identically to the reference path."""
+    _, router, _ = corpus
+    art_dir = str(tmp_path_factory.mktemp("aot_artifact"))
+    router.save(art_dir)
+
+    def reopen():
+        out = subprocess.run(
+            [sys.executable, "-c", _REOPEN_CHILD, art_dir, "4"],
+            capture_output=True, text=True, timeout=900,
+            env=os.environ.copy())
+        for line in out.stdout.splitlines():
+            if line.startswith("CHILD="):
+                import json
+
+                return json.loads(line[len("CHILD="):])
+        raise AssertionError(
+            f"child failed (rc={out.returncode}): {out.stderr[-2000:]}")
+
+    cold = reopen()
+    warm = reopen()
+    assert cold["exported"] > 0 and warm["exported"] == cold["exported"]
+    assert sum(cold["traces"].values()) > 0, \
+        "cold reopen must trace (it creates the exports)"
+    assert warm["traces"] == {}, \
+        f"warm reopen re-traced scoring programs: {warm['traces']}"
+    assert warm["warmup_s"] < cold["warmup_s"], \
+        "exported-program warmup should beat the tracing one"
+
+
+def test_exported_store_fingerprint_invalidation(tmp_path):
+    """A stale fingerprint reads as empty (stale constants can never be
+    served); a matching one round-trips the program."""
+    import jax
+    import jax.numpy as jnp
+    from jax import export as jax_export
+
+    exported = jax_export.export(jax.jit(lambda x: x * 2.0))(
+        jax.ShapeDtypeStruct((4,), jnp.float32))
+    store = ExportedStore(str(tmp_path), "fp-a")
+    store.save("prog", exported)
+    again = ExportedStore(str(tmp_path), "fp-a")
+    assert len(again) == 1
+    loaded = again.load("prog")
+    assert loaded is not None
+    np.testing.assert_array_equal(
+        np.asarray(jax.jit(loaded.call)(jnp.ones(4, jnp.float32))),
+        np.full(4, 2.0, np.float32))
+    blob = os.path.join(str(tmp_path), again._entries["prog"])
+    assert os.path.exists(blob)
+    stale = ExportedStore(str(tmp_path), "fp-b")
+    assert len(stale) == 0 and stale.load("prog") is None
+    # the stale generation's blob is unreachable — it must be deleted,
+    # not accumulated across re-calibrations
+    assert not os.path.exists(blob)
+
+
+def test_exported_store_corrupt_blob_degrades_to_none(tmp_path):
+    import jax
+    import jax.numpy as jnp
+    from jax import export as jax_export
+
+    exported = jax_export.export(jax.jit(lambda x: x + 1.0))(
+        jax.ShapeDtypeStruct((2,), jnp.float32))
+    store = ExportedStore(str(tmp_path), "fp")
+    store.save("prog", exported)
+    blob_path = os.path.join(str(tmp_path), store._entries["prog"])
+    with open(blob_path, "wb") as f:
+        f.write(b"not a stablehlo artifact")
+    assert ExportedStore(str(tmp_path), "fp").load("prog") is None
