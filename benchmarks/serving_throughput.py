@@ -16,6 +16,14 @@ Measures steady-state routed queries/sec (jit warmup excluded) for:
                           selections asserted identical to ``seed``;
                           the resolved bulk dtype and re-checked
                           fraction land in the JSON);
+  * ``ranked_topk``     — the same engine/tier as ``engine_nocache`` but
+                          via ``route_pinned(..., k=4)``: the fused
+                          kernel emits the full ranked top-4 list (the
+                          PR-6 fallback chain) instead of a scalar
+                          argmax; rank 0 asserted identical to the
+                          argmax selections, and the JSON carries
+                          ``overhead_vs_engine_nocache`` (acceptance
+                          bound ≤ 1.15×);
   * ``engine_nocache_bf16`` — the same tier with the bf16 bulk pass
                           FORCED on (what a TPU engine runs, minus the
                           MXU): quantifies the bulk+re-check machinery
@@ -111,6 +119,7 @@ def run(smoke: bool = False, quick: bool = False
 
     router = bench.router
     sel_seed, sel_eng, sel_eng16, sel_eng32 = [None], [None], [None], [None]
+    ranked_topk = [None]
 
     def seed_call():
         # reference path: per-model×query tokenization + eager predictor
@@ -125,6 +134,14 @@ def run(smoke: bool = False, quick: bool = False
 
     def engine_call():
         _, sel_eng[0] = eng_nc.route_batch(texts, policy="balanced")
+
+    def ranked_topk_call():
+        # the PR-6 serving decision shape: same engine/tier as
+        # engine_nocache, but the fused kernel emits the full k=4 ranked
+        # list (fallback chain) instead of a scalar argmax; rank 0 is
+        # asserted identical to the argmax row below
+        dec = eng_nc.route_pinned(texts, policy="balanced", k=4)
+        ranked_topk[0] = dec.ranked
 
     eng_nc16 = RouterEngine(router, RouterEngineConfig(
         cache_size=0, precision="bf16_recheck", bf16_bulk=True))
@@ -193,6 +210,7 @@ def run(smoke: bool = False, quick: bool = False
         timings = _time_interleaved({
             "seed": seed_call,
             "engine_nocache": engine_call,
+            "ranked_topk": ranked_topk_call,
             "engine_nocache_bf16": engine_bf16_call,
             "engine_nocache_f32": engine_f32_call,
             "engine_cached": cached_call,
@@ -210,7 +228,10 @@ def run(smoke: bool = False, quick: bool = False
         "forced-bf16 re-check engine selections diverged from seed"
     assert np.array_equal(np.asarray(sel_seed[0]), sel_eng32[0]), \
         "f32 engine selections diverged from seed"
-    variants = ("seed", "engine_nocache", "engine_nocache_bf16",
+    assert np.array_equal(np.asarray(ranked_topk[0][0]), sel_eng[0]), \
+        "top-k rank 0 diverged from the argmax selections"
+    variants = ("seed", "engine_nocache", "ranked_topk",
+                "engine_nocache_bf16",
                 "engine_nocache_f32", "engine_cached", "microbatcher",
                 "service_tcp", "service_tcp_pipelined", "ingest_cold")
     for name in variants:
@@ -228,6 +249,10 @@ def run(smoke: bool = False, quick: bool = False
         results[name]["speedup_vs_f32_tier"] = (
             results["engine_nocache_f32"]["us_per_batch"]
             / results[name]["us_per_batch"])
+    results["ranked_topk"]["k"] = 4
+    results["ranked_topk"]["overhead_vs_engine_nocache"] = (
+        results["ranked_topk"]["us_per_batch"]
+        / results["engine_nocache"]["us_per_batch"])
 
     for name in variants[1:]:
         speedup = (results["seed"]["us_per_batch"]

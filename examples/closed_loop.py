@@ -1,0 +1,119 @@
+"""Closed-loop serving: ranked fallback + circuit breaker + metrics.
+
+PR 6 turns the routing decision from a scalar argmax into a ranked
+top-k list with per-model health masking, and closes the loop with
+outcome feedback.  This example exercises the whole lifecycle against a
+live TCP service, the way an operator would see it:
+
+  1. route traffic — every response carries the ranked fallback chain
+     (``ranked[0]`` is the selection, the rest are the runners-up the
+     same fused kernel scored);
+  2. kill the most-selected model mid-stream by reporting failures
+     through ``client.report_outcome`` — its circuit breaker opens;
+  3. keep routing with ZERO errors: the breaker state compiles into the
+     scoring mask, so traffic fails over to the former rank-1 model;
+  4. wait out the cooldown and report successful probes — the breaker
+     walks open → half_open → closed and the model rejoins the pool;
+  5. scrape the Prometheus ``metrics`` frame and watch the transitions,
+     outcome counts, and healthy-model gauge move.
+
+Run:  PYTHONPATH=src python examples/closed_loop.py
+The same loop works cross-process against
+``python -m repro.launch.serve --mode route --listen 127.0.0.1:7707
+--metrics 0`` (scrape ``http://host:port`` printed as METRICS).
+"""
+import time
+from collections import Counter
+
+from repro.api import HealthPolicy
+from repro.data import OOD_TASKS
+from repro.launch.serve import build_demo_engine
+from repro.serving import BackgroundServer, ServiceClient
+
+
+def _series(metrics_text, prefix):
+    return [line for line in metrics_text.splitlines()
+            if line.startswith(prefix)]
+
+
+def main():
+    print("=== calibrating the demo router (once) ===")
+    world, router, engine = build_demo_engine(seed=0)
+    qi = world.query_indices(OOD_TASKS)
+    texts = [world.queries[i].text for i in qi[:32]]
+
+    # a demo-friendly health policy: 3 consecutive failures open the
+    # breaker, half a second of cooldown, 2 probes to close it again
+    # (production defaults are 5 / 30s / 2 — see HealthPolicy)
+    router.pool.set_health_policy(HealthPolicy(
+        failure_threshold=3, open_cooldown_s=0.5, half_open_probes=2))
+
+    with BackgroundServer(router, engine=engine) as srv:
+        print(f"=== RouterService listening on {srv.host}:{srv.port} ===")
+        with ServiceClient(srv.host, srv.port) as client:
+            # -- 1. ranked decisions ------------------------------------
+            resps = client.route_many(texts)
+            mix = Counter(r.model for r in resps)
+            victim = mix.most_common(1)[0][0]
+            r0 = next(r for r in resps if r.model == victim)
+            print(f"routed {len(resps)} queries; mix: {dict(mix)}")
+            print(f"ranked fallback chain for one {victim!r} decision: "
+                  f"{r0.ranked}")
+            assert r0.ranked[0] == victim
+
+            # -- 2. kill the favorite: report failures ------------------
+            print(f"=== killing {victim!r}: reporting failed outcomes ===")
+            for i in range(3):
+                info = client.report_outcome(f"fail-{i}", victim, ok=False)
+            assert info["state_after"] == "open", info
+            print(f"  breaker: {info['state_before']} -> "
+                  f"{info['state_after']} ({info['transition']})")
+
+            # -- 3. failover: zero routing errors, victim masked --------
+            resps2 = client.route_many(texts)
+            mix2 = Counter(r.model for r in resps2)
+            assert victim not in mix2, mix2
+            assert all(victim not in (r.ranked or []) for r in resps2)
+            print(f"failover mix (victim masked out of the kernel): "
+                  f"{dict(mix2)}")
+
+            # -- 4. recovery: cooldown, then successful probes ----------
+            print("=== waiting out the cooldown, probing ===")
+            time.sleep(0.6)
+            p1 = client.report_outcome("probe-1", victim, ok=True,
+                                       latency_ms=80.0, tokens=64)
+            p2 = client.report_outcome("probe-2", victim, ok=True,
+                                       latency_ms=80.0, tokens=64)
+            print(f"  probe transitions: {p1['transition']}, "
+                  f"{p2['transition']}")
+            assert p2["state_after"] == "closed", p2
+            resps3 = client.route_many(texts)
+            mix3 = Counter(r.model for r in resps3)
+            assert victim in mix3, mix3
+            print(f"recovered mix ({victim!r} back in rotation): "
+                  f"{dict(mix3)}")
+
+            # -- 5. scrape the metrics frame ----------------------------
+            m = client.metrics()
+            print("=== scraped metrics (selected series) ===")
+            for prefix in ("router_breaker_transitions_total",
+                           "router_outcomes_total",
+                           "router_pool_models_healthy",
+                           "router_requests_total"):
+                for line in _series(m, prefix):
+                    print(" ", line)
+            for series in ("router_requests_total",
+                           "router_outcomes_total",
+                           "router_breaker_state",
+                           "router_breaker_transitions_total",
+                           "router_pool_models_healthy",
+                           "router_pool_version",
+                           "router_request_compute_ms_bucket"):
+                assert series in m, f"missing metric series {series}"
+
+    print("closed loop OK: failover with zero errors, breaker recovered, "
+          "metrics scraped")
+
+
+if __name__ == "__main__":
+    main()

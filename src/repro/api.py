@@ -55,7 +55,7 @@ from repro.core.errors import (
     UnknownModelError,
 )
 from repro.core.irt import fit_irt, posterior_means, task_aware_difficulty
-from repro.core.pool import ModelPool, PoolSnapshot
+from repro.core.pool import HealthPolicy, ModelPool, PoolSnapshot
 from repro.core.predictor import cluster_dimensions, train_predictor
 from repro.core.profiling import predict_accuracy
 from repro.core.router import POLICIES, RoutingConstraints
@@ -64,7 +64,7 @@ from repro.data.tokenizer import HashTokenizer, TokenizerSpec, model_token_count
 
 __all__ = [
     "DeadlineExceededError", "DuplicateModelError", "EmptyPoolError",
-    "ModelPool", "ModelProfile",
+    "HealthPolicy", "ModelPool", "ModelProfile",
     "NotCalibratedError", "OverloadedError", "Policy", "Router",
     "RouterArtifacts",
     "RouterConfig", "RouterError", "RoutingConstraints",

@@ -2,9 +2,11 @@ from repro.checkpoint.ckpt import (
     ARTIFACT_SCHEMA_VERSION,
     load_artifact,
     load_checkpoint,
+    register_artifact_migration,
     save_artifact,
     save_checkpoint,
 )
 
 __all__ = ["ARTIFACT_SCHEMA_VERSION", "load_artifact", "load_checkpoint",
-           "save_artifact", "save_checkpoint"]
+           "register_artifact_migration", "save_artifact",
+           "save_checkpoint"]

@@ -19,12 +19,20 @@ record written by a NEWER schema raises a typed
 :class:`~repro.core.errors.SchemaVersionError` instead of silently
 misreading it.  Records predating the field read as version 1 (the only
 format that ever existed without it).
+
+OLDER records upgrade through an explicit migration chain: when
+``ARTIFACT_SCHEMA_VERSION`` is bumped, register a one-step migrator with
+:func:`register_artifact_migration` and ``load_artifact`` walks every
+registered step from the on-disk version up to the current one — the
+same pattern ``ModelPool.from_json`` uses for pool snapshots, so every
+schema bump in the repo pays for its upgrade path at the site of the
+bump rather than in ad-hoc reader branches.
 """
 from __future__ import annotations
 
 import json
 import os
-from typing import Any
+from typing import Any, Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -37,8 +45,40 @@ _BF16_TAG = "__bf16__"
 
 #: Version of the self-describing artifact container written by
 #: :func:`save_artifact`.  Bump when the structure encoding changes in a
-#: way old readers would misinterpret.
+#: way old readers would misinterpret — and register a
+#: :func:`register_artifact_migration` step from the previous version.
 ARTIFACT_SCHEMA_VERSION = 1
+
+#: ``{from_version: migrate((tree, meta)) -> (tree, meta)}`` — each step
+#: upgrades a DECODED record by exactly one version.  Populated via
+#: :func:`register_artifact_migration`; empty while the container format
+#: has only ever had one version.
+_ARTIFACT_MIGRATIONS: Dict[
+    int, Callable[[Tuple[Any, dict]], Tuple[Any, dict]]] = {}
+
+
+def register_artifact_migration(from_version: int):
+    """Decorator registering a one-step artifact migrator.
+
+    The wrapped function receives the decoded ``(tree, meta)`` pair of a
+    ``from_version`` record and must return the pair upgraded to
+    ``from_version + 1``.  ``load_artifact`` chains the registered steps
+    so any historical record reads as current::
+
+        @register_artifact_migration(1)
+        def _v1_to_v2(pair):
+            tree, meta = pair
+            tree.setdefault("new_field", default_value())
+            return tree, meta
+    """
+    def _register(fn):
+        if from_version in _ARTIFACT_MIGRATIONS:
+            raise ValueError(
+                f"artifact migration from version {from_version} is "
+                f"already registered")
+        _ARTIFACT_MIGRATIONS[int(from_version)] = fn
+        return fn
+    return _register
 
 
 def _flatten_with_names(tree: PyTree):
@@ -151,7 +191,9 @@ def load_artifact(path: str) -> tuple:
     Array leaves come back as numpy arrays with their saved dtypes
     (bfloat16 restored from bit patterns).  Raises
     :class:`~repro.core.errors.SchemaVersionError` when the record was
-    written by a newer schema than this build supports.
+    written by a newer schema than this build supports; OLDER records are
+    upgraded in memory through the :func:`register_artifact_migration`
+    chain before being returned.
     """
     base = _base(path)
     with open(base + ".meta.json") as f:
@@ -162,7 +204,16 @@ def load_artifact(path: str) -> tuple:
                                  ARTIFACT_SCHEMA_VERSION)
     with np.load(base + ".npz") as data:
         tree = _decode(rec["structure"], data, rec["dtypes"])
-    return tree, rec.get("meta", {})
+    meta = rec.get("meta", {})
+    while found < ARTIFACT_SCHEMA_VERSION:
+        migrate = _ARTIFACT_MIGRATIONS.get(found)
+        if migrate is None:
+            raise SchemaVersionError(
+                f"artifact {base!r} (no migration registered from "
+                f"version {found})", found, ARTIFACT_SCHEMA_VERSION)
+        tree, meta = migrate((tree, meta))
+        found += 1
+    return tree, meta
 
 
 def load_checkpoint(path: str, like: PyTree) -> PyTree:

@@ -20,7 +20,12 @@ the tensor snapshot itself:
   construction;
 * the pool round-trips through JSON (:meth:`to_json` / :meth:`from_json`,
   :meth:`save` / :meth:`load`): tokenizers are stateless specs and floats
-  survive JSON exactly, so a reloaded pool routes bit-identically.
+  survive JSON exactly, so a reloaded pool routes bit-identically;
+* every model carries live HEALTH state — a closed/open/half-open circuit
+  breaker plus EWMA latency re-profiling driven by reported outcomes
+  (:meth:`record_outcome`).  Breaker state compiles into the per-model
+  validity mask (:meth:`PoolSnapshot.routable_mask`) consumed inside the
+  jitted scoring program, so an open model can never win any rank.
 
 Model characterization (θ, length row, TTFT/TPOT) is NOT computed here —
 that is :meth:`repro.core.artifacts.RouterArtifacts.profile_model`; the
@@ -32,6 +37,7 @@ import dataclasses
 import functools
 import json
 import os
+import time
 from typing import Dict, Optional, Sequence, Tuple, Union
 
 import numpy as np
@@ -44,7 +50,33 @@ from repro.data.tokenizer import HashTokenizer, TokenizerSpec
 POOL_FORMAT = "zerorouter-pool-v1"
 #: Version of the pool JSON schema; bump when a field changes meaning or a
 #: new required field appears.  Records predating the field are version 1.
-POOL_SCHEMA_VERSION = 1
+#: v2 added per-model health state (circuit breaker + EWMA observations);
+#: v1 records are read through the explicit migrator in _POOL_MIGRATIONS.
+POOL_SCHEMA_VERSION = 2
+
+# circuit-breaker states (int8 in the snapshot, names in metrics/JSON)
+BREAKER_CLOSED = 0
+BREAKER_OPEN = 1
+BREAKER_HALF_OPEN = 2
+BREAKER_NAMES = ("closed", "open", "half_open")
+
+
+@dataclasses.dataclass(frozen=True)
+class HealthPolicy:
+    """Knobs for the per-model circuit breaker and EWMA re-profiling.
+
+    The breaker opens after ``failure_threshold`` CONSECUTIVE failures,
+    stays open for ``open_cooldown_s`` (during which the model is masked
+    out of routing), then admits probe traffic (half-open);
+    ``half_open_probes`` consecutive probe successes re-close it, any
+    probe failure re-opens it.  ``ewma_alpha`` is the step size for the
+    observed/predicted latency-ratio EWMA that continuously re-profiles
+    the canonical TTFT/TPOT rows.
+    """
+    failure_threshold: int = 5
+    open_cooldown_s: float = 30.0
+    half_open_probes: int = 2
+    ewma_alpha: float = 0.2
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,10 +92,30 @@ class PoolSnapshot:
     table: np.ndarray             # (M, K) f64 ℓ̂_out rows
     edges: np.ndarray             # (K-1,) f64 difficulty bin edges
     tokenizer_specs: Tuple[TokenizerSpec, ...]
+    # --- health state (schema v2) -------------------------------------
+    breaker: np.ndarray           # (M,) int8 BREAKER_* state
+    consec_failures: np.ndarray   # (M,) int32 consecutive failures
+    half_open_ok: np.ndarray      # (M,) int32 consecutive probe successes
+    opened_at: np.ndarray         # (M,) f64 wall-clock the breaker opened
+    ewma_lat_ratio: np.ndarray    # (M,) f64 observed/predicted latency EWMA
+    obs_count: np.ndarray         # (M,) int64 outcomes observed
+    health_policy: HealthPolicy = HealthPolicy()
 
     @property
     def n_models(self) -> int:
         return len(self.names)
+
+    def routable_mask(self, now: Optional[float] = None) -> np.ndarray:
+        """(M,) bool — which models the scoring program may select.
+
+        Closed and half-open models are routable; an open model becomes
+        routable again once its cooldown has elapsed (probe admission —
+        the state itself only transitions inside
+        :meth:`ModelPool.record_outcome`, so reading the mask never
+        mutates the pool)."""
+        now = time.time() if now is None else now
+        cooled = (now - self.opened_at) >= self.health_policy.open_cooldown_s
+        return (self.breaker != BREAKER_OPEN) | cooled
 
     @property
     def length_factors(self) -> np.ndarray:
@@ -85,6 +137,21 @@ class PoolSnapshot:
             raise UnknownModelError(name) from None
 
 
+def _fresh_health(m: int = 1) -> Dict[str, np.ndarray]:
+    """Health arrays for ``m`` just-onboarded (healthy) models."""
+    return dict(
+        breaker=np.full(m, BREAKER_CLOSED, np.int8),
+        consec_failures=np.zeros(m, np.int32),
+        half_open_ok=np.zeros(m, np.int32),
+        opened_at=np.zeros(m, np.float64),
+        ewma_lat_ratio=np.ones(m, np.float64),
+        obs_count=np.zeros(m, np.int64),
+    )
+
+
+_HEALTH_FIELDS = tuple(_fresh_health(0).keys())
+
+
 def _empty_snapshot(edges: np.ndarray) -> PoolSnapshot:
     K = len(edges) + 1
     return PoolSnapshot(
@@ -92,7 +159,7 @@ def _empty_snapshot(edges: np.ndarray) -> PoolSnapshot:
         lam_in=np.zeros((0, 1)), lam_out=np.zeros((0, 1)),
         ttft=np.zeros((0, 1)), tpot=np.zeros((0, 1)),
         table=np.zeros((0, K)), edges=np.asarray(edges, np.float64),
-        tokenizer_specs=())
+        tokenizer_specs=(), **_fresh_health(0))
 
 
 class ModelPool:
@@ -159,6 +226,8 @@ class ModelPool:
             tpot=np.concatenate([s.tpot, [[float(profile.tpot)]]]),
             table=np.concatenate([s.table, row]),
             tokenizer_specs=s.tokenizer_specs + (spec,),
+            **{f: np.concatenate([getattr(s, f), v])
+               for f, v in _fresh_health(1).items()},
         )
         return len(self._snap.names) - 1
 
@@ -176,6 +245,7 @@ class ModelPool:
             table=s.table[keep],
             tokenizer_specs=tuple(sp for j, sp in
                                   enumerate(s.tokenizer_specs) if j != i),
+            **{f: getattr(s, f)[keep] for f in _HEALTH_FIELDS},
         )
 
     def update_pricing(self, name: str, price_in: Optional[float] = None,
@@ -200,14 +270,126 @@ class ModelPool:
         thetas[i] = np.asarray(theta, np.float32)
         self._bump(thetas=thetas)
 
+    def update_latency(self, name: str, ttft: Optional[float] = None,
+                       tpot: Optional[float] = None) -> None:
+        """Overwrite a model's canonical latency row (admin path — the
+        continuous variant is the EWMA inside :meth:`record_outcome`)."""
+        s = self._snap
+        i = s.index_of(name)
+        ttft_a, tpot_a = s.ttft.copy(), s.tpot.copy()
+        if ttft is not None:
+            ttft_a[i, 0] = float(ttft)
+        if tpot is not None:
+            tpot_a[i, 0] = float(tpot)
+        self._bump(ttft=ttft_a, tpot=tpot_a)
+
+    def set_health_policy(self, policy: HealthPolicy) -> None:
+        """Swap the breaker/EWMA knobs (copy-on-write like everything)."""
+        self._bump(health_policy=policy)
+
+    # ------------------------------------------------------------------
+    # outcome feedback (closed loop)
+    # ------------------------------------------------------------------
+    def record_outcome(self, name: str, ok: bool,
+                       latency_s: Optional[float] = None,
+                       tokens: Optional[int] = None,
+                       now: Optional[float] = None) -> Dict:
+        """Feed one observed request outcome back into the pool.
+
+        Drives the circuit breaker (closed → open on
+        ``failure_threshold`` consecutive failures; open → half-open on
+        the first outcome after the cooldown; half-open → closed after
+        ``half_open_probes`` successes, → open again on any probe
+        failure) and, on success with a reported latency, nudges the
+        canonical TTFT/TPOT rows toward the observation via the
+        observed/predicted-ratio EWMA.  One copy-on-write bump per call.
+
+        Returns a summary dict (state before/after, transition name or
+        None, current EWMA ratio) for the metrics layer.
+        """
+        s = self._snap
+        i = s.index_of(name)
+        pol = s.health_policy
+        now = time.time() if now is None else now
+
+        breaker = s.breaker.copy()
+        consec = s.consec_failures.copy()
+        probes = s.half_open_ok.copy()
+        opened = s.opened_at.copy()
+        ratio_e = s.ewma_lat_ratio.copy()
+        obs = s.obs_count.copy()
+        ttft_a, tpot_a = s.ttft, s.tpot
+
+        before = int(breaker[i])
+        state = before
+        # an open breaker past its cooldown is implicitly probing
+        # (routable_mask already admits it) — materialize half-open now
+        if state == BREAKER_OPEN and \
+                (now - opened[i]) >= pol.open_cooldown_s:
+            state = BREAKER_HALF_OPEN
+            probes[i] = 0
+
+        if ok:
+            if state == BREAKER_HALF_OPEN:
+                probes[i] += 1
+                if probes[i] >= pol.half_open_probes:
+                    state = BREAKER_CLOSED
+                    probes[i] = 0
+            consec[i] = 0
+            if latency_s is not None and state != BREAKER_OPEN:
+                tok = max(int(tokens or 0), 0)
+                predicted = float(s.ttft[i, 0] + tok * s.tpot[i, 0])
+                if predicted > 0 and latency_s > 0:
+                    ratio = float(latency_s) / predicted
+                    a = pol.ewma_alpha
+                    scale = 1.0 + a * (ratio - 1.0)
+                    ttft_a, tpot_a = s.ttft.copy(), s.tpot.copy()
+                    ttft_a[i, 0] *= scale
+                    tpot_a[i, 0] *= scale
+                    ratio_e[i] = (1 - a) * ratio_e[i] + a * ratio
+        else:
+            consec[i] += 1
+            if state == BREAKER_HALF_OPEN:
+                state = BREAKER_OPEN          # failed probe → re-open
+                opened[i] = now
+                probes[i] = 0
+            elif state == BREAKER_CLOSED and \
+                    consec[i] >= pol.failure_threshold:
+                state = BREAKER_OPEN
+                opened[i] = now
+        breaker[i] = state
+        obs[i] += 1
+
+        self._bump(breaker=breaker, consec_failures=consec,
+                   half_open_ok=probes, opened_at=opened,
+                   ewma_lat_ratio=ratio_e, obs_count=obs,
+                   ttft=ttft_a, tpot=tpot_a)
+        return {
+            "model": name,
+            "ok": bool(ok),
+            "state_before": BREAKER_NAMES[before],
+            "state_after": BREAKER_NAMES[state],
+            "transition": (f"{BREAKER_NAMES[before]}->{BREAKER_NAMES[state]}"
+                           if state != before else None),
+            "ewma_lat_ratio": float(ratio_e[i]),
+            "pool_version": self.version,
+        }
+
     # ------------------------------------------------------------------
     # persistence (JSON — floats round-trip exactly via repr)
     # ------------------------------------------------------------------
-    def to_json(self) -> Dict:
+    def to_json(self, schema_version: Optional[int] = None) -> Dict:
+        """Serialize; ``schema_version=1`` writes a legacy v1 record
+        (health state dropped) for downgrade interop — round-trip
+        tested both directions."""
+        sv = POOL_SCHEMA_VERSION if schema_version is None \
+            else int(schema_version)
+        if not 1 <= sv <= POOL_SCHEMA_VERSION:
+            raise SchemaVersionError("model pool", sv, POOL_SCHEMA_VERSION)
         s = self._snap
-        return {
+        rec = {
             "format": POOL_FORMAT,
-            "schema_version": POOL_SCHEMA_VERSION,
+            "schema_version": sv,
             "version": s.version,
             "names": list(s.names),
             "thetas": [[float(x) for x in row] for row in s.thetas],
@@ -219,6 +401,17 @@ class ModelPool:
             "edges": [float(x) for x in s.edges],
             "tokenizers": [dataclasses.asdict(sp) for sp in s.tokenizer_specs],
         }
+        if sv >= 2:
+            rec["health"] = {
+                "breaker": [int(x) for x in s.breaker],
+                "consec_failures": [int(x) for x in s.consec_failures],
+                "half_open_ok": [int(x) for x in s.half_open_ok],
+                "opened_at": [float(x) for x in s.opened_at],
+                "ewma_lat_ratio": [float(x) for x in s.ewma_lat_ratio],
+                "obs_count": [int(x) for x in s.obs_count],
+            }
+            rec["health_policy"] = dataclasses.asdict(s.health_policy)
+        return rec
 
     @classmethod
     def from_json(cls, rec: Dict) -> "ModelPool":
@@ -228,9 +421,14 @@ class ModelPool:
         found = int(rec.get("schema_version", 1))
         if found > POOL_SCHEMA_VERSION:
             raise SchemaVersionError("model pool", found, POOL_SCHEMA_VERSION)
+        # walk the explicit migration chain up to the current schema
+        while found < POOL_SCHEMA_VERSION:
+            rec = _POOL_MIGRATIONS[found](dict(rec))
+            found = int(rec["schema_version"])
         names = tuple(rec["names"])
         M = len(names)
         K = len(rec["edges"]) + 1
+        h = rec["health"]
         snap = PoolSnapshot(
             version=int(rec["version"]),
             names=names,
@@ -244,6 +442,13 @@ class ModelPool:
             edges=np.asarray(rec["edges"], np.float64),
             tokenizer_specs=tuple(TokenizerSpec(**d)
                                   for d in rec["tokenizers"]),
+            breaker=np.asarray(h["breaker"], np.int8),
+            consec_failures=np.asarray(h["consec_failures"], np.int32),
+            half_open_ok=np.asarray(h["half_open_ok"], np.int32),
+            opened_at=np.asarray(h["opened_at"], np.float64),
+            ewma_lat_ratio=np.asarray(h["ewma_lat_ratio"], np.float64),
+            obs_count=np.asarray(h["obs_count"], np.int64),
+            health_policy=HealthPolicy(**rec["health_policy"]),
         )
         return cls(snap.edges, _snapshot=snap)
 
@@ -256,3 +461,27 @@ class ModelPool:
     def load(cls, path: str) -> "ModelPool":
         with open(path) as f:
             return cls.from_json(json.load(f))
+
+
+def _migrate_pool_v1_to_v2(rec: Dict) -> Dict:
+    """v1 → v2: inject defaulted health state (all breakers closed,
+    EWMA ratio 1.0) and the default :class:`HealthPolicy`."""
+    M = len(rec["names"])
+    h = _fresh_health(M)
+    rec["health"] = {
+        "breaker": [int(x) for x in h["breaker"]],
+        "consec_failures": [0] * M,
+        "half_open_ok": [0] * M,
+        "opened_at": [0.0] * M,
+        "ewma_lat_ratio": [1.0] * M,
+        "obs_count": [0] * M,
+    }
+    rec["health_policy"] = dataclasses.asdict(HealthPolicy())
+    rec["schema_version"] = 2
+    return rec
+
+
+#: Explicit schema migrators: ``_POOL_MIGRATIONS[v]`` lifts a version-v
+#: record to v+1.  ``from_json`` walks the chain, so any historical
+#: snapshot loads as long as each single step is covered.
+_POOL_MIGRATIONS = {1: _migrate_pool_v1_to_v2}

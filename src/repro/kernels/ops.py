@@ -19,7 +19,7 @@ from repro.kernels.doptimal import doptimal_score_tpu
 from repro.kernels.encoder_block import encoder_block_tpu
 from repro.kernels.flash_attention import flash_attention_tpu
 from repro.kernels.irt2pl import irt_2pl_tpu
-from repro.kernels.routing import routing_argmax_tpu
+from repro.kernels.routing import routing_argmax_tpu, routing_topk_tpu
 
 
 def _on_tpu() -> bool:
@@ -83,6 +83,30 @@ def routing_argmax(p, cost, lat, weights, valid=None,
     return routing_argmax_tpu(p, cost, lat, weights, valid=valid,
                               normalize_costs=normalize_costs,
                               interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "normalize_costs", "use_pallas"))
+def routing_topk(p, cost, lat, weights, valid=None, model_valid=None,
+                 *, k: int = 1, normalize_costs: bool = True,
+                 use_pallas: bool = True):
+    """Fused routing utility + per-query ranked top-k
+    → (ranked (k, Q) int32, util (M, Q) f32); rank 0 is the selection,
+    later ranks the fallback chain.
+
+    ``model_valid`` is the (M,) per-model routability mask (circuit-breaker
+    state): masked models are excluded from the cost/latency normalization
+    and can never appear at any rank.  k=1 with ``model_valid=None``
+    reproduces :func:`routing_argmax` bit-for-bit.
+    """
+    if not use_pallas:
+        return ref.routing_topk_ref(p, cost, lat, weights, valid=valid,
+                                    model_valid=model_valid, k=k,
+                                    normalize_costs=normalize_costs)
+    return routing_topk_tpu(p, cost, lat, weights, valid=valid,
+                            model_valid=model_valid,
+                            normalize_costs=normalize_costs, k=k,
+                            interpret=not _on_tpu())
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas",))

@@ -83,35 +83,87 @@ def doptimal_score_ref(alpha, a_inv):
     return jnp.einsum("id,de,ie->i", af, a_inv.astype(jnp.float32), af)
 
 
-def routing_argmax_ref(p, cost, lat, weights, valid=None,
-                       normalize_costs: bool = True):
-    """Fused routing utility + per-query argmax (paper Eq. 17).
+#: Utility assigned to rows excluded by the per-model mask (and to padded
+#: rows inside the Pallas kernel) — finite so arithmetic stays NaN-free.
+ROUTING_MASKED_UTIL = -3e38
+
+
+def routing_topk_ref(p, cost, lat, weights, valid=None, model_valid=None,
+                     k: int = 1, normalize_costs: bool = True):
+    """Fused routing utility + per-query ranked top-k (paper Eq. 17).
 
     p/cost/lat: (M, Q) f32; weights: (3,) [w_p, w_c, w_t]; valid: optional
     (Q,) bool — padded queries are excluded from the cost/latency min-max
-    normalization so padding never shifts real utilities.  Returns
-    (sel (Q,) int32, util (M, Q) f32).
+    normalization so padding never shifts real utilities; model_valid:
+    optional (M,) bool — masked models (e.g. an open circuit breaker) are
+    excluded from BOTH the normalization and the ranking, their utility
+    rows forced to :data:`ROUTING_MASKED_UTIL`.  Returns
+    (ranked (k, Q) int32, util (M, Q) f32) — rank 0 is the selection,
+    later ranks the fallback chain.
 
-    The unmasked path reproduces ``core.router``'s
+    Ties break to the LOWEST model index at every rank (first occurrence,
+    exactly ``jnp.argmax`` semantics — pinned by the kernel sweep tests).
+    With ``model_valid`` leaving a single valid model the cost/latency
+    min-max range collapses (hi == lo); the normalization then yields 0
+    instead of dividing by zero, so utilities stay finite and rank 0 is
+    still the valid model.  The unmasked path reproduces ``core.router``'s
     ``utility_matrix`` → ``argmax`` two-pass elementwise-exactly.
     """
-    p = p.astype(jnp.float32)
-    cost = cost.astype(jnp.float32)
-    lat = lat.astype(jnp.float32)
+    p = jnp.asarray(p).astype(jnp.float32)
+    cost = jnp.asarray(cost).astype(jnp.float32)
+    lat = jnp.asarray(lat).astype(jnp.float32)
     w = jnp.asarray(weights, jnp.float32)
+    M = p.shape[0]
 
     def _norm(x):
         if not normalize_costs:
             return x
-        if valid is None:
+        ok = None
+        if valid is not None:
+            ok = jnp.broadcast_to(valid[None, :], x.shape)
+        if model_valid is not None:
+            mv = jnp.broadcast_to(jnp.asarray(model_valid)[:, None], x.shape)
+            ok = mv if ok is None else (ok & mv)
+        if ok is None:
             lo, hi = jnp.min(x), jnp.max(x)
         else:
-            lo = jnp.min(jnp.where(valid[None, :], x, jnp.inf))
-            hi = jnp.max(jnp.where(valid[None, :], x, -jnp.inf))
-        return (x - lo) / jnp.maximum(hi - lo, 1e-9)
+            lo = jnp.min(jnp.where(ok, x, jnp.inf))
+            hi = jnp.max(jnp.where(ok, x, -jnp.inf))
+        rng = hi - lo
+        # hi == lo guard: a mask leaving one valid model (or identical
+        # costs) collapses the range — normalize to 0 instead of 0/0.
+        # When rng > 0 this is bit-identical to the unguarded form.
+        return jnp.where(rng > 0, (x - lo) / jnp.maximum(rng, 1e-9), 0.0)
 
     util = w[0] * p - w[1] * _norm(cost) - w[2] * _norm(lat)
-    return jnp.argmax(util, axis=0).astype(jnp.int32), util
+    if model_valid is not None:
+        util = jnp.where(jnp.asarray(model_valid)[:, None], util,
+                         ROUTING_MASKED_UTIL)
+    # k unrolled rounds of (row-max → first index achieving it → mask the
+    # winner): identical tie-breaking to jnp.argmax at every rank, and
+    # exactly the rounds the Pallas kernel runs
+    rowid = jnp.arange(M, dtype=jnp.int32)[:, None]
+    u = util
+    ranks = []
+    for _ in range(max(int(k), 1)):
+        best = jnp.max(u, axis=0, keepdims=True)
+        hit = u == best
+        sel_r = jnp.min(jnp.where(hit, rowid, M), axis=0).astype(jnp.int32)
+        ranks.append(sel_r)
+        u = jnp.where(rowid == sel_r[None, :], ROUTING_MASKED_UTIL, u)
+    return jnp.stack(ranks), util
+
+
+def routing_argmax_ref(p, cost, lat, weights, valid=None,
+                       normalize_costs: bool = True):
+    """Fused routing utility + per-query argmax (paper Eq. 17).
+
+    The k=1 slice of :func:`routing_topk_ref` — selections and utilities
+    are bit-identical by construction.  Returns (sel (Q,) int32,
+    util (M, Q) f32)."""
+    ranked, util = routing_topk_ref(p, cost, lat, weights, valid=valid,
+                                    k=1, normalize_costs=normalize_costs)
+    return ranked[0], util
 
 
 def irt_2pl_ref(theta, alpha, b, y):

@@ -1,23 +1,30 @@
-"""Pallas TPU kernel for the routing hot path: fused utility + argmax.
+"""Pallas TPU kernel for the routing hot path: fused utility + top-k.
 
 The seed router materializes the (M, Q) utility matrix (Eq. 17) in one pass
 and argmaxes it in a second.  At serving batch sizes the matrix is tiny per
 query but the two-pass structure costs an extra HBM round trip per routing
 decision.  This kernel fuses both: each grid step streams a (Mp, block_q)
 tile of the three score matrices through VMEM, forms the utility in
-registers, and emits the per-query winning model index — the utility tile
-is written out once, purely for diagnostics.
+registers, and emits the per-query RANKED top-k model indices (rank 0 is
+the argmax; later ranks are the fallback chain) — the utility tile is
+written out once, purely for diagnostics.
 
-Cost/latency min-max normalization is folded into 6 scalars computed by the
-caller (SMEM-resident), so the kernel body is a fused multiply-add plus a
-masked row-max/row-argmin — no reductions over the full matrix inside the
-kernel.
+Cost/latency min-max normalization is folded into scalars computed by the
+caller (SMEM-resident), so the kernel body is a fused multiply-add plus k
+unrolled masked row-max/row-argmin rounds — no reductions over the full
+matrix inside the kernel.  The per-model validity mask (circuit-breaker
+state) rides in the same SMEM vector after the normalization scalars: one
+0/1 float per padded model row, applied as a select to
+:data:`~repro.kernels.ref.ROUTING_MASKED_UTIL` alongside the padded-row
+mask, so an unhealthy model can never win any rank.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.ref import ROUTING_MASKED_UTIL
 
 try:  # pltpu is importable on CPU for interpret mode, but guard anyway
     from jax.experimental.pallas import tpu as pltpu
@@ -27,11 +34,13 @@ except ImportError:  # pragma: no cover
 
 _LANE = 128
 _SUBLANE = 8
+_N_SCAL = 8           # normalization scalars ahead of the per-model mask
 
 
 def _routing_kernel(scal_ref, p_ref, c_ref, t_ref, util_ref, sel_ref, *,
-                    n_models: int):
-    """One (Mp, bq) tile: util = wp·p − ac·(c − lo_c) − at·(t − lo_t)."""
+                    n_models: int, mp: int, k: int):
+    """One (Mp, bq) tile: util = wp·p − ac·(c − lo_c) − at·(t − lo_t),
+    then k unrolled (row-max → first-hit index → mask winner) rounds."""
     wp = scal_ref[0]
     ac, lo_c = scal_ref[1], scal_ref[2]
     at, lo_t = scal_ref[3], scal_ref[4]
@@ -40,13 +49,110 @@ def _routing_kernel(scal_ref, p_ref, c_ref, t_ref, util_ref, sel_ref, *,
     t = t_ref[...].astype(jnp.float32)
     util = wp * p - ac * (c - lo_c) - at * (t - lo_t)
     rowid = jax.lax.broadcasted_iota(jnp.int32, util.shape, 0)
-    util = jnp.where(rowid < n_models, util, -3e38)
+    # per-model 0/1 validity from SMEM (static unrolled scalar loads),
+    # combined with the padded-row mask
+    mvec = jnp.stack([scal_ref[_N_SCAL + i] for i in range(mp)])[:, None]
+    util = jnp.where((rowid < n_models) & (mvec > 0), util,
+                     ROUTING_MASKED_UTIL)
     util_ref[...] = util
-    best = jnp.max(util, axis=0, keepdims=True)            # (1, bq)
-    # first row achieving the max — matches jnp.argmax tie-breaking
-    hit = util == best
-    sel_ref[...] = jnp.min(jnp.where(hit, rowid, n_models), axis=0,
-                           keepdims=True).astype(jnp.int32)
+    u = util
+    ranks = []
+    for _ in range(k):
+        best = jnp.max(u, axis=0, keepdims=True)            # (1, bq)
+        # first row achieving the max — matches jnp.argmax tie-breaking
+        hit = u == best
+        sel_r = jnp.min(jnp.where(hit, rowid, n_models), axis=0,
+                        keepdims=True).astype(jnp.int32)
+        ranks.append(sel_r)
+        u = jnp.where(rowid == sel_r, ROUTING_MASKED_UTIL, u)
+    sel_ref[...] = jnp.concatenate(ranks, axis=0)
+
+
+def routing_topk_tpu(
+    p: jax.Array,          # (M, Q)
+    cost: jax.Array,       # (M, Q)
+    lat: jax.Array,        # (M, Q)
+    weights,               # (3,) [w_p, w_c, w_t]
+    valid=None,            # optional (Q,) bool — mask for normalization
+    model_valid=None,      # optional (M,) bool — per-model routability
+    normalize_costs: bool = True,
+    *,
+    k: int = 1,
+    block_q: int = 512,
+    interpret: bool = False,
+):
+    """Returns (ranked (k, Q) int32, util (M, Q) f32); rank 0 = argmax."""
+    M, Q = p.shape
+    k = max(min(int(k), M), 1)
+    w = jnp.asarray(weights, jnp.float32)
+    mv = None if model_valid is None else jnp.asarray(model_valid)
+
+    def _scales(x):
+        """(gain, offset) folding min-max normalization into the FMA.
+        hi == lo (e.g. a mask leaving one valid model) folds to
+        gain 0 / offset 0 — the same zero the ref's guard produces."""
+        if not normalize_costs:
+            return jnp.float32(1.0), jnp.float32(0.0)
+        xf = x.astype(jnp.float32)
+        ok = None
+        if valid is not None:
+            ok = jnp.broadcast_to(valid[None, :], xf.shape)
+        if mv is not None:
+            okm = jnp.broadcast_to(mv[:, None], xf.shape)
+            ok = okm if ok is None else (ok & okm)
+        if ok is None:
+            lo, hi = jnp.min(xf), jnp.max(xf)
+        else:
+            lo = jnp.min(jnp.where(ok, xf, jnp.inf))
+            hi = jnp.max(jnp.where(ok, xf, -jnp.inf))
+        rng = hi - lo
+        gain = jnp.where(rng > 0, 1.0 / jnp.maximum(rng, 1e-9),
+                         jnp.float32(0.0))
+        return gain, jnp.where(rng > 0, lo, jnp.float32(0.0))
+
+    inv_rc, lo_c = _scales(cost)
+    inv_rt, lo_t = _scales(lat)
+
+    Mp = max(((M + _SUBLANE - 1) // _SUBLANE) * _SUBLANE, _SUBLANE)
+    bq = min(block_q, max(((Q + _LANE - 1) // _LANE) * _LANE, _LANE))
+    Qp = ((Q + bq - 1) // bq) * bq
+
+    mask_f = jnp.ones((M,), jnp.float32) if mv is None \
+        else mv.astype(jnp.float32)
+    scal = jnp.concatenate([
+        jnp.stack([w[0], w[1] * inv_rc, lo_c, w[2] * inv_rt, lo_t,
+                   jnp.float32(0.0), jnp.float32(0.0), jnp.float32(0.0)]),
+        jnp.zeros((Mp,), jnp.float32).at[:M].set(mask_f),
+    ])
+
+    def _pad(x):
+        return jnp.zeros((Mp, Qp), jnp.float32).at[:M, :Q].set(
+            x.astype(jnp.float32))
+
+    n_scal = _N_SCAL + Mp
+    scal_spec = (pl.BlockSpec(memory_space=_SMEM) if _SMEM is not None
+                 else pl.BlockSpec((n_scal,), lambda i: (0,)))
+    util_p, sel_p = pl.pallas_call(
+        lambda s, a, b, c, u, o: _routing_kernel(s, a, b, c, u, o,
+                                                 n_models=M, mp=Mp, k=k),
+        grid=(Qp // bq,),
+        in_specs=[
+            scal_spec,
+            pl.BlockSpec((Mp, bq), lambda i: (0, i)),
+            pl.BlockSpec((Mp, bq), lambda i: (0, i)),
+            pl.BlockSpec((Mp, bq), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((Mp, bq), lambda i: (0, i)),
+            pl.BlockSpec((k, bq), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Mp, Qp), jnp.float32),
+            jax.ShapeDtypeStruct((k, Qp), jnp.int32),
+        ],
+        interpret=interpret,
+    )(scal, _pad(p), _pad(cost), _pad(lat))
+    return sel_p[:, :Q], util_p[:M, :Q]
 
 
 def routing_argmax_tpu(
@@ -60,55 +166,11 @@ def routing_argmax_tpu(
     block_q: int = 512,
     interpret: bool = False,
 ):
-    """Returns (sel (Q,) int32, util (M, Q) f32)."""
-    M, Q = p.shape
-    w = jnp.asarray(weights, jnp.float32)
-
-    def _scales(x):
-        """(gain, offset) folding min-max normalization into the FMA."""
-        if not normalize_costs:
-            return jnp.float32(1.0), jnp.float32(0.0)
-        xf = x.astype(jnp.float32)
-        if valid is None:
-            lo, hi = jnp.min(xf), jnp.max(xf)
-        else:
-            lo = jnp.min(jnp.where(valid[None, :], xf, jnp.inf))
-            hi = jnp.max(jnp.where(valid[None, :], xf, -jnp.inf))
-        return 1.0 / jnp.maximum(hi - lo, 1e-9), lo
-
-    inv_rc, lo_c = _scales(cost)
-    inv_rt, lo_t = _scales(lat)
-    scal = jnp.stack([w[0], w[1] * inv_rc, lo_c, w[2] * inv_rt, lo_t,
-                      jnp.float32(0.0), jnp.float32(0.0), jnp.float32(0.0)])
-
-    Mp = max(((M + _SUBLANE - 1) // _SUBLANE) * _SUBLANE, _SUBLANE)
-    bq = min(block_q, max(((Q + _LANE - 1) // _LANE) * _LANE, _LANE))
-    Qp = ((Q + bq - 1) // bq) * bq
-
-    def _pad(x):
-        return jnp.zeros((Mp, Qp), jnp.float32).at[:M, :Q].set(
-            x.astype(jnp.float32))
-
-    scal_spec = (pl.BlockSpec(memory_space=_SMEM) if _SMEM is not None
-                 else pl.BlockSpec((8,), lambda i: (0,)))
-    util_p, sel_p = pl.pallas_call(
-        lambda s, a, b, c, u, o: _routing_kernel(s, a, b, c, u, o,
-                                                 n_models=M),
-        grid=(Qp // bq,),
-        in_specs=[
-            scal_spec,
-            pl.BlockSpec((Mp, bq), lambda i: (0, i)),
-            pl.BlockSpec((Mp, bq), lambda i: (0, i)),
-            pl.BlockSpec((Mp, bq), lambda i: (0, i)),
-        ],
-        out_specs=[
-            pl.BlockSpec((Mp, bq), lambda i: (0, i)),
-            pl.BlockSpec((1, bq), lambda i: (0, i)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((Mp, Qp), jnp.float32),
-            jax.ShapeDtypeStruct((1, Qp), jnp.int32),
-        ],
-        interpret=interpret,
-    )(scal, _pad(p), _pad(cost), _pad(lat))
-    return sel_p[0, :Q], util_p[:M, :Q]
+    """The k=1 slice of :func:`routing_topk_tpu` — selections and
+    utilities bit-identical by construction.  Returns (sel (Q,) int32,
+    util (M, Q) f32)."""
+    ranked, util = routing_topk_tpu(
+        p, cost, lat, weights, valid=valid,
+        normalize_costs=normalize_costs, k=1, block_q=block_q,
+        interpret=interpret)
+    return ranked[0], util

@@ -168,6 +168,37 @@ def build_demo_engine(seed: int = 0, cache_size: int = 4096,
     return world, router, engine
 
 
+async def _start_metrics_http(service, host: str, port: int):
+    """Tiny HTTP/1.1 endpoint serving the Prometheus text exposition.
+
+    Any GET gets the full scrape (Prometheus ignores the path by
+    configuration anyway); no framework, no threads — one asyncio server
+    next to the JSONL one, rendering from the same
+    :class:`~repro.serving.MetricsRegistry`.
+    """
+    import asyncio
+
+    async def handle(reader, writer):
+        try:
+            # consume the request head; we answer every method/path the same
+            await asyncio.wait_for(reader.readuntil(b"\r\n\r\n"), timeout=5)
+        except Exception:  # noqa: BLE001 — partial/garbage request: drop it
+            writer.close()
+            return
+        body = service.render_metrics().encode()
+        head = (b"HTTP/1.1 200 OK\r\n"
+                b"Content-Type: text/plain; version=0.0.4; charset=utf-8\r\n"
+                b"Content-Length: " + str(len(body)).encode() +
+                b"\r\nConnection: close\r\n\r\n")
+        writer.write(head + body)
+        try:
+            await writer.drain()
+        finally:
+            writer.close()
+
+    return await asyncio.start_server(handle, host, port)
+
+
 def _listen_main(args, router, engine) -> None:
     """TCP front-end: RouterService + JSONL protocol (see --listen)."""
     import asyncio
@@ -185,6 +216,11 @@ def _listen_main(args, router, engine) -> None:
                               max_wait_s=args.max_wait_ms / 1e3))
         async with service:
             server = await start_server(service, host, int(port))
+            if args.metrics is not None:
+                msrv = await _start_metrics_http(service, host,
+                                                 int(args.metrics))
+                mport = msrv.sockets[0].getsockname()[1]
+                print(f"METRICS {host}:{mport}", flush=True)
             # parseable ready line — subprocess clients wait for it
             print(f"LISTENING {host}:{server_port(server)}", flush=True)
             async with server:
@@ -291,6 +327,10 @@ def main(argv=None):
                     help="route: serve the RouterService wire protocol "
                          "over TCP instead of the in-process stream "
                          "(PORT 0 picks a free port)")
+    ap.add_argument("--metrics", default=None, type=int, metavar="PORT",
+                    help="route --listen: also serve the Prometheus text "
+                         "exposition over HTTP on this port (0 picks a "
+                         "free port; printed as 'METRICS host:port')")
     ap.add_argument("--warmup", type=int, default=0, metavar="Q",
                     help="route: pre-compile the engine's padded buckets "
                          "for batches up to Q before serving")

@@ -26,6 +26,8 @@ from repro.serving.cache import (CacheEntry, CacheStats, ExportedStore,
                                  exported_program_dir)
 from repro.serving.engine import (BatchDecision, RouterEngine,
                                   RouterEngineConfig)
+from repro.serving.metrics import (DEFAULT_LATENCY_BUCKETS_MS,
+                                   MetricsRegistry)
 from repro.serving.protocol import (BackgroundServer, ServiceClient,
                                     start_server)
 from repro.serving.service import (AdminPlane, RouteRequest, RouteResponse,
@@ -33,7 +35,8 @@ from repro.serving.service import (AdminPlane, RouteRequest, RouteResponse,
 
 __all__ = [
     "AdminPlane", "BackgroundServer", "BatchDecision", "CacheEntry",
-    "CacheStats", "ExportedStore", "LatentCache", "MicroBatcher",
+    "CacheStats", "DEFAULT_LATENCY_BUCKETS_MS", "ExportedStore",
+    "LatentCache", "MetricsRegistry", "MicroBatcher",
     "RouteRequest",
     "enable_persistent_compile_cache", "exported_program_dir",
     "RouteResponse", "RouteResult", "RouterEngine", "RouterEngineConfig",

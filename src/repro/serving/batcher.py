@@ -58,6 +58,10 @@ class RouteResult:
     queued_s: float = 0.0          # enqueue → sub-batch route start
     compute_s: float = 0.0         # the sub-batch's score+route wall time
     diagnostics: Optional[Dict[str, Dict[str, float]]] = None
+    # ranked model names: ranked[0] == model, ranked[1:] the fallback
+    # chain (only routable models appear); None on paths that rank
+    # a single candidate
+    ranked: Optional[List[str]] = None
 
 
 @dataclasses.dataclass
@@ -191,11 +195,14 @@ class MicroBatcher:
                         "cost": float(dec.cost[i, j]),
                         "latency": float(dec.latency[i, j])}
                     for i, m in enumerate(dec.model_names)}
+        ranked = None
+        if dec.ranked is not None:
+            ranked = [dec.model_names[i] for i in dec.ranked[:, j]]
         return RouteResult(
             text=text, model=dec.names[j], model_index=int(dec.sel[j]),
             request_id=req.request_id, pool_version=dec.pool_version,
             policy=req.pol.name, queued_s=queued_s, compute_s=compute_s,
-            diagnostics=diag)
+            diagnostics=diag, ranked=ranked)
 
     @staticmethod
     def _resolve(fut: "Future", result=None, exc=None) -> None:

@@ -169,6 +169,14 @@ class RouterEngineConfig:
     recheck_margin: float = 0.01
     recheck_logit_tol: float = 0.012
     recheck_s_tol: float = 0.006
+    # ranked decisions (ISSUE 6): how many models the serving fast path
+    # (route_pinned, hence the MicroBatcher / RouterService plane) ranks
+    # per query.  Rank 0 is the selection — bit-identical to the k=1
+    # argmax path — and ranks 1.. are the client's fallback chain,
+    # produced by the same fused kernel at marginal cost.  Effective k is
+    # capped at the number of ROUTABLE models, so a ranked list never
+    # contains a breaker-masked model.  route_batch/route keep k=1.
+    topk: int = 4
 
 
 @dataclasses.dataclass(frozen=True)
@@ -191,6 +199,10 @@ class BatchDecision:
     # fraction of the batch the bf16_recheck tier re-scored at f32 (None
     # when the batch took a single-precision path)
     recheck_fraction: Optional[float] = None
+    # (k, Q) ranked model indices into ``model_names`` — row 0 is ``sel``,
+    # rows 1.. the per-query fallback chain (only routable models appear;
+    # k is capped at the routable-model count).  None on legacy paths.
+    ranked: Optional[np.ndarray] = None
 
 
 class _DevicePool:
@@ -621,7 +633,8 @@ class RouterEngine:
         return p, cost, lat, s_hat
 
     def _score_recheck(self, texts: Sequence[str], weights,
-                       pool: _DevicePool
+                       pool: _DevicePool,
+                       model_valid: Optional[np.ndarray] = None
                        ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
                                   float]:
         """The bf16_recheck tier: bulk bf16 scoring + margin-triggered
@@ -643,7 +656,13 @@ class RouterEngine:
         column can shift the normalization scalars the gaps were
         computed under, the margin test re-runs on the patched tensors
         until no new query falls inside it (monotone — each pass only
-        adds re-scored queries; in practice one pass suffices)."""
+        adds re-scored queries; in practice one pass suffices).
+
+        ``model_valid`` is the breaker mask the routing decision will run
+        under: the top-1/top-2 gap is measured over the MASKED utility
+        (masked rows pinned to the kernel's sentinel), so the margin
+        guards the gap that actually decides the selection rather than
+        one involving an unroutable model."""
         if not self._bf16_bulk():
             # backend gate: no fast bf16 path here — the bulk pass IS
             # the exact tier, nothing can need re-checking
@@ -655,7 +674,8 @@ class RouterEngine:
         p = np.array(p)
         Q = len(texts)
         M = p.shape[0]
-        if M < 2:       # a 1-model argmax can never flip: bf16 is exact
+        n_live = M if model_valid is None else int(model_valid.sum())
+        if n_live < 2:  # a 1-model argmax can never flip: bf16 is exact
             return p, cost, lat, 0.0
         w = np.asarray(weights, np.float64)
         edges = np.asarray(pool.edges, np.float64)
@@ -678,8 +698,9 @@ class RouterEngine:
         while True:
             # the gap must be measured in the SAME utility the routing
             # decision uses — reuse the kernel's reference formula
-            # rather than re-deriving it here
-            _, util = _kref.routing_argmax_ref(p, cost, lat, weights)
+            # (including the breaker mask) rather than re-deriving it
+            _, util = _kref.routing_topk_ref(p, cost, lat, weights,
+                                             model_valid=model_valid)
             util = np.asarray(util, np.float64)
             top2 = np.partition(util, (M - 2, M - 1), axis=0)[M - 2:]
             gap = top2[1] - top2[0]
@@ -721,16 +742,44 @@ class RouterEngine:
         with self._route_lock:
             self._check_predictor()
             pool = self._pool()  # pin ONE snapshot for scoring AND naming
+            mask = self._routable(pool)
             p, cost, lat = self._score(texts, pool)
         if len(texts) == 0:
             return [], np.zeros(0, np.int64), {"p": p, "cost": cost,
                                                "latency": lat}
-        sel, diag = core_route(p, cost, lat, weights=pol.weights,
-                               constraints=pol.constraints)
-        sel = np.asarray(sel)
+        sel, diag = self._core_route_masked(p, cost, lat, pol, mask)
         names = [pool.names[i] for i in sel]
         diag.update({"p": p, "cost": cost, "latency": lat})
         return names, sel, diag
+
+    def _routable(self, pool: _DevicePool) -> Optional[np.ndarray]:
+        """The pinned snapshot's breaker mask, or None when every model
+        is routable (the common case — keeps jit signatures and behavior
+        identical to a health-free engine)."""
+        mask = pool.snap.routable_mask()
+        if mask.all():
+            return None
+        if not mask.any():
+            raise EmptyPoolError(
+                "every model in the pool is masked unhealthy (open "
+                "circuit breakers) — no routable candidates")
+        return mask
+
+    def _core_route_masked(self, p, cost, lat, pol,
+                           mask: Optional[np.ndarray]
+                           ) -> Tuple[np.ndarray, Dict]:
+        """Constrained/diagnostic routing under the breaker mask: slice
+        the score tensors to routable models, run the Lagrangian path,
+        and map selections back to full-pool indices."""
+        if mask is None:
+            sel, diag = core_route(p, cost, lat, weights=pol.weights,
+                                   constraints=pol.constraints)
+            return np.asarray(sel), diag
+        live = np.flatnonzero(mask)
+        sel_sub, diag = core_route(p[mask], cost[mask], lat[mask],
+                                   weights=pol.weights,
+                                   constraints=pol.constraints)
+        return live[np.asarray(sel_sub)], diag
 
     def route_batch(self, texts: Sequence[str], policy: str = "balanced",
                     weights: Optional[Tuple[float, float, float]] = None
@@ -758,68 +807,91 @@ class RouterEngine:
         with self._route_lock:
             self._check_predictor()
             pool = self._pool()  # pin ONE snapshot for scoring AND naming
-            return self._route_fast(texts, pol, pool)
+            names, sel, _ = self._route_fast(texts, pol, pool, k=1)
+            return names, sel
 
     def route_pinned(self, texts: Sequence[str], policy="balanced",
                      weights: Optional[Tuple[float, float, float]] = None,
-                     want_scores: bool = False) -> BatchDecision:
+                     want_scores: bool = False,
+                     k: Optional[int] = None) -> BatchDecision:
         """Serving-plane entry point: route one batch and report WHICH pool
         snapshot produced the decision.
 
-        Selections are identical to :meth:`route_batch` / :meth:`route` on
-        the same inputs; the extra return surface (pinned pool version and
-        membership, optional (M, Q) score tensors) is what
+        Selections (rank 0) are identical to :meth:`route_batch` /
+        :meth:`route` on the same inputs; the extra return surface (pinned
+        pool version and membership, the (k, Q) ranked fallback chain,
+        optional (M, Q) score tensors) is what
         :class:`~repro.serving.service.RouterService` needs to build
         responses that stay coherent under live pool administration.
-        ``want_scores`` (or a constrained policy) takes the full scoring
-        path so per-model diagnostics can be fanned back per query."""
+        ``k`` overrides ``cfg.topk`` for this batch (effective k is capped
+        at the routable-model count).  ``want_scores`` (or a constrained
+        policy) takes the full scoring path so per-model diagnostics can
+        be fanned back per query; that path reports a rank list of depth 1
+        (constraint-aware fallback chains are out of scope — a runner-up
+        chosen by the unconstrained utility could violate the very
+        constraint that shaped the selection)."""
         from repro.api import Policy
 
         pol = Policy.of(policy, weights)
+        k = self.cfg.topk if k is None else int(k)
         with self._route_lock:
             self._check_predictor()
             pool = self._pool()  # pin ONE snapshot for scoring AND naming
             if pol.constraints is not None or want_scores:
+                mask = self._routable(pool)
                 p, cost, lat = self._score(texts, pool)
                 if len(texts) == 0:
                     return BatchDecision(
                         names=[], sel=np.zeros(0, np.int64),
                         pool_version=pool.snap.version,
-                        model_names=pool.names, p=p, cost=cost, latency=lat)
-                sel, _ = core_route(p, cost, lat, weights=pol.weights,
-                                    constraints=pol.constraints)
-                sel = np.asarray(sel)
+                        model_names=pool.names, p=p, cost=cost, latency=lat,
+                        ranked=np.zeros((1, 0), np.int64))
+                sel, _ = self._core_route_masked(p, cost, lat, pol, mask)
                 return BatchDecision(
                     names=[pool.names[i] for i in sel], sel=sel,
                     pool_version=pool.snap.version, model_names=pool.names,
-                    p=p, cost=cost, latency=lat)
-            names, sel = self._route_fast(texts, pol, pool)
+                    p=p, cost=cost, latency=lat, ranked=sel[None, :])
+            names, sel, ranked = self._route_fast(texts, pol, pool, k=k)
             return BatchDecision(names=names, sel=sel,
                                  pool_version=pool.snap.version,
                                  model_names=pool.names,
-                                 recheck_fraction=self.last_recheck_fraction)
+                                 recheck_fraction=self.last_recheck_fraction,
+                                 ranked=ranked)
 
-    def _route_fast(self, texts: Sequence[str], pol, pool: _DevicePool
-                    ) -> Tuple[List[str], np.ndarray]:
-        """Unconstrained fused-kernel routing against a pinned snapshot.
+    def _route_fast(self, texts: Sequence[str], pol, pool: _DevicePool,
+                    k: int = 1
+                    ) -> Tuple[List[str], np.ndarray, np.ndarray]:
+        """Unconstrained fused-kernel routing against a pinned snapshot,
+        returning (names, sel, ranked (k_eff, Q)).
 
         This is where the ``bf16_recheck`` tier lives: the bulk of the
         batch scores at bf16 and only margin-uncertain queries re-score
         at f32 (see :meth:`_score_recheck`), keeping selections identical
         to ``Router.route`` at ~half the encoder cost.  The re-checked
         fraction of the last batch lands in ``last_recheck_fraction`` /
-        ``BatchDecision.recheck_fraction``."""
+        ``BatchDecision.recheck_fraction``.
+
+        The snapshot's breaker mask enters the fused kernel as its
+        per-model validity vector, so open-breaker models are excluded
+        inside the jitted program — from the cost/latency normalization
+        AND from every rank.  An all-routable pool passes ``None``
+        (the pre-health jit signature: behavior and compiled program are
+        identical to a health-free engine, which is what keeps k=1
+        selections bit-for-bit equal to the PR 5 argmax path)."""
         Q = len(texts)
+        mask = self._routable(pool)
         if Q == 0:
             self.last_recheck_fraction = None
-            return [], np.zeros(0, np.int64)
+            return [], np.zeros(0, np.int64), np.zeros((1, 0), np.int64)
         if self.cfg.precision == "bf16_recheck":
             p, cost, lat, frac = self._score_recheck(texts, pol.weights,
-                                                     pool)
+                                                     pool, mask)
             self.last_recheck_fraction = frac
         else:
             p, cost, lat = self._score(texts, pool)
             self.last_recheck_fraction = None
+        n_live = pool.snap.n_models if mask is None else int(mask.sum())
+        k_eff = max(min(int(k), n_live), 1)
         w = np.asarray(pol.weights, np.float32)
         if Q > self.cfg.max_batch:
             bucket, valid = Q, None
@@ -827,15 +899,17 @@ class RouterEngine:
             bucket = self._bucket(Q)
             valid = np.zeros(bucket, bool)
             valid[:Q] = True
-        sel_pad, _ = ops.routing_argmax(
+        ranked_pad, _ = ops.routing_topk(
             jnp.asarray(self._pad_cols(p, bucket)),
             jnp.asarray(self._pad_cols(cost, bucket)),
             jnp.asarray(self._pad_cols(lat, bucket)),
             jnp.asarray(w),
             valid=None if valid is None else jnp.asarray(valid),
-            use_pallas=self._use_pallas())
-        sel = np.asarray(sel_pad)[:Q]
-        return [pool.names[i] for i in sel], sel
+            model_valid=None if mask is None else jnp.asarray(mask),
+            k=k_eff, use_pallas=self._use_pallas())
+        ranked = np.asarray(ranked_pad)[:, :Q]
+        sel = ranked[0]
+        return [pool.names[i] for i in sel], sel, ranked
 
     def _pad_cols(self, x: np.ndarray, cols: int) -> np.ndarray:
         out = np.zeros((x.shape[0], cols), np.float32)
@@ -973,12 +1047,20 @@ class RouterEngine:
                 jnp.zeros((bq, D), jnp.float32), pool)
             valid = np.zeros(bq, bool)
             valid[:1] = True
-            out, _ = ops.routing_argmax(
-                jnp.zeros((M, bq), jnp.float32),
-                jnp.zeros((M, bq), jnp.float32),
-                jnp.zeros((M, bq), jnp.float32),
-                jnp.zeros(3, jnp.float32), valid=jnp.asarray(valid),
-                use_pallas=self._use_pallas())
+            zeros = jnp.zeros((M, bq), jnp.float32)
+            w0 = jnp.zeros(3, jnp.float32)
+            # the ranked-decision programs the serving plane dispatches:
+            # k=1 (route_batch) and cfg.topk (route_pinned), plus the
+            # breaker-masked variant of the latter so the first failover
+            # after a breaker opens pays no jit stall
+            k_top = max(min(self.cfg.topk, M), 1)
+            for kk, mv in ((1, None), (k_top, None),
+                           (k_top, jnp.ones(M, bool))):
+                if kk == k_top and mv is None and k_top == 1:
+                    continue
+                out, _ = ops.routing_topk(
+                    zeros, zeros, zeros, w0, valid=jnp.asarray(valid),
+                    model_valid=mv, k=kk, use_pallas=self._use_pallas())
             return out
 
         tasks = []

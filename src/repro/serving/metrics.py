@@ -1,0 +1,187 @@
+"""Minimal Prometheus-style metrics registry for the serving plane.
+
+No client library in the container, so this implements the three
+instrument kinds the router needs — monotonic counters, point-in-time
+gauges, and fixed-bucket histograms — plus text exposition in the
+Prometheus format (``# HELP`` / ``# TYPE`` headers, ``{label="..."}``
+series).  Everything is thread-safe under one registry lock: the service
+records from its asyncio loop AND from sync admin calls, and the scraper
+runs on yet another thread.
+
+Gauges can also be COLLECTED lazily: :meth:`MetricsRegistry.on_collect`
+registers a callback run at scrape time, which is how pool-derived
+series (breaker states, healthy-model count, pool version) stay exact
+without the pool pushing an update on every copy-on-write bump.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+__all__ = ["MetricsRegistry", "DEFAULT_LATENCY_BUCKETS_MS"]
+
+#: Bucket upper bounds (milliseconds) for request-latency histograms —
+#: roughly log-spaced from sub-millisecond queueing to multi-second tails.
+DEFAULT_LATENCY_BUCKETS_MS = (
+    0.5, 1, 2.5, 5, 10, 25, 50, 100, 250, 500, 1000, 2500, 5000)
+
+_LabelKV = Tuple[Tuple[str, str], ...]
+
+
+def _labelkey(labels: Optional[Dict[str, str]]) -> _LabelKV:
+    return tuple(sorted((labels or {}).items()))
+
+
+def _fmt_labels(kv: _LabelKV) -> str:
+    if not kv:
+        return ""
+    inner = ",".join(f'{k}="{_escape(v)}"' for k, v in kv)
+    return "{" + inner + "}"
+
+
+def _escape(v: str) -> str:
+    return str(v).replace("\\", r"\\").replace('"', r'\"').replace(
+        "\n", r"\n")
+
+
+def _fmt_value(x: float) -> str:
+    f = float(x)
+    return str(int(f)) if f == int(f) and abs(f) < 1e15 else repr(f)
+
+
+class _Metric:
+    def __init__(self, name: str, help_: str, kind: str):
+        self.name = name
+        self.help = help_
+        self.kind = kind
+        self.series: Dict[_LabelKV, float] = {}
+
+    def render(self) -> List[str]:
+        lines = [f"# HELP {self.name} {self.help}",
+                 f"# TYPE {self.name} {self.kind}"]
+        for kv in sorted(self.series):
+            lines.append(f"{self.name}{_fmt_labels(kv)} "
+                         f"{_fmt_value(self.series[kv])}")
+        return lines
+
+
+class _Histogram:
+    def __init__(self, name: str, help_: str, buckets: Sequence[float]):
+        self.name = name
+        self.help = help_
+        self.buckets = tuple(sorted(float(b) for b in buckets))
+        self.series: Dict[_LabelKV, List] = {}   # [counts..., sum, count]
+
+    def observe(self, value: float, kv: _LabelKV) -> None:
+        st = self.series.get(kv)
+        if st is None:
+            st = self.series[kv] = [0] * len(self.buckets) + [0.0, 0]
+        for i, ub in enumerate(self.buckets):
+            if value <= ub:
+                st[i] += 1
+        st[-2] += float(value)
+        st[-1] += 1
+
+    def render(self) -> List[str]:
+        lines = [f"# HELP {self.name} {self.help}",
+                 f"# TYPE {self.name} histogram"]
+        for kv in sorted(self.series):
+            st = self.series[kv]
+            for i, ub in enumerate(self.buckets):
+                lkv = kv + (("le", _fmt_value(ub)),)
+                lines.append(f"{self.name}_bucket{_fmt_labels(lkv)} {st[i]}")
+            lkv = kv + (("le", "+Inf"),)
+            lines.append(f"{self.name}_bucket{_fmt_labels(lkv)} {st[-1]}")
+            lines.append(f"{self.name}_sum{_fmt_labels(kv)} "
+                         f"{_fmt_value(st[-2])}")
+            lines.append(f"{self.name}_count{_fmt_labels(kv)} {st[-1]}")
+        return lines
+
+
+class MetricsRegistry:
+    """Thread-safe counter/gauge/histogram registry with text exposition."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._metrics: Dict[str, object] = {}
+        self._collectors: List[Callable[["MetricsRegistry"], None]] = []
+
+    # ------------------------------------------------------------------
+    # recording
+    # ------------------------------------------------------------------
+    def counter_inc(self, name: str, help_: str = "",
+                    labels: Optional[Dict[str, str]] = None,
+                    amount: float = 1.0) -> None:
+        with self._lock:
+            m = self._get(name, help_, "counter")
+            kv = _labelkey(labels)
+            m.series[kv] = m.series.get(kv, 0.0) + amount
+
+    def counter_set(self, name: str, value: float, help_: str = "",
+                    labels: Optional[Dict[str, str]] = None) -> None:
+        """Pin a counter to an absolute value — for monotone totals
+        accumulated elsewhere (cache stats, batcher counters) and copied
+        in by a scrape-time collector."""
+        with self._lock:
+            m = self._get(name, help_, "counter")
+            m.series[_labelkey(labels)] = float(value)
+
+    def gauge_set(self, name: str, value: float, help_: str = "",
+                  labels: Optional[Dict[str, str]] = None) -> None:
+        with self._lock:
+            m = self._get(name, help_, "gauge")
+            m.series[_labelkey(labels)] = float(value)
+
+    def histogram_observe(self, name: str, value: float, help_: str = "",
+                          labels: Optional[Dict[str, str]] = None,
+                          buckets: Sequence[float] =
+                          DEFAULT_LATENCY_BUCKETS_MS) -> None:
+        with self._lock:
+            m = self._metrics.get(name)
+            if m is None:
+                m = self._metrics[name] = _Histogram(name, help_, buckets)
+            elif not isinstance(m, _Histogram):
+                raise TypeError(f"metric {name!r} is a {m.kind}, "
+                                f"not a histogram")
+            m.observe(float(value), _labelkey(labels))
+
+    def on_collect(self,
+                   fn: Callable[["MetricsRegistry"], None]) -> None:
+        """Register a scrape-time callback (e.g. read pool breaker state
+        into gauges).  Callbacks run OUTSIDE the registry lock and may
+        call the recording methods freely."""
+        self._collectors.append(fn)
+
+    # ------------------------------------------------------------------
+    # reading
+    # ------------------------------------------------------------------
+    def value(self, name: str,
+              labels: Optional[Dict[str, str]] = None) -> float:
+        """Current value of a counter/gauge series (0.0 if unset)."""
+        with self._lock:
+            m = self._metrics.get(name)
+            if m is None or isinstance(m, _Histogram):
+                return 0.0
+            return float(m.series.get(_labelkey(labels), 0.0))
+
+    def render(self) -> str:
+        """Prometheus text exposition of every registered series."""
+        for fn in list(self._collectors):
+            fn(self)
+        with self._lock:
+            lines: List[str] = []
+            for name in sorted(self._metrics):
+                lines.extend(self._metrics[name].render())
+        return "\n".join(lines) + "\n"
+
+    # ------------------------------------------------------------------
+    def _get(self, name: str, help_: str, kind: str) -> _Metric:
+        m = self._metrics.get(name)
+        if m is None:
+            m = self._metrics[name] = _Metric(name, help_, kind)
+        elif isinstance(m, _Histogram) or m.kind != kind:
+            raise TypeError(f"metric {name!r} already registered with a "
+                            f"different kind")
+        if help_ and not m.help:
+            m.help = help_
+        return m

@@ -27,7 +27,14 @@ Message surface (mirrors :mod:`repro.serving.service`):
     frame sent before the admin op COMPLETES (its response is written)
     before the mutation lands, so a client never sees a pre-admin
     request routed against the post-admin pool;
-  * ``{"op": "stats"}`` / ``{"op": "ping"}`` — observability.
+  * ``{"op": "report_outcome", "request_id", "model", "ok",
+    "latency_ms", "tokens"}`` → feeds an observed outcome back into the
+    live pool (circuit breaker + EWMA re-profiling; see
+    :meth:`RouterService.report_outcome`) and returns the transition
+    summary;
+  * ``{"op": "stats"}`` / ``{"op": "ping"}`` / ``{"op": "metrics"}`` —
+    observability (``metrics`` returns the Prometheus text exposition in
+    the ``text`` field).
 
 Responses carry ``status`` — ``"ok"``, or the typed shed statuses
 ``"overloaded"`` / ``"deadline_exceeded"`` / ``"error"`` which
@@ -149,6 +156,8 @@ def response_to_json(resp: RouteResponse) -> Dict:
            "model": resp.model, "model_index": resp.model_index,
            "pool_version": resp.pool_version, "policy": resp.policy,
            "queued_ms": resp.queued_ms, "compute_ms": resp.compute_ms}
+    if resp.ranked is not None:
+        rec["ranked"] = list(resp.ranked)
     if resp.diagnostics is not None:
         rec["diagnostics"] = resp.diagnostics
     if resp.error is not None:
@@ -167,7 +176,8 @@ def response_from_json(frame: Dict, text: str = "") -> RouteResponse:
         compute_ms=float(frame.get("compute_ms", 0.0)),
         diagnostics=frame.get("diagnostics"),
         status=frame.get("status", "ok"),
-        error=frame.get("error"))
+        error=frame.get("error"),
+        ranked=frame.get("ranked"))
 
 
 # ---------------------------------------------------------------------------
@@ -383,9 +393,29 @@ async def _handle_connection(service: RouterService,
                     await send({"id": frame.get("id"), "status": "error",
                                 "error": str(e),
                                 "error_type": type(e).__name__})
+            elif op == "report_outcome":
+                # pool writer like admin — run off-loop and answer inline
+                # (no barrier: outcomes race with routing by nature, the
+                # pool's copy-on-write bump keeps every batch coherent)
+                try:
+                    info = await loop.run_in_executor(
+                        None, lambda: service.report_outcome(
+                            frame.get("request_id"), frame["model"],
+                            bool(frame.get("ok", True)),
+                            latency_ms=frame.get("latency_ms"),
+                            tokens=frame.get("tokens")))
+                    await send({"id": frame.get("id"), "status": "ok",
+                                **info})
+                except Exception as e:  # noqa: BLE001 — keep conn alive
+                    await send({"id": frame.get("id"), "status": "error",
+                                "error": str(e),
+                                "error_type": type(e).__name__})
             elif op == "stats":
                 await send({"id": frame.get("id"), "status": "ok",
                             "stats": service.stats()})
+            elif op == "metrics":
+                await send({"id": frame.get("id"), "status": "ok",
+                            "text": service.render_metrics()})
             elif op == "ping":
                 await send({"id": frame.get("id"), "status": "ok",
                             "op": "pong",
@@ -580,12 +610,32 @@ class ServiceClient:
         return [response_from_json(r, text=t)
                 for r, t in zip(rep["results"], texts)]
 
+    # -- outcome feedback ----------------------------------------------
+    def report_outcome(self, request_id: Optional[str], model: str,
+                       ok: bool, latency_ms: Optional[float] = None,
+                       tokens: Optional[int] = None) -> Dict:
+        """Report one observed outcome for a routed request (closed
+        loop): drives the model's circuit breaker and EWMA latency
+        re-profiling server-side.  Returns the transition summary."""
+        frame: Dict[str, Any] = {"op": "report_outcome",
+                                 "request_id": request_id,
+                                 "model": model, "ok": bool(ok)}
+        if latency_ms is not None:
+            frame["latency_ms"] = float(latency_ms)
+        if tokens is not None:
+            frame["tokens"] = int(tokens)
+        return _raise_for_status(self._rpc(frame))
+
     # -- observability -------------------------------------------------
     def ping(self) -> Dict:
         return _raise_for_status(self._rpc({"op": "ping"}))
 
     def stats(self) -> Dict:
         return _raise_for_status(self._rpc({"op": "stats"}))["stats"]
+
+    def metrics(self) -> str:
+        """The server's Prometheus text exposition."""
+        return _raise_for_status(self._rpc({"op": "metrics"}))["text"]
 
     def close(self) -> None:
         try:

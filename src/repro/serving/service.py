@@ -64,6 +64,7 @@ from repro.core.errors import (DeadlineExceededError, OverloadedError,
                                ServiceError)
 from repro.serving.batcher import MicroBatcher, RouteResult
 from repro.serving.engine import RouterEngine, RouterEngineConfig
+from repro.serving.metrics import MetricsRegistry
 
 
 @dataclasses.dataclass(frozen=True)
@@ -103,6 +104,10 @@ class RouteResponse:
     diagnostics: Optional[Dict[str, Dict[str, float]]] = None
     status: str = "ok"
     error: Optional[str] = None
+    # ranked model names: ranked[0] == model, ranks 1.. the fallback
+    # chain the client should walk when the selection fails mid-request
+    # (only routable models appear).  None on legacy/diagnostic paths.
+    ranked: Optional[List[str]] = None
 
     @property
     def ok(self) -> bool:
@@ -124,7 +129,8 @@ def _to_response(r: RouteResult) -> RouteResponse:
         request_id=r.request_id, text=r.text, model=r.model,
         model_index=r.model_index, pool_version=r.pool_version,
         policy=r.policy, queued_ms=r.queued_s * 1e3,
-        compute_ms=r.compute_s * 1e3, diagnostics=r.diagnostics)
+        compute_ms=r.compute_s * 1e3, diagnostics=r.diagnostics,
+        ranked=r.ranked)
 
 
 def _shed_response(req: RouteRequest, status: str, error: str
@@ -215,6 +221,8 @@ class RouterService:
             "submitted": 0, "completed": 0, "shed_overloaded": 0,
             "shed_deadline": 0, "errors": 0,
         }
+        self.metrics = MetricsRegistry()
+        self.metrics.on_collect(self._collect_metrics)
 
     # ------------------------------------------------------------------
     # lifecycle
@@ -263,6 +271,9 @@ class RouterService:
         # "idle ⇒ shed"
         if self._sem.locked() and self._waiting >= self.cfg.max_queue:
             self.stats_counters["shed_overloaded"] += n
+            self.metrics.counter_inc(
+                "router_shed_total", "Requests shed before routing",
+                {"reason": "overloaded"}, amount=n)
             raise OverloadedError(
                 f"admission queue full ({self._waiting} waiting ≥ "
                 f"max_queue={self.cfg.max_queue}); retry with backoff")
@@ -275,6 +286,9 @@ class RouterService:
             yield deadline
         except DeadlineExceededError:
             self.stats_counters["shed_deadline"] += n
+            self.metrics.counter_inc(
+                "router_shed_total", "Requests shed before routing",
+                {"reason": "deadline_exceeded"}, amount=n)
             raise
         finally:
             self._sem.release()
@@ -294,7 +308,7 @@ class RouterService:
             result: RouteResult = await self.batcher.submit_awaitable(
                 req.text, policy=req.policy, request_id=req.request_id,
                 deadline=deadline, diagnostics=req.diagnostics)
-        return _to_response(result)
+        return self._observe(_to_response(result))
 
     async def submit_many(self, requests: Sequence[Union[RouteRequest, str]],
                           return_exceptions: bool = False
@@ -328,7 +342,7 @@ class RouterService:
                 self.batcher.submit_bulk(
                     texts, policy=policy, request_id=request_id,
                     deadline=deadline, diagnostics=diagnostics))
-        return [_to_response(r) for r in results]
+        return [self._observe(_to_response(r)) for r in results]
 
     async def _submit_or_status(self, request: Union[RouteRequest, str]
                                 ) -> RouteResponse:
@@ -395,8 +409,95 @@ class RouterService:
                 getter = None
 
     # ------------------------------------------------------------------
+    # outcome feedback (closed loop)
+    # ------------------------------------------------------------------
+    def report_outcome(self, request_id: Optional[str], model: str,
+                       ok: bool, latency_ms: Optional[float] = None,
+                       tokens: Optional[int] = None) -> Dict[str, Any]:
+        """Feed one observed request outcome back into the live pool.
+
+        Clients call this after actually invoking the selected (or a
+        fallback) model: failures advance that model's circuit breaker
+        (opening it masks the model inside the scoring program at the
+        next batch), successes with a measured ``latency_ms`` re-profile
+        its canonical TTFT/TPOT rows through the EWMA — all through the
+        pool's copy-on-write bump, so in-flight batches are untouched.
+
+        Sync and thread-safe (serialized with the admin plane — both are
+        pool writers); callable before ``start()`` and from any thread.
+        Returns the transition summary (state before/after, EWMA ratio,
+        new pool version)."""
+        with self.admin._lock:
+            info = self.router.pool.record_outcome(
+                model, bool(ok),
+                latency_s=None if latency_ms is None else latency_ms / 1e3,
+                tokens=tokens)
+        info["request_id"] = request_id
+        m = self.metrics
+        m.counter_inc("router_outcomes_total",
+                      "Client-reported request outcomes",
+                      {"model": model, "ok": str(bool(ok)).lower()})
+        if info["transition"]:
+            m.counter_inc("router_breaker_transitions_total",
+                          "Circuit-breaker state transitions",
+                          {"model": model, "to": info["state_after"]})
+        return info
+
+    # ------------------------------------------------------------------
     # observability
     # ------------------------------------------------------------------
+    def _observe(self, resp: RouteResponse) -> RouteResponse:
+        m = self.metrics
+        m.counter_inc("router_requests_total", "Routed requests",
+                      {"policy": resp.policy, "status": resp.status})
+        if resp.ok:
+            m.histogram_observe("router_request_queued_ms", resp.queued_ms,
+                                "Enqueue-to-route-start wait")
+            m.histogram_observe("router_request_compute_ms",
+                                resp.compute_ms,
+                                "Score+route wall time of the sub-batch")
+        return resp
+
+    def _collect_metrics(self, reg: MetricsRegistry) -> None:
+        """Scrape-time collector: pool/breaker/cache-derived series read
+        fresh from the current snapshot, so they are exact without the
+        pool pushing an update on every copy-on-write bump."""
+        snap = self.router.pool.snapshot()
+        reg.gauge_set("router_pool_version", snap.version,
+                      "Copy-on-write pool version")
+        reg.gauge_set("router_pool_models", snap.n_models,
+                      "Models in the pool")
+        reg.gauge_set("router_pool_models_healthy",
+                      int(snap.routable_mask().sum()),
+                      "Models the scoring program may select")
+        for i, name in enumerate(snap.names):
+            reg.gauge_set("router_breaker_state",
+                          int(snap.breaker[i]),
+                          "Circuit-breaker state (0=closed, 1=open, "
+                          "2=half_open)", {"model": name})
+            reg.gauge_set("router_outcome_ewma_latency_ratio",
+                          float(snap.ewma_lat_ratio[i]),
+                          "EWMA of observed/predicted request latency",
+                          {"model": name})
+        frac = self.engine.last_recheck_fraction
+        if frac is not None:
+            reg.gauge_set("router_recheck_fraction", float(frac),
+                          "f32 re-check fraction of the last batch")
+        cs = self.engine.cache_stats
+        if cs is not None:
+            reg.counter_set("router_cache_hits_total", cs.hits,
+                            "Latent-cache hits")
+            reg.counter_set("router_cache_misses_total", cs.misses,
+                            "Latent-cache misses")
+        reg.counter_set("router_batches_routed_total",
+                        self.batcher.batches_routed,
+                        "Coalesced batches routed")
+
+    def render_metrics(self) -> str:
+        """Prometheus text exposition of the service's metrics — the
+        payload of the wire ``metrics`` op and ``serve.py --metrics``."""
+        return self.metrics.render()
+
     def stats(self) -> Dict[str, Any]:
         snap = self.router.pool.snapshot()
         st = dict(self.stats_counters)

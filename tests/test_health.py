@@ -1,0 +1,378 @@
+"""Closed-loop health: circuit breaker, EWMA re-profiling, pool schema
+v2 migration, metrics registry, ranked top-k serving parity, and the
+outcome-feedback wire op (PR 6)."""
+import json
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.errors import EmptyPoolError, SchemaVersionError
+from repro.core.pool import (BREAKER_CLOSED, BREAKER_HALF_OPEN, BREAKER_OPEN,
+                             POOL_SCHEMA_VERSION, HealthPolicy, ModelPool)
+
+
+def _tiny_pool(n: int = 3, policy: HealthPolicy = None) -> ModelPool:
+    from repro.core.artifacts import ModelProfile
+    from repro.data.tokenizer import TokenizerSpec
+
+    edges = np.array([0.0, 16.0, 64.0, 256.0], np.float64)
+    pool = ModelPool(edges)
+    rng = np.random.default_rng(0)
+    for i in range(n):
+        pool.onboard(
+            f"m{i}",
+            ModelProfile(theta=rng.normal(size=8).astype(np.float32),
+                         length_row=np.full(len(edges) + 1, 100.0 + 10 * i),
+                         ttft=0.2 + 0.1 * i, tpot=0.01 * (i + 1)),
+            price_in=0.5 + i, price_out=1.0 + i,
+            tokenizer=TokenizerSpec(vocab_size=32_000, salt=f"m{i}"))
+    if policy is not None:
+        pool.set_health_policy(policy)
+    return pool
+
+
+# ---------------------------------------------------------------------------
+# circuit breaker state machine
+# ---------------------------------------------------------------------------
+
+def test_breaker_opens_after_threshold_and_masks():
+    pool = _tiny_pool(policy=HealthPolicy(failure_threshold=3,
+                                          open_cooldown_s=30.0))
+    t = 1000.0
+    for i in range(2):
+        info = pool.record_outcome("m1", ok=False, now=t)
+        assert info["state_after"] == "closed" and info["transition"] is None
+    info = pool.record_outcome("m1", ok=False, now=t)
+    assert info["transition"] == "closed->open"
+    assert pool.snapshot().breaker[1] == BREAKER_OPEN
+    mask = pool.snapshot().routable_mask(now=t + 1.0)
+    np.testing.assert_array_equal(mask, [True, False, True])
+    # success resets the consecutive-failure count while closed
+    pool.record_outcome("m0", ok=False, now=t)
+    pool.record_outcome("m0", ok=False, now=t)
+    pool.record_outcome("m0", ok=True, now=t)
+    for _ in range(2):
+        info = pool.record_outcome("m0", ok=False, now=t)
+    assert info["state_after"] == "closed", "success must reset the count"
+
+
+def test_breaker_half_open_recovery_and_reopen():
+    pol = HealthPolicy(failure_threshold=2, open_cooldown_s=10.0,
+                       half_open_probes=2)
+    pool = _tiny_pool(policy=pol)
+    t = 2000.0
+    pool.record_outcome("m2", ok=False, now=t)
+    pool.record_outcome("m2", ok=False, now=t)
+    assert pool.snapshot().breaker[2] == BREAKER_OPEN
+    # inside the cooldown: still masked, state untouched by routable_mask
+    assert not pool.snapshot().routable_mask(now=t + 5.0)[2]
+    # past the cooldown: probe traffic admitted WITHOUT mutating state
+    assert pool.snapshot().routable_mask(now=t + 11.0)[2]
+    assert pool.snapshot().breaker[2] == BREAKER_OPEN
+    # first post-cooldown outcome materializes half-open
+    info = pool.record_outcome("m2", ok=True, now=t + 11.0)
+    assert info["transition"] == "open->half_open"
+    assert pool.snapshot().breaker[2] == BREAKER_HALF_OPEN
+    # a half-open failure slams it shut again, cooldown restarts
+    info = pool.record_outcome("m2", ok=False, now=t + 12.0)
+    assert info["transition"] == "half_open->open"
+    assert not pool.snapshot().routable_mask(now=t + 13.0)[2]
+    # full recovery: cooldown → two successful probes → closed
+    info = pool.record_outcome("m2", ok=True, now=t + 23.0)
+    assert info["state_after"] == "half_open"
+    info = pool.record_outcome("m2", ok=True, now=t + 24.0)
+    assert info["transition"] == "half_open->closed"
+    assert pool.snapshot().breaker[2] == BREAKER_CLOSED
+
+
+def test_record_outcome_is_copy_on_write():
+    pool = _tiny_pool()
+    snap_before = pool.snapshot()
+    v = pool.version
+    pool.record_outcome("m0", ok=False, now=0.0)
+    assert pool.version == v + 1
+    assert snap_before.consec_failures[0] == 0, "pinned snapshot mutated"
+    assert pool.snapshot().consec_failures[0] == 1
+
+
+# ---------------------------------------------------------------------------
+# EWMA latency re-profiling
+# ---------------------------------------------------------------------------
+
+def test_ewma_reprofiling_converges():
+    """Feeding outcomes that consistently run 2× the predicted latency
+    must converge ttft/tpot toward the observed regime."""
+    pool = _tiny_pool(policy=HealthPolicy(ewma_alpha=0.2))
+    s0 = pool.snapshot()
+    tokens = 100
+    target = 2.0 * (s0.ttft[0, 0] + tokens * s0.tpot[0, 0])
+    for _ in range(60):
+        pool.record_outcome("m0", ok=True, latency_s=float(target),
+                            tokens=tokens, now=0.0)
+    s1 = pool.snapshot()
+    predicted = s1.ttft[0, 0] + tokens * s1.tpot[0, 0]
+    assert abs(predicted - target) / target < 0.02
+    assert abs(s1.ewma_lat_ratio[0] - 1.0) < 0.05, \
+        "once re-profiled, observed/predicted must hover at 1"
+    # other models untouched
+    assert s1.ttft[1, 0] == s0.ttft[1, 0]
+    assert s1.obs_count[0] == 60 and s1.obs_count[1] == 0
+
+
+def test_outcome_without_latency_skips_reprofiling():
+    pool = _tiny_pool()
+    s0 = pool.snapshot()
+    pool.record_outcome("m0", ok=True, now=0.0)
+    s1 = pool.snapshot()
+    assert s1.ttft[0, 0] == s0.ttft[0, 0]
+    assert s1.tpot[0, 0] == s0.tpot[0, 0]
+
+
+# ---------------------------------------------------------------------------
+# pool schema v1 <-> v2
+# ---------------------------------------------------------------------------
+
+def test_pool_v2_roundtrip_preserves_health():
+    pool = _tiny_pool(policy=HealthPolicy(failure_threshold=2))
+    pool.record_outcome("m1", ok=False, now=50.0)
+    pool.record_outcome("m1", ok=False, now=50.0)
+    pool.record_outcome("m0", ok=True, latency_s=0.5, tokens=10, now=50.0)
+    rec = pool.to_json()
+    assert rec["schema_version"] == POOL_SCHEMA_VERSION == 2
+    back = ModelPool.from_json(json.loads(json.dumps(rec)))
+    s, b = pool.snapshot(), back.snapshot()
+    np.testing.assert_array_equal(b.breaker, s.breaker)
+    np.testing.assert_array_equal(b.consec_failures, s.consec_failures)
+    np.testing.assert_allclose(b.opened_at, s.opened_at)
+    np.testing.assert_allclose(b.ewma_lat_ratio, s.ewma_lat_ratio)
+    np.testing.assert_allclose(b.ttft, s.ttft)
+    assert b.health_policy == s.health_policy
+    assert b.breaker[1] == BREAKER_OPEN
+
+
+def test_pool_v1_reads_through_migrator_and_writes_back():
+    pool = _tiny_pool()
+    pool.record_outcome("m0", ok=False, now=0.0)
+    # downgrade writer: legacy v1 record with no health block
+    rec1 = pool.to_json(schema_version=1)
+    assert rec1["schema_version"] == 1
+    assert "health" not in rec1 and "health_policy" not in rec1
+    # v1 → v2 migrator defaults every breaker closed, default policy
+    back = ModelPool.from_json(json.loads(json.dumps(rec1)))
+    s = back.snapshot()
+    np.testing.assert_array_equal(s.breaker, np.zeros(3, np.int8))
+    assert s.health_policy == HealthPolicy()
+    assert back.names == pool.names
+    np.testing.assert_allclose(s.thetas, pool.snapshot().thetas)
+    # and the migrated pool round-trips as v2
+    again = ModelPool.from_json(back.to_json())
+    np.testing.assert_array_equal(again.snapshot().breaker, s.breaker)
+
+
+def test_pool_newer_schema_refuses():
+    pool = _tiny_pool()
+    rec = pool.to_json()
+    rec["schema_version"] = POOL_SCHEMA_VERSION + 1
+    with pytest.raises(SchemaVersionError):
+        ModelPool.from_json(rec)
+    with pytest.raises(SchemaVersionError):
+        pool.to_json(schema_version=POOL_SCHEMA_VERSION + 1)
+
+
+def test_artifact_migration_hook():
+    """The checkpoint layer's registered-migrator chain upgrades an
+    old-version artifact record at load time (synthetic version bump —
+    the container format itself is still v1)."""
+    import os
+    import tempfile
+
+    import repro.checkpoint.ckpt as ckpt
+    from repro.checkpoint import (load_artifact, register_artifact_migration,
+                                  save_artifact)
+
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "art")
+        save_artifact(path, {"x": np.arange(4)}, meta={"m": 7})
+        rec = json.load(open(path + ".meta.json"))
+        rec["schema_version"] = 0          # pretend it predates v1
+        json.dump(rec, open(path + ".meta.json", "w"))
+        saved = dict(ckpt._ARTIFACT_MIGRATIONS)
+        ckpt._ARTIFACT_MIGRATIONS.clear()
+        try:
+            with pytest.raises(SchemaVersionError):
+                load_artifact(path)        # no migrator registered
+
+            @register_artifact_migration(0)
+            def _up(pair):
+                tree, meta = pair
+                tree["upgraded"] = True
+                return tree, meta
+
+            tree, meta = load_artifact(path)
+            assert tree["upgraded"] and meta == {"m": 7}
+            np.testing.assert_array_equal(tree["x"], np.arange(4))
+            with pytest.raises(ValueError):
+                register_artifact_migration(0)(lambda pair: pair)
+        finally:
+            ckpt._ARTIFACT_MIGRATIONS.clear()
+            ckpt._ARTIFACT_MIGRATIONS.update(saved)
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+def test_metrics_registry_render():
+    from repro.serving.metrics import MetricsRegistry
+
+    reg = MetricsRegistry()
+    reg.counter_inc("req_total", "requests", {"policy": "balanced"})
+    reg.counter_inc("req_total", labels={"policy": "balanced"}, amount=2)
+    reg.gauge_set("pool_models", 4, "pool size")
+    reg.histogram_observe("lat_ms", 3.0, buckets=(1, 5, 10))
+    reg.histogram_observe("lat_ms", 7.0, buckets=(1, 5, 10))
+    reg.on_collect(lambda r: r.gauge_set("collected", 1.0))
+    text = reg.render()
+    assert 'req_total{policy="balanced"} 3' in text
+    assert "# TYPE req_total counter" in text
+    assert "pool_models 4" in text
+    assert 'lat_ms_bucket{le="5"} 1' in text
+    assert 'lat_ms_bucket{le="10"} 2' in text
+    assert 'lat_ms_bucket{le="+Inf"} 2' in text
+    assert "lat_ms_sum 10" in text and "lat_ms_count 2" in text
+    assert "collected 1" in text, "on_collect callback must run at scrape"
+    assert reg.value("req_total", {"policy": "balanced"}) == 3.0
+    with pytest.raises(TypeError):
+        reg.gauge_set("req_total", 1.0)    # kind mismatch refuses
+
+
+# ---------------------------------------------------------------------------
+# serving: ranked decisions, masking, parity (demo stack)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture()
+def corpus(demo_stack):
+    world, _, _ = demo_stack
+    from repro.data import OOD_TASKS
+
+    qi = world.query_indices(OOD_TASKS)
+    return [world.queries[i].text for i in qi[:48]]
+
+
+@pytest.mark.parametrize("policy", ["balanced", "max_acc", "min_cost",
+                                    "min_lat"])
+def test_topk_rank0_matches_router_route(demo_stack, corpus, policy):
+    """With every breaker closed, rank 0 of the ranked top-k decision is
+    BIT-identical to the scalar reference path (Router.route) under
+    every built-in policy — the PR-5 selection contract."""
+    _, router, engine = demo_stack
+    _, sel_ref, _ = router.route(corpus, policy=policy)
+    dec = engine.route_pinned(corpus, policy=policy, k=4)
+    assert dec.ranked is not None and dec.ranked.shape == (4, len(corpus))
+    np.testing.assert_array_equal(dec.ranked[0], np.asarray(sel_ref))
+    np.testing.assert_array_equal(dec.sel, np.asarray(sel_ref))
+    # ranks are distinct models per query
+    assert all(len(set(dec.ranked[:, j])) == 4
+               for j in range(len(corpus)))
+
+
+def test_engine_masks_open_breaker_and_fails_over(demo_stack, corpus):
+    world, router, engine = demo_stack
+    snap_before = router.pool._snap
+    try:
+        router.pool.set_health_policy(HealthPolicy(failure_threshold=1))
+        names0, sel0 = engine.route_batch(corpus, policy="balanced")
+        victim = names0[int(sel0[0])]
+        router.pool.record_outcome(victim, ok=False)
+        names1, sel1 = engine.route_batch(corpus, policy="balanced")
+        assert victim not in {names1[int(s)] for s in sel1}
+        dec = engine.route_pinned(corpus, policy="balanced", k=4)
+        vidx = dec.model_names.index(victim)
+        assert not np.any(dec.ranked == vidx), \
+            "open breaker leaked into the ranked list"
+        # k clamps to the routable count (one of the 4 models is masked)
+        assert dec.ranked.shape[0] == len(dec.model_names) - 1
+    finally:
+        router.pool._snap = snap_before
+
+
+def test_all_breakers_open_raises_empty_pool(demo_stack, corpus):
+    _, router, engine = demo_stack
+    snap_before = router.pool._snap
+    try:
+        router.pool.set_health_policy(
+            HealthPolicy(failure_threshold=1, open_cooldown_s=1e6))
+        for name in router.pool.names:
+            router.pool.record_outcome(name, ok=False)
+        with pytest.raises(EmptyPoolError):
+            engine.route_batch(corpus[:4], policy="balanced")
+    finally:
+        router.pool._snap = snap_before
+
+
+def test_constrained_route_respects_breaker_mask(demo_stack, corpus):
+    """The constrained (non-fused) path applies the same breaker mask:
+    a permissive budget keeps every live model eligible, yet the open
+    breaker still keeps the victim out of the selections."""
+    from repro.api import Policy
+
+    _, router, engine = demo_stack
+    snap_before = router.pool._snap
+    pol = Policy.of("balanced").constrained(max_total_cost=1e9)
+    try:
+        router.pool.set_health_policy(HealthPolicy(failure_threshold=1))
+        names0, sel0 = engine.route_batch(corpus, policy="balanced")
+        victim = names0[int(sel0[0])]
+        router.pool.record_outcome(victim, ok=False)
+        dec = engine.route_pinned(corpus, policy=pol)
+        assert victim not in {dec.model_names[int(s)] for s in dec.sel}
+        assert dec.ranked is not None and dec.ranked.shape[0] == 1
+    finally:
+        router.pool._snap = snap_before
+
+
+# ---------------------------------------------------------------------------
+# service plane: outcome feedback + metrics over the wire
+# ---------------------------------------------------------------------------
+
+def test_report_outcome_and_metrics_over_wire(demo_stack, corpus):
+    from repro.serving import BackgroundServer, ServiceConfig
+    from repro.serving.protocol import ServiceClient
+
+    world, router, engine = demo_stack
+    snap_before = router.pool._snap
+    try:
+        router.pool.set_health_policy(
+            HealthPolicy(failure_threshold=2, open_cooldown_s=0.2,
+                         half_open_probes=1))
+        with BackgroundServer(router, engine=engine,
+                              cfg=ServiceConfig(max_batch=16,
+                                                max_wait_s=0.001)) as srv:
+            with ServiceClient(srv.host, srv.port) as client:
+                resps = client.route_many(corpus[:8])
+                assert all(r.ranked and r.ranked[0] == r.model
+                           for r in resps)
+                victim = resps[0].model
+                client.report_outcome("r0", victim, ok=False)
+                info = client.report_outcome("r1", victim, ok=False)
+                assert info["transition"] == "closed->open"
+                assert info["request_id"] == "r1"
+                # zero routing errors while the victim is masked
+                resps2 = client.route_many(corpus[:8])
+                assert all(r.ok and r.model != victim for r in resps2)
+                # recovery through a single probe
+                time.sleep(0.3)
+                info = client.report_outcome("r2", victim, ok=True,
+                                             latency_ms=50.0, tokens=8)
+                assert info["state_after"] in ("half_open", "closed")
+                m = client.metrics()
+                assert 'router_outcomes_total{model="%s",ok="false"} 2' \
+                    % victim in m
+                assert 'router_breaker_transitions_total{model="%s",' \
+                    'to="open"} 1' % victim in m
+                assert "router_pool_models_healthy" in m
+                assert "router_requests_total" in m
+                assert "router_request_compute_ms_bucket" in m
+    finally:
+        router.pool._snap = snap_before

@@ -190,3 +190,95 @@ def test_doptimal_kernel_plugs_into_greedy():
         alpha, 20,
         score_fn=lambda a, ainv: ops.doptimal_score(a, ainv)))
     assert np.array_equal(idx_ref, idx_pl)
+
+
+# ---------------------------------------------------------------------------
+# ranked top-k routing (PR 6)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("M,Q,k", [(2, 1, 2), (8, 256, 4), (5, 130, 5),
+                                   (16, 1000, 3)])
+@pytest.mark.parametrize("masked", [False, True])
+def test_routing_topk_sweep(M, Q, k, masked):
+    """Pallas top-k == jnp ref, with and without query/model masks."""
+    ks = jax.random.split(jax.random.key(6), 3)
+    p = jax.random.uniform(ks[0], (M, Q))
+    cost = jax.random.uniform(ks[1], (M, Q)) * 10
+    lat = jax.random.uniform(ks[2], (M, Q)) * 3
+    w = jnp.asarray((0.5, 0.3, 0.2), jnp.float32)
+    valid = (jnp.arange(Q) < max(Q - 3, 1)) if masked else None
+    mv = (jnp.arange(M) != 1) if masked else None   # mask model 1 out
+    ranked, util = ops.routing_topk(p, cost, lat, w, valid=valid,
+                                    model_valid=mv, k=k)
+    ranked_ref, util_ref = ref.routing_topk_ref(p, cost, lat, w, valid=valid,
+                                                model_valid=mv, k=k)
+    assert ranked.shape == (k, Q)
+    np.testing.assert_array_equal(np.asarray(ranked), np.asarray(ranked_ref))
+    np.testing.assert_allclose(np.asarray(util), np.asarray(util_ref),
+                               atol=2e-6)
+    if masked:
+        assert not np.any(np.asarray(ranked) == 1), \
+            "a masked model appeared in the ranked list"
+        # masked rows pinned to the sentinel, never a finite utility
+        assert np.all(np.asarray(util)[1] == ref.ROUTING_MASKED_UTIL)
+
+
+def test_routing_topk_rank0_is_argmax():
+    """k=1 (and rank 0 of any k) reproduces the argmax path bit-for-bit —
+    the PR-5 selection contract survives the top-k refactor."""
+    ks = jax.random.split(jax.random.key(7), 3)
+    M, Q = 9, 500
+    p = jax.random.uniform(ks[0], (M, Q))
+    cost = jax.random.uniform(ks[1], (M, Q))
+    lat = jax.random.uniform(ks[2], (M, Q))
+    w = jnp.asarray((0.6, 0.25, 0.15), jnp.float32)
+    sel, util = ops.routing_argmax(p, cost, lat, w)
+    for k in (1, 4):
+        ranked, util_k = ops.routing_topk(p, cost, lat, w, k=k)
+        np.testing.assert_array_equal(np.asarray(ranked[0]), np.asarray(sel))
+        np.testing.assert_array_equal(np.asarray(util_k), np.asarray(util))
+
+
+def test_routing_topk_tie_break_lowest_index():
+    """Duplicate utility rows: every rank resolves ties like jnp.argmax
+    (lowest index wins), in the ref AND the kernel."""
+    M, Q = 6, 64
+    base = jax.random.uniform(jax.random.key(8), (1, Q))
+    p = jnp.tile(base, (M, 1))          # all rows identical → all tied
+    cost = jnp.zeros((M, Q))
+    lat = jnp.zeros((M, Q))
+    w = jnp.asarray((1.0, 0.0, 0.0), jnp.float32)
+    for impl in (ops.routing_topk, ref.routing_topk_ref):
+        ranked, util = impl(p, cost, lat, w, k=3)
+        # tied everywhere → ranks are exactly [0, 1, 2] per query
+        np.testing.assert_array_equal(
+            np.asarray(ranked), np.tile(np.arange(3)[:, None], (1, Q)))
+    # rank 0 of the tied field == jnp.argmax over the utility matrix
+    _, util = ops.routing_topk(p, cost, lat, w, k=1)
+    np.testing.assert_array_equal(
+        np.asarray(ops.routing_topk(p, cost, lat, w, k=1)[0][0]),
+        np.asarray(jnp.argmax(util, axis=0)))
+
+
+def test_routing_topk_single_live_model_no_nan():
+    """One routable model means hi == lo in the masked normalization —
+    the guard must yield finite utilities (0-range → 0 contribution),
+    not NaN, and rank 0 must be the lone live model."""
+    M, Q = 5, 33
+    ks = jax.random.split(jax.random.key(9), 3)
+    p = jax.random.uniform(ks[0], (M, Q))
+    cost = jax.random.uniform(ks[1], (M, Q)) * 10
+    lat = jax.random.uniform(ks[2], (M, Q)) * 3
+    w = jnp.asarray((0.5, 0.3, 0.2), jnp.float32)
+    mv = jnp.arange(M) == 2             # only model 2 survives
+    for impl in (ops.routing_topk, ref.routing_topk_ref):
+        ranked, util = impl(p, cost, lat, w, model_valid=mv, k=2)
+        assert np.all(np.asarray(ranked[0]) == 2)
+        live = np.asarray(util)[2]
+        assert np.all(np.isfinite(live)), "hi==lo guard failed: NaN/inf"
+    # ref and kernel agree bit-for-bit on the degenerate case too
+    r_ref, u_ref = ref.routing_topk_ref(p, cost, lat, w, model_valid=mv, k=2)
+    r_tpu, u_tpu = ops.routing_topk(p, cost, lat, w, model_valid=mv, k=2)
+    np.testing.assert_array_equal(np.asarray(r_tpu), np.asarray(r_ref))
+    np.testing.assert_allclose(np.asarray(u_tpu), np.asarray(u_ref),
+                               atol=2e-6)
