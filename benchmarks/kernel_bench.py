@@ -82,6 +82,47 @@ def _encoder_block_rows(smoke: bool, reps: int, results: dict
     return rows
 
 
+def _similarity_rows(smoke: bool, reps: int, results: dict
+                     ) -> List[Tuple[str, float, float]]:
+    """Semantic-cache top-1 similarity scan (ISSUE 7) over the bank at
+    both at-rest layouts.  Q is one probe bucket (the engine pads to
+    128); N sweeps a small and a near-capacity bank."""
+    rows: List[Tuple[str, float, float]] = []
+    S, Q = 128, 128
+    sizes = (1024, 4096) if smoke else (1024, 16384)
+    use_pallas = ops._on_tpu()
+    kp = jax.random.split(jax.random.key(11), 3)
+    for N in sizes:
+        raw = jax.random.normal(kp[0], (N, S), jnp.float32)
+        raw = raw / jnp.linalg.norm(raw, axis=1, keepdims=True)
+        probes = jax.random.normal(kp[1], (Q, S), jnp.float32)
+        probes = probes / jnp.linalg.norm(probes, axis=1, keepdims=True)
+        valid = jax.random.uniform(kp[2], (N,)) < 0.9
+        per_store = {}
+        for store in ("f32", "int8"):
+            if store == "int8":
+                scale = jnp.max(jnp.abs(raw), axis=1) / 127.0
+                bank = jnp.clip(jnp.round(raw / scale[:, None]),
+                                -127, 127).astype(jnp.int8)
+            else:
+                bank, scale = raw, jnp.ones(N, jnp.float32)
+            fn = lambda b, s, v, p: ops.similarity_top1(
+                b, s, v, p, use_pallas=use_pallas)
+            us = _time(fn, bank, scale, valid, probes, reps=reps)
+            flops = 2.0 * N * Q * S
+            itemsize = 1.0 if store == "int8" else 4.0
+            bytes_ = itemsize * bank.size + 4.0 * (probes.size + N + 2 * Q)
+            rows.append((f"kernel/similarity_top1_{store}/N{N}Q{Q}",
+                         us, flops / bytes_))
+            per_store[store] = us
+            results[f"similarity_top1_{store}_N{N}"] = {
+                "us_per_call": us, "bank_rows": N, "probes": Q,
+                "sketch_dim": S}
+        results[f"similarity_top1_int8_N{N}"]["speedup_vs_f32"] = \
+            per_store["f32"] / per_store["int8"]
+    return rows
+
+
 def run(smoke: bool = False, quick: bool = False
         ) -> List[Tuple[str, float, float]]:
     rows: List[Tuple[str, float, float]] = []
@@ -137,6 +178,11 @@ def run(smoke: bool = False, quick: bool = False
     # encoder block (ISSUE 5) + BENCH_kernels.json artifact
     results: dict = {}
     rows.extend(_encoder_block_rows(smoke, reps, results))
+
+    # semantic-cache similarity scan (ISSUE 7): top-1 cosine over the
+    # latent bank at serving shapes — both at-rest layouts (int8 rows
+    # dequantize in-kernel), small and large occupancy
+    rows.extend(_similarity_rows(smoke, reps, results))
     artifact = {
         "workload": {"backend": jax.default_backend(),
                      "timed_path": ("pallas" if ops._on_tpu()

@@ -420,7 +420,10 @@ class Router:
     def save(self, path: str) -> None:
         """Persist artifacts (npz + meta json), pool (json) and the
         calibration config under the directory ``path``; :meth:`open`
-        restores all three."""
+        restores all three.  When the cached serving engine carries a
+        non-empty semantic latent bank it is persisted as a sidecar too
+        (``<path>/semcache``), so ``open(semantic_cache=…)`` starts with
+        a warm bank."""
         import json
 
         os.makedirs(path, exist_ok=True)
@@ -428,6 +431,13 @@ class Router:
         self.pool.save(os.path.join(path, POOL_NAME))
         with open(os.path.join(path, CONFIG_NAME), "w") as f:
             json.dump(_cfg_to_json(self.cfg), f, indent=1)
+        eng = self._engine
+        if eng is not None and getattr(eng, "bank", None) is not None \
+                and len(eng.bank) > 0:
+            from repro.serving import semcache as _semc
+
+            _semc.save_bank(path, eng.bank,
+                            _semc.latent_fingerprint(self.artifacts))
 
     @classmethod
     def open(cls, path: str,
@@ -435,7 +445,9 @@ class Router:
              warmup: Union[bool, int] = False,
              compile_cache: Union[bool, str, None] = None,
              aot_export: Union[bool, str, None] = None,
-             precision: str = "f32") -> "Router":
+             precision: str = "f32",
+             semantic_cache=None,
+             replay_log: Optional[str] = None) -> "Router":
         """Bring up a ready-to-route router from :meth:`save` output —
         milliseconds of IO, zero training.
 
@@ -483,7 +495,25 @@ class Router:
         identical to ``Router.route`` — or ``"bf16"``).  It configures
         the CACHED default engine, so warmup pre-compiles (and exports)
         the tier's programs and every later ``engine()`` / ``serve()``
-        call serves at that tier."""
+        call serves at that tier.
+
+        ``semantic_cache`` attaches the semantic latent cache
+        (``serving/semcache.py``) to the cached default engine: ``True``
+        uses the default :class:`~repro.serving.semcache
+        .SemanticCacheConfig`, or pass a config instance (e.g.
+        ``mode="bit_exact"`` / custom thresholds).  A ``<path>/semcache``
+        sidecar written by :meth:`save` is restored into the bank when
+        its predictor fingerprint matches (a re-calibrated artifact
+        starts cold, with a warning).
+
+        ``replay_log`` names a ``--log-routes`` JSONL serving log whose
+        distinct texts are replayed through
+        :meth:`~repro.serving.RouterEngine.warm_cache` after warmup —
+        warming the exact LRU (and the bank) so a restarted server
+        resumes at its pre-restart hit rate; with a restored bank the
+        replay itself resolves mostly semantically, skipping encoder
+        work.  The replayed-text count lands in
+        ``router.calibration['replayed_texts']``."""
         import json
 
         # load BEFORE touching the compile cache: enabling it creates
@@ -523,18 +553,43 @@ class Router:
             export_dir = (aot_export if isinstance(aot_export, str)
                           else exported_program_dir(path))
             router.calibration["aot_export_dir"] = export_dir
-        if precision != "f32" and art.has_predictor:
-            # seed the cached default engine with the tier so warmup —
-            # and every later engine()/serve() — runs that tier's stack
-            # (an uncalibrated artifact opens fine without an engine,
-            # same as the warmup guard below)
+        sem_cfg = None
+        if semantic_cache:
+            from repro.serving.semcache import SemanticCacheConfig
+
+            sem_cfg = (semantic_cache
+                       if isinstance(semantic_cache, SemanticCacheConfig)
+                       else SemanticCacheConfig())
+        if (precision != "f32" or sem_cfg is not None) and art.has_predictor:
+            # seed the cached default engine with the tier / semantic
+            # config so warmup — and every later engine()/serve() — runs
+            # that stack (an uncalibrated artifact opens fine without an
+            # engine, same as the warmup guard below)
             from repro.serving.engine import RouterEngine, RouterEngineConfig
 
             router._engine = RouterEngine(
-                router, RouterEngineConfig(precision=precision))
+                router, RouterEngineConfig(precision=precision,
+                                           semantic_cache=sem_cfg))
+            if sem_cfg is not None:
+                from repro.serving import semcache as _semc
+
+                bank = _semc.load_bank(
+                    path, sem_cfg, _semc.latent_fingerprint(art),
+                    capacity=router._engine.bank.capacity)
+                if bank is not None:
+                    router._engine.bank = bank
+                    router._engine.cache.evict_hook = bank.discard
+                    router.calibration["semcache_restored_rows"] = len(bank)
         if warmup and art.has_predictor and len(router.pool) > 0:
             max_q = warmup if isinstance(warmup, int) \
                 and not isinstance(warmup, bool) else 1
             router.calibration["warmup_s"] = router.engine().warmup(
                 max_queries=max_q, exports=export_dir)
+        if replay_log and art.has_predictor and len(router.pool) > 0:
+            from repro.serving.semcache import RouteLog
+
+            replayed = RouteLog.read_texts(replay_log)
+            if replayed:
+                router.calibration["replayed_texts"] = \
+                    router.engine().warm_cache(replayed)
         return router

@@ -20,6 +20,7 @@ from repro.kernels.encoder_block import encoder_block_tpu
 from repro.kernels.flash_attention import flash_attention_tpu
 from repro.kernels.irt2pl import irt_2pl_tpu
 from repro.kernels.routing import routing_argmax_tpu, routing_topk_tpu
+from repro.kernels.similarity import similarity_top1_tpu
 
 
 def _on_tpu() -> bool:
@@ -107,6 +108,27 @@ def routing_topk(p, cost, lat, weights, valid=None, model_valid=None,
                             model_valid=model_valid,
                             normalize_costs=normalize_costs, k=k,
                             interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "use_pallas"))
+def similarity_top1(bank, scales, row_valid, probes, *,
+                    block_n: int = ref.SIM_BLOCK_N,
+                    use_pallas: bool = True):
+    """Top-1 cosine-similarity scan over the semantic-cache latent bank
+    → (best_sim (Q,) f32, best_idx (Q,) int32).
+
+    ``bank`` is (N, S) float32 or int8 (dequantized in-kernel via the
+    (N,) per-row ``scales``); ``row_valid`` masks free/evicted rows;
+    ``probes`` is (Q, S) L2-normalized sketches.  Ties break to the
+    lowest row index; ``best_idx`` is meaningful only where ``best_sim``
+    beats :data:`~repro.kernels.ref.SIM_MASKED`.  The ref path runs the
+    identical tiled loop — results are bitwise equal at f32.
+    """
+    if not use_pallas:
+        return ref.similarity_top1_ref(bank, scales, row_valid, probes,
+                                       block_n=block_n)
+    return similarity_top1_tpu(bank, scales, row_valid, probes,
+                               block_n=block_n, interpret=not _on_tpu())
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas",))

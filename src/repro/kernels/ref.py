@@ -166,6 +166,73 @@ def routing_argmax_ref(p, cost, lat, weights, valid=None,
     return ranked[0], util
 
 
+#: Similarity assigned to invalid (free / padded) bank rows — finite so
+#: the running max stays NaN-free; every real cosine similarity beats it.
+SIM_MASKED = -3e38
+
+#: Tile rows per grid step shared by the Pallas kernel and this reference
+#: — the bitwise contract REQUIRES the same tiling (the running-max
+#: accumulation order is part of the result).
+SIM_BLOCK_N = 256
+
+_SIM_LANE = 128
+
+
+def similarity_top1_ref(bank, scales, row_valid, probes, *,
+                        block_n: int = SIM_BLOCK_N):
+    """Top-1 cosine-similarity scan over a latent bank (semantic cache).
+
+    bank: (N, S) stored keys, float32 or int8; scales: (N,) f32 per-row
+    dequantization scale (1.0 for f32 storage); row_valid: (N,) bool —
+    free/evicted rows can never win; probes: (Q, S) f32 L2-normalized
+    query sketches.  Returns (best_sim (Q,) f32, best_idx (Q,) int32).
+    ``best_idx`` is meaningful only where ``best_sim > SIM_MASKED``
+    (i.e. at least one valid row existed); ties break to the LOWEST row
+    index.
+
+    This is the literal tiled running-max loop the Pallas kernel runs —
+    per (block_n, S) tile: dequantize, one f32-accumulated dot against
+    all probes, mask invalid rows to :data:`SIM_MASKED`, tile max +
+    first-hit index, then a strictly-greater-replaces merge into the
+    carried best (earlier tiles win ties, preserving global lowest-index
+    tie-breaking).  Identical tiling + identical ops is what makes the
+    kernel/ref agreement BITWISE at f32 (asserted in the kernel sweep).
+    """
+    bank = jnp.asarray(bank)
+    probes = jnp.asarray(probes, jnp.float32)
+    N, S = bank.shape
+    Q = probes.shape[0]
+    bn = int(block_n)
+    Np = max(((N + bn - 1) // bn) * bn, bn)
+    Sp = max(((S + _SIM_LANE - 1) // _SIM_LANE) * _SIM_LANE, _SIM_LANE)
+    Qp = max(((Q + _SIM_LANE - 1) // _SIM_LANE) * _SIM_LANE, _SIM_LANE)
+    bank_p = jnp.zeros((Np, Sp), bank.dtype).at[:N, :S].set(bank)
+    scale_p = jnp.zeros((Np, 1), jnp.float32).at[:N, 0].set(
+        jnp.asarray(scales, jnp.float32))
+    valid_p = jnp.zeros((Np, 1), jnp.float32).at[:N, 0].set(
+        jnp.asarray(row_valid).astype(jnp.float32))
+    probe_p = jnp.zeros((Sp, Qp), jnp.float32).at[:S, :Q].set(probes.T)
+    best = idx = None
+    for i in range(Np // bn):
+        rows = (bank_p[i * bn: (i + 1) * bn].astype(jnp.float32)
+                * scale_p[i * bn: (i + 1) * bn])
+        s = jnp.dot(rows, probe_p, preferred_element_type=jnp.float32)
+        ok = valid_p[i * bn: (i + 1) * bn] > 0
+        s = jnp.where(ok, s, SIM_MASKED)
+        rowid = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) + i * bn
+        tb = jnp.max(s, axis=0, keepdims=True)
+        hit = s == tb
+        ti = jnp.min(jnp.where(hit, rowid, N), axis=0,
+                     keepdims=True).astype(jnp.int32)
+        if best is None:
+            best, idx = tb, ti
+        else:
+            take = tb > best
+            best = jnp.where(take, tb, best)
+            idx = jnp.where(take, ti, idx)
+    return best[0, :Q], idx[0, :Q]
+
+
 def irt_2pl_ref(theta, alpha, b, y):
     """Fused 2PL forward: returns (p, bce, fisher), each (U, I), f32.
 

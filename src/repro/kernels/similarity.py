@@ -1,0 +1,124 @@
+"""Pallas TPU kernel for the semantic-cache bank scan: fused top-1 cosine
+similarity over a contiguous latent bank.
+
+The semantic cache (``serving/semcache.py``) keeps one L2-normalized
+sketch per cached query in a capacity-fixed (N, S) bank — float32 or
+int8 with a per-row dequantization scale.  Every incoming miss batch
+probes the bank once: for each of Q probe sketches, find the single most
+similar valid row and its index.  A naive two-pass (materialize the full
+(N, Q) similarity matrix, then argmax) costs an extra HBM round trip per
+batch at bank sizes that dwarf the batch; this kernel streams the bank
+through VMEM in (block_n, S) tiles and carries a running
+(best_sim, best_idx) pair per probe across the sequential grid — the
+flash-attention accumulation pattern with max instead of logsumexp.
+
+Per grid step: dequantize the tile (int8 rows × per-row scale; the f32
+path multiplies by 1.0, a bitwise no-op), one f32-accumulated
+(block_n, S) @ (S, Q) dot, invalid rows masked to
+:data:`~repro.kernels.ref.SIM_MASKED`, tile-local max + FIRST index
+achieving it, then strictly-greater-replaces into the carried outputs —
+earlier tiles win ties, so the global tie-break is the lowest bank row
+index, matching ``jnp.argmax`` semantics.
+
+The jnp reference (:func:`repro.kernels.ref.similarity_top1_ref`) runs
+the IDENTICAL tiled loop — same ``block_n``, same padding, same op
+sequence — which is what makes kernel/ref agreement bitwise at f32
+(and for the int8 path too: both dequantize identically before the same
+dot).  The kernel sweep in tests/test_kernels.py asserts it with
+``assert_array_equal``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.ref import SIM_BLOCK_N, SIM_MASKED
+
+try:  # pltpu is importable on CPU for interpret mode, but guard anyway
+    from jax.experimental.pallas import tpu as pltpu  # noqa: F401
+    _HAVE_TPU_PALLAS = True
+except ImportError:  # pragma: no cover
+    _HAVE_TPU_PALLAS = False
+
+_LANE = 128
+
+
+def _sim_kernel(bank_ref, scale_ref, valid_ref, probe_ref, sim_ref,
+                idx_ref, *, bn: int, n_rows: int):
+    """One (bn, Sp) bank tile vs all (Sp, Qp) probes: dequantized dot →
+    masked tile max + first-hit index → running-max merge."""
+    i = pl.program_id(0)
+    rows = bank_ref[...].astype(jnp.float32) * scale_ref[...]
+    s = jnp.dot(rows, probe_ref[...], preferred_element_type=jnp.float32)
+    ok = valid_ref[...] > 0
+    s = jnp.where(ok, s, SIM_MASKED)
+    rowid = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) + i * bn
+    tb = jnp.max(s, axis=0, keepdims=True)                  # (1, Qp)
+    hit = s == tb
+    ti = jnp.min(jnp.where(hit, rowid, n_rows), axis=0,
+                 keepdims=True).astype(jnp.int32)
+
+    @pl.when(i == 0)
+    def _init():
+        sim_ref[...] = tb
+        idx_ref[...] = ti
+
+    @pl.when(i > 0)
+    def _merge():
+        prev = sim_ref[...]
+        # strictly greater: an equal later tile loses, so the carried
+        # index stays the globally lowest one
+        take = tb > prev
+        sim_ref[...] = jnp.where(take, tb, prev)
+        idx_ref[...] = jnp.where(take, ti, idx_ref[...])
+
+
+def similarity_top1_tpu(
+    bank: jax.Array,       # (N, S) f32 or int8 stored keys
+    scales: jax.Array,     # (N,) f32 per-row dequant scale
+    row_valid: jax.Array,  # (N,) bool — free/padded rows never win
+    probes: jax.Array,     # (Q, S) f32 L2-normalized sketches
+    *,
+    block_n: int = SIM_BLOCK_N,
+    interpret: bool = False,
+):
+    """Returns (best_sim (Q,) f32, best_idx (Q,) int32); ties break to
+    the lowest bank row index.  ``best_idx`` is meaningful only where
+    ``best_sim > SIM_MASKED``."""
+    bank = jnp.asarray(bank)
+    probes = jnp.asarray(probes, jnp.float32)
+    N, S = bank.shape
+    Q = probes.shape[0]
+    bn = int(block_n)
+    Np = max(((N + bn - 1) // bn) * bn, bn)
+    Sp = max(((S + _LANE - 1) // _LANE) * _LANE, _LANE)
+    Qp = max(((Q + _LANE - 1) // _LANE) * _LANE, _LANE)
+    bank_p = jnp.zeros((Np, Sp), bank.dtype).at[:N, :S].set(bank)
+    scale_p = jnp.zeros((Np, 1), jnp.float32).at[:N, 0].set(
+        jnp.asarray(scales, jnp.float32))
+    valid_p = jnp.zeros((Np, 1), jnp.float32).at[:N, 0].set(
+        jnp.asarray(row_valid).astype(jnp.float32))
+    probe_p = jnp.zeros((Sp, Qp), jnp.float32).at[:S, :Q].set(probes.T)
+
+    sim_p, idx_p = pl.pallas_call(
+        lambda b, sc, v, pr, o_s, o_i: _sim_kernel(
+            b, sc, v, pr, o_s, o_i, bn=bn, n_rows=N),
+        grid=(Np // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, Sp), lambda i: (i, 0)),
+            pl.BlockSpec((bn, 1), lambda i: (i, 0)),
+            pl.BlockSpec((bn, 1), lambda i: (i, 0)),
+            pl.BlockSpec((Sp, Qp), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Qp), lambda i: (0, 0)),
+            pl.BlockSpec((1, Qp), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, Qp), jnp.float32),
+            jax.ShapeDtypeStruct((1, Qp), jnp.int32),
+        ],
+        interpret=interpret,
+    )(bank_p, scale_p, valid_p, probe_p)
+    return sim_p[0, :Q], idx_p[0, :Q]

@@ -116,7 +116,8 @@ def build_demo_router(seed: int = 0):
 
 def build_demo_engine(seed: int = 0, cache_size: int = 4096,
                       artifact_dir=None, compile_cache: bool = True,
-                      precision: str = "f32"):
+                      precision: str = "f32", semantic_cache: str = "off",
+                      sim_threshold=None):
     """Small-world router + engine used by route mode and the example.
 
     With ``artifact_dir``: open saved artifacts when present (ms startup),
@@ -124,7 +125,12 @@ def build_demo_engine(seed: int = 0, cache_size: int = 4096,
     ``compile_cache`` is off, the artifact directory also carries the
     persistent XLA compilation cache (``<dir>/xla_cache``), so every
     jit compile — including ``--warmup`` pre-compilation — is paid once
-    per artifact dir, then loaded from disk by later processes."""
+    per artifact dir, then loaded from disk by later processes.
+
+    ``semantic_cache`` ("off" | "semantic" | "bit_exact") attaches the
+    semantic latent cache; a ``<artifact_dir>/semcache`` sidecar from an
+    earlier run is restored into the bank when its predictor fingerprint
+    matches.  ``sim_threshold`` overrides the admission threshold."""
     import os
 
     from repro.api import COMPILE_CACHE_NAME, Router
@@ -163,8 +169,28 @@ def build_demo_engine(seed: int = 0, cache_size: int = 4096,
         if artifact_dir:
             router.save(artifact_dir)
             print(f"  saved router artifacts + pool to {artifact_dir}")
+    sem_cfg = None
+    if semantic_cache != "off":
+        from repro.serving.semcache import SemanticCacheConfig
+
+        kw = {"mode": semantic_cache}
+        if sim_threshold is not None:
+            kw["sim_threshold"] = float(sim_threshold)
+        sem_cfg = SemanticCacheConfig(**kw)
     engine = RouterEngine(router, RouterEngineConfig(cache_size=cache_size,
-                                                     precision=precision))
+                                                     precision=precision,
+                                                     semantic_cache=sem_cfg))
+    if sem_cfg is not None and have_saved:
+        from repro.serving import semcache as _semc
+
+        bank = _semc.load_bank(artifact_dir, sem_cfg,
+                               _semc.latent_fingerprint(router.artifacts),
+                               capacity=engine.bank.capacity)
+        if bank is not None and len(bank) > 0:
+            engine.bank = bank
+            engine.cache.evict_hook = bank.discard
+            print(f"  restored semantic bank: {len(bank)} rows from "
+                  f"{artifact_dir}/{_semc.SEMCACHE_NAME}")
     return world, router, engine
 
 
@@ -213,7 +239,8 @@ def _listen_main(args, router, engine) -> None:
         service = RouterService(
             router, engine=engine,
             cfg=ServiceConfig(max_batch=args.max_batch,
-                              max_wait_s=args.max_wait_ms / 1e3))
+                              max_wait_s=args.max_wait_ms / 1e3),
+            route_log=args.log_routes)
         async with service:
             server = await start_server(service, host, int(port))
             if args.metrics is not None:
@@ -241,8 +268,23 @@ def _route_main(args) -> None:
     world, router, engine = build_demo_engine(
         seed=args.seed, artifact_dir=args.artifact,
         compile_cache=not args.no_compile_cache,
-        precision=args.precision)
+        precision=args.precision,
+        semantic_cache=args.semantic_cache,
+        sim_threshold=args.sim_threshold)
     print(f"  router ready in {time.time() - t0:.2f}s")
+    if args.log_routes:
+        import os
+
+        from repro.serving.semcache import RouteLog
+
+        if os.path.exists(args.log_routes):
+            replay = RouteLog.read_texts(args.log_routes)
+            if replay:
+                t1 = time.time()
+                n = engine.warm_cache(replay)
+                print(f"  replayed {n} logged queries from "
+                      f"{args.log_routes} in {time.time() - t1:.2f}s "
+                      f"(latent + semantic caches warm)")
     if args.warmup:
         exports = None
         if args.artifact and not args.no_compile_cache:
@@ -279,6 +321,14 @@ def _route_main(args) -> None:
         results = [f.result(timeout=60) for f in pending]
     dt = time.time() - t0
 
+    if args.log_routes:
+        from repro.serving.semcache import RouteLog
+
+        with RouteLog(args.log_routes) as rlog:
+            for r in results:
+                rlog.append(r.text, model=r.model, policy=args.policy)
+        print(f"appended {len(results)} routes to {args.log_routes}")
+
     from collections import Counter
     mix = Counter(r.model for r in results)
     print(f"routed {len(results)} queries in {dt:.2f}s "
@@ -286,8 +336,23 @@ def _route_main(args) -> None:
     print("decision mix:", dict(mix))
     if engine.cache_stats is not None:
         st = engine.cache_stats
-        print(f"latent cache: {st.hits} hits / {st.misses} misses "
-              f"(hit rate {st.hit_rate:.0%})")
+        line = (f"latent cache: {st.hits} hits / {st.misses} misses "
+                f"(hit rate {st.hit_rate:.0%})")
+        bs = engine.bank_stats()
+        if bs is not None:
+            line += (f"; semantic: {st.semantic_hits} hits, "
+                     f"{st.semantic_rechecked} re-checked "
+                     f"(exact {st.exact_hit_rate:.0%} -> combined "
+                     f"{st.hit_rate:.0%}); bank {bs['occupancy']}/"
+                     f"{bs['capacity']} rows, {bs['evictions']} evictions")
+        print(line)
+    if args.artifact and engine.bank is not None and len(engine.bank) > 0:
+        from repro.serving import semcache as _semc
+
+        _semc.save_bank(args.artifact, engine.bank,
+                        _semc.latent_fingerprint(router.artifacts))
+        print(f"  persisted semantic bank ({len(engine.bank)} rows) to "
+              f"{args.artifact}/{_semc.SEMCACHE_NAME}")
     if args.stdin:
         for r in results:
             print(f"  {r.model:18s} <- {r.text[:60]}")
@@ -321,6 +386,21 @@ def main(argv=None):
                     help="route: engine scoring tier — bf16_recheck "
                          "scores in bfloat16 with an fp32 re-check that "
                          "keeps selections identical to Router.route")
+    ap.add_argument("--semantic-cache", default="off",
+                    choices=("off", "semantic", "bit_exact"),
+                    help="route: attach the semantic latent cache — "
+                         "'semantic' reuses cached latents for near-"
+                         "duplicate queries behind a similarity + re-check "
+                         "gate; 'bit_exact' keeps the bank warm but serves "
+                         "exact matches only")
+    ap.add_argument("--sim-threshold", type=float, default=None,
+                    help="route: override the semantic admission "
+                         "threshold (default 0.92; raise toward 1.0 for "
+                         "stricter reuse)")
+    ap.add_argument("--log-routes", default=None, metavar="PATH",
+                    help="route: append served routes to a JSONL log; on "
+                         "startup an existing log is replayed to warm the "
+                         "latent + semantic caches before traffic")
     ap.add_argument("--max-batch", type=int, default=64)
     ap.add_argument("--max-wait-ms", type=float, default=2.0)
     ap.add_argument("--listen", default=None, metavar="HOST:PORT",

@@ -14,6 +14,11 @@ cache    — LatentCache: per-query latents/features/token counts (LRU);
            (``Router.open(dir, warmup=…)`` → ``<dir>/xla_cache``);
            ExportedStore: AOT-exported engine programs
            (``<dir>/xla_cache/exported``)
+semcache — LatentBank: contiguous bank of cached latents probed by a
+           Pallas top-1 cosine-similarity kernel — near-duplicate
+           queries reuse latents behind a threshold + f32 re-check
+           gate; persisted as an artifact sidecar; RouteLog: JSONL
+           serving log whose replay warms both caches at open
 service  — RouterService: asyncio submit/submit_many/stream, admin plane
            (live pool mutations with snapshot pinning), admission control
 protocol — length-prefixed JSONL wire format, asyncio TCP front-end,
@@ -30,15 +35,18 @@ from repro.serving.metrics import (DEFAULT_LATENCY_BUCKETS_MS,
                                    MetricsRegistry)
 from repro.serving.protocol import (BackgroundServer, ServiceClient,
                                     start_server)
+from repro.serving.semcache import (LatentBank, RouteLog,
+                                    SemanticCacheConfig)
 from repro.serving.service import (AdminPlane, RouteRequest, RouteResponse,
                                    RouterService, ServiceConfig)
 
 __all__ = [
     "AdminPlane", "BackgroundServer", "BatchDecision", "CacheEntry",
     "CacheStats", "DEFAULT_LATENCY_BUCKETS_MS", "ExportedStore",
-    "LatentCache", "MetricsRegistry", "MicroBatcher",
-    "RouteRequest",
+    "LatentBank", "LatentCache", "MetricsRegistry", "MicroBatcher",
+    "RouteLog", "RouteRequest",
     "enable_persistent_compile_cache", "exported_program_dir",
     "RouteResponse", "RouteResult", "RouterEngine", "RouterEngineConfig",
-    "RouterService", "ServiceClient", "ServiceConfig", "start_server",
+    "RouterService", "SemanticCacheConfig", "ServiceClient",
+    "ServiceConfig", "start_server",
 ]

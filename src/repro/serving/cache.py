@@ -76,29 +76,59 @@ class CacheEntry:
     # upgrades borderline entries in place); "bf16" entries serve only
     # the bf16 bulk pass and read as misses from an f32 consumer
     precision: str = "f32"
+    # None for computed entries; for entries produced by semantic reuse,
+    # the bank similarity that admitted them.  Marked entries are
+    # re-gated every batch (engine ``_sem_recheck``) and are never banked
+    # as reuse sources themselves; an exact recompute overwrites the
+    # whole entry, clearing the mark.
+    semantic_sim: Optional[float] = None
 
 
 @dataclasses.dataclass
 class CacheStats:
-    hits: int = 0
+    hits: int = 0              # exact-text LRU hits
     misses: int = 0
     evictions: int = 0
+    # semantic tier (see serving/semcache.py): of the misses above, how
+    # many were served from the latent bank instead of the encoder, and
+    # how many semantic-provenance entries the gate re-scored at f32
+    semantic_hits: int = 0
+    semantic_rechecked: int = 0
 
     @property
     def hit_rate(self) -> float:
+        """Combined rate: exact + semantic hits over all lookups (a
+        semantic hit is still counted in ``misses`` by the LRU — it IS an
+        exact miss — so the denominator is unchanged).  Equals the
+        historical exact-only rate when no semantic cache is configured."""
+        n = self.hits + self.misses
+        return (self.hits + self.semantic_hits) / n if n else 0.0
+
+    @property
+    def exact_hit_rate(self) -> float:
         n = self.hits + self.misses
         return self.hits / n if n else 0.0
+
+    @property
+    def semantic_hit_rate(self) -> float:
+        n = self.hits + self.misses
+        return self.semantic_hits / n if n else 0.0
 
 
 class LatentCache:
     """Bounded LRU keyed on query text.  Not thread-safe by itself; the
-    engine serializes access (the micro-batcher routes on one thread)."""
+    engine serializes access (the micro-batcher routes on one thread).
+
+    ``evict_hook`` (if set) is called with each evicted key — the engine
+    points it at ``LatentBank.discard`` so the semantic bank can never
+    hold a row the LRU has dropped (bank ⊆ cache, "evicted in sync")."""
 
     def __init__(self, maxsize: int = 4096):
         assert maxsize > 0
         self.maxsize = maxsize
         self._data: "OrderedDict[str, CacheEntry]" = OrderedDict()
         self.stats = CacheStats()
+        self.evict_hook = None   # Optional[Callable[[str], None]]
 
     def __len__(self) -> int:
         return len(self._data)
@@ -106,15 +136,21 @@ class LatentCache:
     def __contains__(self, text: str) -> bool:
         return text in self._data
 
-    def get(self, text: str,
-            precision: Optional[str] = None) -> Optional[CacheEntry]:
+    def get(self, text: str, precision: Optional[str] = None,
+            semantic_ok: bool = True) -> Optional[CacheEntry]:
         """``precision`` is the consumer's tier: an entry satisfies the
         lookup when it is full-precision ("f32") or tier-matching; a
         lower-tier entry reads as a miss (the consumer recomputes and
-        ``put`` overwrites it with the higher-precision result)."""
+        ``put`` overwrites it with the higher-precision result).
+        ``semantic_ok=False`` additionally treats semantic-provenance
+        entries as misses — the gate's forced f32 re-score path uses it
+        so a recompute really recomputes."""
         entry = self._data.get(text)
         if entry is not None and precision is not None \
                 and entry.precision not in ("f32", precision):
+            entry = None
+        if entry is not None and not semantic_ok \
+                and entry.semantic_sim is not None:
             entry = None
         if entry is None:
             self.stats.misses += 1
@@ -128,8 +164,10 @@ class LatentCache:
             self._data.move_to_end(text)
         self._data[text] = entry
         while len(self._data) > self.maxsize:
-            self._data.popitem(last=False)
+            key, _ = self._data.popitem(last=False)
             self.stats.evictions += 1
+            if self.evict_hook is not None:
+                self.evict_hook(key)
 
     def clear(self) -> None:
         self._data.clear()

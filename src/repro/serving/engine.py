@@ -109,6 +109,8 @@ from repro.core.router import route as core_route
 from repro.data.tokenizer import piece_count
 from repro.kernels import ops
 from repro.serving.cache import CacheEntry, LatentCache
+from repro.serving.semcache import (LatentBank, SemanticCacheConfig,
+                                    sketch_batch)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -169,6 +171,19 @@ class RouterEngineConfig:
     recheck_margin: float = 0.01
     recheck_logit_tol: float = 0.012
     recheck_s_tol: float = 0.006
+    # Semantic cache (ISSUE 7): None disables the semantic tier; a
+    # SemanticCacheConfig attaches a latent bank to the LRU cache
+    # (requires cache_size > 0) — exact-miss batches probe the bank with
+    # the fused top-1 similarity kernel before encoder dispatch, and
+    # admitted hits reuse the neighbour's (α̂, b̂) latents under the
+    # re-check gate (see serving/semcache.py).  mode="bit_exact" keeps
+    # the bank warm but never probes: selections are byte-identical to
+    # an engine without a semantic cache.  The semantic tier serves the
+    # HOT path (route_batch / route_pinned unconstrained); the
+    # diagnostics / constrained paths (score_queries, route,
+    # want_scores) bypass reuse entirely, mirroring how they pin the
+    # f32 tier under bf16_recheck.
+    semantic_cache: Optional[SemanticCacheConfig] = None
     # ranked decisions (ISSUE 6): how many models the serving fast path
     # (route_pinned, hence the MicroBatcher / RouterService plane) ranks
     # per query.  Rank 0 is the selection — bit-identical to the k=1
@@ -235,6 +250,26 @@ class RouterEngine:
         self.cfg = cfg
         self.cache: Optional[LatentCache] = (
             LatentCache(cfg.cache_size) if cfg.cache_size > 0 else None)
+        self.semcfg = cfg.semantic_cache
+        self.bank: Optional[LatentBank] = None
+        if self.semcfg is not None:
+            if self.semcfg.mode not in ("semantic", "bit_exact"):
+                raise ValueError(
+                    f"unknown semantic-cache mode {self.semcfg.mode!r}; "
+                    f"expected 'semantic' or 'bit_exact'")
+            if self.cache is None:
+                raise ValueError(
+                    "semantic_cache requires cache_size > 0 — the bank "
+                    "indexes LRU-cached entries (bank ⊆ cache)")
+            cap = (self.semcfg.capacity if self.semcfg.capacity is not None
+                   else cfg.cache_size)
+            self.bank = LatentBank(
+                min(cap, cfg.cache_size), self.semcfg.sketch_dim,
+                self.router.artifacts.require_predictor().cfg.latent_dim,
+                self.semcfg.store)
+            # eviction sync: a key dropped by the LRU can never survive
+            # as a bank row
+            self.cache.evict_hook = self.bank.discard
         self._device_pool: Optional[_DevicePool] = None
         self._artifacts_ref = None
         # how many times each scoring program's Python body was traced —
@@ -370,10 +405,13 @@ class RouterEngine:
     def _check_predictor(self) -> None:
         if self.router.artifacts is not self._artifacts_ref:
             # artifacts swapped (re-fit / replaced predictor) → stale
-            # latents; rebuild closures + cache
+            # latents; rebuild closures + cache (+ semantic bank: its
+            # payloads are the same stale latents)
             self._build_jits()
             if self.cache is not None:
                 self.cache.clear()
+            if self.bank is not None:
+                self.bank.clear()
 
     # ------------------------------------------------------------------
     # scoring
@@ -424,7 +462,8 @@ class RouterEngine:
 
     def _compute_entries(self, texts: Sequence[str],
                          subword_lens: Sequence[int],
-                         prec: str = "f32") -> List[CacheEntry]:
+                         prec: str = "f32",
+                         semantic_ok: bool = True) -> List[CacheEntry]:
         """Lex + featurize + predict latents for cache-miss texts, with
         host ingest PIPELINED against the jitted device dispatch.
 
@@ -451,7 +490,21 @@ class RouterEngine:
         unchanged) — fuller encoder groups and fewer row-padding rows
         than per-chunk grouping, at a slightly coarser host/device
         overlap grain (ingest is ~10% of the cold path, so the shorter
-        pipeline costs less than the padding it removes)."""
+        pipeline costs less than the padding it removes).
+
+        Semantic tier (``cfg.semantic_cache``, mode "semantic"): after a
+        slice is lexed — the lex pass is needed for features regardless —
+        its sketches probe the latent bank ONCE via the fused similarity
+        kernel, BEFORE encoder dispatch; probes admitted by
+        ``sim_threshold`` reuse the bank row's (α̂, b̂) and drop out of
+        the encoder groups (the saved forward is the whole point), with
+        the query's OWN lex supplying features/token counts so ℓ_in and
+        the cost/latency columns stay exact.  Reused entries carry
+        ``semantic_sim`` and are re-gated per batch downstream
+        (:meth:`_sem_recheck`); ``semantic_ok=False`` (the gate's forced
+        recompute) skips probing.  Computed f32 entries join the bank at
+        the end of the walk — reused ones never do, so approximation
+        cannot chain through the bank."""
         art = self.router.artifacts
         pc = art.predictor.cfg
         tok = art.tokenizer
@@ -461,6 +514,13 @@ class RouterEngine:
         b_np = np.empty((n, pc.latent_dim), np.float32)
         feats_all = np.empty((n, ingest.K_FEATURES), np.float32)
         lex_all: List[Optional[ingest.Lexed]] = [None] * n
+        bank = self.bank
+        sem_probe = (bank is not None and semantic_ok
+                     and self.semcfg.mode == "semantic" and len(bank) > 0)
+        sem_store = bank is not None and prec == "f32"
+        sketch_all = (np.zeros((n, self.semcfg.sketch_dim), np.float32)
+                      if (sem_probe or sem_store) else None)
+        sem_sim = np.full(n, np.nan)
         order = np.argsort(np.fromiter((len(t) for t in texts),
                                        np.int64, count=n), kind="stable")
         fc = min(self.cfg.forward_chunk, self.cfg.max_batch)
@@ -469,11 +529,31 @@ class RouterEngine:
         for s in range(0, n, sl):
             idx = order[s: s + sl]
             lexed = [ingest.lex(texts[i]) for i in idx]
-            ids, mask = tok.encode_lexed(lexed, pc.max_len)
             feats = ingest.features_stack(lexed)
             feats_all[idx] = feats
             for i, lx in zip(idx, lexed):
                 lex_all[i] = lx
+            if sketch_all is not None:
+                sk = sketch_batch(lexed, self.semcfg.sketch_dim)
+                sketch_all[idx] = sk
+            need = np.ones(len(idx), bool)      # slice-local encoder set
+            if sem_probe:
+                sims, rows_hit = bank.lookup(sk,
+                                             use_pallas=self._use_pallas())
+                hit = sims >= self.semcfg.sim_threshold
+                for j in np.nonzero(hit)[0]:
+                    i = idx[j]
+                    a_np[i], b_np[i] = bank.latents_at(int(rows_hit[j]))
+                    sem_sim[i] = float(sims[j])
+                need = ~hit
+                if self.cache is not None:
+                    self.cache.stats.semantic_hits += int(hit.sum())
+            if not need.any():
+                continue
+            idx_n = idx[need]
+            lex_n = [lex_all[i] for i in idx_n]
+            ids, mask = tok.encode_lexed(lex_n, pc.max_len)
+            feats_n = feats[need]
             seq_b = self._seq_buckets(mask.sum(1).astype(int))
             for lb in np.unique(seq_b):
                 g = np.nonzero(seq_b == lb)[0]
@@ -483,22 +563,32 @@ class RouterEngine:
                     a_g, b_g = self._call_latents(
                         jnp.asarray(self._pad2(ids[sub, :lb], rows)),
                         jnp.asarray(self._pad2(mask[sub, :lb], rows)),
-                        jnp.asarray(self._pad2(feats[sub], rows)), prec)
-                    in_flight.append((idx[sub], a_g, b_g, len(sub)))
+                        jnp.asarray(self._pad2(feats_n[sub], rows)), prec)
+                    in_flight.append((idx_n[sub], a_g, b_g, len(sub)))
         for gi, a_g, b_g, m in in_flight:      # single collection point
             a_np[gi] = np.asarray(a_g)[:m]
             b_np[gi] = np.asarray(b_g)[:m]
+        if sem_store:
+            # only COMPUTED entries become reuse sources; puts happen
+            # after every probe of this walk, so the bank is stable
+            # within one batch
+            for i in range(n):
+                if np.isnan(sem_sim[i]):
+                    bank.put(texts[i], a_np[i], b_np[i], sketch_all[i])
         return [
             CacheEntry(
                 a_hat=a_np[i], b_hat=b_np[i], feats=feats_all[i],
                 token_counts={sw: lex_all[i].piece_count(sw)
                               for sw in uniq_sw},
-                tok_lens=lex_all[i].tok_lens, precision=prec)
+                tok_lens=lex_all[i].tok_lens,
+                precision="f32" if not np.isnan(sem_sim[i]) else prec,
+                semantic_sim=(None if np.isnan(sem_sim[i])
+                              else float(sem_sim[i])))
             for i in range(n)
         ]
 
     def _latent_batch(self, texts: Sequence[str], pool: _DevicePool,
-                      prec: str = "f32"
+                      prec: str = "f32", semantic_ok: bool = True
                       ) -> Tuple[np.ndarray, np.ndarray, List[CacheEntry]]:
         """Returns (a_hat (Q, D), b_hat (Q, D), per-query cache entries).
 
@@ -506,13 +596,16 @@ class RouterEngine:
         any tier (the re-check upgrade path relies on this — a borderline
         query re-scored at f32 overwrites its bf16 entry and serves every
         later lookup exactly); a bf16 entry reads as a miss to an f32
-        consumer."""
+        consumer.  ``semantic_ok=False`` forces exact computation:
+        semantic-provenance cache entries read as misses AND the miss
+        path skips the bank probe, so the recompute's ``put`` overwrites
+        them with computed entries (clearing the mark)."""
         if not texts:
             D = self.router.artifacts.predictor.cfg.latent_dim
             return np.zeros((0, D), np.float32), np.zeros((0, D),
                                                           np.float32), []
         entries: List[Optional[CacheEntry]] = [
-            self.cache.get(t, precision=prec)
+            self.cache.get(t, precision=prec, semantic_ok=semantic_ok)
             if self.cache is not None else None
             for t in texts]
         # dedup within the batch: each unique miss text is computed once
@@ -523,7 +616,7 @@ class RouterEngine:
         if miss_pos:
             uniq_texts = list(miss_pos)
             fresh = self._compute_entries(uniq_texts, pool.subword_lens,
-                                          prec)
+                                          prec, semantic_ok=semantic_ok)
             for t, e in zip(uniq_texts, fresh):
                 for i in miss_pos[t]:
                     entries[i] = e
@@ -587,37 +680,49 @@ class RouterEngine:
     def _score(self, texts: Sequence[str], pool: _DevicePool,
                prec: Optional[str] = None
                ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-        p, cost, lat, _ = self._score_parts(texts, pool, prec)
+        """Exact scoring for the safe paths (diagnostics, constraints,
+        score_queries): bypasses semantic reuse entirely — a semantic
+        cache entry reads as a miss and is recomputed/overwritten — so
+        these paths match ``Router.score`` regardless of semantic-cache
+        configuration, mirroring how they pin f32 under bf16_recheck."""
+        p, cost, lat, _, _ = self._score_parts(texts, pool, prec,
+                                               semantic_ok=False)
         return p, cost, lat
 
     def _score_parts(self, texts: Sequence[str], pool: _DevicePool,
-                     prec: Optional[str] = None
+                     prec: Optional[str] = None,
+                     semantic_ok: bool = True
                      ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
-                                np.ndarray]:
+                                np.ndarray, np.ndarray]:
         """Score against ONE pinned snapshot — callers that also map
         selection indices back to names must reuse the same ``pool`` so a
         concurrent mutation cannot shift indices mid-request.
 
-        Returns (p, cost, latency, ŝ): the (M, Q) score tensors plus the
-        (Q,) task-aware difficulty scalar the length table was binned on
-        (the re-check pass needs ŝ to detect bin-edge-uncertain
-        queries)."""
+        Returns (p, cost, latency, ŝ, sem): the (M, Q) score tensors,
+        the (Q,) task-aware difficulty scalar the length table was
+        binned on (the re-check passes need ŝ to detect
+        bin-edge-uncertain queries), and the (Q,) semantic provenance
+        vector — NaN for computed entries, the admitting bank similarity
+        for entries produced by semantic reuse (the sem gate's input)."""
         if prec is None:
             prec = self._tier_prec()
         mb = self.cfg.max_batch
         if len(texts) == 0:            # empty batch: empty score tensors
             M = pool.snap.n_models
             return (np.zeros((M, 0), np.float32), np.zeros((M, 0)),
-                    np.zeros((M, 0)), np.zeros((0,), np.float32))
+                    np.zeros((M, 0)), np.zeros((0,), np.float32),
+                    np.zeros((0,)))
         if len(texts) > mb:
-            parts = [self._score_parts(texts[i: i + mb], pool, prec)
+            parts = [self._score_parts(texts[i: i + mb], pool, prec,
+                                       semantic_ok)
                      for i in range(0, len(texts), mb)]
             return tuple(np.concatenate([p[k] for p in parts],
                                         axis=1 if k < 3 else 0)
-                         for k in range(4))
+                         for k in range(5))
 
         Q = len(texts)
-        a_hat, b_hat, entries = self._latent_batch(texts, pool, prec)
+        a_hat, b_hat, entries = self._latent_batch(texts, pool, prec,
+                                                   semantic_ok)
         bucket = self._bucket(Q)
         p_pad, s_pad = self._call_from_latents(
             jnp.asarray(self._pad2(a_hat, bucket)),
@@ -630,16 +735,20 @@ class RouterEngine:
         l_in = self._input_lengths(texts, entries, pool)
         cost = (pool.lam_in * l_in + pool.lam_out * l_out) / 1e6
         lat = pool.ttft + l_out * pool.tpot
-        return p, cost, lat, s_hat
+        sem = np.fromiter(
+            (np.nan if e.semantic_sim is None else e.semantic_sim
+             for e in entries), np.float64, count=Q)
+        return p, cost, lat, s_hat, sem
 
     def _score_recheck(self, texts: Sequence[str], weights,
                        pool: _DevicePool,
                        model_valid: Optional[np.ndarray] = None
                        ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
-                                  float]:
+                                  np.ndarray, np.ndarray, float]:
         """The bf16_recheck tier: bulk bf16 scoring + margin-triggered
-        f32 re-scoring, returning (p, cost, latency, recheck_fraction)
-        whose downstream SELECTIONS are identical to full-f32 scoring.
+        f32 re-scoring, returning (p, cost, latency, ŝ, sem,
+        recheck_fraction) whose downstream SELECTIONS are identical to
+        full-f32 scoring.
 
         Why this is selection-exact: a query is re-scored (its p/cost/
         latency columns replaced by f32 values, its cache entry upgraded)
@@ -666,17 +775,18 @@ class RouterEngine:
         if not self._bf16_bulk():
             # backend gate: no fast bf16 path here — the bulk pass IS
             # the exact tier, nothing can need re-checking
-            p, cost, lat, _ = self._score_parts(texts, pool, "f32")
-            return np.array(p), cost, lat, 0.0
-        p, cost, lat, s16 = self._score_parts(texts, pool, "bf16")
+            p, cost, lat, s32, sem = self._score_parts(texts, pool, "f32")
+            return np.array(p), cost, lat, np.array(s32), sem, 0.0
+        p, cost, lat, s16, sem = self._score_parts(texts, pool, "bf16")
         # device-derived arrays can be read-only views; the re-check
         # patches columns in place
         p = np.array(p)
+        s16 = np.array(s16)
         Q = len(texts)
         M = p.shape[0]
         n_live = M if model_valid is None else int(model_valid.sum())
         if n_live < 2:  # a 1-model argmax can never flip: bf16 is exact
-            return p, cost, lat, 0.0
+            return p, cost, lat, s16, sem, 0.0
         w = np.asarray(weights, np.float64)
         edges = np.asarray(pool.edges, np.float64)
         if edges.size and Q:
@@ -709,13 +819,101 @@ class RouterEngine:
             if idx.size == 0:
                 break
             sub = [texts[i] for i in idx]
-            p_s, cost_s, lat_s, _ = self._score_parts(sub, pool, "f32")
+            p_s, cost_s, lat_s, s_s, sem_s = self._score_parts(
+                sub, pool, "f32")
             p[:, idx] = p_s
             cost[:, idx] = cost_s
             lat[:, idx] = lat_s
+            s16[idx] = s_s
+            sem[idx] = sem_s           # the f32 pass may itself have
+            #                            reused semantically; the sem
+            #                            gate downstream re-gates those
             rechecked[idx] = True
             near_edge[idx] = False     # now exact; edges can't flip it
-        return p, cost, lat, float(rechecked.mean()) if Q else 0.0
+        return (p, cost, lat, s16, sem,
+                float(rechecked.mean()) if Q else 0.0)
+
+    def _sem_recheck(self, texts: Sequence[str], weights,
+                     pool: _DevicePool,
+                     model_valid: Optional[np.ndarray],
+                     p: np.ndarray, cost: np.ndarray, lat: np.ndarray,
+                     s_hat: np.ndarray, sem: np.ndarray) -> int:
+        """The semantic-tier gate: f32 re-scoring of uncertain
+        semantic-reuse columns, patching (p, cost, lat, ŝ, sem) IN PLACE.
+        Mirrors :meth:`_score_recheck`'s fixpoint structure; the error
+        source here is latent reuse (bounded empirically by the sketch
+        similarity), not bf16 rounding, so the margins are the semantic
+        config's wider ones.  A column is re-scored when the entry is
+        semantic-provenance (``sem`` non-NaN) AND any of:
+
+        * its admitting similarity is below ``sim_recheck`` — EVERY
+          near-threshold hit recomputes exactly once (ISSUE 7's "f32
+          re-check path"); the exact result overwrites the cache entry,
+          so the text serves later batches as a computed entry;
+        * its reused ŝ sits within ``recheck_s_tol`` of a length-bin
+          edge (a bin flip would move the cost/latency row);
+        * its top-1/top-2 utility gap under the batch's policy is inside
+          ``2·w_acc·recheck_margin`` — reuse can only flip a selection
+          the margin deems too close to trust.
+
+        Re-scoring goes through ``semantic_ok=False``, i.e. a REAL
+        recompute (cache treats the marked entry as a miss; no bank
+        probe), after which the entry is computed/bankable and its mark
+        is gone.  The fixpoint re-measures gaps on the patched tensors
+        (patching can shift the min-max normalization scalars) until no
+        new column qualifies.  Returns the number of re-scored columns
+        and adds it to ``CacheStats.semantic_rechecked``."""
+        sc = self.semcfg
+        Q = len(texts)
+        M = p.shape[0]
+        is_sem = ~np.isnan(sem)
+        if not is_sem.any():
+            return 0
+        w = np.asarray(weights, np.float64)
+        edges = np.asarray(pool.edges, np.float64)
+        forced = is_sem & (sem < sc.sim_recheck)
+        if edges.size:
+            d_edge = np.min(np.abs(np.asarray(s_hat, np.float64)[None, :]
+                                   - edges[:, None]), axis=0)
+            near_edge = is_sem & (d_edge < sc.recheck_s_tol
+                                  * np.maximum(1.0, np.abs(s_hat)))
+        else:
+            near_edge = np.zeros(Q, bool)
+        thr = 2.0 * w[0] * sc.recheck_margin
+        n_live = M if model_valid is None else int(model_valid.sum())
+        rechecked = np.zeros(Q, bool)
+        from repro.kernels import ref as _kref
+
+        while True:
+            if n_live >= 2:
+                _, util = _kref.routing_topk_ref(p, cost, lat, weights,
+                                                 model_valid=model_valid)
+                util = np.asarray(util, np.float64)
+                top2 = np.partition(util, (M - 2, M - 1), axis=0)[M - 2:]
+                gap = top2[1] - top2[0]
+                marginal = is_sem & (gap < thr)
+            else:       # a 1-model argmax cannot flip under reuse
+                marginal = np.zeros(Q, bool)
+            uncertain = (forced | near_edge | marginal) & ~rechecked
+            idx = np.nonzero(uncertain)[0]
+            if idx.size == 0:
+                break
+            sub = [texts[i] for i in idx]
+            p_s, cost_s, lat_s, s_s, _ = self._score_parts(
+                sub, pool, "f32", semantic_ok=False)
+            p[:, idx] = p_s
+            cost[:, idx] = cost_s
+            lat[:, idx] = lat_s
+            s_hat[idx] = s_s
+            sem[idx] = np.nan
+            is_sem[idx] = False
+            forced[idx] = False
+            near_edge[idx] = False
+            rechecked[idx] = True
+        total = int(rechecked.sum())
+        if self.cache is not None:
+            self.cache.stats.semantic_rechecked += total
+        return total
 
     # ------------------------------------------------------------------
     # routing
@@ -884,12 +1082,19 @@ class RouterEngine:
             self.last_recheck_fraction = None
             return [], np.zeros(0, np.int64), np.zeros((1, 0), np.int64)
         if self.cfg.precision == "bf16_recheck":
-            p, cost, lat, frac = self._score_recheck(texts, pol.weights,
-                                                     pool, mask)
+            p, cost, lat, s_hat, sem, frac = self._score_recheck(
+                texts, pol.weights, pool, mask)
             self.last_recheck_fraction = frac
         else:
-            p, cost, lat = self._score(texts, pool)
+            p, cost, lat, s_hat, sem = self._score_parts(texts, pool)
             self.last_recheck_fraction = None
+        if self.bank is not None and not np.all(np.isnan(sem)):
+            # semantic-tier gate: re-score uncertain reused columns at
+            # f32 before the decision kernel sees them
+            p, cost, lat = np.array(p), np.array(cost), np.array(lat)
+            s_hat = np.array(s_hat)
+            self._sem_recheck(texts, pol.weights, pool, mask,
+                              p, cost, lat, s_hat, sem)
         n_live = pool.snap.n_models if mask is None else int(mask.sum())
         k_eff = max(min(int(k), n_live), 1)
         w = np.asarray(pol.weights, np.float32)
@@ -1101,8 +1306,58 @@ class RouterEngine:
         return time.perf_counter() - t0
 
     # ------------------------------------------------------------------
+    # cache warm-up (log replay)
+    # ------------------------------------------------------------------
+    def warm_cache(self, texts: Sequence[str]) -> int:
+        """Warm the latent cache (and semantic bank) by computing entries
+        for ``texts`` — the ``Router.open(replay_log=…)`` replay target.
+
+        Texts are deduplicated in first-seen order and pushed through the
+        normal miss path in ``max_batch`` chunks at the engine's safe
+        tier: computed entries land in the LRU and (at f32) in the bank;
+        with a RESTORED bank, replayed texts that match semantically skip
+        the encoder entirely — warm-up cost collapses to bank scans.  Hit
+        /miss counters are restored afterwards so replay does not skew
+        serving statistics (evictions still count: they are real).
+        Returns the number of distinct texts warmed."""
+        if self.cache is None or not texts:
+            return 0
+        with self._route_lock:
+            self._check_predictor()
+            pool = self._pool()
+            prec = self._tier_prec()
+            st = self.cache.stats
+            before = (st.hits, st.misses, st.semantic_hits)
+            try:
+                seen = set()
+                todo = []
+                for t in texts:
+                    if t not in seen:
+                        seen.add(t)
+                        todo.append(t)
+                mb = self.cfg.max_batch
+                for i in range(0, len(todo), mb):
+                    self._latent_batch(todo[i: i + mb], pool, prec)
+            finally:
+                st.hits, st.misses, st.semantic_hits = before
+            return len(todo)
+
+    # ------------------------------------------------------------------
     # diagnostics
     # ------------------------------------------------------------------
     @property
     def cache_stats(self):
         return self.cache.stats if self.cache is not None else None
+
+    @property
+    def semantic_bank(self) -> Optional[LatentBank]:
+        """The latent bank, or None without a semantic cache."""
+        return self.bank
+
+    def bank_stats(self) -> Optional[Dict[str, int]]:
+        """Occupancy/capacity/eviction counters for the metrics plane."""
+        if self.bank is None:
+            return None
+        return {"occupancy": len(self.bank),
+                "capacity": self.bank.capacity,
+                "evictions": self.bank.evictions}

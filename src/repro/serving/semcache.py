@@ -1,0 +1,551 @@
+"""Semantic latent cache: similarity reuse over the serving cache's latents.
+
+The :class:`~repro.serving.cache.LatentCache` keys on EXACT query text, so
+near-duplicate traffic — the dominant shape of real workloads — pays the
+full encoder forward for every variant.  This module adds the semantic
+tier (ROADMAP item 3): a capacity-fixed **latent bank** holding one
+L2-normalized *lexical sketch* per computed cache entry next to its
+(α̂, b̂) latents, scanned per miss batch by the fused Pallas top-1
+cosine-similarity kernel (``kernels/similarity.py``).  A miss whose best
+bank row clears ``sim_threshold`` reuses that row's latents instead of
+dispatching the encoder.
+
+Key design points (see ``RouterEngine`` for the serving-side wiring):
+
+* **Sketch keys, latent payload.**  The probe key cannot be the query's
+  own latent — computing it would require the very forward the cache is
+  there to skip.  The key is a signed-hash projection of the query's
+  token stream (one :func:`repro.core.ingest.lex` pass, which the miss
+  path needs anyway for features), L2-normalized so the bank scan is a
+  cosine similarity.  The payload is the (α̂, b̂) latent pair; the hit's
+  features / token counts come from the query's OWN lex, so its ℓ_in,
+  cost and latency columns stay exact — only the predictor forward is
+  reused.
+* **Reuse latents, recompute decisions.**  A semantic hit does NOT replay
+  a frozen routing decision: the reused latents re-enter the normal
+  per-batch scoring → fused-kernel path against the live pool snapshot,
+  so pool mutations (onboard / reprice / breaker masks) are respected by
+  construction.
+* **Bounded wrong-reuse.**  Every entry produced by semantic reuse is
+  marked (``CacheEntry.semantic_sim``) and re-gated on EVERY batch it
+  appears in: near-threshold hits (below ``sim_recheck``) and any
+  semantic entry whose top-1/top-2 utility gap or ŝ bin-edge distance
+  falls inside the configured margins are re-scored through PR 5's f32
+  re-check machinery — the exact recompute overwrites the entry, which
+  then joins the bank as a computed row.  ``mode="bit_exact"`` keeps the
+  bank warm but never probes it: behavior degrades to today's
+  exact-match cache.
+* **int8 at rest.**  The default bank stores keys and latents int8 with
+  per-row scales (4× smaller, dequantized to f32 in-kernel / on read);
+  measured sim error of quantized keys is ~2e-3, far inside the
+  threshold defaults.  ``store="f32"`` keeps full precision.
+
+Persistence: :func:`save_bank` writes the bank as a checkpoint sidecar
+(``<artifact dir>/semcache``) through ``repro.checkpoint.save_artifact``,
+so it rides the same ``schema_version`` + ``register_artifact_migration``
+chain as every other artifact record; the meta carries a fingerprint over
+the predictor (weights + config + feature stats) so a re-calibrated
+artifact silently invalidates the sidecar instead of serving stale
+latents.  :class:`RouteLog` is the append-only JSONL serving log
+(``launch/serve.py --log-routes``) whose replay at ``Router.open`` warms
+both caches: with a restored bank, replayed texts resolve semantically —
+no encoder work — and re-seed the exact LRU.
+
+Thread safety: the bank is mutated only under the engine's route lock
+(like the LRU cache); :class:`RouteLog` appends are internally locked
+(the service plane writes from its event loop).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import threading
+import warnings
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import ingest
+from repro.core.errors import SchemaVersionError
+from repro.kernels import ops
+from repro.kernels import ref as _kref
+
+#: Sidecar base name beside the artifact (``<dir>/semcache.npz`` +
+#: ``<dir>/semcache.meta.json`` via ``save_artifact``).
+SEMCACHE_NAME = "semcache"
+
+#: Version of the bank RECORD layout inside the artifact container (the
+#: container itself is versioned by ``ARTIFACT_SCHEMA_VERSION`` and
+#: migrated through ``register_artifact_migration``; this guards the
+#: semcache-specific field set within it).
+SEMCACHE_RECORD_VERSION = 1
+
+_PROBE_BUCKET = 128   # probe batches pad to this so jit shapes stay few
+
+
+@dataclasses.dataclass(frozen=True)
+class SemanticCacheConfig:
+    """Semantic-tier configuration (``RouterEngineConfig.semantic_cache``).
+
+    ``mode="semantic"`` probes the bank on every exact-cache miss;
+    ``mode="bit_exact"`` maintains the bank (so a later mode flip or a
+    ``Router.save`` still captures it) but never probes — selections are
+    trivially identical to an engine without a semantic cache.
+
+    The three-band threshold scheme:
+
+    * sim < ``sim_threshold`` — miss; compute the forward.
+    * ``sim_threshold`` ≤ sim < ``sim_recheck`` — near-threshold hit: the
+      latents are reused for this batch but the query is ALWAYS re-scored
+      at f32 by the gate (once — the exact result overwrites the entry),
+      so a loose sketch match can never leak an approximate decision.
+    * sim ≥ ``sim_recheck`` — trusted hit: reused as-is unless the
+      margin gate fires (utility gap below ``2·w_acc·recheck_margin`` or
+      ŝ within ``recheck_s_tol·max(1,|ŝ|)`` of a length-bin edge).
+
+    Defaults are calibrated on the demo corpus (see the README section):
+    int8 key quantization moves sims by ≲2e-3, exact duplicates read
+    ≥0.998 under int8 keys, and one-token near-duplicates land ~0.95–0.99
+    — so 0.92/0.99 splits trusted dupes from loose paraphrases with
+    margin on both sides.  ``examples/semantic_cache.py`` and the serving
+    bench re-assert zero selection divergence vs ``bit_exact`` every run.
+    """
+    mode: str = "semantic"
+    sim_threshold: float = 0.92
+    sim_recheck: float = 0.99
+    sketch_dim: int = 128          # = kernel lane width; one tile wide
+    store: str = "int8"            # "int8" (default) or "f32" at rest
+    capacity: Optional[int] = None  # None → the engine's cache_size
+    # margin gate (mirrors the bf16_recheck envelope, wider: it bounds
+    # reuse-induced Δp / relative Δŝ of trusted hits, not bf16 rounding)
+    recheck_margin: float = 0.05
+    recheck_s_tol: float = 0.05
+
+
+# ---------------------------------------------------------------------------
+# lexical sketches
+# ---------------------------------------------------------------------------
+
+# token → (bucket, sign) per sketch_dim, memoized across queries: the
+# vocabulary of live traffic is tiny next to the query stream (blake2s
+# runs once per distinct token).  Unbounded growth is capped.
+_TOK_MEMO: Dict[Tuple[int, str], Tuple[int, float]] = {}
+_TOK_MEMO_MAX = 1 << 20
+
+
+def _tok_slot(token: str, dim: int) -> Tuple[int, float]:
+    key = (dim, token)
+    hit = _TOK_MEMO.get(key)
+    if hit is None:
+        h = int.from_bytes(
+            hashlib.blake2s(token.encode("utf-8", "surrogatepass"),
+                            digest_size=8, person=b"semcache").digest(),
+            "little")
+        hit = (h % dim, 1.0 if (h >> 32) & 1 == 0 else -1.0)
+        if len(_TOK_MEMO) < _TOK_MEMO_MAX:
+            _TOK_MEMO[key] = hit
+    return hit
+
+
+def sketch_of(lexed: ingest.Lexed, dim: int) -> np.ndarray:
+    """(dim,) f32 L2-normalized signed-hash projection of the token
+    stream (a random-projection bag-of-tokens: cosine over sketches
+    approximates cosine over token-count vectors).  Deterministic across
+    processes — persisted banks stay probeable.  An empty token stream
+    returns the zero vector, which can never clear a positive threshold
+    (empty texts stay on the exact path)."""
+    v = np.zeros(dim, np.float32)
+    for tok in lexed.tokens:
+        slot, sign = _tok_slot(tok, dim)
+        v[slot] += sign
+    n = float(np.linalg.norm(v))
+    if n > 0.0:
+        v /= n
+    return v
+
+
+def sketch_batch(lexeds: Sequence[ingest.Lexed], dim: int) -> np.ndarray:
+    """(n, dim) f32 stacked :func:`sketch_of`."""
+    out = np.zeros((len(lexeds), dim), np.float32)
+    for i, lx in enumerate(lexeds):
+        out[i] = sketch_of(lx, dim)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the latent bank
+# ---------------------------------------------------------------------------
+
+
+def _quantize(x: np.ndarray) -> Tuple[np.ndarray, np.float32]:
+    """Symmetric per-row int8: (q, scale) with dequant = q·scale."""
+    m = float(np.max(np.abs(x))) if x.size else 0.0
+    if m == 0.0:
+        return np.zeros(x.shape, np.int8), np.float32(0.0)
+    scale = np.float32(m / 127.0)
+    q = np.clip(np.rint(x / scale), -127, 127).astype(np.int8)
+    return q, scale
+
+
+class LatentBank:
+    """Contiguous capacity-fixed bank of (sketch key, α̂, b̂) rows.
+
+    Arrays are allocated once at ``capacity`` and mutated in place (a
+    validity mask excludes free rows inside the kernel), so the device
+    copy the similarity scan consumes has ONE shape for the bank's whole
+    life — no jit churn as occupancy moves.  Row lifecycle:
+
+    * :meth:`put` fills a free row (overwriting in place when the text
+      already has one).  Only COMPUTED entries are banked — entries that
+      were themselves produced by semantic reuse never become reuse
+      sources, so approximation cannot chain (A→B→C drift).
+    * :meth:`discard` frees a row — wired as the ``LatentCache`` eviction
+      hook, which is what keeps bank ⊆ LRU ("LRU-evicted in sync").
+    * a full bank with no free row (its capacity set below the LRU's)
+      overflow-evicts its own OLDEST row.
+
+    ``evictions`` counts rows dropped for any reason (LRU sync or
+    overflow); occupancy is ``len(bank)``.
+    """
+
+    def __init__(self, capacity: int, sketch_dim: int, latent_dim: int,
+                 store: str = "int8"):
+        if store not in ("int8", "f32"):
+            raise ValueError(f"unknown bank store {store!r}; expected "
+                             f"'int8' or 'f32'")
+        if capacity <= 0:
+            raise ValueError("LatentBank capacity must be positive")
+        self.capacity = int(capacity)
+        self.sketch_dim = int(sketch_dim)
+        self.latent_dim = int(latent_dim)
+        self.store = store
+        dt = np.int8 if store == "int8" else np.float32
+        self.keys = np.zeros((capacity, sketch_dim), dt)
+        self.key_scale = np.zeros(capacity, np.float32)
+        self.a = np.zeros((capacity, latent_dim), dt)
+        self.a_scale = np.zeros(capacity, np.float32)
+        self.b = np.zeros((capacity, latent_dim), dt)
+        self.b_scale = np.zeros(capacity, np.float32)
+        self.valid = np.zeros(capacity, bool)
+        self.evictions = 0
+        self._rows: "OrderedDict[str, int]" = OrderedDict()  # text → row
+        self._texts: List[Optional[str]] = [None] * capacity
+        self._free: List[int] = list(range(capacity - 1, -1, -1))
+        self._dev = None               # cached device copy of (keys,
+        #                                scales, valid); None = dirty
+
+    def __len__(self) -> int:
+        return len(self._rows)
+
+    def __contains__(self, text: str) -> bool:
+        return text in self._rows
+
+    def row_of(self, text: str) -> Optional[int]:
+        return self._rows.get(text)
+
+    def text_at(self, row: int) -> Optional[str]:
+        return self._texts[row]
+
+    def put(self, text: str, a_hat: np.ndarray, b_hat: np.ndarray,
+            sketch: np.ndarray) -> int:
+        row = self._rows.get(text)
+        if row is None:
+            if not self._free:
+                old_t, old_r = self._rows.popitem(last=False)
+                self._texts[old_r] = None
+                self.valid[old_r] = False
+                self._free.append(old_r)
+                self.evictions += 1
+            row = self._free.pop()
+            self._rows[text] = row
+            self._texts[row] = text
+        if self.store == "int8":
+            self.keys[row], self.key_scale[row] = _quantize(sketch)
+            self.a[row], self.a_scale[row] = _quantize(a_hat)
+            self.b[row], self.b_scale[row] = _quantize(b_hat)
+        else:
+            self.keys[row] = sketch
+            self.a[row] = a_hat
+            self.b[row] = b_hat
+            self.key_scale[row] = self.a_scale[row] = \
+                self.b_scale[row] = 1.0
+        self.valid[row] = True
+        self._dev = None
+        return row
+
+    def discard(self, text: str) -> None:
+        """Free the row for ``text`` (no-op when absent).  The
+        ``LatentCache`` eviction hook lands here."""
+        row = self._rows.pop(text, None)
+        if row is None:
+            return
+        self._texts[row] = None
+        self.valid[row] = False
+        self._free.append(row)
+        self.evictions += 1
+        self._dev = None
+
+    def clear(self) -> None:
+        self._rows.clear()
+        self._texts = [None] * self.capacity
+        self.valid[:] = False
+        self._free = list(range(self.capacity - 1, -1, -1))
+        self._dev = None
+
+    def lookup(self, probes: np.ndarray, *, use_pallas: bool = False
+               ) -> Tuple[np.ndarray, np.ndarray]:
+        """Best (sim, row) per probe over the valid rows via the fused
+        kernel.  probes: (q, sketch_dim) f32 normalized sketches.
+        Returns ((q,) f32 sims, (q,) int32 rows); with an empty bank the
+        sims are the kernel's masked sentinel (below any threshold).
+        Probe count pads to a small bucket grid so the jitted scan
+        compiles O(1) times, not once per batch size."""
+        import jax.numpy as jnp
+
+        q = probes.shape[0]
+        if q == 0 or not self._rows:
+            return (np.full(q, _kref.SIM_MASKED, np.float32),
+                    np.zeros(q, np.int32))
+        if self._dev is None:
+            self._dev = (jnp.asarray(self.keys),
+                         jnp.asarray(self.key_scale),
+                         jnp.asarray(self.valid))
+        qb = ((q + _PROBE_BUCKET - 1) // _PROBE_BUCKET) * _PROBE_BUCKET
+        pp = np.zeros((qb, self.sketch_dim), np.float32)
+        pp[:q] = probes
+        keys, scales, valid = self._dev
+        sim, idx = ops.similarity_top1(keys, scales, valid,
+                                       jnp.asarray(pp),
+                                       use_pallas=use_pallas)
+        return np.asarray(sim)[:q], np.asarray(idx)[:q]
+
+    def latents_at(self, row: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Dequantized f32 (α̂, b̂) payload of ``row``.  For the f32
+        store this is the bitwise original; for int8 it is the per-row
+        symmetric dequantization (the engine's re-check gate bounds the
+        selection impact — see the parity test)."""
+        if self.store == "int8":
+            return (self.a[row].astype(np.float32) * self.a_scale[row],
+                    self.b[row].astype(np.float32) * self.b_scale[row])
+        return self.a[row].copy(), self.b[row].copy()
+
+    # -- persistence ----------------------------------------------------
+    def state(self) -> dict:
+        """Checkpoint tree (insertion order preserved so a restored bank
+        overflow-evicts in the same order the live one would)."""
+        items = list(self._rows.items())
+        return {
+            "capacity": self.capacity, "sketch_dim": self.sketch_dim,
+            "latent_dim": self.latent_dim, "store": self.store,
+            "texts": [t for t, _ in items],
+            "row_idx": np.asarray([r for _, r in items], np.int32),
+            "keys": self.keys, "key_scale": self.key_scale,
+            "a": self.a, "a_scale": self.a_scale,
+            "b": self.b, "b_scale": self.b_scale,
+        }
+
+    @classmethod
+    def from_state(cls, st: dict,
+                   capacity: Optional[int] = None) -> "LatentBank":
+        """Rebuild from :meth:`state`.  Same capacity → verbatim array
+        copy (bit-exact round trip); a different target ``capacity``
+        re-beds rows one by one in insertion order (stored bytes move
+        unchanged; earliest rows overflow-evict if it shrank)."""
+        stored_cap = int(st["capacity"])
+        want = stored_cap if capacity is None else int(capacity)
+        bank = cls(want, int(st["sketch_dim"]), int(st["latent_dim"]),
+                   str(st["store"]))
+        rows = np.asarray(st["row_idx"], np.int64)
+        if want == stored_cap:
+            bank.keys[...] = st["keys"]
+            bank.key_scale[...] = st["key_scale"]
+            bank.a[...] = st["a"]
+            bank.a_scale[...] = st["a_scale"]
+            bank.b[...] = st["b"]
+            bank.b_scale[...] = st["b_scale"]
+            for t, r in zip(st["texts"], rows):
+                r = int(r)
+                bank._rows[t] = r
+                bank._texts[r] = t
+                bank.valid[r] = True
+            bank._free = [r for r in range(want - 1, -1, -1)
+                          if not bank.valid[r]]
+        else:
+            for t, old in zip(st["texts"], rows):
+                old = int(old)
+                if not bank._free:
+                    et, er = bank._rows.popitem(last=False)
+                    bank._texts[er] = None
+                    bank.valid[er] = False
+                    bank._free.append(er)
+                    bank.evictions += 1
+                r = bank._free.pop()
+                bank._rows[t] = r
+                bank._texts[r] = t
+                bank.keys[r] = st["keys"][old]
+                bank.key_scale[r] = st["key_scale"][old]
+                bank.a[r] = st["a"][old]
+                bank.a_scale[r] = st["a_scale"][old]
+                bank.b[r] = st["b"][old]
+                bank.b_scale[r] = st["b_scale"][old]
+                bank.valid[r] = True
+        return bank
+
+
+# ---------------------------------------------------------------------------
+# sidecar persistence
+# ---------------------------------------------------------------------------
+
+
+def latent_fingerprint(artifacts) -> str:
+    """Hash of everything the cached latents depend on: predictor config,
+    weights, cluster layout, feature normalization.  Unlike the engine's
+    program fingerprint this EXCLUDES the jax version / backend — latents
+    are data, not programs, and the re-check gate already bounds sub-ulp
+    cross-backend drift."""
+    import jax
+
+    pred = artifacts.require_predictor()
+    h = hashlib.sha256()
+    h.update(repr(pred.cfg).encode())
+    for dims in pred.clusters:
+        h.update(np.asarray(dims, np.int64).tobytes())
+    mu, sd = pred.feat_stats
+    h.update(np.asarray(mu, np.float64).tobytes())
+    h.update(np.asarray(sd, np.float64).tobytes())
+    for leaf in jax.tree_util.tree_leaves(pred.params):
+        h.update(np.asarray(leaf).tobytes())
+    return h.hexdigest()[:16]
+
+
+def save_bank(artifact_dir: str, bank: LatentBank,
+              fingerprint: str) -> str:
+    """Write the bank sidecar beside the artifact via ``save_artifact``
+    (so it carries the container ``schema_version`` and rides the
+    ``register_artifact_migration`` chain like every other record)."""
+    from repro.checkpoint import save_artifact
+
+    path = os.path.join(artifact_dir, SEMCACHE_NAME)
+    save_artifact(path, bank.state(),
+                  meta={"kind": "semcache",
+                        "semcache_version": SEMCACHE_RECORD_VERSION,
+                        "fingerprint": fingerprint})
+    return path
+
+
+def load_bank(artifact_dir: str, cfg: SemanticCacheConfig,
+              fingerprint: str,
+              capacity: Optional[int] = None) -> Optional[LatentBank]:
+    """Restore the bank sidecar, or None (cold start) when it is absent,
+    written by a newer schema, fingerprint-stale (re-calibrated
+    predictor), or shaped for a different sketch/store config.  Every
+    non-absent rejection warns — a silently ignored warm state is a perf
+    bug that looks like nothing."""
+    from repro.checkpoint import load_artifact
+
+    path = os.path.join(artifact_dir, SEMCACHE_NAME)
+    if not os.path.exists(path + ".meta.json"):
+        return None
+    try:
+        tree, meta = load_artifact(path)
+    except SchemaVersionError as e:
+        warnings.warn(f"semantic-cache sidecar {path!r} needs a newer "
+                      f"build ({e}); starting cold")
+        return None
+    except Exception as e:  # noqa: BLE001 — corrupt sidecar → cold start
+        warnings.warn(f"semantic-cache sidecar {path!r} unreadable "
+                      f"({e!r}); starting cold")
+        return None
+    if int(meta.get("semcache_version", 1)) > SEMCACHE_RECORD_VERSION:
+        warnings.warn(f"semantic-cache sidecar {path!r} has record "
+                      f"version {meta.get('semcache_version')} > supported "
+                      f"{SEMCACHE_RECORD_VERSION}; starting cold")
+        return None
+    if meta.get("fingerprint") != fingerprint:
+        warnings.warn(f"semantic-cache sidecar {path!r} was built for a "
+                      f"different predictor (stale fingerprint); "
+                      f"starting cold")
+        return None
+    if (int(tree["sketch_dim"]) != cfg.sketch_dim
+            or str(tree["store"]) != cfg.store):
+        warnings.warn(f"semantic-cache sidecar {path!r} sketch/store "
+                      f"layout does not match the configured "
+                      f"SemanticCacheConfig; starting cold")
+        return None
+    return LatentBank.from_state(tree, capacity=capacity)
+
+
+# ---------------------------------------------------------------------------
+# serving log
+# ---------------------------------------------------------------------------
+
+
+class RouteLog:
+    """Append-only JSONL log of served routes (one object per line:
+    ``{"text": ..., "model": ..., "policy": ...}``) for cache warm-up
+    replay.  Appends are locked and flushed per line so a crashed server
+    loses at most the torn tail — which :meth:`read_texts` skips."""
+
+    def __init__(self, path: str):
+        self.path = path
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        self._f = open(path, "a", encoding="utf-8")
+        self._lock = threading.Lock()
+        self.appended = 0
+
+    def append(self, text: str, model: Optional[str] = None,
+               policy: Optional[str] = None) -> None:
+        rec: Dict[str, str] = {"text": text}
+        if model is not None:
+            rec["model"] = model
+        if policy is not None:
+            rec["policy"] = policy
+        line = json.dumps(rec, ensure_ascii=False)
+        with self._lock:
+            self._f.write(line + "\n")
+            self._f.flush()
+            self.appended += 1
+
+    def close(self) -> None:
+        with self._lock:
+            if not self._f.closed:
+                self._f.close()
+
+    def __enter__(self) -> "RouteLog":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    @staticmethod
+    def read_texts(path: str, limit: Optional[int] = None) -> List[str]:
+        """Distinct texts in first-seen order (replay warms each once);
+        malformed lines (torn tail writes) are skipped, a missing file
+        reads as empty."""
+        out: List[str] = []
+        seen = set()
+        try:
+            f = open(path, encoding="utf-8")
+        except OSError:
+            return out
+        with f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    rec = json.loads(line)
+                except ValueError:
+                    continue
+                t = rec.get("text") if isinstance(rec, dict) else None
+                if isinstance(t, str) and t not in seen:
+                    seen.add(t)
+                    out.append(t)
+                    if limit is not None and len(out) >= limit:
+                        break
+        return out

@@ -207,10 +207,19 @@ class RouterService:
 
     def __init__(self, router, engine: Optional[RouterEngine] = None,
                  cfg: ServiceConfig = ServiceConfig(),
-                 engine_cfg: Optional[RouterEngineConfig] = None):
+                 engine_cfg: Optional[RouterEngineConfig] = None,
+                 route_log=None):
         self.router = router
         self.engine = engine if engine is not None else router.engine(engine_cfg)
         self.cfg = cfg
+        # optional JSONL serving log (semcache.RouteLog or a path): every
+        # ok response appends one record; Router.open(replay_log=…)
+        # replays it to warm the caches after a restart
+        if isinstance(route_log, str):
+            from repro.serving.semcache import RouteLog
+
+            route_log = RouteLog(route_log)
+        self.route_log = route_log
         self.batcher = MicroBatcher(self.engine, max_batch=cfg.max_batch,
                                     max_wait_s=cfg.max_wait_s)
         self.admin = AdminPlane(self)
@@ -242,6 +251,8 @@ class RouterService:
         # batcher.close drains the queue, so no accepted awaiter hangs
         await asyncio.get_running_loop().run_in_executor(
             None, self.batcher.close)
+        if self.route_log is not None:
+            self.route_log.close()
 
     async def __aenter__(self) -> "RouterService":
         return await self.start()
@@ -456,6 +467,9 @@ class RouterService:
             m.histogram_observe("router_request_compute_ms",
                                 resp.compute_ms,
                                 "Score+route wall time of the sub-batch")
+            if self.route_log is not None:
+                self.route_log.append(resp.text, model=resp.model,
+                                      policy=resp.policy)
         return resp
 
     def _collect_metrics(self, reg: MetricsRegistry) -> None:
@@ -486,9 +500,27 @@ class RouterService:
         cs = self.engine.cache_stats
         if cs is not None:
             reg.counter_set("router_cache_hits_total", cs.hits,
-                            "Latent-cache hits")
+                            "Latent-cache exact-text hits")
             reg.counter_set("router_cache_misses_total", cs.misses,
                             "Latent-cache misses")
+            reg.counter_set("router_cache_semantic_hits_total",
+                            cs.semantic_hits,
+                            "Exact misses served from the semantic "
+                            "latent bank")
+            reg.counter_set("router_cache_semantic_rechecked_total",
+                            cs.semantic_rechecked,
+                            "Semantic-reuse columns re-scored at f32 by "
+                            "the gate")
+        bs = getattr(self.engine, "bank_stats", lambda: None)()
+        if bs is not None:
+            reg.gauge_set("router_semcache_bank_occupancy",
+                          bs["occupancy"], "Valid rows in the semantic "
+                          "latent bank")
+            reg.gauge_set("router_semcache_bank_capacity",
+                          bs["capacity"], "Semantic latent bank capacity")
+            reg.counter_set("router_semcache_bank_evictions_total",
+                            bs["evictions"],
+                            "Bank rows dropped (LRU sync + overflow)")
         reg.counter_set("router_batches_routed_total",
                         self.batcher.batches_routed,
                         "Coalesced batches routed")
@@ -515,7 +547,13 @@ class RouterService:
         if cs is not None:
             st["cache"] = {"hits": cs.hits, "misses": cs.misses,
                            "evictions": cs.evictions,
-                           "hit_rate": cs.hit_rate}
+                           "hit_rate": cs.hit_rate,
+                           "semantic_hits": cs.semantic_hits,
+                           "semantic_rechecked": cs.semantic_rechecked,
+                           "exact_hit_rate": cs.exact_hit_rate}
+        bs = getattr(self.engine, "bank_stats", lambda: None)()
+        if bs is not None:
+            st["semcache_bank"] = bs
         return st
 
 

@@ -282,3 +282,102 @@ def test_routing_topk_single_live_model_no_nan():
     np.testing.assert_array_equal(np.asarray(r_tpu), np.asarray(r_ref))
     np.testing.assert_allclose(np.asarray(u_tpu), np.asarray(u_ref),
                                atol=2e-6)
+
+
+# ---------------------------------------------------------------------------
+# semantic-cache top-1 similarity scan (PR 7)
+# ---------------------------------------------------------------------------
+
+
+def _sim_inputs(N, Q, S, store, seed=0, valid_frac=0.8):
+    """Random bank/probe tensors in the LatentBank's at-rest layout."""
+    rng = np.random.default_rng(seed)
+    probes = rng.normal(size=(Q, S)).astype(np.float32)
+    probes /= np.linalg.norm(probes, axis=1, keepdims=True)
+    raw = rng.normal(size=(N, S)).astype(np.float32)
+    raw /= np.linalg.norm(raw, axis=1, keepdims=True)
+    if store == "int8":
+        from repro.serving.semcache import _quantize
+        bank = np.zeros((N, S), np.int8)
+        scales = np.zeros(N, np.float32)
+        for i in range(N):
+            bank[i], scales[i] = _quantize(raw[i])
+    else:
+        bank, scales = raw, np.ones(N, np.float32)
+    row_valid = rng.random(N) < valid_frac
+    row_valid[0] = True                      # never fully masked here
+    return (jnp.asarray(bank), jnp.asarray(scales),
+            jnp.asarray(row_valid), jnp.asarray(probes))
+
+
+@pytest.mark.parametrize("N,Q,S", [
+    (1, 1, 128),            # single row, single probe
+    (256, 128, 128),        # exactly one block
+    (1000, 128, 128),       # ragged block count (padding path)
+    (1024, 256, 128),       # multi-block, multi-probe-tile
+])
+@pytest.mark.parametrize("store", ["f32", "int8"])
+def test_similarity_top1_bitwise_vs_ref(N, Q, S, store):
+    """The ISSUE-7 acceptance bar: the Pallas scan and the jnp ref run the
+    IDENTICAL tiled loop, so sims match BITWISE at f32 — for both the f32
+    and the int8-dequant bank layouts — and the winning rows match."""
+    bank, scales, row_valid, probes = _sim_inputs(N, Q, S, store,
+                                                  seed=N + Q)
+    sim_pl, idx_pl = ops.similarity_top1(bank, scales, row_valid, probes,
+                                         use_pallas=True)
+    sim_rf, idx_rf = ops.similarity_top1(bank, scales, row_valid, probes,
+                                         use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(sim_pl), np.asarray(sim_rf))
+    np.testing.assert_array_equal(np.asarray(idx_pl), np.asarray(idx_rf))
+
+
+def test_similarity_top1_matches_brute_force():
+    """Winner + sim agree with a plain masked matmul argmax (tolerance:
+    the tiled loop reassociates the reduction)."""
+    bank, scales, row_valid, probes = _sim_inputs(515, 64, 128, "f32",
+                                                  seed=3)
+    deq = np.asarray(bank) * np.asarray(scales)[:, None]
+    sims = np.asarray(probes) @ deq.T                     # (Q, N)
+    sims[:, ~np.asarray(row_valid)] = ref.SIM_MASKED
+    sim, idx = ops.similarity_top1(bank, scales, row_valid, probes,
+                                   use_pallas=True)
+    np.testing.assert_array_equal(np.asarray(idx),
+                                  np.argmax(sims, axis=1))
+    np.testing.assert_allclose(np.asarray(sim), np.max(sims, axis=1),
+                               atol=1e-6)
+
+
+def test_similarity_top1_tie_break_lowest_row():
+    """Duplicate bank rows (common after replay re-seeding): both paths
+    must resolve the tie to the LOWEST row index, across block
+    boundaries too."""
+    S = 128
+    probe = np.zeros((1, S), np.float32)
+    probe[0, 0] = 1.0
+    N = ref.SIM_BLOCK_N * 2 + 7             # dupes straddle 3 blocks
+    bank = np.tile(probe, (N, 1))
+    scales = np.ones(N, np.float32)
+    valid = np.ones(N, bool)
+    for use_pallas in (False, True):
+        sim, idx = ops.similarity_top1(
+            jnp.asarray(bank), jnp.asarray(scales), jnp.asarray(valid),
+            jnp.asarray(probe), use_pallas=use_pallas)
+        assert int(idx[0]) == 0
+        assert float(sim[0]) == 1.0
+    # mask the early copies → winner moves to the first surviving row
+    valid[: ref.SIM_BLOCK_N + 3] = False
+    _, idx = ops.similarity_top1(
+        jnp.asarray(bank), jnp.asarray(scales), jnp.asarray(valid),
+        jnp.asarray(probe), use_pallas=True)
+    assert int(idx[0]) == ref.SIM_BLOCK_N + 3
+
+
+def test_similarity_top1_all_masked_is_sentinel():
+    """No valid rows → every probe reports the masked sentinel (below any
+    admission threshold), identically in both paths."""
+    bank, scales, _, probes = _sim_inputs(300, 32, 128, "f32", seed=9)
+    none_valid = jnp.zeros(300, bool)
+    for use_pallas in (False, True):
+        sim, _ = ops.similarity_top1(bank, scales, none_valid, probes,
+                                     use_pallas=use_pallas)
+        assert np.all(np.asarray(sim) == ref.SIM_MASKED)

@@ -134,8 +134,8 @@ def test_bf16_latents_close_to_f32(corpus):
     e32 = RouterEngine(router, RouterEngineConfig(cache_size=0))
     e16 = RouterEngine(router, RouterEngineConfig(cache_size=0,
                                                   precision="bf16"))
-    p32, _, _, s32 = e32._score_parts(texts, e32._pool())
-    p16, _, _, s16 = e16._score_parts(texts, e16._pool())
+    p32, _, _, s32, _ = e32._score_parts(texts, e32._pool())
+    p16, _, _, s16, _ = e16._score_parts(texts, e16._pool())
     cfg = RouterEngineConfig()
     assert np.max(np.abs(p32 - p16)) < cfg.recheck_margin
     rel = np.max(np.abs(s32 - s16) / np.maximum(1.0, np.abs(s32)))

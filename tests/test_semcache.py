@@ -1,0 +1,418 @@
+"""Semantic latent cache (ISSUE 7): bank coherence with the exact LRU,
+selection parity vs bit_exact mode, persistence round-trips, and the
+serving-log replay warm-up.
+
+The load-bearing contract, asserted per policy on the full demo corpus:
+``mode="semantic"`` produces selections IDENTICAL to ``mode="bit_exact"``
+(and to the bare router) while reporting a strictly higher combined hit
+rate on near-duplicate traffic — the threshold + f32 re-check gate means
+int8-quantized latent reuse can never flip a routing decision.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.router import POLICIES
+from repro.serving import RouterEngine, RouterEngineConfig
+from repro.serving.semcache import (LatentBank, RouteLog,
+                                    SemanticCacheConfig, _quantize,
+                                    latent_fingerprint, load_bank,
+                                    save_bank, sketch_batch)
+
+
+def _skewed_stream(world, seed=0, n=192):
+    """Near-duplicate-heavy workload: ~50% exact repeats, ~35% one-token
+    variants, ~15% fresh OOD texts — the traffic shape the semantic tier
+    exists for."""
+    from repro.data import OOD_TASKS
+
+    qi = world.query_indices(OOD_TASKS)
+    base = [world.queries[i].text for i in qi[:48]]
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n):
+        r = rng.random()
+        t = base[rng.integers(len(base))]
+        if r < 0.50:
+            out.append(t)
+        elif r < 0.85:
+            words = t.split()
+            k = int(rng.integers(len(words)))
+            words[k] = words[k] + "s"
+            out.append(" ".join(words))
+        else:
+            out.append(t + f" variant {rng.integers(1 << 30)}")
+    return out
+
+
+def _engine(router, mode, cache_size=2048, **kw):
+    sc = None if mode is None else SemanticCacheConfig(mode=mode, **kw)
+    return RouterEngine(router, RouterEngineConfig(
+        cache_size=cache_size, semantic_cache=sc))
+
+
+# ---------------------------------------------------------------------------
+# selection parity + hit accounting (the acceptance contract)
+# ---------------------------------------------------------------------------
+
+
+def test_semantic_matches_bit_exact_all_policies(demo_stack):
+    """Per policy, per chunk: semantic selections == bit_exact selections
+    == bare-router selections on the skewed stream — and the semantic
+    engine's combined hit rate beats the exact-only one."""
+    world, router, _ = demo_stack
+    stream = _skewed_stream(world, seed=1)
+    chunks = [stream[i: i + 64] for i in range(0, len(stream), 64)]
+    for pol in POLICIES:
+        sem = _engine(router, "semantic")
+        bit = _engine(router, "bit_exact")
+        for chunk in chunks:
+            _, sel_s = sem.route_batch(chunk, policy=pol)
+            _, sel_b = bit.route_batch(chunk, policy=pol)
+            _, sel_r, _ = router.route(chunk, policy=pol)
+            np.testing.assert_array_equal(sel_s, sel_b,
+                                          err_msg=f"policy {pol}")
+            np.testing.assert_array_equal(sel_s, np.asarray(sel_r),
+                                          err_msg=f"policy {pol}")
+        ss, sb = sem.cache_stats, bit.cache_stats
+        assert ss.semantic_hits > 0, f"policy {pol}: no semantic reuse"
+        assert sb.semantic_hits == 0, "bit_exact must never probe"
+        assert ss.hit_rate > ss.exact_hit_rate
+        assert ss.hit_rate > sb.hit_rate, \
+            f"policy {pol}: combined {ss.hit_rate:.3f} <= " \
+            f"exact {sb.hit_rate:.3f}"
+
+
+def test_int8_storage_matches_f32_storage_selections(demo_stack):
+    """The quantization-parity satellite: int8 at-rest storage (default)
+    and full-f32 storage route identically — the gate absorbs the ~2e-3
+    dequantization error before it can reach a decision."""
+    world, router, _ = demo_stack
+    stream = _skewed_stream(world, seed=2)
+    e8 = _engine(router, "semantic", store="int8")
+    e32 = _engine(router, "semantic", store="f32")
+    for i in range(0, len(stream), 64):
+        chunk = stream[i: i + 64]
+        _, sel8 = e8.route_batch(chunk)
+        _, sel32 = e32.route_batch(chunk)
+        np.testing.assert_array_equal(sel8, sel32)
+    assert e8.cache_stats.semantic_hits > 0
+
+
+def test_safe_paths_stay_exact(demo_stack):
+    """route()/score_queries() (the diagnostics/constrained paths) bypass
+    semantic reuse entirely — scores are bit-for-bit the plain engine's
+    even with a hot bank."""
+    world, router, _ = demo_stack
+    stream = _skewed_stream(world, seed=3, n=96)
+    sem = _engine(router, "semantic")
+    plain = _engine(router, None)
+    sem.route_batch(stream)                 # heat the bank
+    probe = stream[:24]
+    for a, b in zip(sem.score_queries(probe), plain.score_queries(probe)):
+        np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# coherence: eviction sync, pool mutations, predictor swaps
+# ---------------------------------------------------------------------------
+
+
+def test_bank_evicts_in_sync_with_lru(demo_stack):
+    """Cache eviction must free the bank row (bank ⊆ LRU going forward) —
+    otherwise an evicted entry keeps serving semantic hits forever."""
+    world, router, _ = demo_stack
+    engine = _engine(router, "semantic", cache_size=32)
+    stream = _skewed_stream(world, seed=4, n=128)
+    for i in range(0, len(stream), 32):
+        engine.route_batch(stream[i: i + 32])
+    assert engine.cache.stats.evictions > 0, "workload must overflow"
+    assert engine.bank.evictions > 0
+    assert len(engine.bank) <= 32
+    for text in engine.bank._rows:
+        assert text in engine.cache._data, \
+            "bank row survived its LRU entry's eviction"
+
+
+def test_pool_mutation_respected_by_semantic_hits(demo_stack):
+    """Latents are reused, decisions are NOT: after onboarding a model
+    mid-traffic, semantic-hit queries route over the NEW pool exactly
+    like cold-computed ones (session pool is restored in finally)."""
+    from repro.data import ID_TASKS
+
+    world, router, _ = demo_stack
+    stream = _skewed_stream(world, seed=5, n=96)
+    sem = _engine(router, "semantic")
+    sem.route_batch(stream)                 # warm bank on the old pool
+    name = "future-model-00"
+    m = world.model_index(name)
+    anchors = world.query_indices(ID_TASKS)[router.artifacts.anchor_idx]
+    try:
+        mi = world.models[m]
+        lens = world.output_lengths([m], anchors)[0]
+        router.onboard(name, world.sample_responses([m], anchors, seed=m)[0],
+                       lens, world.true_latency([m], anchors, lens[None])[0],
+                       mi.price_in, mi.price_out, mi.tokenizer)
+        # FRESH near-duplicates of the same bases: these hit the bank
+        # rows banked under the old pool, and must route over the new one
+        stream2 = _skewed_stream(world, seed=55, n=96)
+        _, sel_sem = sem.route_batch(stream2)
+        _, sel_ref, _ = router.route(stream2)
+        np.testing.assert_array_equal(sel_sem, np.asarray(sel_ref))
+        assert sem.cache_stats.semantic_hits > 0
+    finally:
+        router.remove(name)
+
+
+def test_predictor_swap_clears_bank(demo_stack):
+    """Swapped artifacts invalidate the banked latents along with the
+    LRU — they were computed by the old predictor."""
+    world, router, _ = demo_stack
+    engine = _engine(router, "semantic")
+    engine.route_batch(_skewed_stream(world, seed=6, n=64))
+    old_texts = set(engine.bank._rows)
+    assert old_texts
+    import copy
+
+    art = router.artifacts
+    try:
+        router.artifacts = copy.copy(art)    # new identity, same weights
+        engine.route_batch(["post-swap probe"])
+        # the probe itself re-banks post-swap; every OLD row must be gone
+        assert not old_texts & set(engine.bank._rows), \
+            "stale latents survived the swap"
+        assert len(engine.cache._data) == 1
+    finally:
+        router.artifacts = art
+
+
+def test_requires_exact_cache_and_valid_mode(demo_stack):
+    _, router, _ = demo_stack
+    with pytest.raises(ValueError, match="cache_size"):
+        RouterEngine(router, RouterEngineConfig(
+            cache_size=0, semantic_cache=SemanticCacheConfig()))
+    with pytest.raises(ValueError, match="mode"):
+        RouterEngine(router, RouterEngineConfig(
+            semantic_cache=SemanticCacheConfig(mode="fuzzy")))
+
+
+# ---------------------------------------------------------------------------
+# the bank itself
+# ---------------------------------------------------------------------------
+
+
+def test_quantize_round_trip_error_bound():
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        x = rng.normal(size=64).astype(np.float32) * rng.uniform(0.1, 8)
+        q, scale = _quantize(x)
+        err = np.max(np.abs(q.astype(np.float32) * scale - x))
+        assert err <= float(scale) / 2 + 1e-7
+    q, scale = _quantize(np.zeros(16, np.float32))
+    assert float(scale) == 0.0 and not q.any()
+
+
+def test_bank_overflow_evicts_oldest_and_counts():
+    bank = LatentBank(4, 128, 8, store="int8")
+    sk = np.zeros(128, np.float32)
+    sk[0] = 1.0
+    lat = np.arange(8, dtype=np.float32)
+    for i in range(6):
+        bank.put(f"t{i}", lat, lat, sk)
+    assert len(bank) == 4 and bank.evictions == 2
+    assert "t0" not in bank and "t1" not in bank and "t5" in bank
+    # in-place overwrite neither grows nor evicts
+    bank.put("t5", lat + 1, lat + 1, sk)
+    assert len(bank) == 4 and bank.evictions == 2
+    bank.discard("t5")
+    assert len(bank) == 3 and bank.evictions == 3
+    bank.discard("never-seen")              # no-op
+    assert bank.evictions == 3
+
+
+def test_exact_duplicate_reads_above_trust_threshold():
+    """An int8-stored key probed with its own sketch reads ≥ sim_recheck's
+    neighborhood — the property the 0.99 trust band relies on."""
+    from repro.core.ingest import lex_batch
+
+    texts = ["the quick brown fox jumps over the lazy dog",
+             "compute the eigenvalues of a symmetric 3x3 matrix",
+             "translate this sentence into idiomatic french please"]
+    sketches = sketch_batch(lex_batch(texts), 128)
+    bank = LatentBank(8, 128, 4, store="int8")
+    z = np.zeros(4, np.float32)
+    for t, sk in zip(texts, sketches):
+        bank.put(t, z, z, sk)
+    sims, idx = bank.lookup(sketches)
+    assert np.all(sims >= 0.995), sims
+    for i, t in enumerate(texts):
+        assert bank.text_at(int(idx[i])) == t
+
+
+# ---------------------------------------------------------------------------
+# persistence: sidecar round trip, fingerprints, migrations
+# ---------------------------------------------------------------------------
+
+
+def test_sidecar_round_trips_through_router_open(demo_stack, tmp_path):
+    """save → open(semantic_cache=True) restores the bank BIT-EXACTLY
+    (arrays and text→row mapping), and the reopened engine routes the
+    stream identically."""
+    world, router, _ = demo_stack
+    stream = _skewed_stream(world, seed=7)
+    sem = _engine(router, "semantic")
+    for i in range(0, len(stream), 64):
+        sem.route_batch(stream[i: i + 64])
+    assert len(sem.bank) > 0
+    art_dir = str(tmp_path / "art")
+    router._engine = sem                    # save() persists the sidecar
+    try:
+        router.save(art_dir)
+    finally:
+        router._engine = None
+    from repro.api import Router
+
+    sc = SemanticCacheConfig(capacity=sem.bank.capacity)
+    reopened = Router.open(art_dir, semantic_cache=sc)
+    rbank = reopened.engine().bank
+    assert reopened.calibration["semcache_restored_rows"] == len(sem.bank)
+    assert rbank._rows == sem.bank._rows
+    for field in ("keys", "key_scale", "a", "a_scale", "b", "b_scale",
+                  "valid"):
+        np.testing.assert_array_equal(getattr(rbank, field),
+                                      getattr(sem.bank, field),
+                                      err_msg=field)
+    _, sel_new = reopened.engine().route_batch(stream[:64])
+    _, sel_old, _ = router.route(stream[:64])
+    np.testing.assert_array_equal(sel_new, np.asarray(sel_old))
+
+
+def test_stale_fingerprint_starts_cold_with_warning(demo_stack, tmp_path):
+    world, router, _ = demo_stack
+    sem = _engine(router, "semantic")
+    sem.route_batch(_skewed_stream(world, seed=8, n=64))
+    d = str(tmp_path)
+    save_bank(d, sem.bank, "0123456789abcdef")
+    real = latent_fingerprint(router.artifacts)
+    assert real != "0123456789abcdef"
+    with pytest.warns(UserWarning, match="fingerprint"):
+        assert load_bank(d, SemanticCacheConfig(), real) is None
+    # matching fingerprint restores
+    save_bank(d, sem.bank, real)
+    bank = load_bank(d, SemanticCacheConfig(), real)
+    assert bank is not None and len(bank) == len(sem.bank)
+    # layout mismatch also rejects
+    with pytest.warns(UserWarning, match="layout"):
+        assert load_bank(d, SemanticCacheConfig(sketch_dim=64), real) is None
+
+
+def test_sidecar_rides_the_artifact_migration_chain(tmp_path):
+    """A sidecar stamped with an older container schema_version loads
+    through a registered migration step — the record is a first-class
+    artifact, not a bespoke format."""
+    from repro.checkpoint.ckpt import (_ARTIFACT_MIGRATIONS,
+                                       register_artifact_migration)
+
+    bank = LatentBank(4, 128, 8)
+    sk = np.zeros(128, np.float32)
+    sk[3] = 1.0
+    bank.put("hello", np.ones(8, np.float32), np.ones(8, np.float32), sk)
+    d = str(tmp_path)
+    save_bank(d, bank, "fp")
+    meta_path = os.path.join(d, "semcache.meta.json")
+    with open(meta_path) as f:
+        rec = json.load(f)
+    rec["schema_version"] = 0
+    with open(meta_path, "w") as f:
+        json.dump(rec, f)
+    # without a migration: cold start (warns), never a crash
+    with pytest.warns(UserWarning):
+        assert load_bank(d, SemanticCacheConfig(), "fp") is None
+    calls = []
+
+    @register_artifact_migration(0)
+    def _v0_to_v1(pair):
+        tree, meta = pair
+        calls.append(1)
+        return tree, meta
+
+    try:
+        restored = load_bank(d, SemanticCacheConfig(), "fp")
+        assert calls and restored is not None and "hello" in restored
+    finally:
+        _ARTIFACT_MIGRATIONS.pop(0)
+
+
+def test_from_state_rebeds_into_smaller_capacity():
+    bank = LatentBank(8, 128, 4)
+    sk = np.zeros(128, np.float32)
+    sk[1] = 1.0
+    for i in range(6):
+        bank.put(f"q{i}", np.full(4, i, np.float32),
+                 np.full(4, -i, np.float32), sk)
+    small = LatentBank.from_state(bank.state(), capacity=3)
+    assert len(small) == 3 and small.evictions == 3
+    assert list(small._rows) == ["q3", "q4", "q5"]    # oldest dropped
+    a, b = small.latents_at(small.row_of("q5"))
+    ao, bo = bank.latents_at(bank.row_of("q5"))
+    np.testing.assert_array_equal(a, ao)
+    np.testing.assert_array_equal(b, bo)
+
+
+# ---------------------------------------------------------------------------
+# serving log + replay warm-up
+# ---------------------------------------------------------------------------
+
+
+def test_route_log_append_dedup_and_torn_tail(tmp_path):
+    p = str(tmp_path / "routes.jsonl")
+    with RouteLog(p) as log:
+        log.append("alpha", model="m0", policy="balanced")
+        log.append("beta", model="m1")
+        log.append("alpha")                 # duplicate
+        assert log.appended == 3
+    with open(p, "a", encoding="utf-8") as f:
+        f.write('{"text": "torn')           # crashed-server tail
+    assert RouteLog.read_texts(p) == ["alpha", "beta"]
+    assert RouteLog.read_texts(p, limit=1) == ["alpha"]
+    assert RouteLog.read_texts(str(tmp_path / "missing.jsonl")) == []
+    rec = json.loads(open(p, encoding="utf-8").readline())
+    assert rec == {"text": "alpha", "model": "m0", "policy": "balanced"}
+
+
+def test_warm_cache_fills_lru_without_skewing_stats(demo_stack):
+    world, router, _ = demo_stack
+    stream = _skewed_stream(world, seed=9, n=64)
+    engine = _engine(router, "semantic")
+    n = engine.warm_cache(stream + stream)   # dupes collapse
+    assert n == len(set(stream))
+    st = engine.cache_stats
+    assert (st.hits, st.misses, st.semantic_hits) == (0, 0, 0), \
+        "replay must not skew serving statistics"
+    assert len(engine.cache._data) == n
+    engine.route_batch(stream)
+    assert engine.cache_stats.hit_rate == 1.0, \
+        "warmed entries must serve the live stream"
+
+
+def test_replay_log_through_router_open(demo_stack, tmp_path):
+    """End to end: serve with a log, save, reopen with replay_log= — the
+    reopened engine starts warm (first batch all hits)."""
+    world, router, _ = demo_stack
+    stream = _skewed_stream(world, seed=10, n=64)
+    log_path = str(tmp_path / "routes.jsonl")
+    with RouteLog(log_path) as log:
+        for t in stream:
+            log.append(t)
+    art_dir = str(tmp_path / "art")
+    router.save(art_dir)
+    from repro.api import Router
+
+    reopened = Router.open(art_dir, semantic_cache=True,
+                           replay_log=log_path)
+    assert reopened.calibration["replayed_texts"] == len(set(stream))
+    eng = reopened.engine()
+    eng.route_batch(stream)
+    assert eng.cache_stats.hit_rate == 1.0
