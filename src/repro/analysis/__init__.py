@@ -1,0 +1,36 @@
+"""routerlint — AST-level static analysis enforcing the repo's invariants.
+
+Seven PRs of engine/kernel/serving work rest on conventions that were,
+until this package, enforced only by example:
+
+* jitted scoring programs take predictor params as *arguments* so the
+  persistent compile cache stays weight-free (PR 4);
+* every Pallas kernel has a bitwise-checked pure-jnp twin in
+  ``kernels/ref.py`` plus a parity test (PRs 1/5/7);
+* ``schema_version`` bumps ride an explicit migration chain (PR 6);
+* the asyncio service plane never blocks the event loop, and deadlines /
+  interval timings never read the wall clock;
+* low-precision dtypes stay inside ``kernels/`` and the precision-tier
+  code paths, protecting the bit-exact selection guarantee (PR 5).
+
+``python -m repro.analysis`` runs every registered checker over the
+repo (stdlib :mod:`ast` only — no new dependencies), honoring per-line
+``# routerlint: disable=<rule>`` suppressions and the committed
+``routerlint_baseline.json`` grandfather file, and reports findings as
+text or JSON.  See ``README.md`` § "Static analysis" for the rule
+catalog and workflows.
+"""
+from repro.analysis.base import (CHECKERS, Checker, Finding, Repo,
+                                 SourceModule, all_rules, register_checker)
+from repro.analysis.baseline import (Baseline, load_baseline,
+                                     write_baseline)
+from repro.analysis.report import JSON_REPORT_VERSION, render_json, render_text
+from repro.analysis.runner import Report, load_repo, run_analysis
+
+__all__ = [
+    "CHECKERS", "Checker", "Finding", "Repo", "SourceModule",
+    "all_rules", "register_checker",
+    "Baseline", "load_baseline", "write_baseline",
+    "JSON_REPORT_VERSION", "render_json", "render_text",
+    "Report", "load_repo", "run_analysis",
+]

@@ -1,0 +1,98 @@
+"""CLI: ``python -m repro.analysis [--format text|json] [ROOT]``.
+
+Exit codes: 0 clean (possibly via suppressions/baseline), 1 findings
+(including stale baseline entries), 2 usage error.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from repro.analysis.base import CHECKERS, all_rules
+from repro.analysis.baseline import (BASELINE_NAME, Baseline,
+                                     load_baseline, write_baseline)
+from repro.analysis.report import render_json, render_text
+from repro.analysis.runner import find_repo_root, load_repo, run_analysis
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="routerlint: enforce the repo's jit-purity, "
+                    "kernel-parity, async-safety, schema-migration and "
+                    "precision invariants (stdlib ast, no deps)")
+    ap.add_argument("root", nargs="?", default=None,
+                    help="repo root (default: auto-detected via src/repro)")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--output", default=None, metavar="PATH",
+                    help="also write the report to this file")
+    ap.add_argument("--baseline", default=None, metavar="PATH",
+                    help=f"baseline file (default: <root>/{BASELINE_NAME} "
+                         f"when present)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore any baseline file (report every finding)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="regenerate the baseline from current findings "
+                         "and exit clean")
+    ap.add_argument("--only", default=None, metavar="CHECKERS",
+                    help="comma-separated checker subset "
+                         f"(of: {', '.join(CHECKERS)})")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print every checker and rule, then exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for name, cls in CHECKERS.items():
+            print(f"{name}:")
+            for rule, desc in cls.rules.items():
+                print(f"  {rule}: {desc}")
+        return 0
+
+    try:
+        root = find_repo_root(args.root)
+    except FileNotFoundError as e:
+        print(f"routerlint: {e}", file=sys.stderr)
+        return 2
+
+    only = None
+    if args.only:
+        only = [c.strip() for c in args.only.split(",") if c.strip()]
+        unknown = [c for c in only if c not in CHECKERS]
+        if unknown:
+            print(f"routerlint: unknown checker(s) {unknown}; have "
+                  f"{list(CHECKERS)}", file=sys.stderr)
+            return 2
+
+    repo = load_repo(root)
+
+    baseline_path = Path(args.baseline) if args.baseline \
+        else root / BASELINE_NAME
+    if args.write_baseline:
+        report = run_analysis(repo, baseline=None, only=only)
+        write_baseline(baseline_path, report.findings)
+        print(f"routerlint: wrote {len(report.findings)} entr"
+              f"{'y' if len(report.findings) == 1 else 'ies'} to "
+              f"{baseline_path}")
+        return 0
+
+    baseline: Baseline | None = None
+    if not args.no_baseline and baseline_path.is_file():
+        try:
+            baseline = load_baseline(baseline_path)
+        except (ValueError, OSError) as e:
+            print(f"routerlint: unreadable baseline {baseline_path}: {e}",
+                  file=sys.stderr)
+            return 2
+
+    report = run_analysis(repo, baseline=baseline, only=only)
+    rendered = (render_json(report) if args.format == "json"
+                else render_text(report))
+    if args.output:
+        Path(args.output).write_text(rendered)
+    print(rendered, end="" if rendered.endswith("\n") else "\n")
+    return 0 if report.clean else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

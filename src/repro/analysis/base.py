@@ -1,0 +1,195 @@
+"""Framework core: findings, the parsed-source model, checker registry.
+
+A :class:`Checker` sees the whole :class:`Repo` (all parsed modules), not
+one file at a time — several of the repo's invariants are cross-file
+contracts (a kernel in ``kernels/`` must have a twin in ``kernels/ref.py``
+AND a reference in ``tests/test_kernels.py``), and single-file visitors
+cannot express them.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import (Callable, Dict, FrozenSet, Iterable, Iterator, List,
+                    Optional, Type)
+
+#: ``# routerlint: disable=rule-a,rule-b`` (or ``disable=all``) anywhere
+#: on a line suppresses findings reported AT that line;
+#: ``disable-next-line=`` suppresses on the FOLLOWING line (for lines
+#: too long to carry the comment themselves).
+_SUPPRESS_RE = re.compile(
+    r"#\s*routerlint:\s*(disable|disable-next-line)="
+    r"([A-Za-z0-9_\-]+(?:\s*,\s*[A-Za-z0-9_\-]+)*)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation, anchored to a source line.
+
+    ``symbol`` is the dotted enclosing def/class (stable across line
+    drift) and — together with ``rule``/``path``/``line_text`` — forms
+    the baseline fingerprint, so a grandfathered finding survives
+    unrelated edits above it but dies the moment its own line changes.
+    """
+    rule: str
+    path: str            # repo-relative posix path
+    line: int            # 1-based
+    col: int
+    message: str
+    symbol: str = ""     # dotted enclosing scope, "" at module level
+    line_text: str = ""  # stripped source of the flagged line
+
+    def sort_key(self):
+        return (self.path, self.line, self.col, self.rule)
+
+
+class SourceModule:
+    """One parsed source file: AST + raw lines + suppressions + scopes."""
+
+    def __init__(self, path: str, source: str):
+        self.path = path
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=path)
+        suppress: Dict[int, set] = {}
+        for i, line in enumerate(self.lines, start=1):
+            m = _SUPPRESS_RE.search(line)
+            if m:
+                at = i + 1 if m.group(1) == "disable-next-line" else i
+                suppress.setdefault(at, set()).update(
+                    r.strip() for r in m.group(2).split(","))
+        self._suppress: Dict[int, FrozenSet[str]] = {
+            k: frozenset(v) for k, v in suppress.items()}
+        self._parents: Optional[Dict[ast.AST, ast.AST]] = None
+
+    # ------------------------------------------------------------------
+    def suppressed(self, line: int, rule: str) -> bool:
+        rules = self._suppress.get(line)
+        return bool(rules) and (rule in rules or "all" in rules)
+
+    def line_text(self, line: int) -> str:
+        if 1 <= line <= len(self.lines):
+            return self.lines[line - 1].strip()
+        return ""
+
+    # ------------------------------------------------------------------
+    @property
+    def parents(self) -> Dict[ast.AST, ast.AST]:
+        if self._parents is None:
+            self._parents = {}
+            for node in ast.walk(self.tree):
+                for child in ast.iter_child_nodes(node):
+                    self._parents[child] = node
+        return self._parents
+
+    def symbol_for(self, node: ast.AST) -> str:
+        """Dotted enclosing def/class chain for a node ('' at toplevel)."""
+        names: List[str] = []
+        cur: Optional[ast.AST] = node
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                ast.ClassDef)):
+                names.append(cur.name)
+            cur = self.parents.get(cur)
+        return ".".join(reversed(names))
+
+    def finding(self, rule: str, node: ast.AST, message: str) -> Finding:
+        line = getattr(node, "lineno", 1)
+        return Finding(rule=rule, path=self.path, line=line,
+                       col=getattr(node, "col_offset", 0) + 1,
+                       message=message, symbol=self.symbol_for(node),
+                       line_text=self.line_text(line))
+
+
+class Repo:
+    """Every scanned module plus access to non-scanned repo files."""
+
+    def __init__(self, root: Path, modules: List[SourceModule]):
+        self.root = Path(root)
+        self.modules = modules
+        self.by_path: Dict[str, SourceModule] = {m.path: m for m in modules}
+
+    def under(self, *prefixes: str) -> Iterator[SourceModule]:
+        for m in self.modules:
+            if any(m.path.startswith(p) for p in prefixes):
+                yield m
+
+    def read_text(self, relpath: str) -> Optional[str]:
+        """Raw text of a repo file outside the scan set (e.g. a test
+        module a contract rule cross-references); None when absent."""
+        p = self.root / relpath
+        try:
+            return p.read_text()
+        except OSError:
+            return None
+
+
+class Checker:
+    """Base class: subclasses set ``name``/``rules`` and yield findings.
+
+    ``rules`` maps each rule id the checker may emit to its one-line
+    description (surfaced by ``--list-rules`` and the JSON report)."""
+
+    name: str = ""
+    rules: Dict[str, str] = {}
+
+    def check(self, repo: Repo) -> Iterable[Finding]:  # pragma: no cover
+        raise NotImplementedError
+
+
+#: name -> checker class, in registration order.
+CHECKERS: Dict[str, Type[Checker]] = {}
+
+
+def register_checker(cls: Type[Checker]) -> Type[Checker]:
+    if not cls.name:
+        raise ValueError(f"{cls.__name__} has no name")
+    if cls.name in CHECKERS:
+        raise ValueError(f"checker {cls.name!r} already registered")
+    CHECKERS[cls.name] = cls
+    return cls
+
+
+def all_rules() -> Dict[str, str]:
+    """Every registered rule id -> description."""
+    out: Dict[str, str] = {}
+    for cls in CHECKERS.values():
+        out.update(cls.rules)
+    return out
+
+
+# ----------------------------------------------------------------------
+# shared AST helpers
+# ----------------------------------------------------------------------
+def dotted(node: ast.AST) -> Optional[str]:
+    """'a.b.c' for nested Name/Attribute chains, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def int_const(node: ast.AST) -> Optional[int]:
+    if (isinstance(node, ast.Constant) and type(node.value) is int):
+        return node.value
+    return None
+
+
+def assigned_names(node: ast.AST) -> Iterator[str]:
+    """Every Name bound anywhere under ``node`` (Store ctx + args)."""
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Store):
+            yield n.id
+        elif isinstance(n, ast.arg):
+            yield n.arg
+        elif isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef,
+                            ast.ClassDef)):
+            yield n.name
+        elif isinstance(n, ast.alias):
+            yield (n.asname or n.name).split(".")[0]

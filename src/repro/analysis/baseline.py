@@ -1,0 +1,86 @@
+"""Baseline file: grandfathered findings, with a stale-entry tripwire.
+
+The baseline exists so the analyzer can be adopted (or a rule tightened)
+without blocking on fixing every historical finding at once — known
+findings are recorded in ``routerlint_baseline.json`` and stop failing
+the run.  Two properties keep it from rotting into a permanent mute:
+
+* matching is by fingerprint (rule + path + enclosing symbol + the
+  flagged line's stripped text), NOT by line number — unrelated edits
+  above a grandfathered finding don't orphan its entry, but changing
+  the flagged line itself does;
+* a baseline entry that no longer matches ANY finding is an ERROR
+  (``stale-baseline``): when you fix a grandfathered finding you must
+  also delete its entry (or regenerate with ``--write-baseline``), so
+  the baseline only ever shrinks toward empty.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.analysis.base import Finding
+
+BASELINE_NAME = "routerlint_baseline.json"
+_BASELINE_VERSION = 1
+
+
+def _fingerprint(f: Finding) -> Tuple[str, str, str, str]:
+    return (f.rule, f.path, f.symbol, f.line_text)
+
+
+@dataclasses.dataclass
+class Baseline:
+    path: Optional[str] = None
+    entries: List[Dict[str, str]] = dataclasses.field(default_factory=list)
+
+    def split(self, findings: Sequence[Finding]
+              ) -> Tuple[List[Finding], List[Finding], List[Finding]]:
+        """(actionable, grandfathered, stale_entry_findings)."""
+        keys = {(e.get("rule", ""), e.get("path", ""),
+                 e.get("symbol", ""), e.get("line_text", "")): e
+                for e in self.entries}
+        hit = set()
+        fresh: List[Finding] = []
+        old: List[Finding] = []
+        for f in findings:
+            k = _fingerprint(f)
+            if k in keys:
+                hit.add(k)
+                old.append(f)
+            else:
+                fresh.append(f)
+        stale = [
+            Finding(rule="stale-baseline", path=self.path or BASELINE_NAME,
+                    line=1, col=1, symbol="",
+                    line_text="",
+                    message=(f"baseline entry no longer matches any "
+                             f"finding (rule={k[0]}, path={k[1]}, "
+                             f"symbol={k[2] or '<module>'}) — the "
+                             f"finding was fixed; delete the entry or "
+                             f"regenerate with --write-baseline"))
+            for k in sorted(keys) if k not in hit]
+        return fresh, old, stale
+
+
+def load_baseline(path) -> Baseline:
+    p = Path(path)
+    rec = json.loads(p.read_text())
+    if rec.get("version") != _BASELINE_VERSION:
+        raise ValueError(f"unsupported baseline version "
+                         f"{rec.get('version')!r} in {p}")
+    return Baseline(path=str(p), entries=list(rec.get("entries", [])))
+
+
+def write_baseline(path, findings: Sequence[Finding]) -> Baseline:
+    """Serialize current findings as the new baseline (sorted, stable)."""
+    entries = [{"rule": f.rule, "path": f.path, "symbol": f.symbol,
+                "line_text": f.line_text, "message": f.message}
+               for f in sorted(findings, key=Finding.sort_key)]
+    p = Path(path)
+    p.write_text(json.dumps({"version": _BASELINE_VERSION,
+                             "tool": "routerlint",
+                             "entries": entries}, indent=1) + "\n")
+    return Baseline(path=str(p), entries=entries)

@@ -1,0 +1,7 @@
+"""Stack-specific checkers.  Importing this package registers them all."""
+from repro.analysis.checkers import (async_safety, jit_purity,  # noqa: F401
+                                     kernel_contract, precision_hygiene,
+                                     schema_migration)
+
+__all__ = ["async_safety", "jit_purity", "kernel_contract",
+           "precision_hygiene", "schema_migration"]

@@ -1,0 +1,128 @@
+"""async-safety: the service plane must never block the event loop,
+and deadlines/timings must never read the wall clock.
+
+Scope: ``src/repro/serving/`` and ``src/repro/launch/`` — the modules
+that host (or launch) the asyncio :class:`RouterService` plane.
+
+Rules:
+
+``async-blocking-call``
+    A blocking call lexically inside an ``async def`` body:
+    ``time.sleep``, builtin ``open``, ``input``, ``subprocess.*``,
+    blocking socket primitives (``socket.create_connection``,
+    ``.sendall`` / ``.recv`` / ``.makefile``), or the synchronous
+    ``ServiceClient``.  One stalled handler stalls EVERY connection the
+    loop serves — use ``asyncio.sleep``, ``loop.run_in_executor``, or
+    the async transport.  Nested synchronous ``def``s are excluded (they
+    run wherever they are called).
+
+``async-global-state``
+    ``global`` rebinding inside an ``async def``: cross-handler shared
+    mutable state must live on an owning object, be guarded, or be
+    documented — anonymous module globals mutated from handlers are how
+    lost-update bugs enter an event loop that interleaves at every
+    ``await``.
+
+``monotonic-time``
+    Any ``time.time()`` in the serving/launch planes.  Deadlines and
+    elapsed intervals must use ``time.monotonic()`` /
+    ``time.perf_counter()`` — the wall clock steps under NTP/DST, which
+    turns a 2 ms coalesce window or a request deadline into minutes (or
+    makes it negative).  Wall-clock timestamps for *display* belong in
+    log formatting, not in the serving planes' arithmetic.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Iterator
+
+from repro.analysis.base import (Checker, Finding, Repo, SourceModule,
+                                 dotted, register_checker)
+
+_SCOPE = ("src/repro/serving/", "src/repro/launch/")
+
+_BLOCKING_DOTTED = {
+    "time.sleep",
+    "socket.create_connection",
+    "subprocess.run", "subprocess.call", "subprocess.check_call",
+    "subprocess.check_output", "subprocess.Popen",
+}
+_BLOCKING_NAMES = {"open", "input", "ServiceClient"}
+_BLOCKING_METHODS = {"sendall", "recv", "makefile"}
+
+
+def _async_defs(mod: SourceModule) -> Iterator[ast.AsyncFunctionDef]:
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.AsyncFunctionDef):
+            yield node
+
+
+def _own_statements(fn: ast.AsyncFunctionDef) -> Iterator[ast.AST]:
+    """Nodes belonging to the async body itself — nested *sync* defs are
+    excluded (they execute wherever they are invoked, and the engine /
+    batcher deliberately run under ``run_in_executor``)."""
+    stack = list(fn.body)
+    while stack:
+        node = stack.pop()
+        if isinstance(node, ast.FunctionDef):
+            continue
+        yield node
+        stack.extend(ast.iter_child_nodes(node))
+
+
+@register_checker
+class AsyncSafetyChecker(Checker):
+    name = "async-safety"
+    rules = {
+        "async-blocking-call":
+            "blocking call (time.sleep, open, socket/subprocess, sync "
+            "ServiceClient) inside an async def — stalls the event loop",
+        "async-global-state":
+            "`global` rebinding inside an async def — shared mutable "
+            "state must be owned/guarded, not an anonymous module global",
+        "monotonic-time":
+            "time.time() in the serving/launch planes — wall clock steps "
+            "under NTP; use time.monotonic()/perf_counter() for "
+            "deadlines and intervals",
+    }
+
+    def check(self, repo: Repo) -> Iterable[Finding]:
+        for mod in repo.under(*_SCOPE):
+            yield from self._wall_clock(mod)
+            for fn in _async_defs(mod):
+                yield from self._async_body(mod, fn)
+
+    # ------------------------------------------------------------------
+    def _wall_clock(self, mod: SourceModule) -> Iterator[Finding]:
+        for node in ast.walk(mod.tree):
+            if (isinstance(node, ast.Call)
+                    and dotted(node.func) == "time.time"):
+                yield mod.finding(
+                    "monotonic-time", node,
+                    "time.time() is wall-clock — use time.monotonic() "
+                    "for deadlines or time.perf_counter() for intervals")
+
+    def _async_body(self, mod: SourceModule, fn: ast.AsyncFunctionDef
+                    ) -> Iterator[Finding]:
+        for node in _own_statements(fn):
+            if isinstance(node, ast.Global):
+                yield mod.finding(
+                    "async-global-state", node,
+                    f"async `{fn.name}` rebinds module global(s) "
+                    f"{', '.join(node.names)} — handlers interleave at "
+                    f"every await; own or guard this state")
+                continue
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted(node.func)
+            if name is None:
+                continue
+            if (name in _BLOCKING_DOTTED
+                    or (name in _BLOCKING_NAMES and "." not in name)
+                    or ("." in name
+                        and name.rsplit(".", 1)[-1] in _BLOCKING_METHODS)):
+                yield mod.finding(
+                    "async-blocking-call", node,
+                    f"`{name}(...)` blocks inside async `{fn.name}` — "
+                    f"one stalled handler stalls every connection; use "
+                    f"the asyncio equivalent or run_in_executor")

@@ -1,0 +1,226 @@
+"""jit-purity: traced code must be pure, and weights must be arguments.
+
+A jit body is detected through any of the idioms the repo uses:
+
+* ``@jax.jit`` / ``@jit`` decorators;
+* ``@partial(jax.jit, ...)`` / ``@functools.partial(jax.jit, ...)``;
+* wrapping a locally-defined function: ``f_jit = jax.jit(f)`` (the
+  ``serving/engine.py`` pattern — ``_latents`` / ``_from_latents``).
+
+Rules:
+
+``jit-branch-on-traced``
+    Python-level ``if``/``while`` on a jit argument.  Tracing evaluates
+    the branch ONCE with an abstract value — either it crashes
+    (ConcretizationTypeError) or, worse, silently bakes one side into
+    every execution.  Branch on static closure config, or use
+    ``jnp.where`` / ``lax.cond``.
+
+``jit-host-call``
+    Host-side calls inside a jit body: ``np.*`` / ``numpy.*`` (silently
+    constant-folds a traced value or crashes), ``time.*`` / ``random.*``
+    / ``os.*`` (evaluated once at trace time, frozen forever), ``print``
+    / ``open`` / ``input`` (side effects that fire per-trace, not
+    per-call).  Use ``jnp``, ``jax.random``, ``jax.debug.print``.
+
+``jit-closure-params``
+    The PR-4 invariant: predictor weights referenced as closure state
+    (``pred.params``, ``self._params``, a free ``params``/``weights``
+    name) instead of entering as jit ARGUMENTS.  Closed-over arrays are
+    embedded into the lowered HLO as constants — every persistent
+    compile-cache entry then carries ~MBs of weights and cache
+    DESERIALIZATION becomes as slow as compilation, defeating
+    ``Router.open(dir, warmup=...)``.  Detection is name-based (free or
+    attribute names containing ``param``/``weight``): precise enough for
+    this codebase's conventions, suppressible where a closed-over name
+    is genuinely small static config.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, Iterator, List, Optional, Set, Tuple
+
+from repro.analysis.base import (Checker, Finding, Repo, SourceModule,
+                                 dotted, register_checker)
+
+_JIT_NAMES = {"jax.jit", "jit"}
+_PARTIAL_NAMES = {"partial", "functools.partial"}
+_HOST_MODULES = {"np", "numpy", "time", "random", "os"}
+_HOST_BUILTINS = {"print", "open", "input"}
+_PARAM_MARKERS = ("param", "weight")
+
+
+def _is_jit_expr(node: ast.AST) -> bool:
+    """True for ``jax.jit`` / ``jit`` / ``partial(jax.jit, ...)``."""
+    name = dotted(node)
+    if name in _JIT_NAMES:
+        return True
+    if (isinstance(node, ast.Call) and dotted(node.func) in _PARTIAL_NAMES
+            and node.args and dotted(node.args[0]) in _JIT_NAMES):
+        return True
+    return False
+
+
+def _static_args(call: Optional[ast.Call]) -> Tuple[Set[str], Set[int]]:
+    """(static_argnames, static_argnums) declared on a jit/partial call."""
+    names: Set[str] = set()
+    nums: Set[int] = set()
+    if call is None:
+        return names, nums
+    for kw in call.keywords:
+        vals = (kw.value.elts if isinstance(kw.value, (ast.Tuple, ast.List))
+                else [kw.value])
+        consts = [v.value for v in vals if isinstance(v, ast.Constant)]
+        if kw.arg == "static_argnames":
+            names.update(c for c in consts if isinstance(c, str))
+        elif kw.arg == "static_argnums":
+            nums.update(c for c in consts if isinstance(c, int))
+    return names, nums
+
+
+def _jitted_defs(mod: SourceModule
+                 ) -> Iterator[Tuple[ast.FunctionDef, Set[str]]]:
+    """(FunctionDef, static arg names) for every body traced under jit."""
+    defs: Dict[str, List[ast.FunctionDef]] = {}
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.FunctionDef):
+            defs.setdefault(node.name, []).append(node)
+    seen: Set[ast.FunctionDef] = set()
+
+    def _statics(fn: ast.FunctionDef, jit_expr: ast.AST) -> Set[str]:
+        call = jit_expr if isinstance(jit_expr, ast.Call) else None
+        names, nums = _static_args(call)
+        pos = [a.arg for a in (list(fn.args.posonlyargs)
+                               + list(fn.args.args))]
+        names.update(pos[i] for i in nums if i < len(pos))
+        return names
+
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.FunctionDef):
+            for d in node.decorator_list:
+                if _is_jit_expr(d) and node not in seen:
+                    seen.add(node)
+                    yield node, _statics(node, d)
+        elif (isinstance(node, ast.Call) and _is_jit_expr(node.func)
+              and node.args and isinstance(node.args[0], ast.Name)):
+            # f_jit = jax.jit(f): resolve f to a def in this module
+            for fd in defs.get(node.args[0].id, []):
+                if fd not in seen:
+                    seen.add(fd)
+                    yield fd, _statics(fd, node)
+
+
+def _local_bindings(fn: ast.FunctionDef) -> Set[str]:
+    """Names bound inside the function (params, assignments, defs)."""
+    names: Set[str] = set()
+    for a in (list(fn.args.posonlyargs) + list(fn.args.args)
+              + list(fn.args.kwonlyargs)):
+        names.add(a.arg)
+    if fn.args.vararg:
+        names.add(fn.args.vararg.arg)
+    if fn.args.kwarg:
+        names.add(fn.args.kwarg.arg)
+    for stmt in fn.body:
+        for n in ast.walk(stmt):
+            if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Store):
+                names.add(n.id)
+            elif isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                ast.ClassDef)):
+                names.add(n.name)
+    return names
+
+
+def _param_names(fn: ast.FunctionDef) -> Set[str]:
+    names = {a.arg for a in (list(fn.args.posonlyargs) + list(fn.args.args)
+                             + list(fn.args.kwonlyargs))}
+    names.discard("self")
+    return names
+
+
+def _looks_like_params(name: str) -> bool:
+    low = name.lower()
+    return any(m in low for m in _PARAM_MARKERS)
+
+
+@register_checker
+class JitPurityChecker(Checker):
+    name = "jit-purity"
+    rules = {
+        "jit-branch-on-traced":
+            "Python if/while on a traced jit argument (trace-time "
+            "concretization; use jnp.where / lax.cond)",
+        "jit-host-call":
+            "host-side call (np.*, time.*, print, open, ...) inside a "
+            "jit body — runs at trace time, not per call",
+        "jit-closure-params":
+            "jit body reads params/weights as closure state instead of "
+            "taking them as arguments (bloats the weight-free persistent "
+            "compile cache — the PR-4 invariant)",
+    }
+
+    def check(self, repo: Repo) -> Iterable[Finding]:
+        for mod in repo.under("src/"):
+            for fn, static in _jitted_defs(mod):
+                yield from self._check_fn(mod, fn, static)
+
+    # ------------------------------------------------------------------
+    def _check_fn(self, mod: SourceModule, fn: ast.FunctionDef,
+                  static: Set[str]) -> Iterator[Finding]:
+        params = _param_names(fn) - static
+        local = _local_bindings(fn)
+        for stmt in fn.body:
+            for node in ast.walk(stmt):
+                yield from self._branch(mod, fn, node, params)
+                yield from self._host_call(mod, fn, node)
+                yield from self._closure_params(mod, fn, node, local)
+
+    def _branch(self, mod, fn, node, params) -> Iterator[Finding]:
+        if not isinstance(node, (ast.If, ast.While)):
+            return
+        traced = sorted({n.id for n in ast.walk(node.test)
+                         if isinstance(n, ast.Name)
+                         and isinstance(n.ctx, ast.Load)
+                         and n.id in params})
+        if traced:
+            kind = "if" if isinstance(node, ast.If) else "while"
+            yield mod.finding(
+                "jit-branch-on-traced", node,
+                f"`{kind}` in jitted `{fn.name}` branches on traced "
+                f"argument(s) {', '.join(traced)} — tracing bakes in one "
+                f"side; use jnp.where/lax.cond or hoist to a static arg")
+
+    def _host_call(self, mod, fn, node) -> Iterator[Finding]:
+        if not isinstance(node, ast.Call):
+            return
+        name = dotted(node.func)
+        if name is None:
+            return
+        root = name.split(".")[0]
+        if name in _HOST_BUILTINS:
+            yield mod.finding(
+                "jit-host-call", node,
+                f"`{name}(...)` inside jitted `{fn.name}` is a host side "
+                f"effect — it fires at trace time only")
+        elif root in _HOST_MODULES and "." in name:
+            yield mod.finding(
+                "jit-host-call", node,
+                f"`{name}(...)` inside jitted `{fn.name}` runs on the "
+                f"host at trace time — use the jnp/jax equivalent")
+
+    def _closure_params(self, mod, fn, node, local) -> Iterator[Finding]:
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load):
+            if node.id not in local and _looks_like_params(node.id):
+                yield mod.finding(
+                    "jit-closure-params", node,
+                    f"jitted `{fn.name}` closes over `{node.id}` — "
+                    f"weights must enter as jit arguments so persistent "
+                    f"compile-cache entries stay weight-free")
+        elif isinstance(node, ast.Attribute) and _looks_like_params(node.attr):
+            base = dotted(node.value)
+            root = (base or "").split(".")[0]
+            if base is not None and root and root not in local:
+                yield mod.finding(
+                    "jit-closure-params", node,
+                    f"jitted `{fn.name}` reads `{base}.{node.attr}` from "
+                    f"closure state — pass the params pytree as a jit "
+                    f"argument (PR-4 weight-free compile-cache invariant)")

@@ -1,0 +1,173 @@
+"""kernel-contract: every Pallas kernel has a checked pure-jnp twin.
+
+The repo's kernel discipline (PRs 1/5/7): a module under
+``src/repro/kernels/`` that issues ``pl.pallas_call`` must have
+
+* a same-stem ``*_ref`` oracle in ``kernels/ref.py`` (the allclose /
+  bitwise target — ``flash_attention.py`` -> ``flash_attention_ref``,
+  ``irt2pl.py`` -> ``irt_2pl_ref``; stems match ignoring underscores,
+  and a stem may be a prefix of its ref, e.g. ``doptimal`` ->
+  ``doptimal_score_ref``);
+* a parity test in ``tests/test_kernels.py`` that references BOTH the
+  kernel entry point and the ref function;
+* static BlockSpec tile shapes — ints / host-level names, never traced
+  values (a traced tile shape cannot lower and, half-supported, would
+  silently de-tile the grid).
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterable, Iterator, List
+
+from repro.analysis.base import (Checker, Finding, Repo, SourceModule,
+                                 dotted, register_checker)
+
+_KERNELS_DIR = "src/repro/kernels/"
+_REF_PATH = "src/repro/kernels/ref.py"
+_TEST_PATH = "tests/test_kernels.py"
+#: kernels-dir modules that are not kernel implementations
+_NON_KERNEL = {"ref.py", "ops.py", "__init__.py"}
+
+#: host-level helpers allowed inside a static BlockSpec shape element
+_SHAPE_FNS = {"int", "len", "max", "min"}
+
+
+def _norm(name: str) -> str:
+    return name.replace("_", "").lower()
+
+
+def _has_pallas_call(mod: SourceModule) -> bool:
+    return any(isinstance(n, ast.Call)
+               and dotted(n.func) in ("pl.pallas_call", "pallas_call")
+               for n in ast.walk(mod.tree))
+
+
+def _ref_functions(repo: Repo) -> List[str]:
+    ref = repo.by_path.get(_REF_PATH)
+    if ref is None:
+        return []
+    return [n.name for n in ast.walk(ref.tree)
+            if isinstance(n, ast.FunctionDef) and n.name.endswith("_ref")]
+
+
+def _entry_functions(mod: SourceModule) -> List[str]:
+    """Public top-level defs — the dispatch surface ops.py / tests use."""
+    return [n.name for n in mod.tree.body
+            if isinstance(n, ast.FunctionDef)
+            and not n.name.startswith("_")]
+
+
+def _static_shape_elt(node: ast.AST) -> bool:
+    """Conservatively static: int literals, host names, arithmetic over
+    them, ``x.shape[i]`` (a Python int on concrete inputs), and the
+    whitelisted host helpers."""
+    if isinstance(node, ast.Constant):
+        return type(node.value) is int or node.value is None
+    if isinstance(node, ast.Name):
+        return True
+    if isinstance(node, ast.BinOp):
+        return _static_shape_elt(node.left) and _static_shape_elt(node.right)
+    if isinstance(node, ast.UnaryOp):
+        return _static_shape_elt(node.operand)
+    if isinstance(node, ast.Call):
+        fn = dotted(node.func)
+        return fn in _SHAPE_FNS and all(_static_shape_elt(a)
+                                        for a in node.args)
+    if isinstance(node, ast.Subscript):
+        # x.shape[0] — static on the concrete arrays pallas_call sees
+        base = node.value
+        return (isinstance(base, ast.Attribute) and base.attr == "shape")
+    if isinstance(node, ast.Attribute):
+        # e.g. module-level constant accessed as mod.CONST
+        return True
+    return False
+
+
+@register_checker
+class KernelContractChecker(Checker):
+    name = "kernel-contract"
+    rules = {
+        "kernel-missing-ref":
+            "Pallas kernel module has no same-stem *_ref oracle in "
+            "kernels/ref.py (bitwise-parity contract, PRs 1/5/7)",
+        "kernel-missing-parity-test":
+            "tests/test_kernels.py does not reference both the kernel "
+            "entry point and its *_ref twin",
+        "kernel-blockspec-dynamic":
+            "BlockSpec tile shape element is not a static host int",
+    }
+
+    def check(self, repo: Repo) -> Iterable[Finding]:
+        refs = _ref_functions(repo)
+        test_src = repo.read_text(_TEST_PATH) or ""
+        for mod in repo.under(_KERNELS_DIR):
+            fname = mod.path.rsplit("/", 1)[-1]
+            if fname in _NON_KERNEL:
+                continue
+            yield from self._block_specs(mod)
+            if not _has_pallas_call(mod):
+                continue
+            stem = fname[:-3]
+            matched = self._match_refs(stem, refs)
+            if not matched:
+                yield self._mod_finding(
+                    mod, "kernel-missing-ref",
+                    f"kernel module `{mod.path}` has no `{stem}*_ref` "
+                    f"twin in kernels/ref.py — add the pure-jnp oracle "
+                    f"the parity test asserts against")
+                continue
+            yield from self._parity_test(mod, stem, matched, test_src)
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _match_refs(stem: str, refs: List[str]) -> List[str]:
+        ns = _norm(stem)
+        return [r for r in refs if _norm(r[:-len("_ref")]).startswith(ns)]
+
+    @staticmethod
+    def _mod_finding(mod: SourceModule, rule: str, msg: str) -> Finding:
+        return Finding(rule=rule, path=mod.path, line=1, col=1,
+                       message=msg, symbol="",
+                       line_text=mod.line_text(1))
+
+    def _parity_test(self, mod: SourceModule, stem: str,
+                     matched: List[str], test_src: str
+                     ) -> Iterator[Finding]:
+        def present(name: str) -> bool:
+            return re.search(rf"\b{re.escape(name)}\b", test_src) is not None
+
+        if not any(present(r) for r in matched):
+            yield self._mod_finding(
+                mod, "kernel-missing-parity-test",
+                f"{_TEST_PATH} never references "
+                f"{' / '.join(matched)} — the `{stem}` kernel has no "
+                f"parity test against its ref twin")
+            return
+        # the kernel side may be driven directly (*_tpu) or through its
+        # ops.py dispatcher (the ref name minus the _ref suffix)
+        entries = _entry_functions(mod)
+        names = entries + [stem] + [r[:-len("_ref")] for r in matched]
+        if not any(present(n) for n in names):
+            yield self._mod_finding(
+                mod, "kernel-missing-parity-test",
+                f"{_TEST_PATH} references the ref twin but never the "
+                f"kernel entry point ({', '.join(entries) or stem}) — "
+                f"the parity test must drive both sides")
+
+    def _block_specs(self, mod: SourceModule) -> Iterator[Finding]:
+        for node in ast.walk(mod.tree):
+            if not (isinstance(node, ast.Call)
+                    and dotted(node.func) in ("pl.BlockSpec", "BlockSpec")):
+                continue
+            if not node.args:
+                continue
+            shape = node.args[0]
+            elts = shape.elts if isinstance(shape, ast.Tuple) else [shape]
+            for e in elts:
+                if not _static_shape_elt(e):
+                    yield mod.finding(
+                        "kernel-blockspec-dynamic", e,
+                        "BlockSpec tile shape element must be a static "
+                        "host int (literal, host name, or shape[i]) — "
+                        "traced values cannot parameterize the grid")

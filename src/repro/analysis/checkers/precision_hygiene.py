@@ -1,0 +1,80 @@
+"""precision-hygiene: low-precision dtypes stay on the tiered paths.
+
+The PR-5 guarantee is that routing selections are BIT-IDENTICAL to the
+f32 reference regardless of precision tier — held together by exactly
+one sanctioned cast site (``serving/engine.py`` casts the predictor
+params ONCE at upload; the params dtype then drives every downstream
+compute dtype) plus the f32-accumulated kernels under ``kernels/``.
+
+A stray ``astype(jnp.bfloat16)`` anywhere else in the scoring stack
+(``core/`` + ``serving/``) silently re-rounds values the re-check tier
+assumed exact, and the drift surfaces as selection flips nobody can
+bisect.  The generation stack (``models/``, ``configs/``, ``launch/``)
+and the bf16 checkpoint codec (``checkpoint/``) are out of scope — they
+never feed the routing decision.
+
+Rule ``precision-dtype`` flags, inside ``core/`` and ``serving/``:
+
+* any ``jnp.bfloat16`` / ``jnp.float16`` / ``np.float16`` attribute use;
+* the strings ``"bfloat16"`` / ``"float16"`` passed to an
+  ``astype``-like call or a ``dtype=`` keyword.
+
+The engine's single sanctioned upload cast carries an inline
+``# routerlint: disable=precision-dtype`` — new cast sites must either
+move into ``kernels/`` or argue their case in review the same way.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Iterator
+
+from repro.analysis.base import (Checker, Finding, Repo, SourceModule,
+                                 dotted, register_checker)
+
+_SCOPE = ("src/repro/core/", "src/repro/serving/")
+_LOW_ATTRS = {"bfloat16", "float16", "half"}
+_LOW_STRINGS = {"bfloat16", "float16"}
+_DTYPE_CALLS = {"astype", "asarray", "array", "zeros", "ones", "full",
+                "empty", "view"}
+
+
+@register_checker
+class PrecisionHygieneChecker(Checker):
+    name = "precision-hygiene"
+    rules = {
+        "precision-dtype":
+            "low-precision dtype outside kernels/ and the sanctioned "
+            "precision-tier cast — threatens the bit-exact selection "
+            "guarantee",
+    }
+
+    def check(self, repo: Repo) -> Iterable[Finding]:
+        for mod in repo.under(*_SCOPE):
+            yield from self._module(mod)
+
+    def _module(self, mod: SourceModule) -> Iterator[Finding]:
+        for node in ast.walk(mod.tree):
+            if (isinstance(node, ast.Attribute)
+                    and node.attr in _LOW_ATTRS
+                    and isinstance(node.ctx, ast.Load)):
+                name = dotted(node) or node.attr
+                yield mod.finding(
+                    "precision-dtype", node,
+                    f"`{name}` in the scoring stack — low-precision "
+                    f"casts belong in kernels/ or the engine's single "
+                    f"upload-cast site (bit-exact selection guarantee)")
+            elif isinstance(node, ast.Call):
+                yield from self._call(mod, node)
+
+    def _call(self, mod: SourceModule, node: ast.Call) -> Iterator[Finding]:
+        fn = dotted(node.func)
+        leaf = (fn or "").rsplit(".", 1)[-1]
+        args = list(node.args) if leaf in _DTYPE_CALLS else []
+        args += [kw.value for kw in node.keywords if kw.arg == "dtype"]
+        for a in args:
+            if (isinstance(a, ast.Constant) and a.value in _LOW_STRINGS):
+                yield mod.finding(
+                    "precision-dtype", a,
+                    f"dtype string {a.value!r} in the scoring stack — "
+                    f"route low-precision work through kernels/ or the "
+                    f"engine's sanctioned tier cast")

@@ -1,0 +1,153 @@
+"""schema-migration: version bumps must ride the migration chain.
+
+The persistence discipline (PR 6): every on-disk record carries a
+``schema_version``; loading walks an EXPLICIT per-version migration
+chain (``_POOL_MIGRATIONS`` dict in ``core/pool.py``,
+``register_artifact_migration`` in ``checkpoint/ckpt.py``) so any
+historical snapshot reads as current.  ZeroRouter's zero-shot-onboarding
+claim depends on this chain staying sound — a bumped constant without a
+registered step silently strands every artifact already on disk.
+
+Rules:
+
+``schema-migration-chain``
+    A module-level ``*SCHEMA_VERSION* = N`` constant with ``N > 1``
+    whose versions ``1..N-1`` are not all covered by a migration step.
+    A step counts if it appears as (a) an int key of a same-module
+    ``*MIGRATIONS*`` dict literal, or (b) the int argument of a
+    ``register_artifact_migration(v)`` call/decorator anywhere in the
+    scanned tree.
+
+``schema-version-literal``
+    An int written under a ``schema_version`` key (dict literal,
+    subscript assignment, or keyword argument) in a module that does
+    NOT itself define a schema-version constant.  Version literals
+    outside the schema modules bypass the chain — a caller hard-coding
+    ``{"schema_version": 3}`` pins a format the migrators never see.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, Iterator, List, Set, Tuple
+
+from repro.analysis.base import (Checker, Finding, Repo, SourceModule,
+                                 dotted, int_const, register_checker)
+
+_KEY = "schema_version"
+
+
+def _schema_constants(mod: SourceModule) -> List[Tuple[ast.Assign, str, int]]:
+    out = []
+    for node in mod.tree.body:
+        if not isinstance(node, ast.Assign):
+            continue
+        v = int_const(node.value)
+        if v is None:
+            continue
+        for tgt in node.targets:
+            if (isinstance(tgt, ast.Name)
+                    and "SCHEMA_VERSION" in tgt.id):
+                out.append((node, tgt.id, v))
+    return out
+
+
+def _covered_versions(mod: SourceModule, repo: Repo) -> Set[int]:
+    covered: Set[int] = set()
+    # (a) same-module  *MIGRATIONS* = {1: _v1_to_v2, ...}
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Assign):
+            continue
+        if not any(isinstance(t, ast.Name) and "MIGRATION" in t.id.upper()
+                   for t in node.targets):
+            continue
+        if isinstance(node.value, ast.Dict):
+            for k in node.value.keys:
+                v = int_const(k) if k is not None else None
+                if v is not None:
+                    covered.add(v)
+    # (b) register_artifact_migration(v) anywhere in the tree
+    for other in repo.modules:
+        for node in ast.walk(other.tree):
+            if (isinstance(node, ast.Call)
+                    and (dotted(node.func) or "").endswith(
+                        "register_artifact_migration")
+                    and node.args):
+                v = int_const(node.args[0])
+                if v is not None:
+                    covered.add(v)
+    return covered
+
+
+@register_checker
+class SchemaMigrationChecker(Checker):
+    name = "schema-migration"
+    rules = {
+        "schema-migration-chain":
+            "schema-version constant bumped past the registered "
+            "migration chain — every version 1..N-1 needs a step",
+        "schema-version-literal":
+            "hard-coded schema_version int outside the schema modules — "
+            "bypasses the migration chain",
+    }
+
+    def check(self, repo: Repo) -> Iterable[Finding]:
+        for mod in repo.under("src/"):
+            consts = _schema_constants(mod)
+            if consts:
+                yield from self._chain(mod, repo, consts)
+            else:
+                yield from self._literals(mod)
+
+    # ------------------------------------------------------------------
+    def _chain(self, mod: SourceModule, repo: Repo,
+               consts) -> Iterator[Finding]:
+        covered = None
+        for node, name, version in consts:
+            need = set(range(1, version))
+            if not need:
+                continue
+            if covered is None:
+                covered = _covered_versions(mod, repo)
+            missing = sorted(need - covered)
+            if missing:
+                yield mod.finding(
+                    "schema-migration-chain", node,
+                    f"`{name} = {version}` but no migration step covers "
+                    f"version(s) {missing} — records already on disk "
+                    f"can no longer load; register the missing "
+                    f"step(s) before bumping")
+
+    def _literals(self, mod: SourceModule) -> Iterator[Finding]:
+        for node in ast.walk(mod.tree):
+            yield from self._literal_node(mod, node)
+
+    def _literal_node(self, mod: SourceModule, node: ast.AST
+                      ) -> Iterator[Finding]:
+        msg = ("`{key} = {val}` hard-codes a schema version outside the "
+               "schema modules — write through the owning module's "
+               "constant so the migration chain stays the single source "
+               "of truth")
+        if isinstance(node, ast.Assign):
+            v = int_const(node.value)
+            if v is None:
+                return
+            for tgt in node.targets:
+                if (isinstance(tgt, ast.Subscript)
+                        and isinstance(tgt.slice, ast.Constant)
+                        and tgt.slice.value == _KEY):
+                    yield mod.finding("schema-version-literal", node,
+                                      msg.format(key=_KEY, val=v))
+        elif isinstance(node, ast.Dict):
+            for k, val in zip(node.keys, node.values):
+                if (k is not None and isinstance(k, ast.Constant)
+                        and k.value == _KEY
+                        and int_const(val) is not None):
+                    yield mod.finding("schema-version-literal", k,
+                                      msg.format(key=_KEY,
+                                                 val=int_const(val)))
+        elif isinstance(node, ast.Call):
+            for kw in node.keywords:
+                if kw.arg == _KEY and int_const(kw.value) is not None:
+                    yield mod.finding("schema-version-literal", kw.value,
+                                      msg.format(key=_KEY,
+                                                 val=int_const(kw.value)))

@@ -1,0 +1,51 @@
+"""Reporters: human text and a stable JSON schema for CI artifacts.
+
+The JSON layout is a versioned contract (``JSON_REPORT_VERSION``): CI
+uploads ``routerlint.json`` next to the BENCH artifacts, and the schema
+test pins the exact key set so downstream tooling can rely on it.
+"""
+from __future__ import annotations
+
+import json
+from typing import TYPE_CHECKING, Dict
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.analysis.runner import Report
+
+JSON_REPORT_VERSION = 1
+
+
+def render_text(report: "Report") -> str:
+    lines = []
+    for f in report.findings:
+        sym = f" [{f.symbol}]" if f.symbol else ""
+        lines.append(f"{f.path}:{f.line}:{f.col}: {f.rule}{sym}: "
+                     f"{f.message}")
+    s = report.summary()
+    lines.append(
+        f"routerlint: {s['findings']} finding(s) in "
+        f"{s['files_scanned']} file(s) "
+        f"({s['suppressed']} suppressed, {s['baselined']} baselined"
+        + (f", {s['stale_baseline']} STALE baseline entr"
+           + ("y" if s["stale_baseline"] == 1 else "ies")
+           if s["stale_baseline"] else "") + ")")
+    return "\n".join(lines)
+
+
+def report_to_json(report: "Report") -> Dict:
+    """The dict behind ``--format json`` — keys are a stable contract."""
+    return {
+        "version": JSON_REPORT_VERSION,
+        "tool": "routerlint",
+        "rules": dict(report.rules),
+        "findings": [
+            {"rule": f.rule, "path": f.path, "line": f.line, "col": f.col,
+             "symbol": f.symbol, "message": f.message,
+             "line_text": f.line_text}
+            for f in report.findings],
+        "summary": report.summary(),
+    }
+
+
+def render_json(report: "Report") -> str:
+    return json.dumps(report_to_json(report), indent=1) + "\n"

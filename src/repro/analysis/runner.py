@@ -1,0 +1,105 @@
+"""Load the repo tree, run every checker, apply suppressions + baseline."""
+from __future__ import annotations
+
+import dataclasses
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence
+
+from repro.analysis import checkers as _checkers  # noqa: F401 — registers
+from repro.analysis.base import CHECKERS, Finding, Repo, SourceModule
+from repro.analysis.baseline import Baseline
+
+#: repo-relative trees parsed into the scan set.  tests/ stays out on
+#: purpose (tests legitimately monkeypatch clocks, write synthetic
+#: legacy schema records, and exercise np paths); cross-file contracts
+#: that need a test file read it via :meth:`Repo.read_text`.
+DEFAULT_SCAN = ("src/repro",)
+
+
+def find_repo_root(start: Optional[Path] = None) -> Path:
+    """Nearest ancestor (of start, cwd, then this file) holding
+    ``src/repro`` — so the analyzer runs from any working directory."""
+    candidates = []
+    if start is not None:
+        candidates.append(Path(start).resolve())
+    candidates.append(Path.cwd())
+    candidates.append(Path(__file__).resolve())
+    for c in candidates:
+        for p in (c, *c.parents):
+            if (p / "src" / "repro").is_dir():
+                return p
+    raise FileNotFoundError("could not locate a repo root containing "
+                            "src/repro above " + str(candidates))
+
+
+def load_repo(root, scan: Sequence[str] = DEFAULT_SCAN) -> Repo:
+    root = Path(root)
+    modules: List[SourceModule] = []
+    for tree in scan:
+        base = root / tree
+        if base.is_file():
+            paths = [base]
+        else:
+            paths = sorted(base.rglob("*.py"))
+        for p in paths:
+            rel = p.relative_to(root).as_posix()
+            modules.append(SourceModule(rel, p.read_text()))
+    return Repo(root, modules)
+
+
+@dataclasses.dataclass
+class Report:
+    findings: List[Finding]          # actionable (incl. stale-baseline)
+    suppressed: List[Finding]        # silenced by inline comments
+    baselined: List[Finding]         # grandfathered by the baseline file
+    files_scanned: int
+    rules: Dict[str, str]
+
+    @property
+    def clean(self) -> bool:
+        return not self.findings
+
+    def summary(self) -> Dict[str, int]:
+        return {
+            "files_scanned": self.files_scanned,
+            "findings": len(self.findings),
+            "suppressed": len(self.suppressed),
+            "baselined": len(self.baselined),
+            "stale_baseline": sum(1 for f in self.findings
+                                  if f.rule == "stale-baseline"),
+        }
+
+
+def run_analysis(repo: Repo, baseline: Optional[Baseline] = None,
+                 only: Optional[Sequence[str]] = None) -> Report:
+    """Run (a subset of) the registered checkers over a loaded repo.
+
+    ``only`` filters by checker name.  Suppression comments are applied
+    first, then the baseline; stale baseline entries surface as
+    actionable ``stale-baseline`` findings so a fixed-but-not-unlisted
+    finding fails the run.
+    """
+    names = list(CHECKERS) if only is None else list(only)
+    rules: Dict[str, str] = {}
+    raw: List[Finding] = []
+    for name in names:
+        cls = CHECKERS[name]
+        rules.update(cls.rules)
+        raw.extend(cls().check(repo))
+
+    kept: List[Finding] = []
+    suppressed: List[Finding] = []
+    for f in sorted(raw, key=Finding.sort_key):
+        mod = repo.by_path.get(f.path)
+        if mod is not None and mod.suppressed(f.line, f.rule):
+            suppressed.append(f)
+        else:
+            kept.append(f)
+
+    baselined: List[Finding] = []
+    stale: List[Finding] = []
+    if baseline is not None:
+        kept, baselined, stale = baseline.split(kept)
+    return Report(findings=kept + stale, suppressed=suppressed,
+                  baselined=baselined, files_scanned=len(repo.modules),
+                  rules=rules)

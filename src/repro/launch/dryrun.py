@@ -475,14 +475,14 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
     mesh = make_production_mesh(multi_pod=multi_pod)
     chips = mesh.size
     ctx = ctx_for(mesh, shape_name, cfg, serving_layout=serving_layout)
-    t0 = time.time()
+    t0 = time.perf_counter()
     fn, args, shardings = build_full_step(cfg, shape, ctx)
     with mesh:
         lowered = jax.jit(fn, in_shardings=shardings).lower(*args)
         compiled = lowered.compile()
     mem = compiled.memory_analysis()
     full_ca = compiled.cost_analysis() or {}
-    compile_s = time.time() - t0
+    compile_s = time.perf_counter() - t0
 
     rec: Dict[str, Any] = {
         "arch": arch,

@@ -71,11 +71,11 @@ def _generate_main(args) -> None:
 
     cap = (args.prompt_len + args.max_new
            + (cfg.frontend.num_prefix_tokens if cfg.frontend else 0))
-    t0 = time.time()
+    t0 = time.perf_counter()
     out = greedy_generate(params, cfg, prompt, args.max_new, cap,
                           prefix_emb=prefix, ctx=ctx)
     out.block_until_ready()
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     print(f"arch={cfg.arch_id} generated {out.shape} in {dt:.2f}s "
           f"({args.batch * args.max_new / dt:.1f} tok/s)")
     print("sample:", out[0, :12].tolist())
@@ -148,7 +148,7 @@ def build_demo_engine(seed: int = 0, cache_size: int = 4096,
             os.path.join(artifact_dir, COMPILE_CACHE_NAME))
     router = None
     if have_saved:
-        t0 = time.time()
+        t0 = time.perf_counter()
         try:
             router = Router.open(artifact_dir)
             if len(router.pool) == 0:      # saved without onboarding —
@@ -160,7 +160,7 @@ def build_demo_engine(seed: int = 0, cache_size: int = 4096,
                   f"recalibrating from scratch")
         else:
             print(f"  opened saved router from {artifact_dir} in "
-                  f"{(time.time() - t0) * 1e3:.0f}ms "
+                  f"{(time.perf_counter() - t0) * 1e3:.0f}ms "
                   f"({len(router.pool)} models, no retraining)")
             world = build_world(WorldConfig(queries_per_task=40,
                                             n_future_models=4, seed=seed))
@@ -264,14 +264,14 @@ def _route_main(args) -> None:
     from repro.serving import MicroBatcher
 
     print("=== bringing up router + engine (smoke world) ===")
-    t0 = time.time()
+    t0 = time.perf_counter()
     world, router, engine = build_demo_engine(
         seed=args.seed, artifact_dir=args.artifact,
         compile_cache=not args.no_compile_cache,
         precision=args.precision,
         semantic_cache=args.semantic_cache,
         sim_threshold=args.sim_threshold)
-    print(f"  router ready in {time.time() - t0:.2f}s")
+    print(f"  router ready in {time.perf_counter() - t0:.2f}s")
     if args.log_routes:
         import os
 
@@ -280,10 +280,10 @@ def _route_main(args) -> None:
         if os.path.exists(args.log_routes):
             replay = RouteLog.read_texts(args.log_routes)
             if replay:
-                t1 = time.time()
+                t1 = time.perf_counter()
                 n = engine.warm_cache(replay)
                 print(f"  replayed {n} logged queries from "
-                      f"{args.log_routes} in {time.time() - t1:.2f}s "
+                      f"{args.log_routes} in {time.perf_counter() - t1:.2f}s "
                       f"(latent + semantic caches warm)")
     if args.warmup:
         exports = None
@@ -314,12 +314,12 @@ def _route_main(args) -> None:
                   for _ in range(args.n_queries))
 
     print("=== streaming queries through the micro-batcher ===")
-    t0 = time.time()
+    t0 = time.perf_counter()
     with MicroBatcher(engine, max_batch=args.max_batch,
                       max_wait_s=args.max_wait_ms / 1e3) as mb:
         pending = [mb.submit(text, policy=args.policy) for text in source]
         results = [f.result(timeout=60) for f in pending]
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
 
     if args.log_routes:
         from repro.serving.semcache import RouteLog

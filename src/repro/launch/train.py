@@ -60,7 +60,7 @@ def main(argv=None):
         step, in_shardings=(p_shard, None, None))
 
     data_key = jax.random.key(args.seed + 1)
-    t0 = time.time()
+    t0 = time.perf_counter()
     for i in range(args.steps):
         data_key, k1, k2 = jax.random.split(data_key, 3)
         batch = {"tokens": jax.random.randint(
@@ -75,7 +75,7 @@ def main(argv=None):
                   f"ce={float(metrics['ce']):.4f} "
                   f"gnorm={float(metrics['grad_norm']):.3f} "
                   f"lr={float(metrics['lr']):.2e} "
-                  f"({time.time()-t0:.1f}s)")
+                  f"({time.perf_counter()-t0:.1f}s)")
     if args.ckpt:
         save_checkpoint(args.ckpt, params, {"arch": cfg.arch_id})
         print(f"saved checkpoint to {args.ckpt}")

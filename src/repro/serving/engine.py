@@ -324,7 +324,11 @@ class RouterEngine:
         self._params = {"f32": pred.params}
         if self.cfg.precision == "bf16" or (
                 self.cfg.precision == "bf16_recheck" and self._bf16_bulk()):
+            # the ONE sanctioned low-precision cast in the scoring stack:
+            # cast once at upload; the params dtype drives every
+            # downstream compute dtype
             self._params["bf16"] = jax.tree.map(
+                # routerlint: disable-next-line=precision-dtype
                 lambda a: jnp.asarray(a, jnp.bfloat16), pred.params)
 
         def _latents(p, ids, mask, feats):

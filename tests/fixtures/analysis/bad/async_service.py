@@ -1,0 +1,30 @@
+"""BAD fixture (async-blocking-call, async-global-state,
+monotonic-time): an event-loop handler committing every async-safety
+sin.  The test maps this under ``src/repro/serving/``.  Parsed only,
+never imported.
+"""
+import socket
+import subprocess
+import time
+
+_HITS = 0
+
+
+async def handle(conn, payload):
+    global _HITS            # BAD: anonymous shared state from a handler
+    _HITS += 1
+    started = time.time()   # BAD: wall clock for an interval
+    time.sleep(0.01)        # BAD: blocks the loop
+    raw = open("/tmp/x")    # BAD: blocking file IO
+    peer = socket.create_connection(("h", 1))   # BAD
+    peer.sendall(payload)   # BAD: blocking socket primitive
+    subprocess.run(["true"])                    # BAD
+    client = ServiceClient("h", 1)              # BAD: sync transport
+    return time.time() - started                # BAD again
+
+
+async def fine(conn):
+    def _sync_helper():
+        # excluded: nested sync defs run wherever they are called
+        time.sleep(0.0)
+    return _sync_helper

@@ -1,0 +1,31 @@
+"""BAD fixture (jit-closure-params): a trimmed copy of
+``serving/engine.py``'s ``_build_jits`` with the PR-4 "params enter as
+jit ARGUMENTS" pattern deleted — ``_latents`` reads ``pred.params`` from
+closure state, so every persistent compile-cache entry would embed the
+full weight pytree.  The test maps this file to
+``src/repro/serving/engine.py`` in a scratch tree and asserts the
+jit-purity checker catches it.
+
+Parsed only, never imported.
+"""
+import jax
+import jax.numpy as jnp
+
+
+class Engine:
+    def _build_jits(self):
+        art = self.router.artifacts
+        pred = art.require_predictor()
+        pc = pred.cfg
+        clusters = pred.clusters
+        mu, sd = (jnp.asarray(s, jnp.float32) for s in pred.feat_stats)
+
+        def _latents(ids, mask, feats):
+            # the deleted invariant: weights come from the enclosing
+            # scope instead of entering as a jit argument
+            e_se = encode(pred.params["enc"], ids, mask, pc)
+            f = (feats - mu) / sd
+            return apply_heads(pred.params["heads"], e_se, f, clusters,
+                               pc.latent_dim)
+
+        self._latents_jit = jax.jit(_latents)

@@ -1,0 +1,32 @@
+"""BAD fixture (jit-branch-on-traced, jit-host-call): every jit idiom
+the checker understands, each committing a trace-time sin.  Parsed only,
+never imported.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def clamp(x, lo):
+    if x > lo:              # BAD: Python `if` on a traced argument
+        return lo
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def top_scores(scores, k):
+    while scores > 0:       # BAD: `while` on a traced argument
+        scores = scores - 1
+    best = np.sort(scores)  # BAD: host numpy inside the traced body
+    print("traced!")        # BAD: fires at trace time only
+    return best[:k]
+
+
+def _scale(x, gain):
+    return x * gain
+
+
+scale_jit = jax.jit(_scale)  # wrap form: body above is traced too

@@ -1,0 +1,23 @@
+"""BAD fixture (kernel-blockspec-dynamic): BlockSpec tile shapes that
+are not static host ints — a float literal and a non-whitelisted call.
+Parsed only, never imported.
+"""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kern(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0
+
+
+def halved_tiles(x, rows):
+    return pl.pallas_call(
+        _kern,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        grid=(2,),
+        in_specs=[pl.BlockSpec((rows * 0.5, x.shape[1]),   # BAD: float
+                               lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((pick_tile(x), x.shape[1]),  # BAD: call
+                               lambda i: (i, 0)),
+    )(x)

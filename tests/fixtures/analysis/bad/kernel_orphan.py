@@ -1,0 +1,27 @@
+"""BAD fixture (kernel-missing-ref / kernel-missing-parity-test): a
+Pallas kernel module with no ``*_ref`` twin.  The test maps this file to
+``src/repro/kernels/fancy_scan.py`` in a scratch tree — without a
+``fancy_scan*_ref`` in ref.py it trips ``kernel-missing-ref``; with the
+ref present but unreferenced by tests/test_kernels.py it trips
+``kernel-missing-parity-test``.  Parsed only, never imported.
+"""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fancy_scan_kernel(x_ref, o_ref):
+    o_ref[...] = jnp.cumsum(x_ref[...], axis=-1)
+
+
+def fancy_scan_tpu(x, block_rows=128):
+    n = x.shape[0]
+    return pl.pallas_call(
+        _fancy_scan_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        grid=(n // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, x.shape[1]),
+                               lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, x.shape[1]),
+                               lambda i: (i, 0)),
+    )(x)

@@ -1,0 +1,15 @@
+"""BAD fixture (precision-dtype): stray low-precision casts in the
+scoring stack — attribute dtypes, dtype strings, and dtype= keywords.
+The test maps this under ``src/repro/core/``.  Parsed only, never
+imported.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+
+def rescore(x, feats):
+    y = x.astype(jnp.bfloat16)          # BAD: attribute dtype
+    z = feats.astype("float16")         # BAD: dtype string to astype
+    acc = jnp.zeros(4, dtype="bfloat16")    # BAD: dtype= string
+    h = np.float16(0.5)                 # BAD: attribute dtype
+    return y, z, acc, h

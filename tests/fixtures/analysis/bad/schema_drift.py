@@ -1,0 +1,16 @@
+"""BAD fixture (schema-migration-chain): a schema module whose version
+constant was bumped to 3 while the migration dict only covers v1 — v2
+records on disk can no longer load.  Parsed only, never imported.
+"""
+POOL_SCHEMA_VERSION = 3
+
+
+def _migrate_v1_to_v2(rec):
+    rec["extra"] = None
+    return rec
+
+
+_POOL_MIGRATIONS = {
+    1: _migrate_v1_to_v2,
+    # BAD: no step for version 2
+}

@@ -1,0 +1,10 @@
+"""BAD fixture (schema-version-literal): a caller hard-coding
+``schema_version`` ints in a module that defines no schema constant —
+all three literal shapes the rule covers.  Parsed only, never imported.
+"""
+
+
+def save(path, rows):
+    rec = {"schema_version": 2, "rows": rows}   # BAD: dict literal
+    rec["schema_version"] = 3                   # BAD: subscript store
+    write_record(path, rec, schema_version=1)   # BAD: keyword arg

@@ -1,0 +1,20 @@
+"""GOOD fixture: the async-safe version of ``bad/async_service.py`` —
+asyncio primitives, monotonic clocks, owned state.  Parsed only, never
+imported.
+"""
+import asyncio
+import time
+
+
+class Handler:
+    def __init__(self):
+        self.hits = 0
+
+    async def handle(self, reader, writer, payload):
+        self.hits += 1
+        started = time.perf_counter()
+        await asyncio.sleep(0.01)
+        writer.write(payload)
+        await writer.drain()
+        deadline = time.monotonic() + 1.0
+        return time.perf_counter() - started, deadline

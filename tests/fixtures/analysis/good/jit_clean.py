@@ -1,0 +1,35 @@
+"""GOOD fixture: jit bodies that honour every jit-purity rule — params
+enter as arguments, branches are on static args or jnp primitives, no
+host calls.  Parsed only, never imported.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def score(params, feats):
+    # weights as jit ARGUMENTS (the PR-4 invariant), jnp-only body
+    return jnp.dot(feats, params["w"]) + params["b"]
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def dispatch(x, use_pallas):
+    if use_pallas:          # fine: static_argnames makes this host-level
+        return x * 2.0
+    return jnp.where(x > 0, x, 0.0)
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def tile(x, reps):
+    if reps > 1:            # fine: static_argnums position 1
+        return jnp.tile(x, reps)
+    return x
+
+
+def _affine(params, x):
+    return x @ params["w"]
+
+
+affine_jit = jax.jit(_affine)  # wrap form, params still an argument

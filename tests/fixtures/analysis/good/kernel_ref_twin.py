@@ -1,0 +1,11 @@
+"""GOOD fixture: the pure-jnp ``*_ref`` twin for ``kernel_orphan.py``.
+The test maps this to ``src/repro/kernels/ref.py`` to build a scratch
+tree where the kernel-contract checker is satisfied (or, with an empty
+tests/test_kernels.py, trips only the parity-test rule).  Parsed only,
+never imported.
+"""
+import jax.numpy as jnp
+
+
+def fancy_scan_ref(x):
+    return jnp.cumsum(x, axis=-1)

@@ -1,0 +1,10 @@
+"""GOOD fixture: scoring-stack code that stays f32 — the dtype the
+bit-exact selection guarantee assumes.  Parsed only, never imported.
+"""
+import jax.numpy as jnp
+
+
+def rescore(x, feats):
+    y = x.astype(jnp.float32)
+    acc = jnp.zeros(4, dtype=jnp.float32)
+    return y + acc, feats.astype("float64")

@@ -1,0 +1,21 @@
+"""GOOD fixture: a schema module whose migration chain fully covers the
+version bump, writing the version through its own constant.  Parsed
+only, never imported.
+"""
+DEMO_SCHEMA_VERSION = 3
+
+
+def _v1_to_v2(rec):
+    return rec
+
+
+def _v2_to_v3(rec):
+    return rec
+
+
+_DEMO_MIGRATIONS = {1: _v1_to_v2, 2: _v2_to_v3}
+
+
+def save(rec):
+    rec["schema_version"] = DEMO_SCHEMA_VERSION  # constant, not a literal
+    return rec

@@ -331,6 +331,26 @@ def test_similarity_top1_bitwise_vs_ref(N, Q, S, store):
     np.testing.assert_array_equal(np.asarray(idx_pl), np.asarray(idx_rf))
 
 
+def test_similarity_top1_ref_is_bitwise_twin():
+    """The kernel-contract invariant, asserted on the registered twin
+    DIRECTLY: ``ref.similarity_top1_ref`` (not just the ops dispatcher's
+    ``use_pallas=False`` path) runs the identical tiled loop, so sims and
+    winning rows match the Pallas kernel bitwise — f32 and int8 banks,
+    ragged block counts included."""
+    for store, (N, Q, S) in (("f32", (515, 64, 128)),
+                             ("int8", (1000, 128, 128))):
+        bank, scales, row_valid, probes = _sim_inputs(N, Q, S, store,
+                                                      seed=11)
+        sim_pl, idx_pl = ops.similarity_top1(bank, scales, row_valid,
+                                             probes, use_pallas=True)
+        sim_rf, idx_rf = ref.similarity_top1_ref(bank, scales, row_valid,
+                                                 probes)
+        np.testing.assert_array_equal(np.asarray(sim_pl),
+                                      np.asarray(sim_rf))
+        np.testing.assert_array_equal(np.asarray(idx_pl),
+                                      np.asarray(idx_rf))
+
+
 def test_similarity_top1_matches_brute_force():
     """Winner + sim agree with a plain masked matmul argmax (tolerance:
     the tiled loop reassociates the reduction)."""
