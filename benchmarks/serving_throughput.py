@@ -51,6 +51,14 @@ Measures steady-state routed queries/sec (jit warmup excluded) for:
                           asyncio admission + micro-batcher + wire
                           round-trip included.
 
+ISSUE 9 adds a ``fault_storm`` row: goodput through the full TCP plane
+while a seeded fault plan injects dispatch failures, a slow lex,
+connection resets, a torn reply and a mid-reply abort — the row's JSON
+carries the injected-fault count, the fired fault families and the
+degradation-event count, and the run ASSERTS zero selection divergence
+against the fault-free reference (graceful degradation must never
+change a served decision, only its latency).
+
 Since the ingest overhaul the variant list also carries ``ingest_cold`` —
 the pure HOST-side cost of the single-pass ingest pipeline (lex + hash
 ids + features + piece counts, no device work) per Q-query batch; the
@@ -336,6 +344,56 @@ def run(smoke: bool = False, quick: bool = False
                 / results["microbatcher"]["us_per_batch"])
     results["service_tcp"]["transport_overhead_vs_microbatcher"] = overhead
     rows.append(("serving/service_transport_overhead_x", 0.0, overhead))
+
+    # ------------------------------------------------------------------
+    # fault_storm (ISSUE 9): goodput through the full TCP plane while a
+    # seeded fault plan injects dispatch failures, a slow lex, connection
+    # resets, a torn reply and a mid-reply abort — the engine retries,
+    # the client reconnects + replays (idempotency-deduped server-side),
+    # and every served selection must still be bit-identical to the
+    # fault-free reference (divergence asserted 0, every run)
+    # ------------------------------------------------------------------
+    from repro.serving import faults as _faults
+    from repro.serving.faults import FaultEvent, FaultPlan
+
+    storm_q = 64
+    storm_texts = texts[:storm_q]
+    # the reference must match the served shape: singleton requests
+    # normalize cost/latency per request, not across a 64-query batch
+    names_ref = [router.route([t], policy="balanced")[0][0]
+                 for t in storm_texts]
+    eng_storm = RouterEngine(router, RouterEngineConfig(cache_size=4 * Q))
+    plan = FaultPlan([
+        FaultEvent("engine.dispatch", "raise", (1,)),
+        FaultEvent("engine.lex", "hang", (1,), duration_s=0.005),
+        FaultEvent("protocol.frame", "reset", (3, 17)),
+        FaultEvent("protocol.frame", "reset_post", (9,)),
+        FaultEvent("protocol.frame", "torn_frame", (13,)),
+    ])
+    deg0 = _faults.degraded_total()
+    with BackgroundServer(router, engine=eng_storm,
+                          cfg=ServiceConfig(max_batch=64,
+                                            max_wait_s=0.002)) as storm_srv:
+        with ServiceClient(storm_srv.host, storm_srv.port, retries=4,
+                           backoff_s=0.01, timeout=30.0) as sc:
+            sc.route(texts[storm_q])       # pay the jit compile clean
+            t0 = time.perf_counter()
+            with _faults.armed(plan) as fired_plan:
+                got = [sc.route(t).model for t in storm_texts]
+            storm_s = time.perf_counter() - t0
+    divergence = sum(a != b for a, b in zip(got, names_ref))
+    assert divergence == 0, \
+        "fault_storm: non-shed selections diverged under chaos"
+    results["fault_storm"] = {
+        "us_per_batch": storm_s * 1e6,
+        "queries_per_sec": storm_q / storm_s,
+        "divergence": divergence,
+        "faults_injected": len(fired_plan.fired),
+        "families": sorted(fired_plan.fired_families()),
+        "degraded_events": _faults.degraded_total() - deg0,
+    }
+    rows.append((f"serving/fault_storm/Q{storm_q}M{M}",
+                 storm_s * 1e6, storm_q / storm_s))
 
     artifact = {
         "workload": {"Q": Q, "M": M, "reps": reps,

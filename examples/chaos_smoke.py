@@ -1,0 +1,124 @@
+"""Chaos smoke: a seeded fault plan against the live TCP serving plane.
+
+ISSUE 9 gives the repo a deterministic fault-injection plane
+(``repro.serving.faults``): a :class:`FaultPlan` schedules faults at
+exact per-site hit counts — engine dispatch failures, slow host lex,
+crash-mid-save, connection resets, torn reply frames, breaker storms —
+so every graceful-degradation path can be driven on demand.  This smoke
+runs the whole gauntlet the way CI wants to see it:
+
+  1. bring up a calibrated demo router behind the TCP front-end;
+  2. route a reference batch fault-free and record its selections;
+  3. arm a fault plan covering ALL FIVE fault families (dispatch, lex,
+     persistence, transport, breaker) and route the same traffic through
+     a cold engine: dispatches fail and are retried, connections die
+     mid-reply and the client reconnects + replays (the server's
+     idempotency cache answers replays instead of routing twice), a
+     crash is injected between an artifact's payload write and its meta
+     commit;
+  4. assert ZERO selection divergence — graceful degradation may change
+     a request's latency, never its decision;
+  5. assert the crash-interrupted artifact still loads its previous
+     generation, every fault family actually fired, and the degradation
+     ledger (``router_degraded_total{path=...}``) counted the fallbacks.
+
+Run:  PYTHONPATH=src python examples/chaos_smoke.py
+"""
+import tempfile
+import time
+
+import numpy as np
+
+from repro.checkpoint import load_artifact, save_artifact
+from repro.data import OOD_TASKS
+from repro.launch.serve import build_demo_engine
+from repro.serving import (BackgroundServer, RouterEngine,
+                           RouterEngineConfig, ServiceClient)
+from repro.serving import faults
+from repro.serving.faults import FaultEvent, FaultPlan
+
+N_QUERIES = 24
+
+
+def main():
+    print("=== calibrating the demo router (once) ===")
+    world, router, _ = build_demo_engine(seed=0)
+    qi = world.query_indices(OOD_TASKS)
+    texts = [world.queries[i].text for i in qi[:N_QUERIES]]
+
+    print("=== fault-free reference pass ===")
+    # singleton references: a served client.route() is a batch of one,
+    # and cost/latency min-max normalization is batch-scoped
+    ref_names = [router.route([t], policy="balanced")[0][0] for t in texts]
+
+    art = tempfile.mkdtemp(prefix="chaos_art_") + "/artifact"
+    save_artifact(art, {"w": np.arange(6.0)}, meta={"gen": 1})
+
+    plan = FaultPlan([
+        FaultEvent("engine.dispatch", "raise", (1,)),
+        FaultEvent("engine.lex", "hang", (1,), duration_s=0.01),
+        FaultEvent("ckpt.write", "crash", (1,)),
+        FaultEvent("protocol.frame", "reset", (3,)),
+        FaultEvent("protocol.frame", "reset_post", (7,)),
+        FaultEvent("protocol.frame", "torn_frame", (11,)),
+        FaultEvent("service.outcome", "storm", (1,), repeat=4),
+    ])
+    print(f"=== chaos pass: {len(plan.events)} scheduled events over "
+          f"{N_QUERIES} served queries ===")
+    faults.reset_degraded()
+    # cold engine so the chaos traffic actually dispatches (and the
+    # scheduled engine faults actually fire)
+    eng = RouterEngine(router, RouterEngineConfig(cache_size=256))
+    with BackgroundServer(router, engine=eng) as srv:
+        with ServiceClient(srv.host, srv.port, retries=4,
+                           backoff_s=0.02, timeout=30.0) as client:
+            t0 = time.perf_counter()
+            with faults.armed(plan) as armed_plan:
+                got = [client.route(t).model for t in texts]
+                # breaker storm: one report lands as 4 outcomes under one
+                # admin-lock hold (ok=True: exercises the flood path
+                # without opening the demo pool's breaker)
+                client.report_outcome(None, router.pool.names[0], ok=True)
+                try:
+                    save_artifact(art, {"w": np.zeros(6)}, meta={"gen": 2})
+                    raise AssertionError("injected crash did not fire")
+                except RuntimeError as e:
+                    print(f"  save died mid-commit as scheduled: {e}")
+            elapsed = time.perf_counter() - t0
+            metrics_text = client.metrics()
+
+    divergence = sum(a != b for a, b in zip(got, ref_names))
+    print(f"  served {N_QUERIES} queries in {elapsed:.2f}s under chaos, "
+          f"divergence={divergence}")
+    assert divergence == 0, "chaos changed a served selection"
+
+    tree, meta = load_artifact(art)
+    assert meta["gen"] == 1 and np.array_equal(tree["w"], np.arange(6.0)), \
+        "crash-interrupted save corrupted the previous generation"
+    print("  crash-interrupted artifact still loads gen 1: True")
+
+    families = armed_plan.fired_families()
+    print(f"  fault families fired: {sorted(families)}")
+    assert families == {"dispatch", "lex", "persistence", "transport",
+                        "breaker"}, f"missing families: {families}"
+
+    degraded = faults.degraded_counts()
+    print(f"  degradation ledger: {degraded}")
+    assert degraded.get("engine_retry", 0) >= 1
+    assert degraded.get("connection_reset", 0) >= 1
+    assert degraded.get("torn_frame", 0) >= 1
+    assert degraded.get("outcome_storm", 0) == 1
+    deg_lines = [line for line in metrics_text.splitlines()
+                 if line.startswith("router_degraded_total")]
+    for line in deg_lines:
+        print(f"  {line}")
+    assert deg_lines, "router_degraded_total missing from the scrape"
+
+    print(f"divergence=0 over {N_QUERIES} chaos-served queries; "
+          f"{len(armed_plan.fired)} faults injected, "
+          f"{sum(degraded.values())} degradation events counted")
+    print("chaos smoke OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,7 +1,8 @@
 """Stack-specific checkers.  Importing this package registers them all."""
-from repro.analysis.checkers import (async_safety, jit_purity,  # noqa: F401
+from repro.analysis.checkers import (async_safety,  # noqa: F401
+                                     degradation_hygiene, jit_purity,
                                      kernel_contract, precision_hygiene,
                                      schema_migration)
 
-__all__ = ["async_safety", "jit_purity", "kernel_contract",
-           "precision_hygiene", "schema_migration"]
+__all__ = ["async_safety", "degradation_hygiene", "jit_purity",
+           "kernel_contract", "precision_hygiene", "schema_migration"]

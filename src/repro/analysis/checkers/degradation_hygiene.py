@@ -1,0 +1,115 @@
+"""degradation-hygiene: every degradation path in the serving plane
+must be VISIBLE — counted, warned, fanned back, or re-raised typed.
+
+Scope: ``src/repro/serving/`` — the modules hosting the fault-injection
+hook points (ISSUE 9).  A fault plan only proves graceful degradation if
+every ``except`` that absorbs a failure leaves a trace an operator (or
+the chaos soak) can assert on; a silent ``except Exception: pass`` turns
+an injected fault into an invisible wrong answer.
+
+Rules:
+
+``bare-except``
+    A bare ``except:`` clause anywhere in the serving plane.  It catches
+    ``KeyboardInterrupt``/``SystemExit`` too, so a Ctrl-C mid-batch can
+    be swallowed into a half-updated cache; always name the exception
+    class (``except Exception`` at the broadest).
+
+``swallowed-exception``
+    An ``except Exception`` / ``except BaseException`` handler whose
+    body neither re-raises nor makes an observability call.  Broad
+    handlers are legitimate on the serving plane (a poisoned request
+    must not kill the worker loop) but only when the failure is
+    accounted for: incrementing the degradation ledger
+    (``faults.record_degraded``), a metrics counter, a ``warnings.warn``,
+    fanning the error back to the caller's future
+    (``set_exception`` / ``_resolve``), answering the client
+    (``send`` / ``answer`` / ``_shed_response``), or ``raise``-ing a
+    typed error.  Handlers catching NARROW exception classes are exempt
+    — naming the class is itself the accounting.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Iterator
+
+from repro.analysis.base import (Checker, Finding, Repo, SourceModule,
+                                 dotted, register_checker)
+
+_SCOPE = ("src/repro/serving/",)
+
+#: Call basenames that make an except-handler "accounted for".  The list
+#: is deliberately about OBSERVABILITY surfaces, not cleverness: the
+#: degradation ledger, warnings, metrics, and the ways an error is
+#: fanned back to the caller instead of vanishing.
+_OBSERVABILITY = {
+    "record_degraded",                      # repro.serving.faults ledger
+    "warn", "warning", "error", "exception",  # warnings / logging
+    "counter_inc", "counter_set", "gauge_set",  # metrics plane
+    "set_exception", "_resolve",            # fan back into a future
+    "send", "answer", "_shed_response",     # fan back over the wire
+}
+
+_BROAD = {"Exception", "BaseException"}
+
+
+def _is_broad(handler: ast.ExceptHandler) -> bool:
+    t = handler.type
+    if isinstance(t, (ast.Name, ast.Attribute)):
+        name = dotted(t)
+        return name is not None and name.rsplit(".", 1)[-1] in _BROAD
+    if isinstance(t, ast.Tuple):
+        return any(
+            (n := dotted(e)) is not None
+            and n.rsplit(".", 1)[-1] in _BROAD
+            for e in t.elts)
+    return False
+
+
+def _accounted(handler: ast.ExceptHandler) -> bool:
+    for node in ast.walk(handler):
+        if isinstance(node, ast.Raise):
+            return True
+        if isinstance(node, ast.Call):
+            name = dotted(node.func)
+            if name is not None \
+                    and name.rsplit(".", 1)[-1] in _OBSERVABILITY:
+                return True
+    return False
+
+
+@register_checker
+class DegradationHygieneChecker(Checker):
+    name = "degradation-hygiene"
+    rules = {
+        "bare-except":
+            "bare `except:` in the serving plane — catches "
+            "KeyboardInterrupt/SystemExit too; name the class "
+            "(`except Exception` at the broadest)",
+        "swallowed-exception":
+            "broad `except Exception` that neither re-raises nor makes "
+            "an observability call (record_degraded, warn, metrics, "
+            "set_exception/_resolve, send/answer) — degradation must be "
+            "visible, not silent",
+    }
+
+    def check(self, repo: Repo) -> Iterable[Finding]:
+        for mod in repo.under(*_SCOPE):
+            yield from self._handlers(mod)
+
+    def _handlers(self, mod: SourceModule) -> Iterator[Finding]:
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            if node.type is None:
+                yield mod.finding(
+                    "bare-except", node,
+                    "bare `except:` also catches KeyboardInterrupt/"
+                    "SystemExit — name the exception class")
+                continue
+            if _is_broad(node) and not _accounted(node):
+                yield mod.finding(
+                    "swallowed-exception", node,
+                    "broad handler swallows the failure with no trace — "
+                    "count it (faults.record_degraded), warn, fan it "
+                    "back, or re-raise typed")

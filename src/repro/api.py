@@ -426,11 +426,17 @@ class Router:
         a warm bank."""
         import json
 
+        from repro.checkpoint.ckpt import atomic_write_text
+
         os.makedirs(path, exist_ok=True)
+        # each component commits crash-safely (temp + fsync + atomic
+        # rename; artifacts additionally checksum their payload blob), so
+        # a kill -9 at any instant leaves the previous generation of
+        # every file loadable
         self._require_artifacts().save(os.path.join(path, ARTIFACTS_NAME))
         self.pool.save(os.path.join(path, POOL_NAME))
-        with open(os.path.join(path, CONFIG_NAME), "w") as f:
-            json.dump(_cfg_to_json(self.cfg), f, indent=1)
+        atomic_write_text(os.path.join(path, CONFIG_NAME),
+                          json.dumps(_cfg_to_json(self.cfg), indent=1))
         eng = self._engine
         if eng is not None and getattr(eng, "bank", None) is not None \
                 and len(eng.bank) > 0:

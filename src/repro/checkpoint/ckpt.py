@@ -30,15 +30,18 @@ bump rather than in ad-hoc reader branches.
 """
 from __future__ import annotations
 
+import hashlib
+import io
 import json
 import os
-from typing import Any, Callable, Dict, Tuple
+import sys
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.errors import SchemaVersionError
+from repro.core.errors import ArtifactCorruptError, SchemaVersionError
 
 PyTree = Any
 _BF16_TAG = "__bf16__"
@@ -81,6 +84,61 @@ def register_artifact_migration(from_version: int):
     return _register
 
 
+# ---------------------------------------------------------------------------
+# crash-safe writes
+# ---------------------------------------------------------------------------
+
+def _fsync_dir(dirpath: str) -> None:
+    """fsync a directory so a rename into it survives power loss.  Best
+    effort: some filesystems refuse O_RDONLY dir fsync — the rename is
+    still atomic against process crash either way."""
+    try:
+        fd = os.open(dirpath or ".", os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
+def atomic_write_bytes(path: str, data: bytes) -> None:
+    """Write ``data`` to ``path`` crash-safely: temp file in the same
+    directory, flush + fsync, then an atomic ``os.replace`` and a
+    directory fsync.  A reader never observes a torn file — it sees the
+    previous content or the full new content, nothing in between."""
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(data)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    _fsync_dir(os.path.dirname(path))
+
+
+def atomic_write_text(path: str, text: str) -> None:
+    atomic_write_bytes(path, text.encode("utf-8"))
+
+
+def _fire_fault(site: str):
+    """Fault-plane hook, import-free on the hot path: only consults
+    ``repro.serving.faults`` when that module is ALREADY loaded and
+    armed — a process that never touches the fault plane pays one
+    ``sys.modules`` lookup per save, nothing more."""
+    mod = sys.modules.get("repro.serving.faults")
+    if mod is None or not mod.ARMED:
+        return None
+    return mod.fire(site)
+
+
+def _record_degraded(path: str) -> None:
+    from repro.serving.faults import record_degraded
+
+    record_degraded(path)
+
+
 def _flatten_with_names(tree: PyTree):
     leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
     names, leaves = [], []
@@ -107,13 +165,13 @@ def save_checkpoint(path: str, tree: PyTree, meta: dict | None = None) -> None:
             arr = arr.view(np.uint16)
         payload[str(i)] = arr
     treedef = jax.tree_util.tree_structure(tree)
-    np.savez(base + ".npz", **payload)
-    with open(base + ".meta.json", "w") as f:
-        json.dump(
-            {"names": names, "treedef": str(treedef), "dtypes": dtypes,
-             "meta": meta or {}},
-            f,
-        )
+    buf = io.BytesIO()
+    np.savez(buf, **payload)
+    atomic_write_bytes(base + ".npz", buf.getvalue())
+    atomic_write_text(
+        base + ".meta.json",
+        json.dumps({"names": names, "treedef": str(treedef),
+                    "dtypes": dtypes, "meta": meta or {}}))
 
 
 # ---------------------------------------------------------------------------
@@ -172,17 +230,65 @@ def save_artifact(path: str, tree: PyTree, meta: dict | None = None) -> None:
 
     ``tree`` may mix nested dicts / lists / tuples, JSON scalars, and
     array-like leaves.  ``meta`` must be JSON-serializable.
+
+    Crash-safe: the payload is written to a content-named blob
+    (``<base>.<sha12>.npz``, temp + fsync + atomic rename) and the
+    ``meta.json`` replace is the single commit point — it names the blob
+    and carries its sha256.  A crash (or ``kill -9``) at ANY instant
+    leaves the previous record fully loadable: the old meta still points
+    at the old blob, which is only garbage-collected after the new meta
+    has committed.  :func:`load_artifact` verifies the checksum, so torn
+    or bit-rotted payload bytes surface as a typed
+    :class:`~repro.core.errors.ArtifactCorruptError` instead of garbage
+    weights.
     """
     base = _base(path)
-    os.makedirs(os.path.dirname(base) or ".", exist_ok=True)
+    dirname = os.path.dirname(base) or "."
+    os.makedirs(dirname, exist_ok=True)
     payload: dict = {}
     dtypes: dict = {}
     structure = _encode(tree, payload, dtypes)
-    np.savez(base + ".npz", **payload)
-    with open(base + ".meta.json", "w") as f:
-        json.dump({"schema_version": ARTIFACT_SCHEMA_VERSION,
-                   "structure": structure, "dtypes": dtypes,
-                   "meta": meta or {}}, f)
+    buf = io.BytesIO()
+    np.savez(buf, **payload)
+    blob = buf.getvalue()
+    digest = hashlib.sha256(blob).hexdigest()
+    data_name = f"{os.path.basename(base)}.{digest[:12]}.npz"
+    atomic_write_bytes(os.path.join(dirname, data_name), blob)
+    ev = _fire_fault("ckpt.write")
+    if ev is not None and ev.kind == "crash":
+        # simulate dying between the payload write and the meta commit —
+        # the worst instant: load_artifact must still see the OLD record
+        raise RuntimeError(
+            "injected crash mid-save (after payload, before meta commit)")
+    atomic_write_text(
+        base + ".meta.json",
+        json.dumps({"schema_version": ARTIFACT_SCHEMA_VERSION,
+                    "structure": structure, "dtypes": dtypes,
+                    "data": data_name, "sha256": digest,
+                    "meta": meta or {}}))
+    _gc_stale_payloads(dirname, os.path.basename(base), keep=data_name)
+    if ev is not None and ev.kind == "corrupt":
+        # simulate post-commit bit rot: flip a payload byte so the next
+        # load trips the checksum, not a numpy parse error
+        p = os.path.join(dirname, data_name)
+        with open(p, "r+b") as f:
+            f.seek(max(len(blob) // 2, 0))
+            b = f.read(1)
+            f.seek(-1, os.SEEK_CUR)
+            f.write(bytes([b[0] ^ 0xFF]))
+
+
+def _gc_stale_payloads(dirname: str, basename: str, keep: str) -> None:
+    """Drop superseded payload blobs (and the legacy un-suffixed
+    ``<base>.npz``) AFTER the meta commit — never before, so a crash
+    leaves the previous generation intact."""
+    for fn in os.listdir(dirname):
+        if (fn != keep and fn.endswith(".npz")
+                and fn.startswith(basename + ".")):
+            try:
+                os.unlink(os.path.join(dirname, fn))
+            except OSError:
+                pass
 
 
 def load_artifact(path: str) -> tuple:
@@ -194,6 +300,12 @@ def load_artifact(path: str) -> tuple:
     written by a newer schema than this build supports; OLDER records are
     upgraded in memory through the :func:`register_artifact_migration`
     chain before being returned.
+
+    Records carrying a content checksum (every record this build writes)
+    are verified byte-for-byte before decoding; a mismatch raises a typed
+    :class:`~repro.core.errors.ArtifactCorruptError` (counted under
+    ``router_degraded_total{path="artifact_checksum"}``).  Legacy records
+    without one load as before.
     """
     base = _base(path)
     with open(base + ".meta.json") as f:
@@ -202,7 +314,30 @@ def load_artifact(path: str) -> tuple:
     if found > ARTIFACT_SCHEMA_VERSION:
         raise SchemaVersionError(f"artifact {base!r}", found,
                                  ARTIFACT_SCHEMA_VERSION)
-    with np.load(base + ".npz") as data:
+    data_path = base + ".npz"
+    if "data" in rec:
+        data_path = os.path.join(os.path.dirname(base) or ".", rec["data"])
+    want: Optional[str] = rec.get("sha256")
+    if want is not None:
+        try:
+            with open(data_path, "rb") as f:
+                blob = f.read()
+        except OSError as e:
+            _record_degraded("artifact_checksum")
+            raise ArtifactCorruptError(
+                f"artifact {base!r}: committed payload "
+                f"{rec.get('data')!r} is unreadable ({e})") from e
+        got = hashlib.sha256(blob).hexdigest()
+        if got != want:
+            _record_degraded("artifact_checksum")
+            raise ArtifactCorruptError(
+                f"artifact {base!r}: payload checksum mismatch "
+                f"(want sha256 {want[:12]}…, got {got[:12]}…) — the bytes "
+                f"on disk are not what the writer committed")
+        source: Any = io.BytesIO(blob)
+    else:
+        source = data_path
+    with np.load(source) as data:
         tree = _decode(rec["structure"], data, rec["dtypes"])
     meta = rec.get("meta", {})
     while found < ARTIFACT_SCHEMA_VERSION:

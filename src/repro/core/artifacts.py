@@ -33,7 +33,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint.ckpt import load_artifact, save_artifact
 from repro.core.cost import _bin_means
 from repro.core.errors import NotCalibratedError
 from repro.core.irt import IRTConfig, task_aware_difficulty
@@ -186,6 +185,12 @@ class RouterArtifacts:
     # persistence (repro.checkpoint self-describing format)
     # ------------------------------------------------------------------
     def save(self, path: str) -> None:
+        # function-local: checkpoint.ckpt imports repro.core.errors, so a
+        # module-level import here makes ``import repro.checkpoint`` on a
+        # cold process die in the cycle (checkpoint -> core -> artifacts
+        # -> checkpoint).  Persistence is cold-path; pay the lookup here.
+        from repro.checkpoint.ckpt import save_artifact
+
         tree = {
             "alpha": self.alpha,
             "b": self.b,
@@ -212,6 +217,8 @@ class RouterArtifacts:
 
     @classmethod
     def load(cls, path: str) -> "RouterArtifacts":
+        from repro.checkpoint.ckpt import load_artifact
+
         tree, meta = load_artifact(path)
         if meta.get("format") != ARTIFACT_FORMAT:
             raise ValueError(

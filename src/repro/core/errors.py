@@ -43,6 +43,38 @@ class SchemaVersionError(RouterError):
         self.supported = supported
 
 
+class ArtifactCorruptError(RouterError):
+    """A persisted artifact failed its content checksum (or was torn in a
+    way the atomic-rename protocol cannot hide).  The bytes on disk are
+    NOT what the writer committed — callers with a sidecar fall back to a
+    cold start; callers loading primary artifacts should refuse and
+    re-calibrate rather than route on garbage."""
+
+
+class PoisonQueryError(RouterError):
+    """Batch dispatch kept failing until bisection isolated these queries.
+
+    ``indices`` are positions into the batch the caller submitted;
+    ``texts`` the offending inputs.  Every OTHER query in the batch has a
+    valid (cached) latent — re-routing the survivors is table-only work
+    and returns the bit-identical fault-free selections."""
+
+    def __init__(self, indices, texts=()):
+        if isinstance(indices, str):
+            # wire reconstruction: the client rebuilds typed errors as
+            # ``exc_cls(message)`` — positions/texts don't survive the trip
+            super().__init__(indices)
+            self.indices = []
+            self.texts = []
+            return
+        super().__init__(
+            f"{len(indices)} quarantined quer{'y' if len(indices) == 1 else 'ies'} "
+            f"(batch positions {list(indices)}) failed dispatch twice and "
+            f"were isolated by bisection")
+        self.indices = list(indices)
+        self.texts = list(texts)
+
+
 class ServiceError(RouterError):
     """Base class for serving-plane (RouterService) request failures."""
 
@@ -55,3 +87,20 @@ class OverloadedError(ServiceError):
 class DeadlineExceededError(ServiceError):
     """The request's deadline expired while it waited in the coalescing
     queue; it was shed before compute was spent on it."""
+
+
+class FrameTooLargeError(ServiceError):
+    """A wire frame declared a length past the server's (or client's)
+    ``max_frame_bytes``.  The oversized payload is drained and discarded —
+    the connection stays alive — but the request it carried was never
+    parsed, let alone routed."""
+
+
+class RetriesExhausted(ServiceError):
+    """The resilient client gave up: every reconnect/retry attempt failed.
+    ``attempts`` counts tries; ``last`` is the final transport error."""
+
+    def __init__(self, msg: str, attempts: int = 0, last=None):
+        super().__init__(msg)
+        self.attempts = attempts
+        self.last = last

@@ -37,6 +37,7 @@ import dataclasses
 import functools
 import json
 import os
+import threading
 import time
 from typing import Dict, Optional, Sequence, Tuple, Union
 
@@ -169,6 +170,13 @@ class ModelPool:
                  _snapshot: Optional[PoolSnapshot] = None):
         self._snap = (_empty_snapshot(np.asarray(bin_edges, np.float64))
                       if _snapshot is None else _snapshot)
+        # serializes the read-copy-bump in record_outcome: concurrent
+        # outcome reports (e.g. many connections' report_outcome fan-in)
+        # must not interleave between reading self._snap and bumping it —
+        # a HALF_OPEN probe race can otherwise double-transition the
+        # breaker or lose EWMA updates.  Readers stay lock-free: they see
+        # one immutable snapshot or the next.
+        self._outcome_lock = threading.Lock()
 
     # ------------------------------------------------------------------
     # views
@@ -306,7 +314,20 @@ class ModelPool:
 
         Returns a summary dict (state before/after, transition name or
         None, current EWMA ratio) for the metrics layer.
+
+        Thread-safe: the whole read-copy-bump runs under the pool's
+        outcome lock, so concurrent reports serialize per pool — without
+        it, two HALF_OPEN probe successes both read probes=0 and neither
+        closes the breaker (and EWMA/obs updates are lost).
         """
+        with self._outcome_lock:
+            return self._record_outcome_locked(name, ok, latency_s,
+                                               tokens, now)
+
+    def _record_outcome_locked(self, name: str, ok: bool,
+                               latency_s: Optional[float],
+                               tokens: Optional[int],
+                               now: Optional[float]) -> Dict:
         s = self._snap
         i = s.index_of(name)
         pol = s.health_policy
@@ -453,9 +474,12 @@ class ModelPool:
         return cls(snap.edges, _snapshot=snap)
 
     def save(self, path: str) -> None:
+        from repro.checkpoint.ckpt import atomic_write_text
+
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-        with open(path, "w") as f:
-            json.dump(self.to_json(), f, indent=1)
+        # temp + fsync + atomic rename: a crash mid-save leaves the
+        # previous pool.json intact, never a torn JSON prefix
+        atomic_write_text(path, json.dumps(self.to_json(), indent=1))
 
     @classmethod
     def load(cls, path: str) -> "ModelPool":

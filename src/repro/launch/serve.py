@@ -418,7 +418,22 @@ def main(argv=None):
                     help="route: do NOT persist XLA compilations under "
                          "<artifact>/xla_cache (default: persist, so "
                          "--warmup is paid once per artifact dir)")
+    ap.add_argument("--fault-plan", default=None, metavar="SPEC",
+                    help="route: arm a deterministic fault-injection "
+                         "plan before serving — 'seed:N[:HORIZON]' "
+                         "generates a plan over the first HORIZON "
+                         "requests (default 40), or a path to a plan "
+                         "JSON (see repro.serving.faults).  Chaos "
+                         "testing only; zero overhead when absent")
     args = ap.parse_args(argv)
+
+    if getattr(args, "fault_plan", None):
+        from repro.serving import faults
+
+        plan = faults.FaultPlan.from_spec(args.fault_plan)
+        faults.arm(plan)
+        print(f"FAULT PLAN armed: {len(plan.events)} scheduled events "
+              f"({args.fault_plan})")
 
     if args.mode == "route":
         _route_main(args)

@@ -40,10 +40,10 @@ import dataclasses
 import queue
 import threading
 import time
-from concurrent.futures import Future
+from concurrent.futures import Future, InvalidStateError
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
-from repro.core.errors import DeadlineExceededError
+from repro.core.errors import DeadlineExceededError, PoisonQueryError
 
 
 @dataclasses.dataclass
@@ -213,7 +213,7 @@ class MicroBatcher:
                 fut.set_exception(exc)
             else:
                 fut.set_result(result)
-        except Exception:  # InvalidStateError: cancelled/already resolved
+        except InvalidStateError:   # cancelled / already resolved
             pass
 
     def _route_batch(self, batch: Sequence[_Request]) -> None:
@@ -236,23 +236,39 @@ class MicroBatcher:
         for req in bulks:
             self._route_bulk(req, t_start)
         for pol, reqs in by_pol.items():
-            texts = [r.text for r in reqs]
-            want_diag = any(r.want_diag for r in reqs)
-            t0 = time.perf_counter()
-            try:
-                dec = self.engine.route_pinned(texts, policy=pol,
-                                               want_scores=want_diag)
-            except Exception as exc:  # noqa: BLE001 — fan the error back
-                for r in reqs:
-                    self._resolve(r.future, exc=exc)
-                continue
-            compute_s = time.perf_counter() - t0
-            for j, r in enumerate(reqs):
-                self._resolve(r.future, self._result(
-                    dec, j, r.text, r,
-                    queued_s=max(t_start - r.t_enqueue, 0.0),
-                    compute_s=compute_s))
-            self.requests_routed += len(reqs)
+            pending = list(reqs)
+            while pending:
+                texts = [r.text for r in pending]
+                want_diag = any(r.want_diag for r in pending)
+                t0 = time.perf_counter()
+                try:
+                    dec = self.engine.route_pinned(texts, policy=pol,
+                                                   want_scores=want_diag)
+                except PoisonQueryError as exc:
+                    # per-query isolation: only the quarantined requests
+                    # fail (each with its OWN typed error); survivors
+                    # re-route, table-only — the engine cached their
+                    # entries before raising
+                    bad = set(exc.indices)
+                    for j in bad:
+                        self._resolve(pending[j].future,
+                                      exc=PoisonQueryError(
+                                          [0], [pending[j].text]))
+                    pending = [r for j, r in enumerate(pending)
+                               if j not in bad]
+                    continue
+                except Exception as exc:  # noqa: BLE001 — fan it back
+                    for r in pending:
+                        self._resolve(r.future, exc=exc)
+                    break
+                compute_s = time.perf_counter() - t0
+                for j, r in enumerate(pending):
+                    self._resolve(r.future, self._result(
+                        dec, j, r.text, r,
+                        queued_s=max(t_start - r.t_enqueue, 0.0),
+                        compute_s=compute_s))
+                self.requests_routed += len(pending)
+                break
         self.batches_routed += 1
 
     def _route_bulk(self, req: _Request, t_start: float) -> None:
@@ -261,6 +277,9 @@ class MicroBatcher:
             dec = self.engine.route_pinned(req.texts, policy=req.pol,
                                            want_scores=req.want_diag)
         except Exception as exc:  # noqa: BLE001 — fan the error back
+            # a PoisonQueryError fails the WHOLE bulk: the typed error
+            # carries the offending indices, and bulk semantics (global
+            # cost normalization) don't survive partial removal
             self._resolve(req.future, exc=exc)
             return
         compute_s = time.perf_counter() - t0

@@ -35,6 +35,8 @@ from typing import Dict, Optional
 
 import numpy as np
 
+from repro.serving import faults
+
 
 def enable_persistent_compile_cache(cache_dir: str) -> str:
     """Point jax's persistent compilation cache at ``cache_dir``.
@@ -245,24 +247,31 @@ class ExportedStore:
                 return None
             return exported
         except Exception:  # noqa: BLE001 — any corruption → re-export
+            faults.record_degraded("export_retrace")
             return None
 
     def save(self, name: str, exported) -> None:
         import jax
 
+        from repro.checkpoint.ckpt import atomic_write_bytes
+
         fname = name + ".jaxexp"
-        tmp = os.path.join(self.path, fname + ".tmp")
         try:
             blob = exported.serialize()
+            if faults.ARMED:
+                ev = faults.fire("cache.export")
+                if ev is not None and ev.kind == "corrupt":
+                    # simulated bit rot in the serialized program: the
+                    # next load must degrade to re-tracing, not crash
+                    blob = blob[: max(len(blob) // 2, 1)]
             with self._lock:
-                with open(tmp, "wb") as f:
-                    f.write(blob)
-                os.replace(tmp, os.path.join(self.path, fname))
+                atomic_write_bytes(os.path.join(self.path, fname), blob)
                 self._entries[name] = fname
-                with open(os.path.join(self.path, MANIFEST_NAME),
-                          "w") as f:
-                    json.dump({"fingerprint": self.fingerprint,
-                               "jax": jax.__version__,
-                               "entries": self._entries}, f, indent=1)
+                atomic_write_bytes(
+                    os.path.join(self.path, MANIFEST_NAME),
+                    json.dumps({"fingerprint": self.fingerprint,
+                                "jax": jax.__version__,
+                                "entries": self._entries},
+                               indent=1).encode())
         except OSError:  # read-only artifact dir etc. — stay tracing
-            pass
+            faults.record_degraded("export_store_unwritable")

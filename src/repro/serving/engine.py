@@ -92,6 +92,7 @@ from __future__ import annotations
 import dataclasses
 import os
 import threading
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -100,7 +101,8 @@ import numpy as np
 from jax import export as jax_export
 
 from repro.core import ingest
-from repro.core.errors import EmptyPoolError, NotCalibratedError
+from repro.core.errors import (EmptyPoolError, NotCalibratedError,
+                               PoisonQueryError)
 from repro.core.pool import PoolSnapshot
 from repro.core.predictor import apply_heads, encode
 from repro.core.profiling import predict_accuracy
@@ -108,6 +110,7 @@ from repro.core.router import RoutingConstraints
 from repro.core.router import route as core_route
 from repro.data.tokenizer import piece_count
 from repro.kernels import ops
+from repro.serving import faults as _faults
 from repro.serving.cache import CacheEntry, LatentCache
 from repro.serving.semcache import (LatentBank, SemanticCacheConfig,
                                     sketch_batch)
@@ -192,6 +195,14 @@ class RouterEngineConfig:
     # capped at the number of ROUTABLE models, so a ranked list never
     # contains a breaker-masked model.  route_batch/route keep k=1.
     topk: int = 4
+    # dispatch watchdog (ISSUE 9): when set, each encoder dispatch chunk
+    # runs under a worker thread with this timeout; a chunk that raises
+    # or hangs is retried once, then BISECTED so only the offending
+    # queries are quarantined (typed ``PoisonQueryError``) while every
+    # surviving query routes bit-identically to the fault-free path
+    # (per-query batch-composition invariance).  None — the default —
+    # keeps the historical direct call: zero threads, zero overhead.
+    dispatch_timeout_s: Optional[float] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -361,6 +372,10 @@ class RouterEngine:
         shapes that :meth:`warmup` exported dispatch through the
         deserialized program (zero Python tracing); anything else falls
         back to the tracing jit."""
+        if _faults.ARMED:
+            ev = _faults.fire("engine.dispatch")   # kind="raise" raises here
+            if ev is not None and ev.kind == "hang":
+                time.sleep(ev.duration_s)
         fn = self._exported.get(("lat", prec) + tuple(ids.shape))
         if fn is None:
             fn = self._latents_jit
@@ -509,6 +524,11 @@ class RouterEngine:
         recompute) skips probing.  Computed f32 entries join the bank at
         the end of the walk — reused ones never do, so approximation
         cannot chain through the bank."""
+        if _faults.ARMED:
+            # deterministic poison queries: raise while the batch still
+            # contains one, so _guarded_entries bisects down to exactly
+            # the poisoned texts
+            _faults.check_poison(texts)
         art = self.router.artifacts
         pc = art.predictor.cfg
         tok = art.tokenizer
@@ -532,6 +552,10 @@ class RouterEngine:
         in_flight: List[Tuple[np.ndarray, jax.Array, jax.Array, int]] = []
         for s in range(0, n, sl):
             idx = order[s: s + sl]
+            if _faults.ARMED:
+                ev = _faults.fire("engine.lex")
+                if ev is not None and ev.kind == "hang":
+                    time.sleep(ev.duration_s)
             lexed = [ingest.lex(texts[i]) for i in idx]
             feats = ingest.features_stack(lexed)
             feats_all[idx] = feats
@@ -591,6 +615,80 @@ class RouterEngine:
             for i in range(n)
         ]
 
+    def _watchdog_entries(self, texts: Sequence[str],
+                          subword_lens: Sequence[int], prec: str,
+                          semantic_ok: bool,
+                          timeout: float) -> List[CacheEntry]:
+        """One ``_compute_entries`` chunk under a watchdog thread.
+
+        ``fut.result(timeout=)`` bounds a HUNG dispatch (the chunk thread
+        may outlive the timeout — jax calls are not interruptible — but
+        the caller regains control and can retry/bisect).  The executor
+        is shut down manually: a ``with`` block's ``__exit__`` would
+        join the stuck worker and re-introduce the hang."""
+        from concurrent.futures import ThreadPoolExecutor
+
+        ex = ThreadPoolExecutor(1)
+        fut = ex.submit(self._compute_entries, texts, subword_lens,
+                        prec, semantic_ok)
+        try:
+            return fut.result(timeout=timeout)
+        finally:
+            ex.shutdown(wait=False, cancel_futures=True)
+
+    def _guarded_entries(self, texts: Sequence[str],
+                         subword_lens: Sequence[int], prec: str,
+                         semantic_ok: bool
+                         ) -> Tuple[List[str], List[CacheEntry],
+                                    List[str]]:
+        """Compute entries with per-query fault isolation.
+
+        Returns ``(ok_texts, entries, bad_texts)``.  Fast path — no
+        ``dispatch_timeout_s`` and no armed fault plan — is the direct
+        historical call (no threads, no try/except in the loop).
+        Otherwise each chunk gets TWO attempts (transient faults heal on
+        retry); a chunk that fails both is bisected so only the queries
+        that cannot dispatch are quarantined.  Because scoring is
+        bitwise-invariant under batch composition (see
+        :meth:`_compute_entries`), survivors' entries are identical to
+        the fault-free run no matter how the bisection regrouped them."""
+        timeout = self.cfg.dispatch_timeout_s
+        if timeout is None and not _faults.ARMED:
+            return (list(texts),
+                    self._compute_entries(texts, subword_lens, prec,
+                                          semantic_ok=semantic_ok), [])
+        ok_texts: List[str] = []
+        ok_entries: List[CacheEntry] = []
+        bad: List[str] = []
+
+        def attempt(chunk: List[str]) -> List[CacheEntry]:
+            if timeout is None:
+                return self._compute_entries(chunk, subword_lens, prec,
+                                             semantic_ok=semantic_ok)
+            return self._watchdog_entries(chunk, subword_lens, prec,
+                                          semantic_ok, timeout)
+
+        def run(chunk: List[str]) -> None:
+            for _ in range(2):           # 1 try + 1 retry per chunk
+                try:
+                    ent = attempt(chunk)
+                except Exception:  # noqa: BLE001 — bisect below
+                    _faults.record_degraded("engine_retry")
+                    continue
+                ok_texts.extend(chunk)
+                ok_entries.extend(ent)
+                return
+            if len(chunk) == 1:
+                _faults.record_degraded("engine_quarantine")
+                bad.extend(chunk)
+                return
+            mid = len(chunk) // 2
+            run(chunk[:mid])
+            run(chunk[mid:])
+
+        run(list(texts))
+        return ok_texts, ok_entries, bad
+
     def _latent_batch(self, texts: Sequence[str], pool: _DevicePool,
                       prec: str = "f32", semantic_ok: bool = True
                       ) -> Tuple[np.ndarray, np.ndarray, List[CacheEntry]]:
@@ -619,13 +717,18 @@ class RouterEngine:
                 miss_pos.setdefault(texts[i], []).append(i)
         if miss_pos:
             uniq_texts = list(miss_pos)
-            fresh = self._compute_entries(uniq_texts, pool.subword_lens,
-                                          prec, semantic_ok=semantic_ok)
-            for t, e in zip(uniq_texts, fresh):
+            ok_texts, fresh, bad = self._guarded_entries(
+                uniq_texts, pool.subword_lens, prec, semantic_ok)
+            for t, e in zip(ok_texts, fresh):
                 for i in miss_pos[t]:
                     entries[i] = e
                 if self.cache is not None:
                     self.cache.put(t, e)
+            if bad:
+                # survivors are already cached above, so the caller's
+                # re-route of the healthy remainder is table-only
+                idxs = sorted(i for t in bad for i in miss_pos[t])
+                raise PoisonQueryError(idxs, [texts[i] for i in idxs])
         a_hat = np.stack([e.a_hat for e in entries])
         b_hat = np.stack([e.b_hat for e in entries])
         return a_hat, b_hat, entries

@@ -1,0 +1,338 @@
+"""Deterministic fault-injection plane + the degradation counter.
+
+Robustness you cannot exercise is robustness you do not have.  This
+module gives the repo ONE seeded, schedulable source of injected faults
+so every degradation path — engine dispatch failure, slow host lex, torn
+artifact write, corrupt sidecar bytes, dropped TCP connection, breaker
+storm — can be driven deterministically from tests, the chaos benchmark
+row, and the CI smoke step.
+
+Design constraints, in order:
+
+1. **Zero overhead unarmed.**  Hook sites guard on the module boolean
+   ``ARMED`` (``if _faults.ARMED: ...``) — one attribute read on the hot
+   path, no function call, no plan lookup.  ``ARMED`` is only True
+   between :func:`arm` and :func:`disarm`.
+2. **Deterministic.**  A :class:`FaultPlan` is either built explicitly
+   (event by event) or generated from a seed; either way each
+   :class:`FaultEvent` fires at exact 1-based *hit counts* of its site,
+   so the same plan against the same traffic injects the same faults.
+   No wall clock anywhere in the schedule.
+3. **Interpretation stays local.**  :func:`fire` only *matches* — it
+   returns the scheduled event (or raises :class:`InjectedFault` for
+   ``kind="raise"``, the one interpretation every site shares).  What a
+   ``"hang"`` or ``"corrupt"`` means is decided by the hook site, which
+   knows its own watchdog/bytes.
+
+Separately (but in the same module, because every degradation path a
+fault exercises must also be *observable*): :func:`record_degraded`
+increments a process-wide counter per degradation path, scraped by
+``RouterService`` into the ``router_degraded_total{path=...}`` family.
+It lives here — stdlib-only, imported lazily by ``checkpoint`` — so the
+persistence layer can count degradations without a serving dependency.
+
+Sites wired in this repo (hit = one arrival at the hook):
+
+========================  ====================================================
+site                      one hit is…
+========================  ====================================================
+``engine.dispatch``       one device dispatch in ``RouterEngine`` latent
+                          computation (kinds: ``raise``, ``hang``)
+``engine.lex``            one host-side lex slice (kind: ``hang`` = slow lex)
+``ckpt.write``            one ``save_artifact`` commit (kinds: ``crash`` =
+                          die after data write before the meta commit,
+                          ``corrupt`` = flip bytes in the committed file)
+``semcache.sidecar``      one bank sidecar save (kind: ``corrupt``)
+``cache.export``          one ``ExportedStore.save`` (kind: ``corrupt``)
+``protocol.frame``        one decoded request frame server-side (kinds:
+                          ``reset`` = abort before handling, ``reset_post``
+                          = handle then abort before the reply flushes,
+                          ``torn_frame`` = reply with a half frame then
+                          abort, ``stall`` = delay the reply)
+``service.outcome``       one ``report_outcome`` (kind: ``storm`` = apply
+                          the outcome ``repeat`` times — a breaker flood)
+========================  ====================================================
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import threading
+from typing import Dict, List, Optional, Sequence, Tuple
+
+#: Every site a hook is wired for, with its legal kinds — `FaultPlan`
+#: validates against this so a typo'd site is an error, not a no-op.
+SITES: Dict[str, Tuple[str, ...]] = {
+    "engine.dispatch": ("raise", "hang"),
+    "engine.lex": ("hang",),
+    "ckpt.write": ("crash", "corrupt"),
+    "semcache.sidecar": ("corrupt",),
+    "cache.export": ("corrupt",),
+    "protocol.frame": ("reset", "reset_post", "torn_frame", "stall"),
+    "service.outcome": ("storm",),
+}
+
+#: The five fault families the chaos soak must cover (ISSUE acceptance):
+#: dispatch, lex, persistence, transport, breaker storm.
+FAMILIES: Dict[str, Tuple[str, ...]] = {
+    "dispatch": ("engine.dispatch",),
+    "lex": ("engine.lex",),
+    "persistence": ("ckpt.write", "semcache.sidecar", "cache.export"),
+    "transport": ("protocol.frame",),
+    "breaker": ("service.outcome",),
+}
+
+
+class InjectedFault(RuntimeError):
+    """The exception an armed ``kind="raise"`` event throws at its site.
+    Deliberately NOT a RouterError: injected faults must exercise the
+    generic failure handling, not a typed fast path."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One scheduled fault: fire ``kind`` at ``site`` on its ``hits``-th
+    arrivals (1-based).  ``duration_s`` parameterizes hang/stall;
+    ``repeat`` parameterizes storm floods."""
+    site: str
+    kind: str
+    hits: Tuple[int, ...]
+    duration_s: float = 0.25
+    repeat: int = 1
+
+    def __post_init__(self):
+        if self.site not in SITES:
+            raise ValueError(f"unknown fault site {self.site!r} "
+                             f"(known: {sorted(SITES)})")
+        if self.kind not in SITES[self.site]:
+            raise ValueError(f"kind {self.kind!r} invalid at {self.site!r} "
+                             f"(legal: {SITES[self.site]})")
+        object.__setattr__(self, "hits", tuple(sorted(set(self.hits))))
+
+
+class FaultPlan:
+    """A seeded schedule of :class:`FaultEvent`\\ s plus the per-site hit
+    counters :func:`fire` matches against.  Thread-safe: hooks run on the
+    batcher worker, the asyncio loop, and save() callers concurrently."""
+
+    def __init__(self, events: Sequence[FaultEvent], seed: int = 0,
+                 poison_texts: Sequence[str] = ()):
+        self.events = list(events)
+        self.seed = seed
+        #: Query texts that poison ANY engine dispatch containing them —
+        #: the deterministic target for bisect quarantine (a hit-count
+        #: schedule cannot name "this input is bad"; a text set can).
+        self.poison_texts = frozenset(poison_texts)
+        self._hits: Dict[str, int] = {}
+        self._lock = threading.Lock()
+        #: (site, kind, hit) triples actually injected, for assertions.
+        self.fired: List[Tuple[str, str, int]] = []
+
+    # ------------------------------------------------------------------
+    def match(self, site: str) -> Optional[FaultEvent]:
+        """Count one arrival at ``site``; return the event scheduled for
+        this hit (None almost always).  Appends to ``fired`` on a match."""
+        with self._lock:
+            n = self._hits.get(site, 0) + 1
+            self._hits[site] = n
+            for ev in self.events:
+                if ev.site == site and n in ev.hits:
+                    self.fired.append((site, ev.kind, n))
+                    return ev
+        return None
+
+    def fired_families(self) -> set:
+        """Which of the five fault families actually injected something."""
+        sites = {s for s, _, _ in self.fired}
+        return {fam for fam, fam_sites in FAMILIES.items()
+                if sites & set(fam_sites)}
+
+    # ------------------------------------------------------------------
+    # (de)serialization — the CLI's --fault-plan and the CI smoke step
+    # ------------------------------------------------------------------
+    def to_json(self) -> dict:
+        return {"seed": self.seed,
+                "poison_texts": sorted(self.poison_texts),
+                "events": [{"site": e.site, "kind": e.kind,
+                            "hits": list(e.hits),
+                            "duration_s": e.duration_s,
+                            "repeat": e.repeat} for e in self.events]}
+
+    @classmethod
+    def from_json(cls, rec: dict) -> "FaultPlan":
+        evs = [FaultEvent(site=e["site"], kind=e["kind"],
+                          hits=tuple(e["hits"]),
+                          duration_s=float(e.get("duration_s", 0.25)),
+                          repeat=int(e.get("repeat", 1)))
+               for e in rec.get("events", [])]
+        return cls(evs, seed=int(rec.get("seed", 0)),
+                   poison_texts=rec.get("poison_texts", ()))
+
+    @classmethod
+    def from_spec(cls, spec: str) -> "FaultPlan":
+        """``seed:N[:horizon]`` generates; anything else is a JSON path."""
+        if spec.startswith("seed:"):
+            parts = spec.split(":")
+            horizon = int(parts[2]) if len(parts) > 2 else 40
+            return cls.generate(seed=int(parts[1]), horizon=horizon)
+        with open(spec) as f:
+            return cls.from_json(json.load(f))
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def generate(cls, seed: int, horizon: int = 40,
+                 families: Sequence[str] = ("dispatch", "lex",
+                                            "persistence", "transport",
+                                            "breaker"),
+                 hang_s: float = 0.05) -> "FaultPlan":
+        """Seeded schedule covering ``families``, with every fault hit in
+        ``[2, horizon]`` — hit 1 is always left clean so each site's happy
+        path is exercised before its first fault.  Pure function of its
+        arguments (stdlib ``random.Random``)."""
+        import random
+
+        rng = random.Random(seed)
+        events: List[FaultEvent] = []
+
+        def pick(k: int) -> Tuple[int, ...]:
+            hi = max(horizon, 3)
+            return tuple(rng.sample(range(2, hi + 1), min(k, hi - 1)))
+
+        if "dispatch" in families:
+            events.append(FaultEvent("engine.dispatch", "raise", pick(2)))
+            events.append(FaultEvent("engine.dispatch", "hang", pick(1),
+                                     duration_s=hang_s * 4))
+        if "lex" in families:
+            events.append(FaultEvent("engine.lex", "hang", pick(1),
+                                     duration_s=hang_s))
+        if "persistence" in families:
+            events.append(FaultEvent("semcache.sidecar", "corrupt", (1,)))
+            events.append(FaultEvent("cache.export", "corrupt", pick(1)))
+        if "transport" in families:
+            events.append(FaultEvent("protocol.frame", "reset", pick(2)))
+            events.append(FaultEvent("protocol.frame", "reset_post",
+                                     pick(1)))
+            events.append(FaultEvent("protocol.frame", "torn_frame",
+                                     pick(1)))
+            events.append(FaultEvent("protocol.frame", "stall", pick(1),
+                                     duration_s=hang_s))
+        if "breaker" in families:
+            events.append(FaultEvent("service.outcome", "storm", pick(1),
+                                     repeat=8))
+        return cls(events, seed=seed)
+
+
+# ----------------------------------------------------------------------
+# the armed-plan slot — module-level so hook sites pay ONE attribute
+# read when no chaos is running
+# ----------------------------------------------------------------------
+ARMED: bool = False
+_PLAN: Optional[FaultPlan] = None
+_ARM_LOCK = threading.Lock()
+
+
+def arm(plan: FaultPlan) -> FaultPlan:
+    """Install ``plan`` as the process's active fault schedule."""
+    global ARMED, _PLAN
+    with _ARM_LOCK:
+        _PLAN = plan
+        ARMED = True
+    return plan
+
+
+def disarm() -> Optional[FaultPlan]:
+    """Remove the active plan (returning it, for post-run assertions)."""
+    global ARMED, _PLAN
+    with _ARM_LOCK:
+        plan, _PLAN = _PLAN, None
+        ARMED = False
+    return plan
+
+
+def active() -> Optional[FaultPlan]:
+    return _PLAN
+
+
+class armed:
+    """``with faults.armed(plan): ...`` — arm for a scope, always disarm."""
+
+    def __init__(self, plan: FaultPlan):
+        self.plan = plan
+
+    def __enter__(self) -> FaultPlan:
+        return arm(self.plan)
+
+    def __exit__(self, *exc) -> None:
+        disarm()
+
+
+def fire(site: str) -> Optional[FaultEvent]:
+    """Hook-site entry: count a hit at ``site`` against the armed plan.
+
+    Returns the matched event for the site to interpret — except
+    ``kind="raise"``, which every site treats identically, so it is
+    raised here as :class:`InjectedFault`.  Unarmed (or no match): None.
+    """
+    plan = _PLAN
+    if plan is None:
+        return None
+    ev = plan.match(site)
+    if ev is not None and ev.kind == "raise":
+        raise InjectedFault(f"injected fault at {site} "
+                            f"(hit {plan._hits[site]})")
+    return ev
+
+
+def check_poison(texts) -> None:
+    """Raise :class:`InjectedFault` when any of ``texts`` is on the armed
+    plan's poison list — the deterministic stand-in for an input that
+    reliably kills device dispatch (the batch it rides in fails however
+    it is re-grouped, which is exactly what bisection needs to isolate
+    it).  No-op unarmed or with an empty poison set."""
+    plan = _PLAN
+    if plan is None or not plan.poison_texts:
+        return
+    bad = [t for t in texts if t in plan.poison_texts]
+    if bad:
+        with plan._lock:
+            plan.fired.append(("engine.dispatch", "poison", len(bad)))
+        raise InjectedFault(
+            f"injected poison dispatch: {len(bad)} poisoned "
+            f"quer{'y' if len(bad) == 1 else 'ies'} in the batch")
+
+
+# ----------------------------------------------------------------------
+# degradation counter — router_degraded_total{path=...}
+# ----------------------------------------------------------------------
+_DEGRADED: Dict[str, int] = {}
+_DEG_LOCK = threading.Lock()
+
+
+def record_degraded(path: str, amount: int = 1) -> None:
+    """Count one trip down a degradation path (``path`` is the label the
+    metrics family exposes: ``engine_retry``, ``semcache_cold_start``,
+    ``artifact_checksum``, ``frame_too_large``, …).  Process-wide and
+    import-light on purpose: ``checkpoint`` and the client call this
+    without holding a service reference; ``RouterService`` scrapes it
+    into ``router_degraded_total`` at collect time."""
+    with _DEG_LOCK:
+        _DEGRADED[path] = _DEGRADED.get(path, 0) + amount
+
+
+def degraded_counts() -> Dict[str, int]:
+    """Snapshot of every degradation-path counter."""
+    with _DEG_LOCK:
+        return dict(_DEGRADED)
+
+
+def degraded_total(path: Optional[str] = None) -> int:
+    with _DEG_LOCK:
+        if path is not None:
+            return _DEGRADED.get(path, 0)
+        return sum(_DEGRADED.values())
+
+
+def reset_degraded() -> None:
+    """Zero the counters (tests only — the family is monotone in prod)."""
+    with _DEG_LOCK:
+        _DEGRADED.clear()

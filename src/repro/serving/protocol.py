@@ -52,15 +52,20 @@ import asyncio
 import dataclasses
 import itertools
 import json
+import os
+import random
 import socket
 import threading
+import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.core import errors as errors_mod
-from repro.core.errors import (DeadlineExceededError, OverloadedError,
+from repro.core.errors import (DeadlineExceededError, FrameTooLargeError,
+                               OverloadedError, RetriesExhausted,
                                ServiceError)
+from repro.serving import faults
 from repro.serving.service import (RouteRequest, RouteResponse,
                                    RouterService, ServiceConfig)
 
@@ -81,8 +86,15 @@ def encode_frame(obj: Dict[str, Any]) -> bytes:
     return b"%d\n" % len(payload) + payload
 
 
-async def read_frame(reader: asyncio.StreamReader) -> Optional[Dict]:
-    """One frame from an asyncio stream; None on clean EOF."""
+async def read_frame(reader: asyncio.StreamReader,
+                     max_frame_bytes: Optional[int] = None
+                     ) -> Optional[Dict]:
+    """One frame from an asyncio stream; None on clean EOF.
+
+    ``max_frame_bytes`` bounds the allocation a length prefix can force:
+    an oversized frame's payload is DRAINED (the stream stays
+    frame-aligned, so the connection survives) and a typed
+    :class:`FrameTooLargeError` raised for the caller to answer."""
     line = await reader.readline()
     if not line:
         return None
@@ -90,17 +102,39 @@ async def read_frame(reader: asyncio.StreamReader) -> Optional[Dict]:
         n = int(line)
     except ValueError:
         raise ValueError(f"bad frame length prefix {line!r}") from None
+    if max_frame_bytes is not None and n > max_frame_bytes:
+        remaining = n
+        while remaining > 0:
+            chunk = await reader.read(min(remaining, 1 << 16))
+            if not chunk:
+                raise asyncio.IncompleteReadError(b"", remaining)
+            remaining -= len(chunk)
+        raise FrameTooLargeError(
+            f"frame of {n} bytes exceeds max_frame_bytes="
+            f"{max_frame_bytes}; payload drained, connection kept alive")
     payload = await reader.readexactly(n)
     return json.loads(payload)
 
 
-def read_frame_sync(f) -> Optional[Dict]:
+def read_frame_sync(f, max_frame_bytes: Optional[int] = None
+                    ) -> Optional[Dict]:
     """One frame from a blocking file-like (socket.makefile('rb'))."""
     line = f.readline()
     if not line:
         return None
-    payload = f.read(int(line))
-    if len(payload) < int(line):
+    n = int(line)
+    if max_frame_bytes is not None and n > max_frame_bytes:
+        remaining = n
+        while remaining > 0:
+            chunk = f.read(min(remaining, 1 << 16))
+            if not chunk:
+                raise ConnectionError("connection closed mid-frame")
+            remaining -= len(chunk)
+        raise FrameTooLargeError(
+            f"frame of {n} bytes exceeds max_frame_bytes="
+            f"{max_frame_bytes}; payload drained, connection kept alive")
+    payload = f.read(n)
+    if len(payload) < n:
         raise ConnectionError("connection closed mid-frame")
     return json.loads(payload)
 
@@ -256,16 +290,27 @@ async def _handle_connection(service: RouterService,
             outbox.append(obj)
             flush.set()
 
+    async def answer(frame: Dict, rec: Dict) -> None:
+        """Send one response, recording it under the frame's idempotency
+        key when present.  Only ``ok`` responses are recorded: a shed
+        ("overloaded") or failed request must be allowed to actually
+        retry, not be pinned to its first failure."""
+        idem = frame.get("idem")
+        if idem is not None and rec.get("status") == "ok":
+            service.idem_put(idem, rec)
+        await send(rec)
+
     async def route_one(frame: Dict) -> None:
         try:
             resp = await service._submit_or_status(request_from_json(frame))
-            await send(response_to_json(resp))
         except Exception as e:  # noqa: BLE001 — a malformed frame must
             # still be ANSWERED, or a pipelined client hangs counting
             # responses
-            await send({"id": frame.get("id"), "status": "error",
-                        "error": f"{type(e).__name__}: {e}",
-                        "error_type": type(e).__name__})
+            await answer(frame, {"id": frame.get("id"), "status": "error",
+                                 "error": f"{type(e).__name__}: {e}",
+                                 "error_type": type(e).__name__})
+            return
+        await answer(frame, response_to_json(resp))
 
     # ``route`` frames are BURST-GROUPED: a pipelined client's frames all
     # sit in the stream buffer, so the reader loop drains them without
@@ -290,6 +335,20 @@ async def _handle_connection(service: RouterService,
         return json.dumps(v, sort_keys=True) if isinstance(v, dict) else v
 
     async def route_group(frames: List[Dict]) -> None:
+        # a reconnected client replays its whole pipeline; frames whose
+        # idempotency key already resolved answer from the dedup cache
+        # (the route is NOT executed again)
+        fresh: List[Dict] = []
+        for f in frames:
+            hit = (service.idem_get(f["idem"])
+                   if f.get("idem") is not None else None)
+            if hit is not None:
+                await send(hit)
+            else:
+                fresh.append(f)
+        frames = fresh
+        if not frames:
+            return
         if len(frames) == 1:
             await route_one(frames[0])
             return
@@ -298,10 +357,10 @@ async def _handle_connection(service: RouterService,
             resps = await service.submit_batch(
                 [f["text"] for f in frames],
                 policy=policy_from_json(frames[0].get("policy", "balanced")))
-            for rid, resp in zip(ids, resps):
+            for f, rid, resp in zip(frames, ids, resps):
                 rec = response_to_json(resp)
                 rec["id"] = rid
-                await send(rec)
+                await answer(f, rec)
         except OverloadedError as e:
             for rid in ids:
                 await send({"id": rid, "status": "overloaded",
@@ -341,8 +400,9 @@ async def _handle_connection(service: RouterService,
                 policy=policy_from_json(frame.get("policy", "balanced")),
                 request_id=rid, deadline_s=frame.get("deadline_s"),
                 diagnostics=bool(frame.get("diagnostics", False)))
-            await send({"id": rid, "status": "ok",
-                        "results": [response_to_json(r) for r in resps]})
+            await answer(frame, {
+                "id": rid, "status": "ok",
+                "results": [response_to_json(r) for r in resps]})
         except OverloadedError as e:
             await send({"id": rid, "status": "overloaded", "error": str(e)})
         except DeadlineExceededError as e:
@@ -353,11 +413,61 @@ async def _handle_connection(service: RouterService,
                         "error": f"{type(e).__name__}: {e}",
                         "error_type": type(e).__name__})
 
+    max_frame = getattr(service.cfg, "max_frame_bytes", None)
+    abort_after = False
     try:
         while True:
-            frame = await read_frame(reader)
+            try:
+                frame = await read_frame(reader, max_frame_bytes=max_frame)
+            except FrameTooLargeError as e:
+                # the oversized payload was drained: answer typed and
+                # keep serving this connection (the client's next frame
+                # parses normally)
+                faults.record_degraded("frame_too_large")
+                await send({"id": None, "status": "error",
+                            "error": str(e),
+                            "error_type": "FrameTooLargeError"})
+                continue
             if frame is None:
                 break
+            if faults.ARMED:
+                ev = faults.fire("protocol.frame")
+                if ev is not None and ev.kind == "reset":
+                    # abort BEFORE processing: the request never routed,
+                    # so the client's retry is the only execution
+                    faults.record_degraded("connection_reset")
+                    writer.transport.abort()
+                    break
+                if ev is not None and ev.kind == "torn_frame":
+                    # half a response frame, then reset: the client must
+                    # detect the tear and retry on a fresh connection
+                    faults.record_degraded("torn_frame")
+                    b = encode_frame({"id": frame.get("id"),
+                                      "status": "ok"})
+                    writer.write(b[: max(len(b) // 2, 1)])
+                    try:
+                        await writer.drain()
+                    except (OSError, RuntimeError):
+                        pass
+                    writer.transport.abort()
+                    break
+                if ev is not None and ev.kind == "stall":
+                    # stalled peer: hold the reply past the client's
+                    # socket timeout; it abandons this connection
+                    faults.record_degraded("peer_stall")
+                    await asyncio.sleep(ev.duration_s)
+                if ev is not None and ev.kind == "reset_post":
+                    # process the frame fully (route executes, its
+                    # idempotency key is recorded) but reset before the
+                    # reply reaches the client — the retry must dedup
+                    faults.record_degraded("connection_reset")
+                    abort_after = True
+            idem = frame.get("idem")
+            if idem is not None:
+                hit = service.idem_get(idem)
+                if hit is not None:
+                    await send(hit)
+                    continue
             op = frame.get("op")
             if op == "route":
                 if _burst_eligible(frame):
@@ -404,8 +514,10 @@ async def _handle_connection(service: RouterService,
                             bool(frame.get("ok", True)),
                             latency_ms=frame.get("latency_ms"),
                             tokens=frame.get("tokens")))
-                    await send({"id": frame.get("id"), "status": "ok",
-                                **info})
+                    # idempotent like routes: a replayed outcome must not
+                    # advance the breaker twice
+                    await answer(frame, {"id": frame.get("id"),
+                                         "status": "ok", **info})
                 except Exception as e:  # noqa: BLE001 — keep conn alive
                     await send({"id": frame.get("id"), "status": "error",
                                 "error": str(e),
@@ -423,6 +535,18 @@ async def _handle_connection(service: RouterService,
             else:
                 await send({"id": frame.get("id"), "status": "error",
                             "error": f"unknown op {op!r}"})
+            if abort_after:
+                # injected reset_post: let every dispatched task finish
+                # (recording idempotency keys) then reset the transport
+                # so none of the replies reaches the client — marking the
+                # connection closed FIRST keeps the flusher off the wire
+                closed = True
+                flush_burst()
+                if tasks:
+                    await asyncio.gather(*list(tasks),
+                                         return_exceptions=True)
+                writer.transport.abort()
+                break
     except (asyncio.IncompleteReadError, ConnectionResetError):
         pass   # client went away mid-frame
     finally:
@@ -527,30 +651,121 @@ class ServiceClient:
     request frame before reading any response, so the server's
     micro-batcher sees them as one coalescible burst.  Typed shed
     statuses come back as the matching ``repro.core.errors`` exceptions.
+
+    Resilience (ISSUE 9): every exchange is a retry loop — on a
+    connection reset, torn frame, or receive timeout the client
+    reconnects (exponential backoff with FULL jitter, so a thundering
+    herd of clients decorrelates) and resends the SAME frames.  Each
+    frame carries a per-request idempotency key (``idem``, unique per
+    client session); the server dedups replays, so a request whose
+    response was lost to a mid-reply reset is answered from the server's
+    dedup cache instead of being routed twice.  ``retries`` exhausted
+    raises a typed :class:`~repro.core.errors.RetriesExhausted` carrying
+    the attempt count and last transport error.  ``retries=0`` disables
+    the loop (single attempt, same typed error on failure).
     """
 
     def __init__(self, host: str = "127.0.0.1", port: int = 0,
-                 timeout: float = 60.0):
-        self._sock = socket.create_connection((host, port), timeout=timeout)
-        self._sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-        self._rfile = self._sock.makefile("rb")
+                 timeout: float = 60.0, retries: int = 3,
+                 backoff_s: float = 0.05, max_backoff_s: float = 2.0):
+        self.host = host
+        self.port = port
+        self.timeout = timeout
+        self.retries = retries
+        self.backoff_s = backoff_s
+        self.max_backoff_s = max_backoff_s
+        # idempotency keys are scoped by a per-CONNECTION-OBJECT session
+        # id, so two clients' counters can never collide server-side
+        self._session = os.urandom(6).hex()
+        self._sock: Optional[socket.socket] = None
+        self._rfile = None
+        self._connect()
         self._ids = itertools.count()
         self.admin = _ClientAdmin(self)
 
     # -- plumbing ------------------------------------------------------
-    def _send(self, frame: Dict) -> None:
-        self._sock.sendall(encode_frame(frame))
+    def _connect(self) -> None:
+        self._sock = socket.create_connection((self.host, self.port),
+                                              timeout=self.timeout)
+        self._sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        self._rfile = self._sock.makefile("rb")
 
-    def _recv(self) -> Dict:
-        rep = read_frame_sync(self._rfile)
-        if rep is None:
-            raise ConnectionError("server closed the connection")
-        return rep
+    def _teardown(self) -> None:
+        try:
+            if self._rfile is not None:
+                self._rfile.close()
+        except OSError:
+            pass
+        try:
+            if self._sock is not None:
+                self._sock.close()
+        except OSError:
+            pass
+        self._rfile = None
+        self._sock = None
+
+    def _backoff(self, attempt: int) -> float:
+        """Full-jitter exponential backoff: uniform over [0, min(cap,
+        base·2^attempt)] — the AWS-style variant that decorrelates
+        retrying clients instead of synchronizing them."""
+        cap = min(self.max_backoff_s, self.backoff_s * (2 ** attempt))
+        return random.uniform(0.0, cap)
+
+    def _stamp(self, frame: Dict) -> Dict:
+        """Assign the frame's id + idempotency key (once — retries
+        resend the SAME stamped frame)."""
+        frame.setdefault("id", f"c{next(self._ids)}")
+        frame.setdefault("idem", f"{self._session}:{frame['id']}")
+        return frame
+
+    def _exchange(self, payload: bytes, n_responses: int) -> List[Dict]:
+        """Send raw frame bytes, read ``n_responses`` frames; on any
+        transport failure reconnect and REPLAY the same payload (the
+        idempotency keys make the replay safe server-side)."""
+        last: Optional[Exception] = None
+        for attempt in range(self.retries + 1):
+            if attempt:
+                time.sleep(self._backoff(attempt - 1))
+                self._teardown()
+                try:
+                    self._connect()
+                except OSError as e:
+                    last = e
+                    continue
+            try:
+                self._sock.sendall(payload)
+                reps = []
+                for _ in range(n_responses):
+                    rep = read_frame_sync(self._rfile)
+                    if rep is None:
+                        raise ConnectionError(
+                            "server closed the connection")
+                    reps.append(rep)
+                return reps
+            except (OSError, ValueError) as e:
+                # OSError: reset / broken pipe / socket timeout;
+                # ValueError: torn or garbled frame (bad length prefix,
+                # truncated JSON).  All retriable — the server never saw
+                # the request, or the idempotency cache answers it.
+                last = e
+        raise RetriesExhausted(
+            f"{self.retries + 1} attempts failed against "
+            f"{self.host}:{self.port}: {last!r}",
+            attempts=self.retries + 1, last=last)
 
     def _rpc(self, frame: Dict) -> Dict:
-        frame.setdefault("id", f"c{next(self._ids)}")
-        self._send(frame)
-        return self._recv()
+        self._stamp(frame)
+        return self._exchange(encode_frame(frame), 1)[0]
+
+    def _send(self, frame: Dict) -> None:
+        """Write one frame verbatim — no stamping, no retry.  Test hook:
+        the retry/idempotency loop would mask a deliberately malformed
+        frame, and this path keeps it observable."""
+        self._sock.sendall(encode_frame(frame))
+
+    def _recv(self) -> Optional[Dict]:
+        """Read one frame off the live connection (no retry)."""
+        return read_frame_sync(self._rfile)
 
     # -- request plane -------------------------------------------------
     def route(self, text: str, policy="balanced",
@@ -560,8 +775,7 @@ class ServiceClient:
         req = RouteRequest(text=text, policy=policy,
                            request_id=request_id or f"c{next(self._ids)}",
                            deadline_s=deadline_s, diagnostics=diagnostics)
-        self._send(request_to_json(req))
-        rep = _raise_for_status(self._recv())
+        rep = _raise_for_status(self._rpc(request_to_json(req)))
         return response_from_json(rep, text=text)
 
     def route_many(self, texts: Sequence[str], policy="balanced",
@@ -591,12 +805,13 @@ class ServiceClient:
             # one syscall for the whole pipeline: the frames land in the
             # server's stream buffer together, so its reader drains them
             # as one burst (and groups them into bulk submissions)
-            # instead of waking once per packet
-            self._sock.sendall(b"".join(encode_frame(request_to_json(r))
-                                        for r in reqs))
+            # instead of waking once per packet.  A transport failure
+            # replays the WHOLE stamped pipeline; already-routed frames
+            # answer from the server's idempotency cache.
+            frames = [self._stamp(request_to_json(r)) for r in reqs]
+            payload = b"".join(encode_frame(f) for f in frames)
             by_id: Dict[str, Dict] = {}
-            for _ in reqs:
-                rep = self._recv()
+            for rep in self._exchange(payload, len(reqs)):
                 by_id[rep.get("id")] = rep
             return [response_from_json(_raise_for_status(by_id[r.request_id]),
                                        text=r.text) for r in reqs]
@@ -638,10 +853,7 @@ class ServiceClient:
         return _raise_for_status(self._rpc({"op": "metrics"}))["text"]
 
     def close(self) -> None:
-        try:
-            self._rfile.close()
-        finally:
-            self._sock.close()
+        self._teardown()
 
     def __enter__(self) -> "ServiceClient":
         return self
@@ -728,6 +940,9 @@ class BackgroundServer:
         asyncio.set_event_loop(self._loop)
         try:
             self._loop.run_until_complete(self._main())
+        # the failure is not swallowed: _main stored it in
+        # _startup_error and __enter__ re-raises it to the spawner
+        # routerlint: disable-next-line=swallowed-exception
         except BaseException:  # noqa: BLE001 — already captured for caller
             pass
         finally:

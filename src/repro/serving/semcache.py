@@ -72,6 +72,7 @@ from repro.core import ingest
 from repro.core.errors import SchemaVersionError
 from repro.kernels import ops
 from repro.kernels import ref as _kref
+from repro.serving import faults
 
 #: Sidecar base name beside the artifact (``<dir>/semcache.npz`` +
 #: ``<dir>/semcache.meta.json`` via ``save_artifact``).
@@ -433,6 +434,19 @@ def save_bank(artifact_dir: str, bank: LatentBank,
                   meta={"kind": "semcache",
                         "semcache_version": SEMCACHE_RECORD_VERSION,
                         "fingerprint": fingerprint})
+    if faults.ARMED:
+        ev = faults.fire("semcache.sidecar")
+        if ev is not None and ev.kind == "corrupt":
+            # simulated sidecar bit rot: flip a payload byte so the next
+            # load_bank trips the checksum and cold-starts
+            with open(path + ".meta.json") as f:
+                data_name = json.load(f)["data"]
+            p = os.path.join(artifact_dir, data_name)
+            with open(p, "r+b") as f:
+                f.seek(os.path.getsize(p) // 2)
+                b = f.read(1)
+                f.seek(-1, os.SEEK_CUR)
+                f.write(bytes([b[0] ^ 0xFF]))
     return path
 
 
@@ -452,25 +466,30 @@ def load_bank(artifact_dir: str, cfg: SemanticCacheConfig,
     try:
         tree, meta = load_artifact(path)
     except SchemaVersionError as e:
+        faults.record_degraded("semcache_cold_start")
         warnings.warn(f"semantic-cache sidecar {path!r} needs a newer "
                       f"build ({e}); starting cold")
         return None
     except Exception as e:  # noqa: BLE001 — corrupt sidecar → cold start
+        faults.record_degraded("semcache_cold_start")
         warnings.warn(f"semantic-cache sidecar {path!r} unreadable "
                       f"({e!r}); starting cold")
         return None
     if int(meta.get("semcache_version", 1)) > SEMCACHE_RECORD_VERSION:
+        faults.record_degraded("semcache_cold_start")
         warnings.warn(f"semantic-cache sidecar {path!r} has record "
                       f"version {meta.get('semcache_version')} > supported "
                       f"{SEMCACHE_RECORD_VERSION}; starting cold")
         return None
     if meta.get("fingerprint") != fingerprint:
+        faults.record_degraded("semcache_cold_start")
         warnings.warn(f"semantic-cache sidecar {path!r} was built for a "
                       f"different predictor (stale fingerprint); "
                       f"starting cold")
         return None
     if (int(tree["sketch_dim"]) != cfg.sketch_dim
             or str(tree["store"]) != cfg.store):
+        faults.record_degraded("semcache_cold_start")
         warnings.warn(f"semantic-cache sidecar {path!r} sketch/store "
                       f"layout does not match the configured "
                       f"SemanticCacheConfig; starting cold")

@@ -55,6 +55,7 @@ import contextlib
 import dataclasses
 import threading
 import time
+from collections import OrderedDict
 from typing import (Any, AsyncIterator, Dict, Iterable, List, Optional,
                     Sequence, Tuple, Union)
 
@@ -62,6 +63,7 @@ import numpy as np
 
 from repro.core.errors import (DeadlineExceededError, OverloadedError,
                                ServiceError)
+from repro.serving import faults
 from repro.serving.batcher import MicroBatcher, RouteResult
 from repro.serving.engine import RouterEngine, RouterEngineConfig
 from repro.serving.metrics import MetricsRegistry
@@ -122,6 +124,14 @@ class ServiceConfig:
     max_queue: int = 1024          # submitters awaiting admission; beyond
     #                                this, submit sheds with OverloadedError
     default_deadline_s: Optional[float] = None   # per-request override wins
+    # wire hardening (ISSUE 9): largest frame the TCP front-end will
+    # read — an oversized length prefix is drained + answered with a
+    # typed FrameTooLargeError instead of allocating unboundedly
+    max_frame_bytes: int = 8 << 20
+    # server-side idempotency dedup: how many resolved request keys to
+    # remember (a reconnecting client replays frames whose responses
+    # were lost; remembered keys answer from cache instead of re-routing)
+    idempotency_cache: int = 4096
 
 
 def _to_response(r: RouteResult) -> RouteResponse:
@@ -232,6 +242,29 @@ class RouterService:
         }
         self.metrics = MetricsRegistry()
         self.metrics.on_collect(self._collect_metrics)
+        # idempotency dedup cache: key → the ok response frame already
+        # sent for it.  Bounded LRU; locked because route paths touch it
+        # from the event loop while report_outcome lands via executor.
+        self._idem: "OrderedDict[str, Dict]" = OrderedDict()
+        self._idem_lock = threading.Lock()
+
+    # ------------------------------------------------------------------
+    # idempotency dedup (wire retries)
+    # ------------------------------------------------------------------
+    def idem_get(self, key: str) -> Optional[Dict]:
+        """The response frame already produced for ``key``, or None."""
+        with self._idem_lock:
+            rec = self._idem.get(key)
+            if rec is not None:
+                self._idem.move_to_end(key)
+            return rec
+
+    def idem_put(self, key: str, rec: Dict) -> None:
+        with self._idem_lock:
+            self._idem[key] = rec
+            self._idem.move_to_end(key)
+            while len(self._idem) > self.cfg.idempotency_cache:
+                self._idem.popitem(last=False)
 
     # ------------------------------------------------------------------
     # lifecycle
@@ -438,11 +471,22 @@ class RouterService:
         pool writers); callable before ``start()`` and from any thread.
         Returns the transition summary (state before/after, EWMA ratio,
         new pool version)."""
+        reps = 1
+        if faults.ARMED:
+            ev = faults.fire("service.outcome")
+            if ev is not None and ev.kind == "storm":
+                # breaker storm: one report lands as ``repeat`` identical
+                # outcomes — a flood of failures must trip the breaker
+                # cleanly (one OPEN transition), never corrupt its state
+                reps = max(int(ev.repeat), 1)
+                faults.record_degraded("outcome_storm")
         with self.admin._lock:
-            info = self.router.pool.record_outcome(
-                model, bool(ok),
-                latency_s=None if latency_ms is None else latency_ms / 1e3,
-                tokens=tokens)
+            for _ in range(reps):
+                info = self.router.pool.record_outcome(
+                    model, bool(ok),
+                    latency_s=(None if latency_ms is None
+                               else latency_ms / 1e3),
+                    tokens=tokens)
         info["request_id"] = request_id
         m = self.metrics
         m.counter_inc("router_outcomes_total",
@@ -524,6 +568,13 @@ class RouterService:
         reg.counter_set("router_batches_routed_total",
                         self.batcher.batches_routed,
                         "Coalesced batches routed")
+        # graceful-degradation ledger (ISSUE 9): every fallback path in
+        # the stack counts itself process-wide; scraped here so chaos
+        # runs can assert "the system degraded, visibly"
+        for path, n in faults.degraded_counts().items():
+            reg.counter_set("router_degraded_total", n,
+                            "Graceful-degradation events by fallback path",
+                            {"path": path})
 
     def render_metrics(self) -> str:
         """Prometheus text exposition of the service's metrics — the

@@ -1,0 +1,32 @@
+"""BAD fixture (bare-except, swallowed-exception): a serving-plane
+worker absorbing failures invisibly.  The test maps this under
+``src/repro/serving/``.  Parsed only, never imported.
+"""
+
+
+def route_chunk(engine, texts):
+    try:
+        return engine.compute(texts)
+    except:                       # BAD: bare — eats KeyboardInterrupt too
+        return None
+
+
+def flush(cache, path):
+    try:
+        cache.write(path)
+    except Exception:             # BAD: swallowed — no trace anywhere
+        pass
+
+
+def drain(sock):
+    try:
+        return sock.recv(4096)
+    except (ValueError, BaseException):   # BAD: broad via tuple, silent
+        return b""
+
+
+def fan_back(fut, engine, text):
+    try:
+        fut.set_result(engine.route(text))
+    except Exception as exc:      # ok: fanned back into the future
+        fut.set_exception(exc)

@@ -1,0 +1,36 @@
+"""GOOD fixture: the accounted-for version of
+``bad/degradation_swallow.py`` — every broad handler leaves a trace
+(degradation ledger, warning, fan-back, or typed re-raise).  Parsed
+only, never imported.
+"""
+import warnings
+
+
+def route_chunk(engine, texts, faults):
+    try:
+        return engine.compute(texts)
+    except Exception:             # counted in the degradation ledger
+        faults.record_degraded("engine_retry")
+        return None
+
+
+def flush(cache, path):
+    try:
+        cache.write(path)
+    except OSError:               # narrow: naming the class IS the
+        return None               # accounting
+
+
+def load(path):
+    try:
+        return open(path, "rb").read()
+    except Exception as exc:      # re-raised typed
+        raise RuntimeError(f"artifact unreadable: {exc}") from exc
+
+
+def probe(bank, sketch):
+    try:
+        return bank.lookup(sketch)
+    except Exception:             # warned — visible to operators
+        warnings.warn("semantic bank probe failed; cold path")
+        return None

@@ -245,6 +245,45 @@ def test_precision_rule_ignores_f32_and_out_of_scope_trees(tmp_path):
 
 
 # ----------------------------------------------------------------------
+# degradation-hygiene
+# ----------------------------------------------------------------------
+def test_degradation_bad_fixture_fires_both_rules(tmp_path):
+    repo = make_repo(tmp_path, {
+        "src/repro/serving/worker.py":
+            fixture("bad/degradation_swallow.py")})
+    report = run_analysis(repo, only=["degradation-hygiene"])
+    by_rule = {}
+    for f in report.findings:
+        by_rule.setdefault(f.rule, []).append(f)
+    assert len(by_rule["bare-except"]) == 1
+    # flush's silent pass + drain's broad tuple; fan_back's
+    # set_exception handler is accounted for and must NOT fire
+    assert len(by_rule["swallowed-exception"]) == 2
+    assert {f.symbol for f in by_rule["swallowed-exception"]} == \
+        {"flush", "drain"}
+
+
+def test_degradation_good_fixture_is_clean(tmp_path):
+    repo = make_repo(tmp_path, {
+        "src/repro/serving/worker.py":
+            fixture("good/degradation_clean.py")})
+    assert run_analysis(repo, only=["degradation-hygiene"]).clean
+
+
+def test_degradation_rule_scopes_to_serving_only(tmp_path):
+    """checkpoint/ and analysis/ may use broad handlers with their own
+    conventions — the rule is a serving-plane contract."""
+    repo = make_repo(tmp_path, {
+        "src/repro/checkpoint/io.py":
+            "def load(p):\n"
+            "    try:\n"
+            "        return open(p).read()\n"
+            "    except Exception:\n"
+            "        return None\n"})
+    assert run_analysis(repo, only=["degradation-hygiene"]).clean
+
+
+# ----------------------------------------------------------------------
 # suppression comments
 # ----------------------------------------------------------------------
 _WALL = ("import time\n"
@@ -362,13 +401,14 @@ def test_every_rule_has_a_registered_description():
     rules = all_rules()
     assert set(CHECKERS) == {"jit-purity", "kernel-contract",
                              "async-safety", "schema-migration",
-                             "precision-hygiene"}
+                             "precision-hygiene", "degradation-hygiene"}
     expected = {"jit-branch-on-traced", "jit-host-call",
                 "jit-closure-params", "kernel-missing-ref",
                 "kernel-missing-parity-test", "kernel-blockspec-dynamic",
                 "async-blocking-call", "async-global-state",
                 "monotonic-time", "schema-migration-chain",
-                "schema-version-literal", "precision-dtype"}
+                "schema-version-literal", "precision-dtype",
+                "bare-except", "swallowed-exception"}
     assert set(rules) == expected
     assert all(rules[r] for r in rules)
 

@@ -1,0 +1,414 @@
+"""Fault-injection plane + graceful degradation (ISSUE 9): deterministic
+FaultPlans, engine watchdog/retry/bisect quarantine, crash-safe
+persistence under injected crashes and bit rot, resilient-client
+reconnect with server-side idempotency, breaker storms, RouteLog
+torn-tail recovery, and the all-families chaos soak with zero selection
+divergence."""
+import json
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_artifact, save_artifact
+from repro.core.errors import (ArtifactCorruptError, FrameTooLargeError,
+                               PoisonQueryError)
+from repro.core.pool import BREAKER_CLOSED, BREAKER_OPEN
+from repro.serving import MicroBatcher, RouterEngine, RouterEngineConfig
+from repro.serving import faults
+from repro.serving.faults import FaultEvent, FaultPlan, InjectedFault
+from repro.serving.protocol import BackgroundServer, ServiceClient
+from repro.serving.semcache import RouteLog
+from repro.serving.service import RouterService, ServiceConfig
+
+
+@pytest.fixture(autouse=True)
+def _pristine_fault_state():
+    """Every test starts disarmed with zeroed degradation counters, and
+    cannot leak an armed plan into the rest of the suite."""
+    faults.disarm()
+    faults.reset_degraded()
+    yield
+    faults.disarm()
+    faults.reset_degraded()
+
+
+@pytest.fixture(scope="module")
+def stack(demo_stack):
+    world, router, engine = demo_stack
+    from repro.data import OOD_TASKS
+    qi = world.query_indices(OOD_TASKS)
+    texts = [world.queries[i].text for i in qi[:64]]
+    return router, engine, texts
+
+
+# ---------------------------------------------------------------------------
+# the plan itself: determinism, validation, round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plan_generate_is_deterministic():
+    a = FaultPlan.generate(seed=3).to_json()
+    b = FaultPlan.generate(seed=3).to_json()
+    assert a == b
+    assert FaultPlan.generate(seed=4).to_json() != a
+    # hit 1 stays clean for every generated site except the sidecar
+    # (saved at most once per soak), so the happy path runs first
+    for ev in FaultPlan.generate(seed=3).events:
+        if ev.site != "semcache.sidecar":
+            assert min(ev.hits) >= 2
+
+
+def test_fault_plan_json_round_trip_and_from_spec(tmp_path):
+    plan = FaultPlan.generate(seed=9, horizon=20)
+    again = FaultPlan.from_json(plan.to_json())
+    assert again.to_json() == plan.to_json()
+    assert FaultPlan.from_spec("seed:9:20").to_json() == plan.to_json()
+    p = tmp_path / "plan.json"
+    p.write_text(json.dumps(plan.to_json()))
+    assert FaultPlan.from_spec(str(p)).to_json() == plan.to_json()
+
+
+def test_fault_event_validates_site_and_kind():
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FaultEvent("engine.warp", "raise", (1,))
+    with pytest.raises(ValueError, match="invalid at"):
+        FaultEvent("engine.lex", "raise", (1,))
+
+
+def test_fire_matches_hit_counts_and_records():
+    plan = FaultPlan([FaultEvent("engine.dispatch", "raise", (2,))])
+    with faults.armed(plan):
+        assert faults.fire("engine.dispatch") is None        # hit 1: clean
+        with pytest.raises(InjectedFault):
+            faults.fire("engine.dispatch")                   # hit 2: boom
+        assert faults.fire("engine.dispatch") is None        # hit 3: clean
+    assert plan.fired == [("engine.dispatch", "raise", 2)]
+    # disarmed: hooks are inert no matter the schedule
+    assert faults.fire("engine.dispatch") is None
+
+
+def test_degradation_ledger_counts_and_resets():
+    faults.record_degraded("engine_retry")
+    faults.record_degraded("engine_retry")
+    faults.record_degraded("frame_too_large")
+    assert faults.degraded_counts() == {"engine_retry": 2,
+                                        "frame_too_large": 1}
+    assert faults.degraded_total("engine_retry") == 2
+    assert faults.degraded_total() == 3
+    faults.reset_degraded()
+    assert faults.degraded_counts() == {}
+
+
+# ---------------------------------------------------------------------------
+# engine: retry heals, watchdog kills hangs, bisect quarantines poison
+# ---------------------------------------------------------------------------
+
+
+def test_dispatch_raise_retry_heals_bit_identical(stack):
+    router, _, texts = stack
+    batch = texts[:8]
+    _, ref, _ = router.route(batch)
+    eng = RouterEngine(router, RouterEngineConfig(cache_size=64))
+    plan = FaultPlan([FaultEvent("engine.dispatch", "raise", (1,))])
+    with faults.armed(plan) as p:
+        _, sel = eng.route_batch(batch)
+    np.testing.assert_array_equal(np.asarray(ref), sel)
+    assert p.fired == [("engine.dispatch", "raise", 1)]
+    assert faults.degraded_counts().get("engine_retry", 0) >= 1
+
+
+def test_watchdog_times_out_hang_and_retry_heals(stack):
+    import dataclasses
+
+    router, _, texts = stack
+    batch = texts[8:16]
+    eng = RouterEngine(router, RouterEngineConfig(cache_size=64))
+    # warm on the fast path first (the one-off jit compile must not race
+    # the watchdog window), then clear the cache so the armed route
+    # dispatches again and arm the watchdog for the re-dispatch
+    _, ref = eng.route_batch(batch)
+    eng.cache.clear()
+    eng.cfg = dataclasses.replace(eng.cfg, dispatch_timeout_s=2.0)
+    plan = FaultPlan([FaultEvent("engine.dispatch", "hang", (1,),
+                                 duration_s=6.0)])
+    t0 = time.monotonic()
+    with faults.armed(plan):
+        _, sel = eng.route_batch(batch)
+    assert time.monotonic() - t0 < 6.0, "watchdog never fired"
+    np.testing.assert_array_equal(ref, sel)
+    assert faults.degraded_counts().get("engine_retry", 0) >= 1
+
+
+def test_poison_query_bisected_to_exact_quarantine(stack):
+    router, _, texts = stack
+    batch = texts[16:24]
+    poison = batch[3]
+    eng = RouterEngine(router, RouterEngineConfig(cache_size=64))
+    plan = FaultPlan([], poison_texts=[poison])
+    with faults.armed(plan):
+        with pytest.raises(PoisonQueryError) as ei:
+            eng.route_batch(batch)
+    assert ei.value.indices == [3]
+    assert ei.value.texts == [poison]
+    dc = faults.degraded_counts()
+    assert dc.get("engine_quarantine") == 1
+    assert dc.get("engine_retry", 0) >= 2      # two failed attempts minimum
+    # every survivor was cached during the bisect: re-routing them is
+    # table-only work and bit-identical to the fault-free decisions
+    survivors = [t for t in batch if t != poison]
+    hits0 = eng.cache_stats.hits
+    with faults.armed(plan):
+        names_s, _ = eng.route_batch(survivors)
+    assert eng.cache_stats.hits - hits0 == len(survivors)
+    clean = RouterEngine(router, RouterEngineConfig(cache_size=0))
+    names_ref, _ = clean.route_batch(survivors)
+    assert names_s == names_ref
+
+
+def test_batcher_fails_poisoned_future_and_routes_survivors(stack):
+    router, _, texts = stack
+    batch = texts[24:32]
+    poison = batch[5]
+    eng = RouterEngine(router, RouterEngineConfig(cache_size=64))
+    plan = FaultPlan([], poison_texts=[poison])
+    mb = MicroBatcher(eng, max_batch=8)
+    with faults.armed(plan):
+        futs = mb.submit_many(batch)
+        mb.flush()
+    with pytest.raises(PoisonQueryError):
+        futs[5].result(timeout=30)
+    survivors = [t for i, t in enumerate(batch) if i != 5]
+    got = [futs[i].result(timeout=30).model
+           for i in range(len(batch)) if i != 5]
+    # survivor latents are cached (bit-identical), so the batcher's
+    # re-route matches a clean route of the same surviving batch
+    names_ref, _ = eng.route_batch(survivors)
+    assert got == names_ref
+
+
+# ---------------------------------------------------------------------------
+# persistence: crash mid-save, bit rot, previous generation survives
+# ---------------------------------------------------------------------------
+
+
+def test_artifact_crash_leaves_previous_record_loadable(tmp_path):
+    path = str(tmp_path / "art")
+    save_artifact(path, {"w": np.arange(8, dtype=np.float32)},
+                  meta={"gen": 1})
+    plan = FaultPlan([FaultEvent("ckpt.write", "crash", (1,))])
+    with faults.armed(plan):
+        with pytest.raises(RuntimeError, match="injected crash"):
+            save_artifact(path, {"w": np.zeros(8, np.float32)},
+                          meta={"gen": 2})
+    tree, meta = load_artifact(path)
+    assert meta["gen"] == 1
+    np.testing.assert_array_equal(tree["w"], np.arange(8, dtype=np.float32))
+
+
+def test_artifact_corruption_raises_typed_and_is_counted(tmp_path):
+    path = str(tmp_path / "art")
+    plan = FaultPlan([FaultEvent("ckpt.write", "corrupt", (1,))])
+    with faults.armed(plan):
+        save_artifact(path, {"w": np.ones(4, np.float32)})
+    with pytest.raises(ArtifactCorruptError, match="checksum mismatch"):
+        load_artifact(path)
+    assert faults.degraded_counts().get("artifact_checksum") == 1
+    # a clean re-save heals the record and GC leaves exactly one blob
+    save_artifact(path, {"w": np.full(4, 7.0, np.float32)}, meta={"gen": 3})
+    tree, meta = load_artifact(path)
+    assert meta["gen"] == 3
+    blobs = [f for f in os.listdir(tmp_path)
+             if f.startswith("art.") and f.endswith(".npz")]
+    assert len(blobs) == 1
+
+
+def test_router_save_crash_previous_generation_routes(stack, tmp_path):
+    from repro.api import Router
+    router, _, texts = stack
+    d = str(tmp_path / "router")
+    router.save(d)
+    _, ref, _ = router.route(texts[:6])
+    plan = FaultPlan([FaultEvent("ckpt.write", "crash", (1,))])
+    with faults.armed(plan):
+        with pytest.raises(RuntimeError, match="injected crash"):
+            router.save(d)
+    # the torn save is invisible: the directory still opens and routes
+    # bit-identically to the router that wrote it
+    reopened = Router.open(d)
+    _, sel, _ = reopened.route(texts[:6])
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(sel))
+
+
+# ---------------------------------------------------------------------------
+# transport: oversized frames, resets, torn replies, idempotent replays
+# ---------------------------------------------------------------------------
+
+
+def test_frame_too_large_is_typed_and_keeps_connection(stack):
+    router, engine, texts = stack
+    cfg = ServiceConfig(max_frame_bytes=2048)
+    with BackgroundServer(router, engine=engine, cfg=cfg) as srv:
+        with ServiceClient(srv.host, srv.port, retries=0) as c:
+            with pytest.raises(FrameTooLargeError):
+                c.route("x" * 8192)
+            # the oversized payload was drained: the stream is still
+            # frame-aligned and the SAME connection keeps serving
+            assert c.ping()["status"] == "ok"
+            assert c.route(texts[0]).model
+    assert faults.degraded_counts().get("frame_too_large") == 1
+
+
+def test_client_survives_resets_with_no_duplicate_routes(stack):
+    router, engine, texts = stack
+    batch = texts[32:36]
+    plan = FaultPlan([
+        FaultEvent("protocol.frame", "reset", (2,)),
+        FaultEvent("protocol.frame", "reset_post", (4,)),
+        FaultEvent("protocol.frame", "torn_frame", (6,)),
+    ])
+    with BackgroundServer(router, engine=engine) as srv:
+        with ServiceClient(srv.host, srv.port, retries=4,
+                           backoff_s=0.01, timeout=15.0) as c:
+            ref = [c.route(t).model for t in batch]       # clean pass
+            base = c.stats()["completed"]
+            with faults.armed(plan) as p:
+                got = [c.route(t).model for t in batch]
+            assert got == ref, "divergence under connection chaos"
+            # reset_post routed BEFORE aborting; the retry must answer
+            # from the idempotency cache, not route again — so exactly
+            # one completion per request despite three killed
+            # connections
+            assert c.stats()["completed"] - base == len(batch)
+            m = c.metrics()
+    assert {(s, k) for s, k, _ in p.fired} == {
+        ("protocol.frame", "reset"), ("protocol.frame", "reset_post"),
+        ("protocol.frame", "torn_frame")}
+    dc = faults.degraded_counts()
+    assert dc.get("connection_reset") == 2    # reset + reset_post
+    assert dc.get("torn_frame") == 1
+    assert "router_degraded_total" in m
+    assert 'path="connection_reset"' in m
+
+
+def test_breaker_storm_applies_atomically(stack):
+    router, engine, _ = stack
+    svc = RouterService(router, engine=engine)
+    name = router.pool.names[0]
+    snap = router.pool.snapshot()
+    i = snap.index_of(name)
+    pol = snap.health_policy
+    plan = FaultPlan([FaultEvent("service.outcome", "storm", (1,),
+                                 repeat=pol.failure_threshold + 3)])
+    try:
+        with faults.armed(plan):
+            info = svc.report_outcome(None, name, ok=False)
+        assert info["state_after"] == "open"
+        assert router.pool.snapshot().breaker[i] == BREAKER_OPEN
+        assert faults.degraded_counts().get("outcome_storm") == 1
+    finally:
+        # demo pool is session-shared: walk the breaker back to closed
+        # (cooldown elapsed + the policy's worth of successful probes)
+        t = time.time() + pol.open_cooldown_s + 1.0
+        for _ in range(max(pol.half_open_probes, 1)):
+            router.pool.record_outcome(name, True, now=t)
+    assert router.pool.snapshot().breaker[i] == BREAKER_CLOSED
+
+
+# ---------------------------------------------------------------------------
+# RouteLog: torn-tail recovery
+# ---------------------------------------------------------------------------
+
+
+def test_routelog_drops_exactly_the_torn_tail(tmp_path):
+    p = str(tmp_path / "routes.jsonl")
+    with RouteLog(p) as log:
+        for t in ("alpha", "beta", "gamma"):
+            log.append(t, model="m0", policy="balanced")
+    # a crash mid-append leaves a torn, unterminated JSON fragment
+    with open(p, "a", encoding="utf-8") as f:
+        f.write('{"text": "delta", "mo')
+    assert RouteLog.read_texts(p) == ["alpha", "beta", "gamma"]
+    # a torn tail later terminated by garbage bytes is still skipped
+    with open(p, "a", encoding="utf-8") as f:
+        f.write("\n\x00\x7fnot json at all\n")
+    assert RouteLog.read_texts(p) == ["alpha", "beta", "gamma"]
+    # the recovered log keeps accepting appends, replay sees them
+    with RouteLog(p) as log:
+        log.append("epsilon")
+    assert RouteLog.read_texts(p) == ["alpha", "beta", "gamma", "epsilon"]
+
+
+def test_routelog_read_skips_non_record_lines(tmp_path):
+    p = str(tmp_path / "routes.jsonl")
+    with open(p, "w", encoding="utf-8") as f:
+        f.write('{"text": "a"}\n')
+        f.write('["not", "a", "dict"]\n')       # valid JSON, wrong shape
+        f.write('{"model": "m0"}\n')            # record without a text
+        f.write('{"text": "b"}\n{"text": "a"}\n')
+    assert RouteLog.read_texts(p) == ["a", "b"]
+    assert RouteLog.read_texts(p, limit=1) == ["a"]
+    assert RouteLog.read_texts(str(tmp_path / "missing.jsonl")) == []
+
+
+# ---------------------------------------------------------------------------
+# the chaos soak: all five families, zero divergence on served routes
+# ---------------------------------------------------------------------------
+
+
+def test_chaos_soak_all_families_zero_divergence(stack, tmp_path):
+    router, _, texts = stack
+    soak = texts[36:48]
+    # fault-free reference in the served shape: one request = one batch
+    # (cost/latency normalization is batch-scoped)
+    ref_names = [router.route([t])[0][0] for t in soak]
+    art = str(tmp_path / "soak_art")
+    save_artifact(art, {"w": np.arange(4.0)}, meta={"gen": 1})
+    plan = FaultPlan([
+        FaultEvent("engine.dispatch", "raise", (1,)),
+        FaultEvent("engine.lex", "hang", (1,), duration_s=0.01),
+        FaultEvent("ckpt.write", "crash", (1,)),
+        FaultEvent("protocol.frame", "reset", (3,)),
+        FaultEvent("service.outcome", "storm", (1,), repeat=4),
+    ])
+    # fresh engine so the soak traffic actually dispatches (the session
+    # engine may already hold these latents)
+    eng = RouterEngine(router, RouterEngineConfig(cache_size=256))
+    with BackgroundServer(router, engine=eng) as srv:
+        with ServiceClient(srv.host, srv.port, retries=4,
+                           backoff_s=0.01, timeout=30.0) as c:
+            with faults.armed(plan) as p:
+                got = [c.route(t).model for t in soak]
+                # ok=True storm: fires the breaker-flood path without
+                # opening the session pool's breaker
+                c.report_outcome(None, router.pool.names[0], ok=True)
+                with pytest.raises(RuntimeError, match="injected crash"):
+                    save_artifact(art, {"w": np.zeros(4)}, meta={"gen": 2})
+    assert got == ref_names, "non-shed selections diverged under chaos"
+    tree, meta = load_artifact(art)
+    assert meta["gen"] == 1
+    np.testing.assert_array_equal(tree["w"], np.arange(4.0))
+    assert p.fired_families() == {"dispatch", "lex", "persistence",
+                                  "transport", "breaker"}
+    dc = faults.degraded_counts()
+    assert dc.get("engine_retry", 0) >= 1
+    assert dc.get("connection_reset", 0) >= 1
+    assert dc.get("outcome_storm") == 1
+
+
+# ---------------------------------------------------------------------------
+# wire reconstruction of the typed quarantine error
+# ---------------------------------------------------------------------------
+
+
+def test_poison_error_reconstructs_from_wire_message():
+    # _raise_for_status rebuilds typed errors as exc_cls(message): the
+    # ctor must tolerate that shape instead of falling back to a bare
+    # ServiceError
+    e = PoisonQueryError("2 quarantined queries ...")
+    assert e.indices == [] and e.texts == []
+    assert "quarantined" in str(e)
+    e2 = PoisonQueryError([1, 4], ["a", "b"])
+    assert e2.indices == [1, 4] and e2.texts == ["a", "b"]

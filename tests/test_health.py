@@ -96,6 +96,54 @@ def test_record_outcome_is_copy_on_write():
     assert pool.snapshot().consec_failures[0] == 1
 
 
+def test_record_outcome_is_race_free_through_half_open():
+    """Concurrent reporters hammering a HALF_OPEN breaker: without the
+    pool's outcome lock, two probe successes both read probes=0 and
+    neither closes the breaker (and obs/EWMA updates are lost to
+    read-copy-bump races).  With it, the state machine walks
+    open -> half_open -> closed exactly once and every report lands."""
+    import threading
+
+    pol = HealthPolicy(failure_threshold=2, open_cooldown_s=10.0,
+                       half_open_probes=2)
+    pool = _tiny_pool(policy=pol)
+    t = 5000.0
+    pool.record_outcome("m1", ok=False, now=t)
+    pool.record_outcome("m1", ok=False, now=t)
+    assert pool.snapshot().breaker[1] == BREAKER_OPEN
+
+    n_threads, per_thread = 8, 25
+    infos, errors = [], []
+    lock = threading.Lock()
+    start = threading.Barrier(n_threads)
+
+    def report():
+        try:
+            start.wait(timeout=10)
+            mine = [pool.record_outcome("m1", ok=True, now=t + 11.0)
+                    for _ in range(per_thread)]
+            with lock:
+                infos.extend(mine)
+        except Exception as e:  # noqa: BLE001 — surfaced via assert below
+            errors.append(e)
+
+    threads = [threading.Thread(target=report) for _ in range(n_threads)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join(timeout=30)
+    assert not errors
+    assert len(infos) == n_threads * per_thread
+    transitions = [i["transition"] for i in infos if i["transition"]]
+    assert sorted(transitions) == ["half_open->closed", "open->half_open"], \
+        f"breaker transitioned more than once under contention: {transitions}"
+    snap = pool.snapshot()
+    assert snap.breaker[1] == BREAKER_CLOSED
+    # no lost updates: every single report's copy-on-write bump landed
+    assert snap.obs_count[1] == 2 + n_threads * per_thread
+    assert snap.consec_failures[1] == 0
+
+
 # ---------------------------------------------------------------------------
 # EWMA latency re-profiling
 # ---------------------------------------------------------------------------
