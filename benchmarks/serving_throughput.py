@@ -57,7 +57,16 @@ connection resets, a torn reply and a mid-reply abort — the row's JSON
 carries the injected-fault count, the fired fault families and the
 degradation-event count, and the run ASSERTS zero selection divergence
 against the fault-free reference (graceful degradation must never
-change a served decision, only its latency).
+change a served decision, only its latency).  Because "only its
+latency" is the claim, both chaos rows also record the per-request
+latency DISTRIBUTION (p50/p95/p99 ms) next to the mean goodput — a
+failover or retry shows up as tail inflation the mean hides.
+
+ISSUE 10 adds a ``replica_kill`` row: the same TCP plane over a
+3-replica :class:`~repro.serving.replicaset.ReplicaSupervisor` while an
+armed plan kills one replica mid-run — the survivors absorb the
+re-dispatched work, divergence is asserted 0, and the p99 column prices
+the failover tail.
 
 Since the ingest overhaul the variant list also carries ``ingest_cold`` —
 the pure HOST-side cost of the single-pass ingest pipeline (lex + hash
@@ -378,15 +387,23 @@ def run(smoke: bool = False, quick: bool = False
                            backoff_s=0.01, timeout=30.0) as sc:
             sc.route(texts[storm_q])       # pay the jit compile clean
             t0 = time.perf_counter()
+            got, storm_lat_ms = [], []
             with _faults.armed(plan) as fired_plan:
-                got = [sc.route(t).model for t in storm_texts]
+                for t in storm_texts:
+                    r0 = time.perf_counter()
+                    got.append(sc.route(t).model)
+                    storm_lat_ms.append((time.perf_counter() - r0) * 1e3)
             storm_s = time.perf_counter() - t0
     divergence = sum(a != b for a, b in zip(got, names_ref))
     assert divergence == 0, \
         "fault_storm: non-shed selections diverged under chaos"
+    p50, p95, p99 = np.percentile(storm_lat_ms, (50, 95, 99))
     results["fault_storm"] = {
         "us_per_batch": storm_s * 1e6,
         "queries_per_sec": storm_q / storm_s,
+        "latency_p50_ms": float(p50),
+        "latency_p95_ms": float(p95),
+        "latency_p99_ms": float(p99),
         "divergence": divergence,
         "faults_injected": len(fired_plan.fired),
         "families": sorted(fired_plan.fired_families()),
@@ -394,6 +411,57 @@ def run(smoke: bool = False, quick: bool = False
     }
     rows.append((f"serving/fault_storm/Q{storm_q}M{M}",
                  storm_s * 1e6, storm_q / storm_s))
+
+    # ------------------------------------------------------------------
+    # replica_kill (ISSUE 10): the same TCP plane over a 3-replica
+    # supervisor; an armed plan kills one replica mid-run, the survivors
+    # absorb the re-dispatched shards, and the served selections stay
+    # bit-identical to the fault-free singleton reference.  The p99
+    # column prices the failover tail next to the mean goodput.
+    # ------------------------------------------------------------------
+    from repro.serving import ReplicaSupervisor
+
+    sup = ReplicaSupervisor(router, n_replicas=3,
+                            engine_cfg=RouterEngineConfig(cache_size=4 * Q))
+    kill_plan = FaultPlan([
+        FaultEvent("replica.dispatch", "kill", (5,)),
+    ])
+    deg0 = _faults.degraded_total()
+    with BackgroundServer(router, engine=sup,
+                          cfg=ServiceConfig(max_batch=64,
+                                            max_wait_s=0.002)) as kill_srv:
+        with ServiceClient(kill_srv.host, kill_srv.port, retries=4,
+                           backoff_s=0.01, timeout=30.0) as kc:
+            kc.route(texts[storm_q])       # pay the jit compile clean
+            t0 = time.perf_counter()
+            got, kill_lat_ms = [], []
+            with _faults.armed(kill_plan) as fired_kill:
+                for t in storm_texts:
+                    r0 = time.perf_counter()
+                    got.append(kc.route(t).model)
+                    kill_lat_ms.append((time.perf_counter() - r0) * 1e3)
+            kill_s = time.perf_counter() - t0
+    divergence = sum(a != b for a, b in zip(got, names_ref))
+    assert divergence == 0, \
+        "replica_kill: surviving selections diverged from the reference"
+    assert fired_kill.fired == [("replica.dispatch", "kill", 5)]
+    dead = [n for n, s in sup.replica_states().items() if s.name == "DEAD"]
+    assert len(dead) == 1, "exactly one replica should have been killed"
+    p50, p95, p99 = np.percentile(kill_lat_ms, (50, 95, 99))
+    results["replica_kill"] = {
+        "us_per_batch": kill_s * 1e6,
+        "queries_per_sec": storm_q / kill_s,
+        "latency_p50_ms": float(p50),
+        "latency_p95_ms": float(p95),
+        "latency_p99_ms": float(p99),
+        "divergence": divergence,
+        "replicas": 3,
+        "killed": dead,
+        "healthy_after": sup.healthy_count(),
+        "degraded_events": _faults.degraded_total() - deg0,
+    }
+    rows.append((f"serving/replica_kill/Q{storm_q}M{M}",
+                 kill_s * 1e6, storm_q / kill_s))
 
     artifact = {
         "workload": {"Q": Q, "M": M, "reps": reps,

@@ -20,7 +20,14 @@ runs the whole gauntlet the way CI wants to see it:
      a request's latency, never its decision;
   5. assert the crash-interrupted artifact still loads its previous
      generation, every fault family actually fired, and the degradation
-     ledger (``router_degraded_total{path=...}``) counted the fallbacks.
+     ledger (``router_degraded_total{path=...}``) counted the fallbacks;
+  6. (ISSUE 10) replay the traffic through a 3-replica
+     ``ReplicaSupervisor`` while an armed plan kills one replica
+     mid-run and partitions another from the admin fan-out: survivors
+     absorb the re-dispatched shards with divergence=0, the stale
+     replica trips the version fence and resyncs, the dead replica
+     rejoins WARM from a healthy peer, and the scrape shows the new
+     ledger paths (``failover`` / ``resync`` / ``stale_fence``).
 
 Run:  PYTHONPATH=src python examples/chaos_smoke.py
 """
@@ -114,9 +121,70 @@ def main():
         print(f"  {line}")
     assert deg_lines, "router_degraded_total missing from the scrape"
 
+    # ------------------------------------------------------------------
+    # replica scene (ISSUE 10): kill → failover → fence → rejoin warm
+    # ------------------------------------------------------------------
+    print("=== replica scene: kill -> failover -> fence -> rejoin ===")
+    from repro.serving import ReplicaState, ReplicaSupervisor
+    from repro.serving.service import RouterService
+
+    faults.reset_degraded()
+    sup = ReplicaSupervisor(router, n_replicas=3,
+                            engine_cfg=RouterEngineConfig(cache_size=256))
+    svc = RouterService(router, engine=sup)
+    # outcome feedback bumps the pool version; the single-engine
+    # reference pins the same (post-bump) snapshot the supervisor will
+    router.pool.record_outcome(router.pool.names[0], ok=True)
+    ref_batch = eng.route_pinned(texts)
+    rplan = FaultPlan([
+        FaultEvent("replica.admin", "partition", (1,)),
+        FaultEvent("replica.dispatch", "kill", (2,)),
+    ])
+    with faults.armed(rplan) as armed_r:
+        fan = sup.fanout()          # one push dropped: a replica is stale
+        assert len(fan["pushed"]) == 2, fan
+        dec = sup.route_pinned(texts)
+    rdiv = sum(a != b for a, b in zip(dec.names, ref_batch.names))
+    states = sup.replica_states()
+    dead = [n for n, s in states.items() if s is ReplicaState.DEAD]
+    print(f"  survivors absorbed the killed replica's shards: "
+          f"divergence={rdiv}, states={ {n: s.name for n, s in states.items()} }")
+    assert rdiv == 0, "replica failover changed a served selection"
+    assert dec.pool_version == router.pool.version
+    assert len(dead) == 1 and sup.healthy_count() == 2
+    assert {(s, k) for s, k, _ in armed_r.fired} == \
+        {("replica.admin", "partition"), ("replica.dispatch", "kill")}
+
+    sup.rejoin(dead[0])
+    rep = next(r for r in sup.replicas if r.name == dead[0])
+    assert rep.state is ReplicaState.HEALTHY
+    assert len(rep.engine.cache._data) > 0, "rejoin came back cold"
+    h0 = sup.cache_stats.hits
+    again = sup.route_pinned(texts)
+    warm_hits = sup.cache_stats.hits - h0
+    print(f"  {dead[0]} rejoined warm from a peer: "
+          f"{warm_hits}/{N_QUERIES} cache hits on the replay")
+    assert again.names == ref_batch.names
+    assert warm_hits == N_QUERIES, "post-resync replay was not all-warm"
+
+    rdeg = faults.degraded_counts()
+    print(f"  replica degradation ledger: {rdeg}")
+    assert rdeg.get("failover", 0) >= 1
+    assert rdeg.get("stale_fence", 0) >= 1
+    assert rdeg.get("resync", 0) >= 2       # fence resync + rejoin resync
+    m = svc.render_metrics()
+    for path in ("failover", "resync", "stale_fence"):
+        assert f'router_degraded_total{{path="{path}"}}' in m, path
+    for name in states:
+        assert f'router_replica_state{{replica="{name}"}} 1' in m, \
+            "every replica should scrape HEALTHY after rejoin"
+
     print(f"divergence=0 over {N_QUERIES} chaos-served queries; "
           f"{len(armed_plan.fired)} faults injected, "
           f"{sum(degraded.values())} degradation events counted")
+    print(f"replica scene: divergence=0 with 1 kill + 1 partition over "
+          f"{len(sup.replicas)} replicas; warm rejoin "
+          f"{warm_hits}/{N_QUERIES} hits")
     print("chaos smoke OK")
 
 

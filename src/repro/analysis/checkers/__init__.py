@@ -2,7 +2,8 @@
 from repro.analysis.checkers import (async_safety,  # noqa: F401
                                      degradation_hygiene, jit_purity,
                                      kernel_contract, precision_hygiene,
-                                     schema_migration)
+                                     replica_state, schema_migration)
 
 __all__ = ["async_safety", "degradation_hygiene", "jit_purity",
-           "kernel_contract", "precision_hygiene", "schema_migration"]
+           "kernel_contract", "precision_hygiene", "replica_state",
+           "schema_migration"]

@@ -1,0 +1,116 @@
+"""replica-state-machine: replica lifecycle state only moves through the
+supervisor's audited transition method.
+
+Scope: ``src/repro/serving/`` — the modules hosting the supervised
+replica set (ISSUE 10).  The failover proofs (zero divergence, exact
+quarantine residue, fence-then-resync) all lean on the per-replica state
+machine being a closed system: every edge is validated against the legal
+transition table and appended to the audit trail by
+``ReplicaSupervisor._transition``.  A direct ``rep._state = DEAD``
+somewhere else silently skips both the legality check and the audit
+entry — the replica can "teleport" between states and the chaos asserts
+lose their meaning.
+
+Rules:
+
+``direct-state-write``
+    An assignment (plain, annotated, or augmented) whose target is an
+    attribute named ``state`` or ``_state`` on some object, found in the
+    serving plane OUTSIDE a method of ``ReplicaSupervisor``.  Inside the
+    supervisor class the write is the audited transition itself (or its
+    helpers) and is exempt.  Class-level defaults (``_state: ReplicaState
+    = STARTING`` in the ``Replica`` dataclass) are Name targets, not
+    Attribute targets, so they never trip the rule.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Iterator, Optional
+
+from repro.analysis.base import (Checker, Finding, Repo, SourceModule,
+                                 register_checker)
+
+_SCOPE = ("src/repro/serving/",)
+
+#: Attribute names that hold replica lifecycle state.  Both the public
+#: and the mangled-private spelling are fenced — a checker that only
+#: watched ``_state`` would be bypassed by renaming the slot.
+_STATE_ATTRS = {"state", "_state"}
+
+#: The single class whose methods are allowed to write the attribute.
+_SUPERVISOR = "ReplicaSupervisor"
+
+
+def _state_targets(node: ast.AST) -> Iterator[ast.Attribute]:
+    """Yield every Attribute target of an assignment-like node whose
+    attribute name is a replica-state slot."""
+    if isinstance(node, ast.Assign):
+        targets: Iterable[ast.expr] = node.targets
+    elif isinstance(node, (ast.AnnAssign, ast.AugAssign)):
+        targets = (node.target,)
+    else:
+        return
+    for t in targets:
+        # unpack `a, b = ...` tuples too
+        elts = t.elts if isinstance(t, (ast.Tuple, ast.List)) else (t,)
+        for e in elts:
+            if isinstance(e, ast.Attribute) and e.attr in _STATE_ATTRS:
+                yield e
+
+
+class _ScopeWalker(ast.NodeVisitor):
+    """Walk a module tracking the innermost enclosing ClassDef, and
+    collect state-attribute writes outside the supervisor class."""
+
+    def __init__(self) -> None:
+        self.offenders: list = []
+        self._class: Optional[str] = None
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        prev, self._class = self._class, node.name
+        self.generic_visit(node)
+        self._class = prev
+
+    def _check(self, node: ast.AST) -> None:
+        if self._class == _SUPERVISOR:
+            return
+        for attr in _state_targets(node):
+            self.offenders.append((node, attr))
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        self._check(node)
+        self.generic_visit(node)
+
+    def visit_AnnAssign(self, node: ast.AnnAssign) -> None:
+        self._check(node)
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        self._check(node)
+        self.generic_visit(node)
+
+
+@register_checker
+class ReplicaStateChecker(Checker):
+    name = "replica-state-machine"
+    rules = {
+        "direct-state-write":
+            "replica `state`/`_state` assigned outside a "
+            "ReplicaSupervisor method — lifecycle edges must go through "
+            "the audited `_transition` (legality table + audit trail)",
+    }
+
+    def check(self, repo: Repo) -> Iterable[Finding]:
+        for mod in repo.under(*_SCOPE):
+            yield from self._writes(mod)
+
+    def _writes(self, mod: SourceModule) -> Iterator[Finding]:
+        walker = _ScopeWalker()
+        walker.visit(mod.tree)
+        for node, attr in walker.offenders:
+            yield mod.finding(
+                "direct-state-write", node,
+                f"direct write to `.{attr.attr}` bypasses the replica "
+                "state machine — route the edge through "
+                "ReplicaSupervisor._transition so it is legality-checked "
+                "and audited")

@@ -11,11 +11,13 @@ from repro.core.errors import (
     DeadlineExceededError,
     DuplicateModelError,
     EmptyPoolError,
+    NoHealthyReplicaError,
     NotCalibratedError,
     OverloadedError,
     RouterError,
     SchemaVersionError,
     ServiceError,
+    StaleReplicaError,
     UnknownModelError,
 )
 from repro.core.profiling import ProfilingConfig, predict_accuracy, profile_new_model
@@ -32,12 +34,13 @@ __all__ = [
     "CandidateModel", "DeadlineExceededError", "DuplicateModelError",
     "EmptyPoolError", "IRTConfig",
     "K_FEATURES", "LatencyParams", "ModelPool", "ModelProfile",
+    "NoHealthyReplicaError",
     "NotCalibratedError", "OutputLengthTable", "OverloadedError",
     "POLICIES", "PoolSnapshot",
     "Predictor", "PredictorConfig", "ProfilingConfig",
     "RooflineLatencyModel", "RouterArtifacts", "RouterConfig",
     "RouterError", "RoutingConstraints", "SchemaVersionError",
-    "ServiceError", "UnknownModelError", "ZeroRouter",
+    "ServiceError", "StaleReplicaError", "UnknownModelError", "ZeroRouter",
     "ZeroRouterConfig", "calibrate_latency", "calibrate_length_table",
     "cluster_dimensions", "estimate_cost", "extract_features",
     "extract_features_batch", "fit_irt", "greedy_doptimal",

@@ -104,3 +104,35 @@ class RetriesExhausted(ServiceError):
         super().__init__(msg)
         self.attempts = attempts
         self.last = last
+
+
+class StaleReplicaError(ServiceError):
+    """A replica refused a dispatch because its adopted pool snapshot is
+    older than the version the dispatch was admitted under.  The fence
+    guarantees no query is ever routed against a stale snapshot: the
+    supervisor resyncs the replica (it re-adopts the authoritative
+    snapshot and re-enters rotation) and re-dispatches elsewhere.
+
+    ``have`` / ``want`` are the replica's adopted pool version and the
+    version the dispatch carried (absent on wire reconstruction)."""
+
+    def __init__(self, have=None, want=None):
+        if isinstance(have, str):
+            # wire reconstruction: typed errors cross as ``exc_cls(message)``
+            super().__init__(have)
+            self.have = None
+            self.want = None
+            return
+        super().__init__(
+            f"replica holds pool version {have} but the dispatch was "
+            f"admitted under version {want}; refusing to route against a "
+            f"stale snapshot")
+        self.have = have
+        self.want = want
+
+
+class NoHealthyReplicaError(ServiceError):
+    """Every replica in the supervised set is DEAD or DRAINING — there is
+    nowhere left to dispatch.  The request was never routed; the caller
+    should retry after the supervisor rejoins a replica (or surface the
+    outage)."""

@@ -272,6 +272,15 @@ def _route_main(args) -> None:
         semantic_cache=args.semantic_cache,
         sim_threshold=args.sim_threshold)
     print(f"  router ready in {time.perf_counter() - t0:.2f}s")
+    if args.replicas > 1:
+        from repro.serving import ReplicaSupervisor, RouterEngine
+        t1 = time.perf_counter()
+        # the freshly built engine becomes r0; peers share its config
+        peers = [RouterEngine(router, engine.cfg)
+                 for _ in range(args.replicas - 1)]
+        engine = ReplicaSupervisor(router, engines=[engine] + peers)
+        print(f"  supervised replica set: {args.replicas} replicas in "
+              f"{time.perf_counter() - t1:.2f}s")
     if args.log_routes:
         import os
 
@@ -401,6 +410,11 @@ def main(argv=None):
                     help="route: append served routes to a JSONL log; on "
                          "startup an existing log is replayed to warm the "
                          "latent + semantic caches before traffic")
+    ap.add_argument("--replicas", type=int, default=1, metavar="N",
+                    help="route: run N supervised engine replicas behind "
+                         "the service — health-checked failover with "
+                         "bit-identical selections and version-fenced "
+                         "admin fan-out (default 1: bare engine)")
     ap.add_argument("--max-batch", type=int, default=64)
     ap.add_argument("--max-wait-ms", type=float, default=2.0)
     ap.add_argument("--listen", default=None, metavar="HOST:PORT",

@@ -23,6 +23,9 @@ service  — RouterService: asyncio submit/submit_many/stream, admin plane
            (live pool mutations with snapshot pinning), admission control
 protocol — length-prefixed JSONL wire format, asyncio TCP front-end,
            synchronous ServiceClient, BackgroundServer
+replicaset — ReplicaSupervisor: N health-checked engine replicas with
+           zero-divergence failover, drain/rejoin warm resync, and
+           version-fenced admin fan-out (StaleReplicaError)
 """
 from repro.serving.batcher import MicroBatcher, RouteResult
 from repro.serving.cache import (CacheEntry, CacheStats, ExportedStore,
@@ -35,6 +38,8 @@ from repro.serving.metrics import (DEFAULT_LATENCY_BUCKETS_MS,
                                    MetricsRegistry)
 from repro.serving.protocol import (BackgroundServer, ServiceClient,
                                     start_server)
+from repro.serving.replicaset import (Replica, ReplicaSetConfig,
+                                      ReplicaState, ReplicaSupervisor)
 from repro.serving.semcache import (LatentBank, RouteLog,
                                     SemanticCacheConfig)
 from repro.serving.service import (AdminPlane, RouteRequest, RouteResponse,
@@ -44,6 +49,7 @@ __all__ = [
     "AdminPlane", "BackgroundServer", "BatchDecision", "CacheEntry",
     "CacheStats", "DEFAULT_LATENCY_BUCKETS_MS", "ExportedStore",
     "LatentBank", "LatentCache", "MetricsRegistry", "MicroBatcher",
+    "Replica", "ReplicaSetConfig", "ReplicaState", "ReplicaSupervisor",
     "RouteLog", "RouteRequest",
     "enable_persistent_compile_cache", "exported_program_dir",
     "RouteResponse", "RouteResult", "RouterEngine", "RouterEngineConfig",

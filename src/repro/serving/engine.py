@@ -102,7 +102,7 @@ from jax import export as jax_export
 
 from repro.core import ingest
 from repro.core.errors import (EmptyPoolError, NotCalibratedError,
-                               PoisonQueryError)
+                               PoisonQueryError, StaleReplicaError)
 from repro.core.pool import PoolSnapshot
 from repro.core.predictor import apply_heads, encode
 from repro.core.profiling import predict_accuracy
@@ -282,6 +282,11 @@ class RouterEngine:
             # as a bank row
             self.cache.evict_hook = self.bank.discard
         self._device_pool: Optional[_DevicePool] = None
+        # replica mode: a snapshot pushed by ReplicaSupervisor fan-out.
+        # When set, _pool() serves IT instead of the live pool — a replica
+        # that missed a bump keeps routing its old snapshot until the
+        # version fence catches it (see score_shard / StaleReplicaError).
+        self._adopted: Optional[PoolSnapshot] = None
         self._artifacts_ref = None
         # how many times each scoring program's Python body was traced —
         # the observable the AOT-export path is built to keep at ZERO on
@@ -411,7 +416,8 @@ class RouterEngine:
     # pool snapshot
     # ------------------------------------------------------------------
     def _pool(self) -> _DevicePool:
-        snap = self.router.pool.snapshot()
+        snap = (self._adopted if self._adopted is not None
+                else self.router.pool.snapshot())
         if snap.n_models == 0:
             raise EmptyPoolError("onboard at least one model before serving")
         dev = self._device_pool
@@ -420,6 +426,52 @@ class RouterEngine:
         dev = _DevicePool(snap)
         self._device_pool = dev
         return dev
+
+    def adopt_snapshot(self, snap: Optional[PoolSnapshot]) -> None:
+        """Pin this engine to ``snap`` (replica mode: the supervisor's
+        admin fan-out pushes the authoritative snapshot here).  ``None``
+        reverts to reading the live pool.  A replica that misses a push
+        keeps serving the snapshot it last adopted — which is exactly
+        what the version fence in :meth:`score_shard` exists to catch."""
+        with self._route_lock:
+            self._adopted = snap
+
+    @property
+    def adopted_version(self) -> Optional[int]:
+        """Pool version this engine is pinned to, or None when live."""
+        snap = self._adopted
+        return None if snap is None else snap.version
+
+    def score_shard(self, texts: Sequence[str],
+                    expected_version: Optional[int] = None,
+                    semantic_ok: bool = True
+                    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                               np.ndarray, np.ndarray]:
+        """Score one failover shard against this replica's adopted
+        snapshot, fencing on the pool version the dispatch was admitted
+        under.
+
+        Returns :meth:`_score_parts`'s (p, cost, latency, ŝ, sem)
+        tensors.  Per-query scoring is batch-composition invariant (each
+        query's padded length depends only on its own text; the tier here
+        is ``_tier_prec()`` — f32, or per-query bf16 under the pure-bf16
+        tier — never the batch-scoped bf16_recheck margin logic), so a
+        supervisor can shard a batch across replicas, merge the shard
+        tensors in submission order, and run ONE batch-scoped decision
+        that is bit-identical to a single engine scoring the whole batch.
+
+        Raises :class:`StaleReplicaError` when ``expected_version``
+        disagrees with the adopted snapshot — the no-stale-routing fence:
+        a replica partitioned from admin fan-out refuses work admitted
+        under a pool state it never saw, instead of silently scoring
+        against dead pricing/membership/breaker state."""
+        with self._route_lock:
+            self._check_predictor()
+            pool = self._pool()
+            if (expected_version is not None
+                    and pool.snap.version != expected_version):
+                raise StaleReplicaError(pool.snap.version, expected_version)
+            return self._score_parts(texts, pool, semantic_ok=semantic_ok)
 
     def _check_predictor(self) -> None:
         if self.router.artifacts is not self._artifacts_ref:

@@ -51,6 +51,16 @@ site                      one hit is…
                           abort, ``stall`` = delay the reply)
 ``service.outcome``       one ``report_outcome`` (kind: ``storm`` = apply
                           the outcome ``repeat`` times — a breaker flood)
+``replica.dispatch``      one shard dispatch to one replica under the
+                          :class:`~repro.serving.replicaset.ReplicaSupervisor`
+                          (kinds: ``kill`` = the replica dies mid-batch,
+                          ``hang`` = the replica stalls past its watchdog)
+``replica.admin``         one admin fan-out push to one replica (kind:
+                          ``partition`` = the push is dropped, leaving the
+                          replica on its stale snapshot)
+``replica.heartbeat``     one heartbeat probe of one replica (kind:
+                          ``slow`` = the beat arrives late by
+                          ``duration_s``)
 ========================  ====================================================
 """
 from __future__ import annotations
@@ -70,16 +80,23 @@ SITES: Dict[str, Tuple[str, ...]] = {
     "cache.export": ("corrupt",),
     "protocol.frame": ("reset", "reset_post", "torn_frame", "stall"),
     "service.outcome": ("storm",),
+    "replica.dispatch": ("kill", "hang"),
+    "replica.admin": ("partition",),
+    "replica.heartbeat": ("slow",),
 }
 
-#: The five fault families the chaos soak must cover (ISSUE acceptance):
-#: dispatch, lex, persistence, transport, breaker storm.
+#: The fault families the chaos soak must cover (ISSUE acceptance):
+#: dispatch, lex, persistence, transport, breaker storm — plus the
+#: replica-set family (PR 10: kill/hang/partition/slow-heartbeat).
+#: ``replica`` is deliberately NOT in :meth:`FaultPlan.generate`'s
+#: default families, so existing seeded plans stay bit-identical.
 FAMILIES: Dict[str, Tuple[str, ...]] = {
     "dispatch": ("engine.dispatch",),
     "lex": ("engine.lex",),
     "persistence": ("ckpt.write", "semcache.sidecar", "cache.export"),
     "transport": ("protocol.frame",),
     "breaker": ("service.outcome",),
+    "replica": ("replica.dispatch", "replica.admin", "replica.heartbeat"),
 }
 
 
@@ -219,6 +236,11 @@ class FaultPlan:
         if "breaker" in families:
             events.append(FaultEvent("service.outcome", "storm", pick(1),
                                      repeat=8))
+        if "replica" in families:   # opt-in: replicated topologies only
+            events.append(FaultEvent("replica.dispatch", "kill", pick(1)))
+            events.append(FaultEvent("replica.admin", "partition", pick(1)))
+            events.append(FaultEvent("replica.heartbeat", "slow", pick(1),
+                                     duration_s=hang_s))
         return cls(events, seed=seed)
 
 

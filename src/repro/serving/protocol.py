@@ -497,8 +497,11 @@ async def _handle_connection(service: RouterService,
                 try:
                     result = await loop.run_in_executor(
                         None, _admin_dispatch, service, frame)
-                    await send({"id": frame.get("id"), "status": "ok",
-                                **result})
+                    # idempotent like routes: a replayed admin frame
+                    # (its reply lost to a reset) must answer from the
+                    # dedup cache, not onboard/remove a second time
+                    await answer(frame, {"id": frame.get("id"),
+                                         "status": "ok", **result})
                 except Exception as e:  # noqa: BLE001 — fan back typed
                     await send({"id": frame.get("id"), "status": "error",
                                 "error": str(e),
@@ -727,6 +730,13 @@ class ServiceClient:
             if attempt:
                 time.sleep(self._backoff(attempt - 1))
                 self._teardown()
+            if self._sock is None:
+                # no live connection — either this is a retry, or a
+                # PREVIOUS exchange exhausted its budget with a failed
+                # reconnect and left the session torn down.  Every op
+                # (route, admin, stats, metrics, report_outcome) must
+                # ride the same reconnect+retry path here instead of
+                # surfacing a raw AttributeError on a None socket.
                 try:
                     self._connect()
                 except OSError as e:

@@ -1,0 +1,709 @@
+"""Supervised replica set: N RouterEngines behind one routing brain.
+
+ROADMAP item 1 names a replica set of engines behind ``RouterService``
+as the prerequisite for millions-of-users traffic.  This module is its
+failover half: a :class:`ReplicaSupervisor` that owns N
+:class:`~repro.serving.engine.RouterEngine` replicas, shards every
+batch across the healthy ones, and merges the shard scores into ONE
+batch-scoped routing decision — so replica death, hangs, admin races
+and rejoins are invisible in the *decisions*, only in the latency.
+
+Why sharded scoring merges exactly
+----------------------------------
+
+Per-query scoring is batch-composition invariant by construction (the
+engine pads each query to a bucket of its OWN subword length and groups
+strictly by that bucket — the property PR 9's bisect quarantine already
+leans on), so a shard scored on replica A is bitwise the columns the
+whole batch would have produced on a single engine.  What is NOT
+shard-local is the decision: the fused kernel's cost/latency min-max
+normalization spans the WHOLE batch.  The supervisor therefore scores
+shards remotely and decides centrally — merge the (M, Q) tensors in
+submission order, then run the same padded ``ops.routing_topk`` call a
+single engine would, under the same breaker mask.  Survivor selections
+after a mid-batch replica kill are bit-identical to a fault-free
+single-engine run; poisoned queries still quarantine through the PR 9
+bisect path, and only the union of the shards' poison sets fails.
+
+The version fence
+-----------------
+
+Admin mutations (onboard / remove / reprice / swap-predictor) and
+outcome feedback bump the pool's copy-on-write version.  The supervisor
+fans the resulting snapshot out to every rotation replica
+(:meth:`ReplicaSupervisor.fanout`); each shard dispatch then carries
+the pool version it was admitted under, and a replica whose adopted
+snapshot disagrees — e.g. it was partitioned from the fan-out — refuses
+the shard with a typed
+:class:`~repro.core.errors.StaleReplicaError`, resyncs onto the pinned
+snapshot, and only then rejoins rotation.  No query is ever routed
+against a stale snapshot; the ledger counts every fence trip under
+``router_degraded_total{path="stale_fence"}`` and every resync under
+``path="resync"``.
+
+State machine
+-------------
+
+Each replica walks an explicit machine, transitions legal ONLY inside
+supervisor methods (mechanically enforced by routerlint's
+``replica-state-machine`` checker)::
+
+    STARTING ──► HEALTHY ◄──► SUSPECT
+                    │  ▲          │
+          drain ────┤  │          │ missed beats
+                    ▼  │          ▼
+               DRAINING │        DEAD
+                    │   │          │
+                    ▼   │ resync   ▼
+                 REJOINING ◄───────┘
+
+Heartbeats ride monotonic clocks (``time.monotonic``; wall clocks are
+banned from this plane by routerlint's ``monotonic-time`` rule) with an
+injectable ``now`` so tests drive the machine without sleeping.  Fault
+sites (``serving/faults.py``): ``replica.dispatch`` (kill / hang),
+``replica.admin`` (partition from fan-out), ``replica.heartbeat``
+(slow beat).
+
+Rejoin resyncs more than the snapshot: the recovered replica copies a
+healthy peer's exact-LRU entries and semantic-bank state
+(:meth:`~repro.serving.semcache.LatentBank.state` round-trip), so it
+re-enters rotation warm instead of serving a cold-cache latency cliff.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import threading
+import time
+from collections import deque
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.errors import (EmptyPoolError, NoHealthyReplicaError,
+                               PoisonQueryError, StaleReplicaError)
+from repro.core.pool import PoolSnapshot
+from repro.kernels import ops
+from repro.serving import faults as _faults
+from repro.serving.cache import CacheStats
+from repro.serving.engine import (BatchDecision, RouterEngine,
+                                  RouterEngineConfig)
+from repro.serving.semcache import LatentBank
+
+
+class ReplicaState(enum.IntEnum):
+    """Per-replica lifecycle.  IntEnum so the metrics plane exports the
+    code directly (``router_replica_state{replica=...}``)."""
+    STARTING = 0
+    HEALTHY = 1
+    SUSPECT = 2
+    DEAD = 3
+    DRAINING = 4
+    REJOINING = 5
+
+
+#: Legal transitions — the ONLY edges :meth:`ReplicaSupervisor._transition`
+#: will walk; anything else raises (a state-machine bug, not a condition
+#: to degrade through).
+_LEGAL: Dict[ReplicaState, Tuple[ReplicaState, ...]] = {
+    ReplicaState.STARTING: (ReplicaState.HEALTHY, ReplicaState.DEAD,
+                            ReplicaState.DRAINING),
+    ReplicaState.HEALTHY: (ReplicaState.SUSPECT, ReplicaState.DEAD,
+                           ReplicaState.DRAINING, ReplicaState.REJOINING),
+    ReplicaState.SUSPECT: (ReplicaState.HEALTHY, ReplicaState.DEAD,
+                           ReplicaState.DRAINING, ReplicaState.REJOINING),
+    ReplicaState.DEAD: (ReplicaState.REJOINING,),
+    ReplicaState.DRAINING: (ReplicaState.REJOINING, ReplicaState.DEAD),
+    ReplicaState.REJOINING: (ReplicaState.HEALTHY, ReplicaState.DEAD),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaSetConfig:
+    """Supervisor knobs.  Heartbeat windows are monotonic-clock seconds;
+    tests pass explicit ``now`` values instead of sleeping through them."""
+    suspect_after_s: float = 1.0    # missed beats before HEALTHY → SUSPECT
+    dead_after_s: float = 3.0       # missed beats before SUSPECT → DEAD
+    # per-shard watchdog: bounds a replica that hangs mid-batch (the
+    # shard thread may outlive it — jax dispatches are not interruptible
+    # — but the supervisor regains control and fails the shard over).
+    # None = rely on each engine's own dispatch_timeout_s.
+    shard_timeout_s: Optional[float] = None
+
+
+class Replica:
+    """One supervised engine.  ``_state`` is written ONLY by
+    :meth:`ReplicaSupervisor._transition` (routerlint enforces this);
+    everyone else reads the ``state`` property."""
+
+    # class-level default: every replica is born STARTING without any
+    # instance attribute write outside the supervisor
+    _state: ReplicaState = ReplicaState.STARTING
+
+    def __init__(self, name: str, engine: RouterEngine):
+        self.name = name
+        self.engine = engine
+        self.last_beat: float = time.monotonic()
+        self.killed = False           # a killed replica cannot beat
+        self.dispatches = 0
+        self.failures = 0
+
+    @property
+    def state(self) -> ReplicaState:
+        return self._state
+
+    def __repr__(self) -> str:
+        return f"Replica({self.name}, {self._state.name})"
+
+
+class _ShardFailed(Exception):
+    """Internal: a shard dispatch was lost to a replica failure (kill,
+    hang, watchdog, unexpected death) and must be re-dispatched.  Never
+    escapes the supervisor."""
+
+
+class ReplicaSupervisor:
+    """Health-checked replica set with zero-divergence failover.
+
+    Duck-types the engine surface :class:`~repro.serving.service.RouterService`
+    and :class:`~repro.serving.batcher.MicroBatcher` consume
+    (``route_pinned`` / ``warmup`` / ``warm_cache`` / ``cache_stats`` /
+    ``bank_stats`` / ``last_recheck_fraction``), so a service built over
+    a supervisor instead of a bare engine needs no other change.
+    """
+
+    def __init__(self, router, n_replicas: int = 2,
+                 engine_cfg: Optional[RouterEngineConfig] = None,
+                 cfg: ReplicaSetConfig = ReplicaSetConfig(),
+                 engines: Optional[Sequence[RouterEngine]] = None):
+        self.router = getattr(router, "router", router)
+        self.cfg = cfg
+        if engines is None:
+            engine_cfg = (engine_cfg if engine_cfg is not None
+                          else RouterEngineConfig())
+            engines = [RouterEngine(router, engine_cfg)
+                       for _ in range(max(int(n_replicas), 1))]
+        self.replicas: List[Replica] = [
+            Replica(f"r{i}", eng) for i, eng in enumerate(engines)]
+        # serializes routing, fan-out, heartbeat ticks and admin
+        # drain/rejoin against each other (re-entrant: _scatter recurses
+        # through the merged semantic re-check)
+        self._lock = threading.RLock()
+        self._fanned_version: Optional[int] = None
+        self._pinned: Optional[PoolSnapshot] = None
+        self._sem_rechecked = 0
+        self.transitions: List[Tuple[str, str, str, str]] = []
+        with self._lock:
+            self.fanout()                       # adopt snapshot v0
+            now = time.monotonic()
+            for rep in self.replicas:
+                rep.last_beat = now
+                self._transition(rep, ReplicaState.HEALTHY, "first beat")
+
+    # ------------------------------------------------------------------
+    # state machine — the ONLY writer of Replica._state in the repo
+    # ------------------------------------------------------------------
+    def _transition(self, rep: Replica, to: ReplicaState,
+                    reason: str) -> None:
+        frm = rep.state
+        if to is frm:
+            return
+        if to not in _LEGAL[frm]:
+            raise RuntimeError(
+                f"illegal replica transition {frm.name} → {to.name} "
+                f"({rep.name}: {reason})")
+        rep._state = to
+        self.transitions.append((rep.name, frm.name, to.name, reason))
+
+    def replica_states(self) -> Dict[str, ReplicaState]:
+        """name → state, for the ``router_replica_state`` gauges."""
+        with self._lock:
+            return {rep.name: rep.state for rep in self.replicas}
+
+    # ------------------------------------------------------------------
+    # heartbeats (monotonic clock; injectable now for tests)
+    # ------------------------------------------------------------------
+    def tick(self, now: Optional[float] = None) -> None:
+        """One heartbeat round: probe every rotation replica, walk the
+        HEALTHY ↔ SUSPECT → DEAD edges off beat age.  Called lazily at
+        every route entry and explicitly by tests/operators."""
+        with self._lock:
+            now = time.monotonic() if now is None else now
+            for rep in self.replicas:
+                if rep.state in (ReplicaState.DEAD, ReplicaState.DRAINING,
+                                 ReplicaState.REJOINING):
+                    continue
+                beat = not rep.killed
+                if beat and _faults.ARMED:
+                    ev = _faults.fire("replica.heartbeat")
+                    if ev is not None and ev.kind == "slow":
+                        # the beat arrives after the probe window closed:
+                        # this round sees a miss
+                        beat = False
+                if beat:
+                    rep.last_beat = now
+                    if rep.state is ReplicaState.SUSPECT:
+                        self._transition(rep, ReplicaState.HEALTHY,
+                                         "beat resumed")
+                    elif rep.state is ReplicaState.STARTING:
+                        self._transition(rep, ReplicaState.HEALTHY,
+                                         "first beat")
+                    continue
+                age = now - rep.last_beat
+                if (rep.state is ReplicaState.HEALTHY
+                        and age >= self.cfg.suspect_after_s):
+                    self._transition(rep, ReplicaState.SUSPECT,
+                                     f"no beat for {age:.2f}s")
+                elif (rep.state is ReplicaState.SUSPECT
+                        and age >= self.cfg.dead_after_s):
+                    self._transition(rep, ReplicaState.DEAD,
+                                     f"no beat for {age:.2f}s")
+
+    # ------------------------------------------------------------------
+    # admin plane: fan-out, drain, rejoin
+    # ------------------------------------------------------------------
+    def fanout(self) -> Dict[str, object]:
+        """Push the current pool snapshot to every rotation replica.
+
+        Called by the service's admin plane after each pool mutation and
+        self-healingly at route entry when the live version moved without
+        a push (outcome feedback bumps versions too).  A replica whose
+        push is dropped (``replica.admin`` partition fault) keeps its old
+        snapshot — the dispatch-time version fence exists precisely to
+        catch it before it can route stale."""
+        with self._lock:
+            snap = self.router.pool.snapshot()
+            pushed = []
+            for rep in self.replicas:
+                if rep.state in (ReplicaState.DEAD, ReplicaState.DRAINING):
+                    continue
+                if _faults.ARMED:
+                    ev = _faults.fire("replica.admin")
+                    if ev is not None and ev.kind == "partition":
+                        continue        # push lost; the fence will catch it
+                rep.engine.adopt_snapshot(snap)
+                pushed.append(rep.name)
+            self._fanned_version = snap.version
+            return {"pool_version": snap.version, "pushed": pushed}
+
+    def drain(self, name: str) -> Replica:
+        """Take a replica out of rotation gracefully: no new shards are
+        dispatched to it; :meth:`rejoin` brings it back."""
+        with self._lock:
+            rep = self._by_name(name)
+            self._transition(rep, ReplicaState.DRAINING, "operator drain")
+            return rep
+
+    def rejoin(self, name: str, now: Optional[float] = None) -> Replica:
+        """Bring a DEAD/DRAINING (or live) replica back into rotation:
+        adopt the authoritative snapshot, copy a healthy peer's warm
+        cache + semantic-bank state, then HEALTHY.  Counts one ``resync``
+        degradation event."""
+        with self._lock:
+            rep = self._by_name(name)
+            self._transition(rep, ReplicaState.REJOINING, "operator rejoin")
+            rep.killed = False
+            snap = self.router.pool.snapshot()
+            rep.engine.adopt_snapshot(snap)
+            peer = next((r for r in self.replicas
+                         if r is not rep and r.state is ReplicaState.HEALTHY),
+                        None)
+            if peer is not None:
+                self._warm_from(rep, peer)
+            _faults.record_degraded("resync")
+            rep.last_beat = time.monotonic() if now is None else now
+            self._transition(rep, ReplicaState.HEALTHY, "resynced")
+            return rep
+
+    def _resync(self, rep: Replica) -> None:
+        """Stale-fence recovery: re-adopt the snapshot pinned for the
+        batch in flight, rejoin rotation.  (The batch's pinned version is
+        the deterministic target — adopting the LIVE snapshot could race
+        a concurrent bump and fence forever.)"""
+        self._transition(rep, ReplicaState.REJOINING, "stale fence")
+        rep.engine.adopt_snapshot(self._pinned)
+        _faults.record_degraded("resync")
+        self._transition(rep, ReplicaState.HEALTHY, "resynced")
+
+    def _warm_from(self, rep: Replica, peer: Replica) -> None:
+        """Copy ``peer``'s exact-LRU entries and semantic-bank state into
+        ``rep`` so it rejoins warm.  Entries are immutable (frozen
+        CacheEntry) — sharing them is safe; the bank round-trips through
+        its bit-exact ``state()`` dict."""
+        src, dst = peer.engine, rep.engine
+        if src.cache is not None and dst.cache is not None:
+            dst.cache.clear()
+            for text, entry in src.cache._data.items():
+                dst.cache.put(text, entry)
+        if src.bank is not None and dst.bank is not None:
+            dst.bank = LatentBank.from_state(src.bank.state(),
+                                             capacity=dst.bank.capacity)
+            dst.cache.evict_hook = dst.bank.discard
+
+    def _by_name(self, name: str) -> Replica:
+        for rep in self.replicas:
+            if rep.name == name:
+                return rep
+        raise KeyError(f"no replica named {name!r} "
+                       f"(have {[r.name for r in self.replicas]})")
+
+    # ------------------------------------------------------------------
+    # dispatch: shard → score remotely → merge → decide centrally
+    # ------------------------------------------------------------------
+    def _rotation(self) -> List[Replica]:
+        healthy = [r for r in self.replicas
+                   if r.state is ReplicaState.HEALTHY]
+        if healthy:
+            return healthy
+        suspect = [r for r in self.replicas
+                   if r.state is ReplicaState.SUSPECT]
+        if suspect:     # degraded rotation: better a suspect than an outage
+            return suspect
+        raise NoHealthyReplicaError(
+            "every replica is DEAD or DRAINING — nothing left to "
+            f"dispatch to ({[f'{r.name}={r.state.name}' for r in self.replicas]})")
+
+    def _shard_call(self, rep: Replica, sub: List[str], V: int,
+                    semantic_ok: bool):
+        """One shard dispatch to one replica, through the fault hook and
+        the optional watchdog.  Raises ``_ShardFailed`` (after the state
+        transition) when the shard must fail over; lets the typed
+        Stale/Poison errors through for the caller's specific handling."""
+        rep.dispatches += 1
+        if _faults.ARMED:
+            ev = _faults.fire("replica.dispatch")
+            if ev is not None:
+                if ev.kind == "kill":
+                    rep.killed = True
+                    rep.failures += 1
+                    self._transition(rep, ReplicaState.DEAD,
+                                     "killed mid-batch (injected)")
+                    raise _ShardFailed(rep.name)
+                if ev.kind == "hang":
+                    rep.failures += 1
+                    time.sleep(ev.duration_s)
+                    self._transition(rep, ReplicaState.SUSPECT,
+                                     "hung mid-batch (injected)")
+                    raise _ShardFailed(rep.name)
+        try:
+            if self.cfg.shard_timeout_s is None:
+                return rep.engine.score_shard(
+                    sub, expected_version=V, semantic_ok=semantic_ok)
+            return self._watchdog_shard(rep, sub, V, semantic_ok)
+        except (StaleReplicaError, PoisonQueryError):
+            raise
+        except TimeoutError:
+            rep.failures += 1
+            self._transition(rep, ReplicaState.SUSPECT, "shard watchdog")
+            raise _ShardFailed(rep.name)
+        except Exception:  # noqa: BLE001 — the replica died on us; the
+            # shard fails over to a survivor (counted there) and the
+            # ledger also counts the unexpected death itself
+            _faults.record_degraded("replica_dispatch_error")
+            rep.failures += 1
+            self._transition(rep, ReplicaState.DEAD, "shard dispatch died")
+            raise _ShardFailed(rep.name)
+
+    def _watchdog_shard(self, rep: Replica, sub: List[str], V: int,
+                        semantic_ok: bool):
+        """``fut.result(timeout=)`` bounds a hung replica; manual
+        shutdown so a stuck worker is not joined (same shape as the
+        engine's ``_watchdog_entries``)."""
+        from concurrent.futures import ThreadPoolExecutor
+        from concurrent.futures import TimeoutError as FutTimeout
+
+        ex = ThreadPoolExecutor(1)
+        fut = ex.submit(rep.engine.score_shard, sub,
+                        expected_version=V, semantic_ok=semantic_ok)
+        try:
+            return fut.result(timeout=self.cfg.shard_timeout_s)
+        except FutTimeout:
+            raise TimeoutError(rep.name)
+        finally:
+            ex.shutdown(wait=False, cancel_futures=True)
+
+    def _scatter(self, texts: Sequence[str], V: int, semantic_ok: bool
+                 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                            np.ndarray, np.ndarray]:
+        """Shard ``texts`` across the rotation, score each shard on its
+        replica, merge the columns back in submission order.
+
+        Failure handling per shard:
+
+        * replica killed / hung / died → ``failover``: re-dispatch the
+          whole shard to the next survivor (bitwise-invariant scoring
+          makes the regrouping invisible in the merged tensors);
+        * :class:`StaleReplicaError` → ``stale_fence``: resync the
+          replica onto the pinned snapshot, retry the shard on it;
+        * :class:`PoisonQueryError` → collect the shard-local poison
+          indices (mapped to batch positions), re-dispatch the shard's
+          survivors (their latents are already cached on that replica —
+          table-only work), and raise the UNION of all shards' poison
+          sets once every column is merged.
+        """
+        Q = len(texts)
+        rotation = self._rotation()
+        bounds = np.linspace(0, Q, len(rotation) + 1).astype(int)
+        queue: deque = deque()
+        for rep, lo, hi in zip(rotation, bounds[:-1], bounds[1:]):
+            if hi > lo:
+                queue.append((rep, list(range(lo, hi))))
+        parts: List[Tuple[List[int], Tuple]] = []
+        poisoned: Dict[int, str] = {}
+        # generous convergence budget: every legal event consumes it —
+        # exceeding it means the failure handling itself is cycling
+        budget = 8 * (len(self.replicas) + 1) + 2 * Q
+        while queue:
+            budget -= 1
+            if budget < 0:
+                raise NoHealthyReplicaError(
+                    "shard dispatch did not converge (failover loop)")
+            rep, idxs = queue.popleft()
+            if rep.state not in (ReplicaState.HEALTHY, ReplicaState.SUSPECT):
+                queue.appendleft((self._next_survivor(), idxs))
+                continue
+            sub = [texts[i] for i in idxs]
+            try:
+                part = self._shard_call(rep, sub, V, semantic_ok)
+            except StaleReplicaError:
+                _faults.record_degraded("stale_fence")
+                self._resync(rep)
+                queue.appendleft((rep, idxs))
+                continue
+            except PoisonQueryError as e:
+                bad_local = set(e.indices)
+                for j in e.indices:
+                    poisoned[idxs[j]] = texts[idxs[j]]
+                survivors = [i for j, i in enumerate(idxs)
+                             if j not in bad_local]
+                if survivors:
+                    queue.appendleft((rep, survivors))
+                continue
+            except _ShardFailed:
+                _faults.record_degraded("failover")
+                queue.appendleft((self._next_survivor(), idxs))
+                continue
+            parts.append((idxs, part))
+        if poisoned:
+            order = sorted(poisoned)
+            raise PoisonQueryError(order, [poisoned[i] for i in order])
+        M = parts[0][1][0].shape[0]
+        p = np.zeros((M, Q), parts[0][1][0].dtype)
+        cost = np.zeros((M, Q), parts[0][1][1].dtype)
+        lat = np.zeros((M, Q), parts[0][1][2].dtype)
+        s_hat = np.zeros(Q, parts[0][1][3].dtype)
+        sem = np.zeros(Q, parts[0][1][4].dtype)
+        for idxs, (p_s, c_s, l_s, s_s, sem_s) in parts:
+            p[:, idxs] = p_s
+            cost[:, idxs] = c_s
+            lat[:, idxs] = l_s
+            s_hat[idxs] = s_s
+            sem[idxs] = sem_s
+        return p, cost, lat, s_hat, sem
+
+    def _next_survivor(self) -> Replica:
+        """Least-loaded rotation replica for a failed-over shard —
+        deterministic (dispatch count, then name) so the same fault
+        sequence re-dispatches identically."""
+        rotation = self._rotation()
+        return min(rotation, key=lambda r: (r.dispatches, r.name))
+
+    # ------------------------------------------------------------------
+    # merged semantic re-check (mirror of engine._sem_recheck, but over
+    # the UNION tensors: the utility-gap margin is batch-scoped, so it
+    # must run where the whole batch is visible)
+    # ------------------------------------------------------------------
+    def _merged_sem_recheck(self, texts: Sequence[str], weights,
+                            snap: PoolSnapshot,
+                            model_valid: Optional[np.ndarray],
+                            p: np.ndarray, cost: np.ndarray,
+                            lat: np.ndarray, s_hat: np.ndarray,
+                            sem: np.ndarray, V: int) -> int:
+        semcfg = self.replicas[0].engine.semcfg
+        if semcfg is None:
+            return 0
+        Q = len(texts)
+        M = p.shape[0]
+        is_sem = ~np.isnan(sem)
+        if not is_sem.any():
+            return 0
+        w = np.asarray(weights, np.float64)
+        edges = np.asarray(snap.edges, np.float64)
+        forced = is_sem & (sem < semcfg.sim_recheck)
+        if edges.size:
+            d_edge = np.min(np.abs(np.asarray(s_hat, np.float64)[None, :]
+                                   - edges[:, None]), axis=0)
+            near_edge = is_sem & (d_edge < semcfg.recheck_s_tol
+                                  * np.maximum(1.0, np.abs(s_hat)))
+        else:
+            near_edge = np.zeros(Q, bool)
+        thr = 2.0 * w[0] * semcfg.recheck_margin
+        n_live = M if model_valid is None else int(model_valid.sum())
+        rechecked = np.zeros(Q, bool)
+        from repro.kernels import ref as _kref
+
+        while True:
+            if n_live >= 2:
+                _, util = _kref.routing_topk_ref(p, cost, lat, weights,
+                                                 model_valid=model_valid)
+                util = np.asarray(util, np.float64)
+                top2 = np.partition(util, (M - 2, M - 1), axis=0)[M - 2:]
+                gap = top2[1] - top2[0]
+                marginal = is_sem & (gap < thr)
+            else:
+                marginal = np.zeros(Q, bool)
+            uncertain = (forced | near_edge | marginal) & ~rechecked
+            idx = np.nonzero(uncertain)[0]
+            if idx.size == 0:
+                break
+            sub = [texts[i] for i in idx]
+            p_s, c_s, l_s, s_s, _ = self._scatter(sub, V, semantic_ok=False)
+            p[:, idx] = p_s
+            cost[:, idx] = c_s
+            lat[:, idx] = l_s
+            s_hat[idx] = s_s
+            sem[idx] = np.nan
+            is_sem[idx] = False
+            forced[idx] = False
+            near_edge[idx] = False
+            rechecked[idx] = True
+        total = int(rechecked.sum())
+        self._sem_rechecked += total
+        return total
+
+    # ------------------------------------------------------------------
+    # the engine surface the service/batcher consume
+    # ------------------------------------------------------------------
+    def route_pinned(self, texts: Sequence[str], policy="balanced",
+                     weights: Optional[Tuple[float, float, float]] = None,
+                     want_scores: bool = False,
+                     k: Optional[int] = None) -> BatchDecision:
+        """Drop-in for :meth:`RouterEngine.route_pinned`, replicated:
+        shard → score → merge → ONE batch-scoped decision, pinned to the
+        pool version every shard was fenced against."""
+        from repro.api import Policy
+
+        pol = Policy.of(policy, weights)
+        eng0 = self.replicas[0].engine
+        k = eng0.cfg.topk if k is None else int(k)
+        with self._lock:
+            self.tick()
+            snap = self.router.pool.snapshot()
+            if snap.version != self._fanned_version:
+                # a bump landed without an admin push (e.g. a direct
+                # pool write) — self-heal before pinning
+                self.fanout()
+                snap = self.router.pool.snapshot()
+            self._pinned = snap
+            V = snap.version
+            if snap.n_models == 0:
+                raise EmptyPoolError(
+                    "onboard at least one model before serving")
+            Q = len(texts)
+            if Q == 0:
+                return BatchDecision(
+                    names=[], sel=np.zeros(0, np.int64), pool_version=V,
+                    model_names=snap.names,
+                    ranked=np.zeros((1, 0), np.int64))
+            mask = snap.routable_mask()
+            if mask.all():
+                mask = None
+            elif not mask.any():
+                raise EmptyPoolError(
+                    "every model in the pool is masked unhealthy (open "
+                    "circuit breakers) — no routable candidates")
+            if pol.constraints is not None or want_scores:
+                p, cost, lat, _, _ = self._scatter(texts, V,
+                                                   semantic_ok=False)
+                sel, _ = eng0._core_route_masked(p, cost, lat, pol, mask)
+                return BatchDecision(
+                    names=[snap.names[i] for i in sel], sel=sel,
+                    pool_version=V, model_names=snap.names,
+                    p=p, cost=cost, latency=lat, ranked=sel[None, :])
+            p, cost, lat, s_hat, sem = self._scatter(texts, V,
+                                                     semantic_ok=True)
+            if not np.all(np.isnan(sem)):
+                self._merged_sem_recheck(texts, pol.weights, snap, mask,
+                                         p, cost, lat, s_hat, sem, V)
+            n_live = snap.n_models if mask is None else int(mask.sum())
+            k_eff = max(min(int(k), n_live), 1)
+            w = np.asarray(pol.weights, np.float32)
+            if Q > eng0.cfg.max_batch:
+                bucket, valid = Q, None
+            else:
+                bucket = eng0._bucket(Q)
+                valid = np.zeros(bucket, bool)
+                valid[:Q] = True
+            ranked_pad, _ = ops.routing_topk(
+                jnp.asarray(eng0._pad_cols(p, bucket)),
+                jnp.asarray(eng0._pad_cols(cost, bucket)),
+                jnp.asarray(eng0._pad_cols(lat, bucket)),
+                jnp.asarray(w),
+                valid=None if valid is None else jnp.asarray(valid),
+                model_valid=None if mask is None else jnp.asarray(mask),
+                k=k_eff, use_pallas=eng0._use_pallas())
+            ranked = np.asarray(ranked_pad)[:, :Q]
+            sel = ranked[0]
+            return BatchDecision(names=[snap.names[i] for i in sel],
+                                 sel=sel, pool_version=V,
+                                 model_names=snap.names, ranked=ranked)
+
+    # -- warm-up / warm-state delegation --------------------------------
+    def warmup(self, max_queries: int = 1,
+               exports: Optional[str] = None) -> float:
+        with self._lock:
+            return sum(rep.engine.warmup(max_queries, exports=exports)
+                       for rep in self.replicas)
+
+    def warm_cache(self, texts: Sequence[str]) -> int:
+        with self._lock:
+            return max((rep.engine.warm_cache(texts)
+                        for rep in self.replicas), default=0)
+
+    # -- observability surface ------------------------------------------
+    @property
+    def cache_stats(self) -> Optional[CacheStats]:
+        stats = [rep.engine.cache_stats for rep in self.replicas
+                 if rep.engine.cache_stats is not None]
+        if not stats:
+            return None
+        agg = CacheStats()
+        for s in stats:
+            agg.hits += s.hits
+            agg.misses += s.misses
+            agg.evictions += s.evictions
+            agg.semantic_hits += s.semantic_hits
+            agg.semantic_rechecked += s.semantic_rechecked
+        agg.semantic_rechecked += self._sem_rechecked
+        return agg
+
+    def bank_stats(self) -> Optional[Dict[str, int]]:
+        per = [rep.engine.bank_stats() for rep in self.replicas]
+        per = [b for b in per if b is not None]
+        if not per:
+            return None
+        return {key: sum(b[key] for b in per) for key in per[0]}
+
+    @property
+    def bank(self):
+        return self.replicas[0].engine.bank
+
+    @property
+    def export_stats(self) -> Dict[str, int]:
+        agg = {"loaded": 0, "exported": 0}
+        for rep in self.replicas:
+            for key in agg:
+                agg[key] += rep.engine.export_stats.get(key, 0)
+        return agg
+
+    @property
+    def last_recheck_fraction(self) -> Optional[float]:
+        # the replicated path shard-scores at the tier's safe precision;
+        # the bf16_recheck margin pass never runs here
+        return None
+
+    def healthy_count(self) -> int:
+        with self._lock:
+            return sum(rep.state is ReplicaState.HEALTHY
+                       for rep in self.replicas)

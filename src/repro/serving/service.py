@@ -166,6 +166,14 @@ class AdminPlane:
         self._lock = threading.Lock()
 
     def _info(self) -> Dict[str, Any]:
+        # version-fenced fan-out (replica sets): push the post-mutation
+        # snapshot to every rotation replica BEFORE reporting the new
+        # version, so by the time the admin caller sees the bump, every
+        # reachable replica has adopted it (a partitioned replica is
+        # caught by the dispatch-time StaleReplicaError fence instead)
+        fan = getattr(self._service.engine, "fanout", None)
+        if fan is not None:
+            fan()
         snap = self._service.router.pool.snapshot()
         return {"pool_version": snap.version, "models": list(snap.names)}
 
@@ -487,6 +495,13 @@ class RouterService:
                     latency_s=(None if latency_ms is None
                                else latency_ms / 1e3),
                     tokens=tokens)
+            # outcomes bump the pool version too (breaker / EWMA state
+            # is snapshot state) — replicas must adopt it, or a breaker
+            # opened here would not mask on the survivors that absorb a
+            # re-dispatched batch
+            fan = getattr(self.engine, "fanout", None)
+            if fan is not None:
+                fan()
         info["request_id"] = request_id
         m = self.metrics
         m.counter_inc("router_outcomes_total",
@@ -565,6 +580,13 @@ class RouterService:
             reg.counter_set("router_semcache_bank_evictions_total",
                             bs["evictions"],
                             "Bank rows dropped (LRU sync + overflow)")
+        states = getattr(self.engine, "replica_states", None)
+        if states is not None:
+            for rname, rstate in states().items():
+                reg.gauge_set("router_replica_state", int(rstate),
+                              "Replica lifecycle state (0=starting, "
+                              "1=healthy, 2=suspect, 3=dead, 4=draining, "
+                              "5=rejoining)", {"replica": rname})
         reg.counter_set("router_batches_routed_total",
                         self.batcher.batches_routed,
                         "Coalesced batches routed")
@@ -605,6 +627,10 @@ class RouterService:
         bs = getattr(self.engine, "bank_stats", lambda: None)()
         if bs is not None:
             st["semcache_bank"] = bs
+        states = getattr(self.engine, "replica_states", None)
+        if states is not None:
+            st["replicas"] = {name: state.name.lower()
+                              for name, state in states().items()}
         return st
 
 

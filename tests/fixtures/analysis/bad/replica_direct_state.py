@@ -1,0 +1,36 @@
+"""BAD fixture (direct-state-write): replica lifecycle state mutated
+outside the supervisor — skips the legality table and the audit trail.
+The test maps this under ``src/repro/serving/``.  Parsed only, never
+imported.
+"""
+import enum
+
+
+class ReplicaState(enum.IntEnum):
+    STARTING = 0
+    HEALTHY = 1
+    SUSPECT = 2
+    DEAD = 3
+
+
+def kill(rep):
+    rep._state = ReplicaState.DEAD        # BAD: free function writes slot
+
+
+def recover(rep):
+    rep.state = ReplicaState.HEALTHY      # BAD: public spelling too
+
+
+class HeartbeatLoop:
+    def __init__(self, replicas):
+        self.replicas = replicas
+
+    def tick(self, now):
+        for rep in self.replicas:
+            if now - rep.last_beat > 1.0:
+                rep._state = ReplicaState.SUSPECT   # BAD: not supervisor
+
+
+class ReplicaSupervisor:
+    def _transition(self, rep, to, reason):
+        rep._state = to                   # ok: inside the supervisor

@@ -1,0 +1,43 @@
+"""GOOD fixture (replica-state-machine): every lifecycle edge goes
+through the supervisor's audited ``_transition``.  The test maps this
+under ``src/repro/serving/``.  Parsed only, never imported.
+"""
+import enum
+
+
+class ReplicaState(enum.IntEnum):
+    STARTING = 0
+    HEALTHY = 1
+    DEAD = 3
+
+
+class Replica:
+    # class-level default is a Name target, not an Attribute write —
+    # the rule must NOT fire here
+    _state: ReplicaState = ReplicaState.STARTING
+
+    def __init__(self, name):
+        self.name = name
+
+    @property
+    def state(self):
+        return self._state
+
+
+class ReplicaSupervisor:
+    def __init__(self, replicas):
+        self.replicas = replicas
+        self.transitions = []
+
+    def _transition(self, rep, to, reason):
+        # the ONE sanctioned write site: inside the supervisor class
+        rep._state = to
+        self.transitions.append((rep.name, to, reason))
+
+    def mark_dead(self, rep):
+        self._transition(rep, ReplicaState.DEAD, "probe timeout")
+
+
+def failover(sup, rep):
+    # callers ask the supervisor; they never touch the attribute
+    sup.mark_dead(rep)

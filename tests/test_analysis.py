@@ -270,6 +270,40 @@ def test_degradation_good_fixture_is_clean(tmp_path):
     assert run_analysis(repo, only=["degradation-hygiene"]).clean
 
 
+# ----------------------------------------------------------------------
+# replica-state-machine
+# ----------------------------------------------------------------------
+def test_replica_state_bad_fixture_fires_per_write(tmp_path):
+    repo = make_repo(tmp_path, {
+        "src/repro/serving/replicaset.py":
+            fixture("bad/replica_direct_state.py")})
+    report = run_analysis(repo, only=["replica-state-machine"])
+    assert rules_fired(report) == ["direct-state-write"]
+    # kill's `_state`, recover's public `state`, HeartbeatLoop.tick —
+    # the supervisor's own `_transition` write must NOT fire
+    assert len(report.findings) == 3
+    assert {f.symbol for f in report.findings} == \
+        {"kill", "recover", "HeartbeatLoop.tick"}
+
+
+def test_replica_state_good_fixture_is_clean(tmp_path):
+    repo = make_repo(tmp_path, {
+        "src/repro/serving/replicaset.py":
+            fixture("good/replica_transitions.py")})
+    assert run_analysis(repo, only=["replica-state-machine"]).clean
+
+
+def test_replica_state_rule_scopes_to_serving_only(tmp_path):
+    """A `_state` attribute elsewhere (e.g. a parser) is not a replica
+    lifecycle slot — the rule is a serving-plane contract."""
+    repo = make_repo(tmp_path, {
+        "src/repro/analysis/walker.py":
+            "class W:\n"
+            "    def reset(self):\n"
+            "        self._state = 0\n"})
+    assert run_analysis(repo, only=["replica-state-machine"]).clean
+
+
 def test_degradation_rule_scopes_to_serving_only(tmp_path):
     """checkpoint/ and analysis/ may use broad handlers with their own
     conventions — the rule is a serving-plane contract."""
@@ -401,14 +435,16 @@ def test_every_rule_has_a_registered_description():
     rules = all_rules()
     assert set(CHECKERS) == {"jit-purity", "kernel-contract",
                              "async-safety", "schema-migration",
-                             "precision-hygiene", "degradation-hygiene"}
+                             "precision-hygiene", "degradation-hygiene",
+                             "replica-state-machine"}
     expected = {"jit-branch-on-traced", "jit-host-call",
                 "jit-closure-params", "kernel-missing-ref",
                 "kernel-missing-parity-test", "kernel-blockspec-dynamic",
                 "async-blocking-call", "async-global-state",
                 "monotonic-time", "schema-migration-chain",
                 "schema-version-literal", "precision-dtype",
-                "bare-except", "swallowed-exception"}
+                "bare-except", "swallowed-exception",
+                "direct-state-write"}
     assert set(rules) == expected
     assert all(rules[r] for r in rules)
 

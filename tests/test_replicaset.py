@@ -1,0 +1,382 @@
+"""Supervised replica set (ISSUE 10): zero-divergence failover under
+injected replica kills, the dispatch-time version fence against
+partitioned admin fan-out, breaker state riding the fence across
+failover, drain/rejoin warm resync, the heartbeat state machine, and
+the resilient-client fixes (reconnect on a torn-down session, admin
+replay idempotency)."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.errors import (NoHealthyReplicaError, PoisonQueryError,
+                               RetriesExhausted)
+from repro.core.pool import BREAKER_CLOSED, BREAKER_OPEN
+from repro.serving import (ReplicaSetConfig, ReplicaState, ReplicaSupervisor,
+                           RouterEngine, RouterEngineConfig,
+                           SemanticCacheConfig)
+from repro.serving import faults
+from repro.serving.faults import FaultEvent, FaultPlan
+from repro.serving.protocol import BackgroundServer, ServiceClient
+from repro.serving.service import RouterService
+
+
+@pytest.fixture(autouse=True)
+def _pristine_fault_state():
+    faults.disarm()
+    faults.reset_degraded()
+    yield
+    faults.disarm()
+    faults.reset_degraded()
+
+
+@pytest.fixture(scope="module")
+def rstack(demo_stack):
+    world, router, engine = demo_stack
+    from repro.data import OOD_TASKS
+    qi = world.query_indices(OOD_TASKS)
+    texts = [world.queries[i].text for i in qi[:24]]
+    return router, engine, texts
+
+
+def _supervisor(router, n=3, **cfg_kw):
+    return ReplicaSupervisor(
+        router, n_replicas=n,
+        engine_cfg=RouterEngineConfig(cache_size=256, **cfg_kw))
+
+
+# ---------------------------------------------------------------------------
+# failover: kill a replica mid-batch, selections stay bit-identical
+# ---------------------------------------------------------------------------
+
+
+def test_replica_kill_failover_is_bit_identical(rstack):
+    router, engine, texts = rstack
+    ref = engine.route_pinned(texts)            # single-engine reference
+    sup = _supervisor(router, n=3)
+    assert sup.healthy_count() == 3
+    # hit 2 = the second shard dispatch → r1 dies mid-batch; its shard
+    # fails over to the least-loaded survivor
+    plan = FaultPlan([FaultEvent("replica.dispatch", "kill", (2,))])
+    with faults.armed(plan):
+        dec = sup.route_pinned(texts)
+    assert plan.fired == [("replica.dispatch", "kill", 2)]
+    # the acceptance bar: surviving selections bit-identical to the
+    # single-engine run, and the failed set is exactly the killed
+    # replica's unrecoverable residue — empty, because the re-dispatch
+    # succeeded
+    assert dec.names == ref.names
+    assert np.array_equal(dec.sel, ref.sel)
+    assert np.array_equal(dec.ranked, ref.ranked)
+    assert dec.pool_version == ref.pool_version
+    states = sup.replica_states()
+    assert states["r1"] is ReplicaState.DEAD
+    assert sup.healthy_count() == 2
+    assert faults.degraded_counts().get("failover") == 1
+    assert ("r1", "HEALTHY", "DEAD", "killed mid-batch (injected)") \
+        in sup.transitions
+    # rejoin brings it back warm; the set routes identically again
+    sup.rejoin("r1")
+    assert sup.healthy_count() == 3
+    assert faults.degraded_counts().get("resync") == 1
+    again = sup.route_pinned(texts)
+    assert again.names == ref.names
+
+
+def test_zero_queries_and_empty_rotation_edges(rstack):
+    router, _, _ = rstack
+    sup = _supervisor(router, n=2)
+    dec = sup.route_pinned([])
+    assert dec.names == [] and dec.sel.shape == (0,)
+    assert dec.ranked.shape == (1, 0)
+    for rep in list(sup.replicas):
+        rep.killed = True
+    t0 = time.monotonic()
+    sup.tick(now=t0 + sup.cfg.suspect_after_s + 0.01)
+    sup.tick(now=t0 + sup.cfg.dead_after_s + 0.01)
+    assert all(r.state is ReplicaState.DEAD for r in sup.replicas)
+    with pytest.raises(NoHealthyReplicaError, match="DEAD or DRAINING"):
+        sup.route_pinned(["q"])
+
+
+# ---------------------------------------------------------------------------
+# the version fence: a partitioned replica never routes stale
+# ---------------------------------------------------------------------------
+
+
+def test_stale_fence_blocks_routes_against_old_pool_version(rstack):
+    router, engine, texts = rstack
+    sub = texts[:8]
+    sup = _supervisor(router, n=2)
+    name = router.pool.names[0]
+    # outcome feedback bumps the pool version too — the fence covers it
+    router.pool.record_outcome(name, True)
+    v1 = router.pool.version
+    # fan out under a partition: r0's push (hit 1) is dropped
+    plan = FaultPlan([FaultEvent("replica.admin", "partition", (1,))])
+    with faults.armed(plan):
+        fan = sup.fanout()
+    assert fan == {"pool_version": v1, "pushed": ["r1"]}
+    assert sup.replicas[0].engine.adopted_version == v1 - 1
+    assert sup.replicas[1].engine.adopted_version == v1
+    # r0's shard trips the fence (typed StaleReplicaError), resyncs onto
+    # the PINNED snapshot, and the retried shard merges — zero routes
+    # ever answered against the old version
+    dec = sup.route_pinned(sub)
+    assert dec.pool_version == v1
+    assert dec.names == engine.route_pinned(sub).names
+    assert sup.replicas[0].engine.adopted_version == v1
+    dc = faults.degraded_counts()
+    assert dc.get("stale_fence") == 1
+    assert dc.get("resync") == 1
+    assert ("r0", "HEALTHY", "REJOINING", "stale fence") in sup.transitions
+    assert ("r0", "REJOINING", "HEALTHY", "resynced") in sup.transitions
+
+
+# ---------------------------------------------------------------------------
+# breaker state rides the fence: open via report_outcome, then failover
+# ---------------------------------------------------------------------------
+
+
+def test_breaker_opened_before_kill_stays_masked_on_survivors(rstack):
+    router, engine, texts = rstack
+    sup = _supervisor(router, n=3)
+    svc = RouterService(router, engine=sup)
+    # break the model the reference selects most often
+    base = engine.route_pinned(texts)
+    name = max(set(base.names), key=base.names.count)
+    snap = router.pool.snapshot()
+    i = snap.index_of(name)
+    pol = snap.health_policy
+    try:
+        for _ in range(pol.failure_threshold):
+            info = svc.report_outcome(None, name, ok=False)
+        assert info["state_after"] == "open"
+        assert router.pool.snapshot().breaker[i] == BREAKER_OPEN
+        # report_outcome fans the bumped snapshot out to every replica
+        v = router.pool.version
+        assert all(rep.engine.adopted_version == v
+                   for rep in sup.replicas)
+        ref = engine.route_pinned(texts)    # same pool state, one engine
+        assert name not in ref.names
+        plan = FaultPlan([FaultEvent("replica.dispatch", "kill", (2,))])
+        with faults.armed(plan):
+            dec = sup.route_pinned(texts)
+        # the survivors absorbing the re-dispatched shard still mask the
+        # broken model, bit-identically to the single-engine run
+        assert dec.names == ref.names
+        assert np.array_equal(dec.sel, ref.sel)
+        assert name not in dec.names
+        assert sup.healthy_count() == 2
+    finally:
+        t = time.time() + pol.open_cooldown_s + 1.0
+        for _ in range(max(pol.half_open_probes, 1)):
+            router.pool.record_outcome(name, True, now=t)
+    assert router.pool.snapshot().breaker[i] == BREAKER_CLOSED
+
+
+# ---------------------------------------------------------------------------
+# poison quarantine through the replicated path: union of shard sets
+# ---------------------------------------------------------------------------
+
+
+def test_poison_union_across_shards(rstack):
+    router, engine, texts = rstack
+    sub = texts[:8]                 # shards: r0 ← 0..3, r1 ← 4..7
+    sup = _supervisor(router, n=2)
+    plan = FaultPlan([], poison_texts=[sub[1], sub[6]])
+    with faults.armed(plan):
+        with pytest.raises(PoisonQueryError) as ei:
+            sup.route_pinned(sub)
+    # exactly the union of the two shards' poison sets, batch-indexed
+    assert list(ei.value.indices) == [1, 6]
+    assert ei.value.texts == [sub[1], sub[6]]
+    # poison is an input property, not a replica failure: rotation intact
+    assert sup.healthy_count() == 2
+    survivors = [t for j, t in enumerate(sub) if j not in (1, 6)]
+    assert sup.route_pinned(survivors).names == \
+        engine.route_pinned(survivors).names
+
+
+# ---------------------------------------------------------------------------
+# drain / rejoin: warm resync from a healthy peer
+# ---------------------------------------------------------------------------
+
+
+def test_drain_rejoin_resyncs_warm_state(rstack):
+    router, engine, texts = rstack
+    sup = ReplicaSupervisor(
+        router, n_replicas=2,
+        engine_cfg=RouterEngineConfig(
+            cache_size=256, semantic_cache=SemanticCacheConfig()))
+    sup.route_pinned(texts)         # both replicas warm their shards
+    r0, r1 = sup.replicas
+    sup.drain("r1")
+    assert r1.state is ReplicaState.DRAINING
+    d_before = r1.dispatches
+    sup.route_pinned(texts[:8])     # drained replica gets no shards
+    assert r1.dispatches == d_before
+    # fan-out skips it too
+    assert "r1" not in sup.fanout()["pushed"]
+    # simulate a restart losing the warm state, then rejoin
+    r1.engine.cache.clear()
+    rep = sup.rejoin("r1")
+    assert rep is r1 and r1.state is ReplicaState.HEALTHY
+    assert len(r1.engine.cache._data) == len(r0.engine.cache._data) > 0
+    assert set(r1.engine.cache._data) == set(r0.engine.cache._data)
+    assert len(r1.engine.bank) == len(r0.engine.bank) > 0
+    assert faults.degraded_counts().get("resync") == 1
+    # rejoined warm with the PEER's entries: routing the peer-warmed
+    # half of the corpus is pure cache-hit work on both replicas
+    warmed = texts[:12]             # r0's shard from the first route
+    h0 = sup.cache_stats.hits
+    sup.route_pinned(warmed)
+    assert sup.cache_stats.hits - h0 == len(warmed)
+
+
+# ---------------------------------------------------------------------------
+# heartbeats drive the state machine (injectable clock, no sleeping)
+# ---------------------------------------------------------------------------
+
+
+def test_heartbeat_suspect_dead_and_recovery(rstack):
+    router, _, _ = rstack
+    sup = ReplicaSupervisor(
+        router, n_replicas=2,
+        engine_cfg=RouterEngineConfig(cache_size=0),
+        cfg=ReplicaSetConfig(suspect_after_s=0.5, dead_after_s=1.5))
+    r0, r1 = sup.replicas
+    t0 = time.monotonic()
+    r0.killed = True
+    sup.tick(now=t0 + 0.6)
+    assert r0.state is ReplicaState.SUSPECT
+    assert r1.state is ReplicaState.HEALTHY
+    sup.tick(now=t0 + 2.5)
+    assert r0.state is ReplicaState.DEAD
+    # a DEAD replica only leaves through rejoin
+    sup.rejoin("r0", now=t0 + 3.0)
+    assert r0.state is ReplicaState.HEALTHY and not r0.killed
+    # a beat resuming inside the suspect window walks SUSPECT → HEALTHY
+    r1.killed = True
+    sup.tick(now=t0 + 4.0)
+    assert r1.state is ReplicaState.SUSPECT
+    r1.killed = False
+    sup.tick(now=t0 + 4.1)
+    assert r1.state is ReplicaState.HEALTHY
+    assert ("r1", "SUSPECT", "HEALTHY", "beat resumed") in sup.transitions
+
+
+def test_slow_heartbeat_fault_misses_the_probe_window(rstack):
+    router, _, _ = rstack
+    sup = ReplicaSupervisor(
+        router, n_replicas=1,
+        engine_cfg=RouterEngineConfig(cache_size=0),
+        cfg=ReplicaSetConfig(suspect_after_s=0.5, dead_after_s=5.0))
+    (r0,) = sup.replicas
+    t0 = time.monotonic()
+    plan = FaultPlan([FaultEvent("replica.heartbeat", "slow", (1, 2))])
+    with faults.armed(plan):
+        sup.tick(now=t0 + 0.1)          # hit 1: beat arrives late
+        assert r0.state is ReplicaState.HEALTHY     # window not yet blown
+        sup.tick(now=t0 + 0.7)          # hit 2: still slow → SUSPECT
+        assert r0.state is ReplicaState.SUSPECT
+        sup.tick(now=t0 + 0.8)          # hit 3: beat resumes
+        assert r0.state is ReplicaState.HEALTHY
+
+
+def test_illegal_transition_is_a_bug_not_a_degradation(rstack):
+    router, _, _ = rstack
+    sup = ReplicaSupervisor(router, n_replicas=1,
+                            engine_cfg=RouterEngineConfig(cache_size=0))
+    with pytest.raises(RuntimeError, match="illegal replica transition"):
+        sup._transition(sup.replicas[0], ReplicaState.STARTING, "test")
+
+
+# ---------------------------------------------------------------------------
+# service integration: gauges + stats expose replica state
+# ---------------------------------------------------------------------------
+
+
+def test_service_exports_replica_state_gauges(rstack):
+    router, _, texts = rstack
+    sup = _supervisor(router, n=2)
+    svc = RouterService(router, engine=sup)
+    st = svc.stats()
+    assert st["replicas"] == {"r0": "healthy", "r1": "healthy"}
+    plan = FaultPlan([FaultEvent("replica.dispatch", "kill", (1,))])
+    with faults.armed(plan):
+        sup.route_pinned(texts[:4])
+    m = svc.render_metrics()
+    assert 'router_replica_state{replica="r0"} 3' in m
+    assert 'router_replica_state{replica="r1"} 1' in m
+    assert 'router_degraded_total{path="failover"} 1' in m
+    assert svc.stats()["replicas"]["r0"] == "dead"
+
+
+# ---------------------------------------------------------------------------
+# resilient client (satellite): every op rides the reconnect budget
+# ---------------------------------------------------------------------------
+
+
+def test_client_ops_reconnect_after_torn_down_session(rstack):
+    router, engine, texts = rstack
+    with BackgroundServer(router, engine=engine) as srv:
+        with ServiceClient(srv.host, srv.port, retries=2,
+                           backoff_s=0.01) as client:
+            assert client.ping()["op"] == "pong"
+            # a torn-down session (e.g. a prior exchange exhausted its
+            # budget mid-reconnect) must re-establish on the NEXT op —
+            # for every op type, not just route
+            client._teardown()
+            assert client.stats()["pool_version"] == router.pool.version
+            client._teardown()
+            assert "router_pool_version" in client.metrics()
+            client._teardown()
+            assert client.route(texts[0]).ok
+
+
+def test_client_ops_raise_typed_retries_exhausted_when_down(rstack):
+    router, engine, _ = rstack
+    with BackgroundServer(router, engine=engine) as srv:
+        host, port = srv.host, srv.port
+        client = ServiceClient(host, port, retries=1, backoff_s=0.01,
+                               timeout=2.0)
+        assert client.ping()["op"] == "pong"
+    # server gone: every op must exhaust the budget with the typed
+    # error — including the SECOND call, which starts from a torn-down
+    # session (the None-socket path)
+    with pytest.raises(RetriesExhausted) as ei:
+        client.stats()
+    assert ei.value.attempts == 2
+    with pytest.raises(RetriesExhausted):
+        client.metrics()
+    with pytest.raises(RetriesExhausted):
+        client.report_outcome(None, router.pool.names[0], ok=True)
+    client.close()
+
+
+def test_admin_replay_answers_from_dedup_cache(rstack):
+    router, engine, _ = rstack
+    name = router.pool.names[0]
+    orig = float(router.pool.snapshot().lam_in[
+        router.pool.snapshot().index_of(name), 0])
+    with BackgroundServer(router, engine=engine) as srv:
+        with ServiceClient(srv.host, srv.port, retries=3,
+                           backoff_s=0.01) as client:
+            v0 = router.pool.version
+            # the admin frame is handled, then the connection resets
+            # before the reply flushes; the client replays the SAME
+            # idempotency key and must be answered from the dedup cache
+            # — the mutation runs ONCE (one version bump, not two)
+            plan = FaultPlan([
+                FaultEvent("protocol.frame", "reset_post", (1,))])
+            try:
+                with faults.armed(plan):
+                    info = client.admin.update_pricing(
+                        name, price_in=orig * 2.0)
+                assert plan.fired == \
+                    [("protocol.frame", "reset_post", 1)]
+                assert info["pool_version"] == v0 + 1
+                assert router.pool.version == v0 + 1
+            finally:
+                client.admin.update_pricing(name, price_in=orig)
